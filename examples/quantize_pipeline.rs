@@ -1,0 +1,86 @@
+//! **End-to-end driver** (DESIGN.md's E1 workload): load a tiny LM
+//! trained at build time (`make artifacts`), run the full layer-wise
+//! quantization pipeline for every method, and report the paper's
+//! headline metric — held-out perplexity on the in-domain and shifted
+//! corpora — plus compression ratio and wall time. The run recorded in
+//! EXPERIMENTS.md §End-to-end comes from this binary.
+//!
+//! ```sh
+//! cargo run --release --example quantize_pipeline -- \
+//!     [--model small-0.8M] [--wbit 4] [--group 128] [--methods rtn,gptq,ours]
+//! ```
+
+use ojbkq::cli::Args;
+use ojbkq::coordinator::{quantize_model, Workbench};
+use ojbkq::eval::perplexity_pair;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::util::fmt_secs;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let name = args.get_str("model", "small-0.8M");
+    let wbit = args.get_usize("wbit", 4) as u8;
+    let group = args.get_usize("group", 128);
+    let n_calib = args.get_usize("calib", 8);
+    let seq = args.get_usize("seq", 128);
+    let ppl_tokens = args.get_usize("ppl-tokens", 4096);
+    let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+
+    let methods: Vec<Method> = match args.get("methods") {
+        Some(list) => list
+            .split(',')
+            .map(|s| Method::parse(s.trim()).ok_or_else(|| anyhow::anyhow!("unknown method {s}")))
+            .collect::<Result<_, _>>()?,
+        None => vec![
+            Method::Rtn,
+            Method::Gptq,
+            Method::Awq,
+            Method::Quip,
+            Method::BabaiNaive,
+            Method::KleinRandomK,
+            Method::Ojbkq,
+        ],
+    };
+
+    let wb = Workbench::load(&dir, &name);
+    println!(
+        "model={name} ({} params, trained={}), calib {n_calib}x{seq}, W{wbit} g{group}\n",
+        wb.model.cfg.param_count(),
+        wb.trained
+    );
+    let (fp_in, fp_sh) =
+        perplexity_pair(&wb.model, &wb.corpus, &wb.shifted, wb.model.cfg.max_seq, ppl_tokens);
+
+    let mut table = Table::new(
+        &format!("End-to-end: {name} W{wbit}A16 g{group}"),
+        &["method", "ppl in-domain", "ppl shifted", "Δppl", "compress", "quant time"],
+    );
+    table.push_row(&[
+        "BF16".into(),
+        format!("{fp_in:.3}"),
+        format!("{fp_sh:.3}"),
+        "-".into(),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+    for method in methods {
+        let cfg = QuantConfig::paper_defaults(wbit, group);
+        let (qm, report) =
+            quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None)?;
+        let (pin, psh) =
+            perplexity_pair(&qm, &wb.corpus, &wb.shifted, wb.model.cfg.max_seq, ppl_tokens);
+        table.push_row(&[
+            method.label().into(),
+            format!("{pin:.3}"),
+            format!("{psh:.3}"),
+            format!("{:+.3}", pin - fp_in),
+            format!("{:.2}x", report.compression_ratio()),
+            fmt_secs(report.total_secs),
+        ]);
+        eprintln!("[pipeline] {} done ({})", method.label(), fmt_secs(report.total_secs));
+    }
+    table.emit(Some(&PathBuf::from("results")), &format!("e2e_{name}_w{wbit}_g{group}"));
+    Ok(())
+}

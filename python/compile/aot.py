@@ -1,0 +1,89 @@
+"""AOT bridge: lower the Layer-2 tile solve to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits one artifact per static shape variant::
+
+    artifacts/ojbkq_m{M}_t{T}_k{K}.hlo.txt
+
+where M = row dimension, T = column-tile width, K = sampled paths
+(uniforms carry K+1 paths; path 0 is the reserved greedy path). ``qmax``
+is a runtime input, so bit-width is NOT part of the variant key.
+
+Usage: python -m compile.aot [--out DIR] [--quick]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import layer_solve
+
+#: Default variant registry: every (M, K) x T=64. M covers the tiny-LM
+#: zoo's layer widths (96..768 padded up); K covers greedy (0) and the
+#: paper default (5).
+FULL_VARIANTS = [
+    (m, 64, k) for m in (64, 128, 192, 256, 384, 512, 768) for k in (0, 5)
+]
+#: --quick subset used by CI-style runs.
+QUICK_VARIANTS = [(64, 64, 0), (64, 64, 5), (128, 64, 5)]
+
+#: PPI look-ahead block size compiled into the kernels (Appendix A's B).
+BLOCK = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(m, t, k, block=BLOCK):
+    """Lower one (M, T, K) decoder variant to HLO text."""
+    p = k + 1
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((m, m), f32),  # R
+        jax.ShapeDtypeStruct((m, t), f32),  # S
+        jax.ShapeDtypeStruct((m, t), f32),  # QBAR
+        jax.ShapeDtypeStruct((t,), f32),  # ALPHA
+        jax.ShapeDtypeStruct((p, m, t), f32),  # UNIFORMS
+        jax.ShapeDtypeStruct((), f32),  # QMAX
+    )
+
+    def fn(r, s, qbar, alpha, uniforms, qmax):
+        return layer_solve(r, s, qbar, alpha, uniforms, qmax, block=block)
+
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="output dir (default ../artifacts)")
+    ap.add_argument("--quick", action="store_true", help="emit the quick subset only")
+    args = ap.parse_args()
+    out_dir = args.out or os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    variants = QUICK_VARIANTS if args.quick else FULL_VARIANTS
+    for m, t, k in variants:
+        path = os.path.join(out_dir, f"ojbkq_m{m}_t{t}_k{k}.hlo.txt")
+        text = lower_variant(m, t, k)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

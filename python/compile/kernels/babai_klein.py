@@ -1,0 +1,183 @@
+"""Layer-1 Pallas kernel: Parallel Path-Isolated K-best Babai decoding
+(PPI-KBabai, paper Appendix A, Algorithm 2).
+
+TPU re-think of the paper's CUDA design (DESIGN.md §7 Hardware-Adaptation):
+
+* **Path isolation** = the leading tensor axis P (= K+1): every path's
+  center/error buffers live in one VMEM-resident ``(P, B, T)`` block, so
+  no cross-path state can be shared or corrupted -- correctness by
+  construction rather than by synchronization.
+* **Blocked look-ahead** (Algorithm 2 line 10) = a batched ``dot_general``
+  over the path axis: ``ADJ = R[J, :] @ E`` hits the MXU instead of
+  per-thread MACs. Because errors of unprocessed rows are zero, the full-
+  width product equals the paper's ``R[J, F] @ E[F]`` with static shapes.
+* **HBM<->VMEM schedule**: the whole tile (R: M*M, U: P*M*T, E/Q: P*M*T)
+  is staged into VMEM by ``pallas_call``'s default BlockSpec; see
+  ``vmem_bytes`` for the per-variant budget (<= ~6 MiB for M=768, T=64,
+  P=6 -- within a TPU core's 16 MiB VMEM).
+* **Sampling** (Eq. 13): a vectorized masked softmax over the 16 candidate
+  code values + inverse-CDF against pre-supplied uniforms -- no divergent
+  branches, no on-chip RNG primitive, bit-compatible with the Rust native
+  decoder given identical uniforms.
+
+``interpret=True`` is mandatory on the CPU PJRT plugin (real-TPU lowering
+emits a Mosaic custom-call the CPU client cannot execute); XLA-CPU then
+compiles the lowered HLO to native code, so the *runtime* path is
+compiled, not interpreted.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Candidate code values enumerated by the sampler (supports wbit <= 4).
+VMAX_CAND = 16
+
+
+def round_code(c, qmax):
+    """Round-half-away-from-zero, clamped to [0, qmax] (matches Rust
+    f32::round on the non-negative box)."""
+    return jnp.clip(jnp.floor(c + 0.5), 0.0, qmax)
+
+
+def sample_codes(c, rbar, alpha, qmax, u):
+    """Vectorized Eq. 13 sampling.
+
+    c, u: (..., T) centers and uniforms; rbar: scalar or broadcastable
+    (R_ii * s_i); alpha: (T,) temperatures. Returns codes with the same
+    shape as ``c``. Max-subtracted at the clamped nearest integer and
+    inverse-CDF'd with the strict ``cumsum > u * total`` rule -- the exact
+    contract of rust klein::sample_code.
+    """
+    nearest = round_code(c, qmax)
+    scale = alpha * rbar * rbar  # (..., T)
+    v = jnp.arange(VMAX_CAND, dtype=c.dtype)  # (V,)
+    dv = c[..., None] - v  # (..., T, V)
+    dn = (c - nearest)[..., None]
+    ex = -scale[..., None] * (dv * dv - dn * dn)
+    weights = jnp.exp(ex)
+    # Mask code values outside the box (v > qmax) -- one artifact serves
+    # every bit-width -- and zero sub-significance weights (relative
+    # exponent < -30 ~ 1e-13 of the max term). The cutoff makes all three
+    # implementations agree exactly where XLA's FTZ / libm subnormal
+    # behavior would otherwise diverge on ~1e-40 tail masses (see
+    # rust klein::sample_code and ref.sample_code, same constant).
+    weights = jnp.where((v <= qmax) & (ex >= -30.0), weights, 0.0)
+    total = weights.sum(axis=-1)
+    target = u * total
+    cdf = jnp.cumsum(weights, axis=-1)
+    idx = (cdf <= target[..., None]).sum(axis=-1)
+    sampled = jnp.minimum(idx.astype(c.dtype), qmax)
+    ok = jnp.isfinite(total) & (total > 0)
+    return jnp.where(ok, sampled, nearest)
+
+
+def _decode_body(r, s, qbar, alpha, u, qmax, block):
+    """The blocked K-path back-substitution (pure jnp/lax; called from the
+    Pallas kernel body on VMEM-resident values).
+
+    Returns q_all: (P, M, T) integer codes as f32.
+    """
+    p, m, t = u.shape
+    # Snap the look-ahead block to a divisor of M (artifact variants use
+    # multiples of 16; odd tile heights fall back to smaller blocks).
+    while m % block != 0:
+        block -= 1
+    nb = m // block
+
+    def block_step(bi, state):
+        e, q = state  # (P, M, T) each
+        j_lo = (nb - 1 - bi) * block
+        # --- 1. Global vectorized look-ahead (Algorithm 2 line 10).
+        # Unprocessed rows of E are zero, so the full-width batched GEMM
+        # equals R[J, F] @ E[F] with static shapes. (P, B, T)
+        r_panel = jax.lax.dynamic_slice(r, (j_lo, 0), (block, m))  # (B, M)
+        adj = jax.lax.dot_general(
+            r_panel, e, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (B, P, T)
+        adj = jnp.transpose(adj, (1, 0, 2))  # (P, B, T)
+        # --- 2. Local sequential sweep within the block.
+        r_blk = jax.lax.dynamic_slice(r, (j_lo, j_lo), (block, block))  # (B, B)
+        s_blk = jax.lax.dynamic_slice(s, (j_lo, 0), (block, t))
+        qbar_blk = jax.lax.dynamic_slice(qbar, (j_lo, 0), (block, t))
+        u_blk = jax.lax.dynamic_slice(u, (0, j_lo, 0), (p, block, t))
+        e_blk = jnp.zeros((p, block, t), dtype=jnp.float32)
+        q_blk = jnp.zeros((p, block, t), dtype=jnp.float32)
+        for rr in range(block - 1, -1, -1):  # static unroll (B steps)
+            rloc = r_blk[rr]  # (B,)
+            local = jnp.einsum("b,pbt->pt", rloc, e_blk)  # in-block errors
+            rii = r_blk[rr, rr]
+            s_i = s_blk[rr]  # (T,)
+            c = qbar_blk[rr] + (adj[:, rr, :] + local) / (rii * s_i)  # (P, T)
+            greedy = round_code(c[0], qmax)  # reserved greedy path
+            sampled = sample_codes(c[1:], rii * s_i, alpha, qmax, u_blk[1:, rr, :])
+            q_row = jnp.concatenate([greedy[None], sampled], axis=0)  # (P, T)
+            e_row = s_i * (qbar_blk[rr] - q_row)
+            e_blk = e_blk.at[:, rr, :].set(e_row)
+            q_blk = q_blk.at[:, rr, :].set(q_row)
+        e = jax.lax.dynamic_update_slice(e, e_blk, (0, j_lo, 0))
+        q = jax.lax.dynamic_update_slice(q, q_blk, (0, j_lo, 0))
+        return e, q
+
+    e0 = jnp.zeros((p, m, t), dtype=jnp.float32)
+    q0 = jnp.zeros((p, m, t), dtype=jnp.float32)
+    _, q_all = jax.lax.fori_loop(0, nb, block_step, (e0, q0))
+    return q_all
+
+
+def _kernel(r_ref, s_ref, qbar_ref, alpha_ref, u_ref, qmax_ref, q_ref, *, block):
+    """Pallas kernel body: stage the tile into VMEM values and decode."""
+    r = r_ref[...]
+    s = s_ref[...]
+    qbar = qbar_ref[...]
+    alpha = alpha_ref[...]
+    u = u_ref[...]
+    qmax = qmax_ref[0]
+    q_ref[...] = _decode_body(r, s, qbar, alpha, u, qmax, block)
+
+
+def ppi_decode(r, s, qbar, alpha, uniforms, qmax, *, block=16, interpret=True):
+    """Decode one column tile with the Pallas PPI-KBabai kernel.
+
+    Args mirror ``ref.decode_tile_ref``; ``qmax`` may be a traced scalar.
+    Returns q_all: (P, M, T).
+    """
+    p, m, t = uniforms.shape
+    qmax_arr = jnp.asarray(qmax, dtype=jnp.float32).reshape((1,))
+    kernel = functools.partial(_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((p, m, t), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(r, jnp.float32),
+        jnp.asarray(s, jnp.float32),
+        jnp.asarray(qbar, jnp.float32),
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(uniforms, jnp.float32),
+        qmax_arr,
+    )
+
+
+def vmem_bytes(m, t, p, block=16):
+    """Estimated VMEM working set of one kernel invocation (bytes):
+    R + S + QBAR + U + E + Q + block scratch, all f32. Used by DESIGN.md's
+    real-TPU feasibility analysis."""
+    f = 4
+    return f * (
+        m * m  # R
+        + 2 * m * t  # S, QBAR
+        + t  # alpha
+        + p * m * t  # U
+        + 2 * p * m * t  # E, Q carries
+        + 3 * p * block * t  # adj/e_blk/q_blk scratch
+    )
+
+
+def mxu_flops(m, t, p):
+    """FLOPs of the batched look-ahead GEMMs (the MXU-eligible fraction):
+    nb blocks x (B x M x P*T) MACs x 2."""
+    return 2.0 * m * m * p * t  # sum over blocks of 2*B*M*(P*T) = 2*M^2*P*T

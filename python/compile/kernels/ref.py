@@ -1,0 +1,176 @@
+"""Pure-numpy oracle for the PPI-KBabai decoder.
+
+Independent, deliberately-slow reference implementation of the paper's
+Algorithms 1/3 (box-constrained Babai + Klein-randomized rounding) used to
+validate both the Pallas kernel (`babai_klein.py`) and, transitively, the
+Rust native decoder (which is tested against the same contract on the
+Rust side).
+
+Contract (shared with `rust/src/quant/ppi.rs` and the AOT artifact):
+
+inputs
+    r:        (M, M) f32 upper-triangular Cholesky factor (shared).
+    s:        (M, T) f32 per-(row, column) scales.
+    qbar:     (M, T) f32 real-valued LS solution in code space.
+    alpha:    (T,)   f32 per-column Klein temperature.
+    uniforms: (P, M, T) f32 in [0,1), P = K+1; path 0 is the reserved
+              greedy path and ignores its uniforms.
+    qmax:     scalar -- box upper bound (2^wbit - 1).
+
+outputs
+    q_all:  (P, M, T) integer codes as f32.
+    resid:  (P, T) residuals ||R (s*(q - qbar))||^2 per path/column.
+
+Sampling is Eq. 13 with the Liu-Ling-Stehle squared diagonal (see the doc
+comment in rust/src/quant/klein.rs):
+
+    Pr(q_i = v) ~ exp(-alpha (R_ii s_i)^2 ((c_i-v)^2 - (c_i-v*)^2))
+
+max-subtracted at the clamped nearest integer v*, inverse-CDF sampled
+against the supplied uniform with the strict `cumsum > u * total` rule.
+"""
+
+import numpy as np
+
+#: Candidate code values enumerated by the samplers (supports wbit <= 4).
+VMAX_CAND = 16
+
+
+def round_code(c, qmax):
+    """Round-half-away-from-zero then clamp to [0, qmax].
+
+    numpy's np.round is banker's rounding; the Rust side uses f32::round
+    (half away from zero). For the non-negative box this is floor(c+0.5).
+    """
+    return float(np.clip(np.floor(np.float32(c) + np.float32(0.5)), 0.0, qmax))
+
+
+def sample_code(c, rbar_sq, alpha, qmax, u):
+    """One Klein-randomized draw -- mirrors rust klein::sample_code."""
+    n = int(qmax) + 1
+    nearest = round_code(c, qmax)
+    scale = np.float32(alpha) * np.float32(rbar_sq)
+    dn = np.float32(c) - np.float32(nearest)
+    weights = np.empty(n, dtype=np.float32)
+    for v in range(n):
+        dv = np.float32(c) - np.float32(v)
+        ex = np.float32(-scale * (dv * dv - dn * dn))
+        # Sub-significance cutoff shared with the Pallas kernel and the
+        # Rust windowed sampler (same constant 30).
+        weights[v] = np.exp(ex) if ex >= -30.0 else np.float32(0.0)
+    total = np.float32(weights.sum(dtype=np.float32))
+    if not np.isfinite(total) or not total > 0:
+        return nearest
+    target = np.float32(u) * total
+    acc = np.float32(0.0)
+    for v in range(n):
+        acc = np.float32(acc + weights[v])
+        if target < acc:
+            return float(v)
+    return float(qmax)
+
+
+def decode_column(r, s_col, qbar_col, qmax, alpha_col, uniforms_col, greedy):
+    """Decode one column via per-row back-substitution (Algorithm 1/3)."""
+    m = r.shape[0]
+    q = np.zeros(m, dtype=np.float32)
+    e = np.zeros(m, dtype=np.float32)  # weight-space error s*(qbar - q)
+    for i in range(m - 1, -1, -1):
+        acc = float(
+            np.dot(r[i, i + 1 :].astype(np.float64), e[i + 1 :].astype(np.float64))
+        )
+        c = np.float32(qbar_col[i]) + np.float32(
+            acc / (float(r[i, i]) * float(s_col[i]))
+        )
+        if greedy:
+            qi = round_code(c, qmax)
+        else:
+            rbar = float(r[i, i]) * float(s_col[i])
+            qi = sample_code(
+                float(c), rbar * rbar, float(alpha_col), qmax, float(uniforms_col[i])
+            )
+        q[i] = qi
+        e[i] = np.float32(s_col[i]) * (np.float32(qbar_col[i]) - np.float32(qi))
+    return q, e
+
+
+def decode_tile_ref(r, s, qbar, alpha, uniforms, qmax):
+    """Reference decode of a full tile. Returns (q_all, resid)."""
+    r = np.asarray(r, dtype=np.float32)
+    s = np.asarray(s, dtype=np.float32)
+    qbar = np.asarray(qbar, dtype=np.float32)
+    alpha = np.asarray(alpha, dtype=np.float32)
+    uniforms = np.asarray(uniforms, dtype=np.float32)
+    p, m, t = uniforms.shape
+    assert r.shape == (m, m) and s.shape == (m, t) and qbar.shape == (m, t)
+    q_all = np.zeros((p, m, t), dtype=np.float32)
+    resid = np.zeros((p, t), dtype=np.float32)
+    for path in range(p):
+        for j in range(t):
+            q, e = decode_column(
+                r,
+                s[:, j],
+                qbar[:, j],
+                qmax,
+                alpha[j],
+                uniforms[path, :, j],
+                greedy=(path == 0),
+            )
+            q_all[path, :, j] = q
+            re = r.astype(np.float64) @ e.astype(np.float64)
+            resid[path, j] = np.float32((re * re).sum())
+    return q_all, resid
+
+
+def select_best(q_all, resid):
+    """Argmin-residual candidate per column (Algorithm 4)."""
+    winner = np.argmin(resid, axis=0)  # (T,)
+    p, m, t = q_all.shape
+    q_best = np.zeros((m, t), dtype=np.float32)
+    for j in range(t):
+        q_best[:, j] = q_all[winner[j], :, j]
+    return q_best, winner
+
+
+def make_case(m, t, k, seed, qmax=15.0, oversample=2):
+    """Random well-posed decoder case (shared by tests and benches)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m * oversample + 2, m)).astype(np.float32)
+    g = a.T @ a + 0.05 * np.eye(m, dtype=np.float32)
+    r = np.linalg.cholesky(g).T.astype(np.float32)  # upper: g = r.T @ r
+    s = (0.05 + 0.2 * rng.random((m, t))).astype(np.float32)
+    qbar = (qmax * rng.random((m, t))).astype(np.float32)
+    rbar_diag = np.diag(r)[:, None] * s  # (M, T)
+    min_rbar_sq = (rbar_diag**2).min(axis=0)  # (T,)
+    alpha = (np.log(solve_rho(max(k, 2), m)) / np.maximum(min_rbar_sq, 1e-30)).astype(
+        np.float32
+    )
+    uniforms = rng.random((k + 1, m, t)).astype(np.float32)
+    return r, s, qbar, alpha, uniforms
+
+
+def solve_rho(k, m):
+    """Solve K = (e*rho)^(2m/rho) on the rho >= 1 branch (bisection),
+    mirroring rust klein::solve_rho."""
+    rho_max = 1e9
+    if k <= 1:
+        return rho_max
+    ln_k = np.log(float(k))
+
+    def g(rho):
+        return (2.0 * m / rho) * (1.0 + np.log(rho)) - ln_k
+
+    if g(1.0) <= 0.0:
+        return 1.0
+    lo, hi = 1.0, 2.0
+    while g(hi) > 0.0 and hi < rho_max:
+        hi *= 2.0
+    if hi >= rho_max:
+        return rho_max
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if g(mid) > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

@@ -1,0 +1,56 @@
+"""Layer-2 JAX graph: the per-tile OJBKQ solve that gets AOT-lowered.
+
+Wraps the Layer-1 Pallas kernel (`kernels.babai_klein.ppi_decode`) with
+the residual computation and Algorithm-4 argmin selection, producing the
+winning codes for a column tile:
+
+    q_all  = PPI-KBabai(R, S, QBAR, ALPHA, U, qmax)      # L1 kernel
+    E      = S * (QBAR - q_all)                          # weight-space err
+    RE     = R @ E  (batched over paths)                 # MXU
+    resid  = sum(RE^2, rows)                             # (P, T)
+    winner = argmin_p resid                              # JTA score argmin
+    Q      = q_all[winner]                               # (M, T)
+
+The Rust coordinator (rust/src/runtime) feeds padded tiles and reads Q
+back; selection thus happens *inside* the artifact, keeping the request
+path a single PJRT execute.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.babai_klein import ppi_decode
+
+
+def layer_solve(r, s, qbar, alpha, uniforms, qmax, *, block=16, interpret=True):
+    """Full tile solve: decode + residual + argmin selection.
+
+    Returns a 1-tuple ``(q_best,)`` with q_best: (M, T) f32 codes —
+    tuple-shaped because the AOT bridge lowers with return_tuple=True.
+    """
+    q_all = ppi_decode(r, s, qbar, alpha, uniforms, qmax, block=block, interpret=interpret)
+    e = s[None, :, :] * (qbar[None, :, :] - q_all)  # (P, M, T)
+    re = jax.lax.dot_general(
+        r,
+        e,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (M, P, T)
+    resid = jnp.sum(re * re, axis=0)  # (P, T)
+    winner = jnp.argmin(resid, axis=0)  # (T,)
+    q_best = jnp.take_along_axis(q_all, winner[None, None, :], axis=0)[0]  # (M, T)
+    return (q_best,)
+
+
+def layer_solve_with_resid(r, s, qbar, alpha, uniforms, qmax, *, block=16, interpret=True):
+    """Diagnostic variant also returning the winning residuals (T,)."""
+    q_all = ppi_decode(r, s, qbar, alpha, uniforms, qmax, block=block, interpret=interpret)
+    e = s[None, :, :] * (qbar[None, :, :] - q_all)
+    re = jax.lax.dot_general(
+        r, e, dimension_numbers=(((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    resid = jnp.sum(re * re, axis=0)
+    winner = jnp.argmin(resid, axis=0)
+    q_best = jnp.take_along_axis(q_all, winner[None, None, :], axis=0)[0]
+    best = jnp.take_along_axis(resid, winner[None, :], axis=0)[0]
+    return (q_best, best)

@@ -1,0 +1,300 @@
+"""Build-time trainer: trains the tiny-LM zoo standing in for the paper's
+LLM families (DESIGN.md §2) and exports everything the Rust runtime needs.
+
+Build-time Python only — never on the request path. Per model preset this
+script writes to ``artifacts/``:
+
+* ``model_{name}.bin``    — OJBW1 weights (rust/src/model/io.rs format)
+* ``corpus_{name}.bin``   — OJBC1 token corpus the model was trained on
+* ``fixture_{name}.bin``  — OJBF1 (tokens, logits) pair for the
+  cross-implementation numerics test (rust/tests/model_parity.rs)
+
+The architecture mirrors rust/src/model EXACTLY (see that module's doc):
+token embedding + sinusoidal positions, N x [RMSNorm -> causal MHA ->
+residual -> RMSNorm -> SwiGLU -> residual], final RMSNorm, tied head.
+
+The corpus is the order-2 Markov + Zipf grammar of rust/src/data (own
+numpy implementation; the canonical stream is THIS one — Rust loads it).
+
+Usage: python -m compile.pretrain [--out DIR] [--models a,b] [--steps N]
+"""
+
+import argparse
+import os
+import sys
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------- presets
+
+#: name -> (vocab, d_model, n_layers, n_heads, d_ff, max_seq, train_steps)
+PRESETS = {
+    "tiny-0.2M": (256, 96, 2, 4, 256, 128, 1000),
+    "small-0.8M": (512, 128, 4, 4, 352, 128, 800),
+    "base-2M": (512, 192, 6, 6, 512, 128, 500),
+    "med-5M": (512, 256, 8, 8, 704, 128, 300),
+}
+
+# ------------------------------------------------------------------ corpus
+
+
+def splitmix64(x):
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x, z ^ (z >> 31)
+
+
+def gen_corpus(vocab, n, seed, noise=0.2, stream_seed=None):
+    """Order-2 Markov + Zipf grammar (numpy twin of rust/src/data).
+
+    ``seed`` fixes the *grammar* (successor tables); ``stream_seed`` (or
+    ``seed`` when None) fixes the sampled stream — so a shifted-domain
+    corpus can share the language while differing in style/noise.
+    """
+    rng = np.random.default_rng(seed if stream_seed is None else stream_seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    zipf = 1.0 / ranks**1.1
+    zipf /= zipf.sum()
+    # Precompute successor tables lazily via hashing.
+    succ_cache = {}
+
+    def successors(prev, cur):
+        # Context = (cur, prev mod 8): dense enough to be learnable, rich
+        # enough to need attention (twin of rust/src/data successors()).
+        key = (prev & 7, cur)
+        if key not in succ_cache:
+            h = (seed * 0x9E3779B97F4A7C15 + (((prev & 7) << 32) | cur)) & 0xFFFFFFFFFFFFFFFF
+            out = []
+            for _ in range(4):
+                h, v = splitmix64(h)
+                out.append(v % vocab)
+            succ_cache[key] = out
+        return succ_cache[key]
+
+    cum = [0.55, 0.80, 0.92, 1.0]
+    toks = np.empty(n, dtype=np.uint16)
+    prev = int(rng.choice(vocab, p=zipf))
+    cur = int(rng.choice(vocab, p=zipf))
+    toks[0] = prev
+    if n > 1:
+        toks[1] = cur
+    for i in range(2, n):
+        if rng.random() < noise:
+            nxt = int(rng.choice(vocab, p=zipf))
+        else:
+            u = rng.random()
+            succ = successors(prev, cur)
+            nxt = succ[3]
+            for j, c in enumerate(cum):
+                if u < c:
+                    nxt = succ[j]
+                    break
+        toks[i] = nxt
+        prev, cur = cur, nxt
+    return toks
+
+
+def save_corpus(path, toks, vocab):
+    eval_start = len(toks) * 9 // 10
+    with open(path, "wb") as f:
+        f.write(b"OJBC1\n")
+        f.write(f"{vocab} {len(toks)} {eval_start}\n".encode())
+        f.write(toks.astype("<u2").tobytes())
+
+
+# ------------------------------------------------------------------- model
+
+
+def init_params(key, vocab, d, n_layers, ff):
+    ks = jax.random.split(key, 1 + 7 * n_layers)
+    p = {"embedding": 0.02 * jax.random.normal(ks[0], (vocab, d), jnp.float32)}
+    sd = 1.0 / np.sqrt(d)
+    sf = 1.0 / np.sqrt(ff)
+    for i in range(n_layers):
+        k = ks[1 + 7 * i : 8 + 7 * i]
+        p[f"b{i}.attn_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"b{i}.wq"] = sd * jax.random.normal(k[0], (d, d), jnp.float32)
+        p[f"b{i}.wk"] = sd * jax.random.normal(k[1], (d, d), jnp.float32)
+        p[f"b{i}.wv"] = sd * jax.random.normal(k[2], (d, d), jnp.float32)
+        p[f"b{i}.wo"] = sd * jax.random.normal(k[3], (d, d), jnp.float32)
+        p[f"b{i}.mlp_norm"] = jnp.ones((d,), jnp.float32)
+        p[f"b{i}.wgate"] = sd * jax.random.normal(k[4], (d, ff), jnp.float32)
+        p[f"b{i}.wup"] = sd * jax.random.normal(k[5], (d, ff), jnp.float32)
+        p[f"b{i}.wdown"] = sf * jax.random.normal(k[6], (ff, d), jnp.float32)
+    p["final_norm"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + 1e-5) * gain
+
+
+def pos_encoding(seq, d):
+    t = np.arange(seq)[:, None].astype(np.float64)
+    i = np.arange(d // 2)[None, :].astype(np.float64)
+    freq = np.exp(-(2.0 * i / d) * np.log(10_000.0))
+    ang = t * freq
+    pe = np.zeros((seq, d), dtype=np.float32)
+    pe[:, 0::2] = np.sin(ang)
+    pe[:, 1::2] = np.cos(ang)
+    # Scaled to the token-embedding init std (0.02) so position does not
+    # swamp token identity early in training (twin of rust model/mod.rs).
+    return jnp.asarray(0.02 * pe)
+
+
+def forward(p, tokens, n_layers, n_heads):
+    """tokens: (B, S) int32 -> logits (B, S, V). Mirrors rust model/mod.rs."""
+    emb = p["embedding"]
+    b, s = tokens.shape
+    d = emb.shape[1]
+    x = emb[tokens] + pos_encoding(s, d)[None]
+    hd = d // n_heads
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(n_layers):
+        h = rmsnorm(x, p[f"b{i}.attn_norm"])
+        q = h @ p[f"b{i}.wq"]
+        k = h @ p[f"b{i}.wk"]
+        v = h @ p[f"b{i}.wv"]
+        qh = q.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+        scores = qh @ kh.transpose(0, 1, 3, 2) / np.sqrt(hd)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1) @ vh  # (B, H, S, hd)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + attn @ p[f"b{i}.wo"]
+        h2 = rmsnorm(x, p[f"b{i}.mlp_norm"])
+        act = jax.nn.silu(h2 @ p[f"b{i}.wgate"]) * (h2 @ p[f"b{i}.wup"])
+        x = x + act @ p[f"b{i}.wdown"]
+    x = rmsnorm(x, p["final_norm"])
+    return x @ emb.T
+
+
+def loss_fn(p, tokens, n_layers, n_heads):
+    logits = forward(p, tokens, n_layers, n_heads)
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def adam_update(p, g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+    mh = jax.tree.map(lambda a: a / (1 - b1**step), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**step), v)
+    p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + eps), p, mh, vh)
+    return p, m, v
+
+
+def train(name, out_dir, steps_override=None, seed=0xC0FFEE):
+    vocab, d, n_layers, n_heads, ff, max_seq, steps = PRESETS[name]
+    if steps_override:
+        steps = steps_override
+    print(f"[pretrain] {name}: vocab={vocab} d={d} L={n_layers} steps={steps}", file=sys.stderr)
+    # Stable per-model grammar seed (NOT python hash(), which is salted
+    # per process and would make corpora irreproducible).
+    name_tag = zlib.crc32(name.encode()) & 0xFFFF
+    grammar_seed = seed ^ name_tag
+    corpus = gen_corpus(vocab, 300_000, seed=grammar_seed)
+    save_corpus(os.path.join(out_dir, f"corpus_{name}.bin"), corpus, vocab)
+    # Shifted-domain twin ("WikiText-2" role): same grammar, noisier
+    # style, independent stream.
+    shifted = gen_corpus(
+        vocab, 60_000, seed=grammar_seed, noise=0.35, stream_seed=grammar_seed ^ 0x51F7ED
+    )
+    save_corpus(os.path.join(out_dir, f"corpus_shifted_{name}.bin"), shifted, vocab)
+    train_split = corpus[: len(corpus) * 9 // 10].astype(np.int32)
+
+    key = jax.random.PRNGKey(seed & 0xFFFFFFFF)
+    params = init_params(key, vocab, d, n_layers, ff)
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda p, t: loss_fn(p, t, n_layers, n_heads))
+    )
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed)
+    batch, seq = 8, max_seq
+    lr = 3e-3
+    update = jax.jit(lambda p, g, m, v, s: adam_update(p, g, m, v, s, lr))
+    first = last = None
+    for step in range(1, steps + 1):
+        starts = rng.integers(0, len(train_split) - seq - 1, size=batch)
+        toks = np.stack([train_split[st : st + seq] for st in starts])
+        loss, grads = grad_fn(params, jnp.asarray(toks))
+        params, m, v = update(params, grads, m, v, step)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        if step % 50 == 0 or step == 1:
+            print(f"[pretrain] {name} step {step}/{steps} loss={float(loss):.4f}", file=sys.stderr)
+    print(f"[pretrain] {name} done: loss {first:.3f} -> {last:.3f}", file=sys.stderr)
+
+    save_weights(params, os.path.join(out_dir, f"model_{name}.bin"), vocab, d, n_layers, n_heads, ff, max_seq)
+    save_fixture(params, os.path.join(out_dir, f"fixture_{name}.bin"), corpus, n_layers, n_heads, vocab)
+    return first, last
+
+
+def save_weights(p, path, vocab, d, n_layers, n_heads, ff, max_seq):
+    """OJBW1 writer (twin of rust/src/model/io.rs save_model)."""
+    def tensor_bytes(name, rows, cols, arr):
+        data = np.asarray(arr, dtype="<f4").reshape(rows * cols)
+        return f"{name}\n{rows} {cols}\n".encode() + data.tobytes()
+
+    with open(path, "wb") as f:
+        f.write(b"OJBW1\n")
+        f.write(f"{vocab} {d} {n_layers} {n_heads} {ff} {max_seq}\n".encode())
+        f.write(tensor_bytes("embedding", vocab, d, p["embedding"]))
+        for i in range(n_layers):
+            f.write(tensor_bytes(f"b{i}.attn_norm", 1, d, p[f"b{i}.attn_norm"]))
+            f.write(tensor_bytes(f"b{i}.wq", d, d, p[f"b{i}.wq"]))
+            f.write(tensor_bytes(f"b{i}.wk", d, d, p[f"b{i}.wk"]))
+            f.write(tensor_bytes(f"b{i}.wv", d, d, p[f"b{i}.wv"]))
+            f.write(tensor_bytes(f"b{i}.wo", d, d, p[f"b{i}.wo"]))
+            f.write(tensor_bytes(f"b{i}.mlp_norm", 1, d, p[f"b{i}.mlp_norm"]))
+            f.write(tensor_bytes(f"b{i}.wgate", d, ff, p[f"b{i}.wgate"]))
+            f.write(tensor_bytes(f"b{i}.wup", d, ff, p[f"b{i}.wup"]))
+            f.write(tensor_bytes(f"b{i}.wdown", ff, d, p[f"b{i}.wdown"]))
+        f.write(tensor_bytes("final_norm", 1, d, p["final_norm"]))
+
+
+def save_fixture(p, path, corpus, n_layers, n_heads, vocab):
+    """OJBF1: a (tokens, logits) pair for Rust/JAX forward parity tests."""
+    seq = 24
+    toks = corpus[1_000 : 1_000 + seq].astype(np.int32)[None]
+    logits = np.asarray(forward(p, jnp.asarray(toks), n_layers, n_heads))[0]
+    with open(path, "wb") as f:
+        f.write(b"OJBF1\n")
+        f.write(f"{seq} {vocab}\n".encode())
+        f.write(toks[0].astype("<u2").tobytes())
+        f.write(logits.astype("<f4").tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--models", default=",".join(PRESETS))
+    ap.add_argument("--steps", type=int, default=None, help="override step count")
+    args = ap.parse_args()
+    out_dir = args.out or os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in PRESETS:
+            print(f"unknown preset {name!r}; have {list(PRESETS)}", file=sys.stderr)
+            sys.exit(2)
+        first, last = train(name, out_dir, steps_override=args.steps)
+        if not last < first:
+            print(f"WARNING: {name} loss did not improve ({first} -> {last})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

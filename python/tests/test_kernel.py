@@ -1,0 +1,181 @@
+"""Layer-1 correctness: the Pallas PPI-KBabai kernel against the pure
+numpy oracle — the CORE cross-layer correctness signal (the same oracle
+contract is enforced against the Rust native decoder in
+rust/src/quant/ppi.rs and against the AOT artifact in
+rust/tests/pjrt_roundtrip.rs).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.babai_klein import ppi_decode, sample_codes, vmem_bytes
+from compile.model import layer_solve, layer_solve_with_resid
+
+
+def assert_tile_matches(m, t, k, seed, qmax=15.0, block=16):
+    r, s, qbar, alpha, u = ref.make_case(m, t, k, seed, qmax=qmax)
+    q_ref, resid_ref = ref.decode_tile_ref(r, s, qbar, alpha, u, qmax)
+    q_ker = np.asarray(ppi_decode(r, s, qbar, alpha, u, qmax, block=block))
+    mismatch = (q_ker != q_ref).mean()
+    assert mismatch < 5e-3, f"mismatch fraction {mismatch} (m={m} t={t} k={k})"
+    return q_ref, resid_ref, q_ker
+
+
+class TestKernelVsOracle:
+    def test_small_greedy(self):
+        assert_tile_matches(16, 4, 0, seed=1)
+
+    def test_small_sampled(self):
+        assert_tile_matches(16, 4, 3, seed=2)
+
+    def test_medium(self):
+        assert_tile_matches(64, 8, 5, seed=3)
+
+    def test_3bit_box(self):
+        q_ref, _, q_ker = assert_tile_matches(32, 4, 2, seed=4, qmax=7.0)
+        assert q_ker.max() <= 7.0 and q_ker.min() >= 0.0
+
+    def test_block_sizes_equivalent(self):
+        r, s, qbar, alpha, u = ref.make_case(32, 4, 2, seed=5)
+        outs = [
+            np.asarray(ppi_decode(r, s, qbar, alpha, u, 15.0, block=b))
+            for b in (1, 4, 8, 16, 32)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+    def test_selection_matches_oracle(self):
+        r, s, qbar, alpha, u = ref.make_case(48, 6, 4, seed=6)
+        q_ref, resid_ref = ref.decode_tile_ref(r, s, qbar, alpha, u, 15.0)
+        best_ref, _ = ref.select_best(q_ref, resid_ref)
+        (best,) = layer_solve(r, s, qbar, alpha, u, 15.0)
+        mismatch = (np.asarray(best) != best_ref).mean()
+        assert mismatch < 5e-3, f"selection mismatch {mismatch}"
+
+    def test_resid_variant_consistent(self):
+        r, s, qbar, alpha, u = ref.make_case(32, 4, 3, seed=7)
+        (q1,) = layer_solve(r, s, qbar, alpha, u, 15.0)
+        q2, resid = layer_solve_with_resid(r, s, qbar, alpha, u, 15.0)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        assert np.all(np.asarray(resid) >= 0)
+
+
+class TestKernelProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([16, 32, 48, 64]),
+        t=st.integers(1, 8),
+        k=st.integers(0, 4),
+        qmax=st.sampled_from([3.0, 7.0, 15.0]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_oracle_across_shapes(self, m, t, k, qmax, seed):
+        assert_tile_matches(m, t, k, seed=seed, qmax=qmax)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([16, 32]),
+        t=st.integers(1, 6),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 10_000),
+    )
+    def test_codes_integral_and_boxed(self, m, t, k, seed):
+        r, s, qbar, alpha, u = ref.make_case(m, t, k, seed)
+        q = np.asarray(ppi_decode(r, s, qbar, alpha, u, 15.0))
+        assert np.all(q == np.round(q))
+        assert q.min() >= 0 and q.max() <= 15
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([16, 32]), t=st.integers(1, 4), seed=st.integers(0, 10_000))
+    def test_greedy_path_never_loses_selection(self, m, t, seed):
+        """The winner's residual is <= the greedy path's (Algorithm 4)."""
+        k = 4
+        r, s, qbar, alpha, u = ref.make_case(m, t, k, seed)
+        q_all, resid = ref.decode_tile_ref(r, s, qbar, alpha, u, 15.0)
+        _, winner = ref.select_best(q_all, resid)
+        for j in range(t):
+            assert resid[winner[j], j] <= resid[0, j] + 1e-6
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_exact_center_zero_residual(self, seed):
+        """Integer centers decode to themselves with zero residual."""
+        m, t = 24, 3
+        rng = np.random.default_rng(seed)
+        r, s, _, alpha, u = ref.make_case(m, t, 2, seed)
+        qbar = rng.integers(0, 16, size=(m, t)).astype(np.float32)
+        q = np.asarray(ppi_decode(r, s, qbar, alpha, u, 15.0))
+        np.testing.assert_array_equal(q[0], qbar)  # greedy path exact
+
+
+class TestSampling:
+    def test_greedy_limit(self):
+        """alpha -> inf reduces sampling to rounding (paper §3.4)."""
+        rng = np.random.default_rng(0)
+        c = (15 * rng.random((5, 7))).astype(np.float32)
+        u = rng.random((5, 7)).astype(np.float32)
+        alpha = np.full((7,), 1e9, dtype=np.float32)
+        out = np.asarray(sample_codes(c, np.float32(1.0), alpha, 15.0, u))
+        expected = np.clip(np.floor(c + 0.5), 0, 15)
+        np.testing.assert_array_equal(out, expected)
+
+    def test_distribution_matches_eq13(self):
+        """Empirical sampling frequencies track the analytic Eq. 13."""
+        c_val, alpha_val, qmax = 6.3, 0.8, 15.0
+        n = int(qmax) + 1
+        w = np.exp(-alpha_val * (c_val - np.arange(n)) ** 2)
+        probs = w / w.sum()
+        rng = np.random.default_rng(1)
+        trials = 40_000
+        c = np.full((trials, 1), c_val, dtype=np.float32)
+        u = rng.random((trials, 1)).astype(np.float32)
+        alpha = np.array([alpha_val], dtype=np.float32)
+        out = np.asarray(sample_codes(c, np.float32(1.0), alpha, qmax, u)).ravel()
+        for v in range(n):
+            emp = (out == v).mean()
+            assert abs(emp - probs[v]) < 0.01, f"v={v} emp={emp} analytic={probs[v]}"
+
+    def test_mask_respects_qmax(self):
+        """Values above qmax must have zero probability (3-bit mask)."""
+        rng = np.random.default_rng(2)
+        c = np.full((2_000, 1), 6.9, dtype=np.float32)  # near the 3-bit edge
+        u = rng.random((2_000, 1)).astype(np.float32)
+        alpha = np.array([0.2], dtype=np.float32)  # hot: wide distribution
+        out = np.asarray(sample_codes(c, np.float32(1.0), alpha, 7.0, u))
+        assert out.max() <= 7.0
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        c=st.floats(-2.0, 17.0),
+        alpha=st.floats(0.01, 100.0),
+        # u bounded away from the measure-zero 0/1 boundaries where the
+        # shared e^-30 significance cutoff intentionally drops tail mass.
+        u=st.floats(1e-6, 0.999),
+    )
+    def test_scalar_contract_matches_ref(self, c, alpha, u):
+        """Vectorized sampler == scalar oracle sampler on random scalars."""
+        got = float(
+            np.asarray(
+                sample_codes(
+                    np.array([[c]], dtype=np.float32),
+                    np.float32(1.0),
+                    np.array([alpha], dtype=np.float32),
+                    15.0,
+                    np.array([[u]], dtype=np.float32),
+                )
+            )[0, 0]
+        )
+        want = ref.sample_code(c, 1.0, alpha, 15.0, u)
+        assert got == want, f"c={c} alpha={alpha} u={u}: {got} vs {want}"
+
+
+class TestVmemBudget:
+    def test_all_variants_fit_tpu_vmem(self):
+        """DESIGN.md §7: every emitted variant must fit a 16 MiB VMEM."""
+        from compile.aot import FULL_VARIANTS
+
+        for m, t, k in FULL_VARIANTS:
+            b = vmem_bytes(m, t, k + 1)
+            assert b < 16 * 2**20, f"variant ({m},{t},{k}) needs {b / 2**20:.1f} MiB"

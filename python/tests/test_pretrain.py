@@ -1,0 +1,149 @@
+"""Layer-2 build-path tests: corpus generator statistics, model forward
+shapes, training-step sanity, and serialization format invariants."""
+
+import io
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import pretrain
+
+
+class TestCorpus:
+    def test_tokens_in_vocab_and_deterministic(self):
+        a = pretrain.gen_corpus(64, 5_000, seed=1)
+        b = pretrain.gen_corpus(64, 5_000, seed=1)
+        np.testing.assert_array_equal(a, b)
+        assert a.max() < 64
+        c = pretrain.gen_corpus(64, 5_000, seed=2)
+        assert not np.array_equal(a, c)
+
+    def test_learnable_structure(self):
+        """Conditional (order-2) entropy well below unigram entropy."""
+        toks = pretrain.gen_corpus(64, 120_000, seed=3)
+        uni = np.bincount(toks, minlength=64).astype(np.float64)
+        p = uni / uni.sum()
+        h_uni = -(p[p > 0] * np.log(p[p > 0])).sum()
+        from collections import defaultdict
+
+        ctx = defaultdict(lambda: np.zeros(64))
+        for i in range(2, len(toks)):
+            ctx[(toks[i - 2], toks[i - 1])][toks[i]] += 1
+        h_cond, mass = 0.0, 0.0
+        for counts in ctx.values():
+            t = counts.sum()
+            q = counts[counts > 0] / t
+            h_cond += t * -(q * np.log(q)).sum()
+            mass += t
+        h_cond /= mass
+        assert h_cond < 0.7 * h_uni, (h_cond, h_uni)
+
+    def test_corpus_file_format(self):
+        toks = pretrain.gen_corpus(32, 1_000, seed=4)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "c.bin")
+            pretrain.save_corpus(path, toks, 32)
+            with open(path, "rb") as f:
+                assert f.readline() == b"OJBC1\n"
+                vocab, n, eval_start = map(int, f.readline().split())
+                assert (vocab, n, eval_start) == (32, 1_000, 900)
+                data = np.frombuffer(f.read(), dtype="<u2")
+            np.testing.assert_array_equal(data, toks)
+
+
+class TestModelForward:
+    def _params(self, vocab=32, d=16, layers=2, ff=24, seed=0):
+        return pretrain.init_params(jax.random.PRNGKey(seed), vocab, d, layers, ff)
+
+    def test_shapes_and_finite(self):
+        p = self._params()
+        toks = jnp.arange(10, dtype=jnp.int32).reshape(1, 10) % 32
+        logits = pretrain.forward(p, toks, 2, 2)
+        assert logits.shape == (1, 10, 32)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self):
+        p = self._params()
+        a = jnp.array([[1, 2, 3, 4, 5, 6]], dtype=jnp.int32)
+        b = a.at[0, 5].set(31)
+        la = pretrain.forward(p, a, 2, 2)
+        lb = pretrain.forward(p, b, 2, 2)
+        np.testing.assert_allclose(la[0, :5], lb[0, :5], rtol=1e-5, atol=1e-5)
+
+    def test_loss_decreases_over_steps(self):
+        vocab, d, layers, ff = 64, 32, 1, 48
+        p = self._params(vocab, d, layers, ff)
+        corpus = pretrain.gen_corpus(vocab, 30_000, seed=5).astype(np.int32)
+        grad_fn = jax.jit(
+            jax.value_and_grad(lambda pp, t: pretrain.loss_fn(pp, t, layers, 2))
+        )
+        m = jax.tree.map(jnp.zeros_like, p)
+        v = jax.tree.map(jnp.zeros_like, p)
+        rng = np.random.default_rng(0)
+        losses = []
+        for step in range(1, 81):
+            starts = rng.integers(0, len(corpus) - 33, size=8)
+            toks = np.stack([corpus[s : s + 32] for s in starts])
+            loss, g = grad_fn(p, jnp.asarray(toks))
+            p, m, v = pretrain.adam_update(p, g, m, v, step, 5e-3)
+            losses.append(float(loss))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses[::16]
+
+
+class TestSerialization:
+    def test_weight_file_layout(self):
+        vocab, d, layers, heads, ff, seq = 16, 8, 1, 2, 12, 16
+        p = pretrain.init_params(jax.random.PRNGKey(1), vocab, d, layers, ff)
+        with tempfile.TemporaryDirectory() as dd:
+            path = os.path.join(dd, "m.bin")
+            pretrain.save_weights(p, path, vocab, d, layers, heads, ff, seq)
+            with open(path, "rb") as f:
+                assert f.readline() == b"OJBW1\n"
+                dims = list(map(int, f.readline().split()))
+                assert dims == [vocab, d, layers, heads, ff, seq]
+                # First tensor header.
+                assert f.readline().strip() == b"embedding"
+                rows, cols = map(int, f.readline().split())
+                assert (rows, cols) == (vocab, d)
+                emb = np.frombuffer(f.read(rows * cols * 4), dtype="<f4")
+                np.testing.assert_allclose(
+                    emb.reshape(vocab, d), np.asarray(p["embedding"]), rtol=1e-6
+                )
+
+    def test_fixture_roundtrip(self):
+        vocab, d, layers, heads, ff = 16, 8, 1, 2, 12
+        p = pretrain.init_params(jax.random.PRNGKey(2), vocab, d, layers, ff)
+        corpus = pretrain.gen_corpus(vocab, 3_000, seed=6)
+        with tempfile.TemporaryDirectory() as dd:
+            path = os.path.join(dd, "f.bin")
+            pretrain.save_fixture(p, path, corpus, layers, heads, vocab)
+            with open(path, "rb") as f:
+                assert f.readline() == b"OJBF1\n"
+                seq, v = map(int, f.readline().split())
+                toks = np.frombuffer(f.read(seq * 2), dtype="<u2")
+                logits = np.frombuffer(f.read(seq * v * 4), dtype="<f4").reshape(seq, v)
+            recomputed = np.asarray(
+                pretrain.forward(p, jnp.asarray(toks.astype(np.int32))[None], layers, heads)
+            )[0]
+            np.testing.assert_allclose(logits, recomputed, rtol=1e-5, atol=1e-5)
+
+
+class TestRho:
+    """The alpha schedule helper shared with the Rust solver."""
+
+    def test_rho_monotone_in_k(self):
+        from compile.kernels.ref import solve_rho
+
+        m = 128
+        assert solve_rho(5, m) > solve_rho(10, m) > solve_rho(50, m) >= 1.0
+
+    def test_rho_satisfies_equation(self):
+        from compile.kernels.ref import solve_rho
+
+        k, m = 8, 64
+        rho = solve_rho(k, m)
+        assert abs((2 * m / rho) * (1 + np.log(rho)) - np.log(k)) < 1e-6

@@ -1,0 +1,103 @@
+//! **Design ablations** (DESIGN.md §5 extensions) — the choices the paper
+//! motivates but does not table:
+//!
+//! 1. Babai → Random-K → *optimal* (sphere decoder) residual gap: how
+//!    much of the optimality gap K candidates recover (§3.4's rationale).
+//! 2. Decode ordering (act-order) on/off for the OJBKQ family (our
+//!    documented deviation, DESIGN.md §6b).
+//! 3. μ scheduling: fixed paper defaults vs depth-linear (the paper's
+//!    future-work adaptive strategy).
+//! 4. QEP corner vs full JTA.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::perplexity_pair;
+use ojbkq::quant::sphere::decode_optimal;
+use ojbkq::quant::{klein, Method, MuSchedule, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::rng::Rng;
+use ojbkq::testutil::gen_solver_case;
+
+fn main() {
+    // --- 1. Optimality-gap study on random BILS instances.
+    let mut t_gap = Table::new(
+        "Ablation — residual vs optimal (mean over 20 instances)",
+        &["m", "Babai /opt", "K=5 /opt", "K=25 /opt", "sphere nodes"],
+    );
+    let mut rng = Rng::new(0xAB1);
+    for &m in &[8usize, 12, 16] {
+        let (mut b_tot, mut k5_tot, mut k25_tot, mut opt_tot, mut nodes) =
+            (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0u64);
+        for i in 0..20 {
+            let case = gen_solver_case(&mut rng, m, 4);
+            let opt = decode_optimal(&case.r, &case.s, &case.qbar, case.qmax, 2_000_000);
+            let greedy =
+                ojbkq::quant::babai::decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+            let gres =
+                ojbkq::quant::babai::residual_sq(&case.r, &case.s, &case.qbar, &greedy);
+            let mut r5 = Rng::new(100 + i);
+            let (_, k5) = klein::decode_kbest(&case.r, &case.s, &case.qbar, case.qmax, 5, &mut r5);
+            let mut r25 = Rng::new(100 + i);
+            let (_, k25) =
+                klein::decode_kbest(&case.r, &case.s, &case.qbar, case.qmax, 25, &mut r25);
+            b_tot += gres;
+            k5_tot += k5;
+            k25_tot += k25;
+            opt_tot += opt.resid;
+            nodes += opt.nodes;
+        }
+        t_gap.push_row(&[
+            m.to_string(),
+            format!("{:.3}", b_tot / opt_tot.max(1e-12)),
+            format!("{:.3}", k5_tot / opt_tot.max(1e-12)),
+            format!("{:.3}", k25_tot / opt_tot.max(1e-12)),
+            format!("{}", nodes / 20),
+        ]);
+        eprintln!("[ablation] m={m} gap study done");
+    }
+    t_gap.emit(Some(&exp::results_dir()), "ablation_optimality_gap");
+
+    // --- 2–4. Pipeline-level ablations on the last bench model.
+    let mc = &exp::bench_models()[exp::bench_models().len() - 1];
+    let wb = exp::load_workbench(mc);
+    let (n_calib, seq) = exp::calib_size();
+    let ppl_tokens = exp::ppl_tokens();
+    let base3 = QuantConfig::paper_defaults(3, 128);
+    let runs: Vec<(&str, Method, QuantConfig)> = vec![
+        ("Ours (paper μλ)", Method::Ojbkq, base3.clone()),
+        (
+            "Ours, no act-order",
+            Method::Ojbkq,
+            QuantConfig { act_order: false, ..base3.clone() },
+        ),
+        (
+            "Ours, μ depth-linear 0→1",
+            Method::Ojbkq,
+            QuantConfig {
+                mu_schedule: MuSchedule::DepthLinear { start: 0.0, end: 1.0 },
+                ..base3.clone()
+            },
+        ),
+        ("QEP corner (μ=0,λ=0)", Method::Qep, base3.clone()),
+        ("Ours(R) (μ=1,λ=0)", Method::KleinRandomK, base3.clone()),
+    ];
+    let mut t_pipe = Table::new(
+        &format!("Ablation — pipeline variants on {} (3-bit g128)", mc.name),
+        &["variant", "ppl in-domain", "ppl shifted"],
+    );
+    for (label, method, cfg) in runs {
+        match quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None) {
+            Ok((qm, _)) => {
+                let (pin, psh) =
+                    perplexity_pair(&qm, &wb.corpus, &wb.shifted, mc.max_seq, ppl_tokens);
+                t_pipe.push_row(&[label.to_string(), format!("{pin:.3}"), format!("{psh:.3}")]);
+                eprintln!("[ablation] {label}: {pin:.3}/{psh:.3}");
+            }
+            Err(e) => {
+                eprintln!("[ablation] {label} failed: {e}");
+                t_pipe.push_row(&[label.to_string(), "err".into(), "err".into()]);
+            }
+        }
+    }
+    t_pipe.emit(Some(&exp::results_dir()), "ablation_pipeline_variants");
+}

@@ -1,0 +1,72 @@
+//! **Figure 1** — layer-wise comparison of original output norms and JTA
+//! reconstruction errors across early/mid/late blocks, for all linear
+//! modules, under varying K. Shape target (DESIGN.md E4): reconstruction
+//! error ≪ output norm everywhere, decreasing with K.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::Pipeline;
+use ojbkq::model::LinearId;
+use ojbkq::quant::{LayerStats, Method, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::rng::Rng;
+
+fn main() {
+    let mc = &exp::bench_models()[exp::bench_models().len() - 1];
+    let wb = exp::load_workbench(mc);
+    let (n_calib, seq) = exp::calib_size();
+    let ks: Vec<usize> = if exp::quick() { vec![1, 5] } else { vec![1, 5, 15] };
+
+    // One pipeline run per K, streaming per-layer stats.
+    let mut records: Vec<(usize, Vec<(LinearId, LayerStats)>)> = Vec::new();
+    for &k in &ks {
+        let cfg = QuantConfig {
+            k,
+            ..QuantConfig::paper_defaults(4, 128)
+        };
+        let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
+        let calib = wb.corpus.calibration(n_calib, seq.min(mc.max_seq), &mut rng);
+        let mut layer_log: Vec<(LinearId, LayerStats)> = Vec::new();
+        {
+            let mut p = Pipeline::new(wb.model.clone(), calib, Method::Ojbkq, cfg, None);
+            p.on_layer = Some(Box::new(|id, stats| layer_log.push((id, stats.clone()))));
+            let _ = p.run().expect("pipeline");
+        }
+        eprintln!("[fig1] K={k} pipeline done ({} layers)", layer_log.len());
+        records.push((k, layer_log));
+    }
+
+    // Report blocks {first, middle, last} like the paper's layers 1/15/30.
+    let n_blocks = wb.model.blocks.len();
+    let picks = [0usize, n_blocks / 2, n_blocks - 1];
+    let mut headers: Vec<String> = vec!["module".into(), "||XW||_F".into()];
+    for &k in &ks {
+        headers.push(format!("JTA err (K={k})"));
+    }
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    for &blk in &picks {
+        let mut table = Table::new(
+            &format!("Figure 1 — {} block {blk} output norm vs JTA error", mc.name),
+            &href,
+        );
+        let base = &records[0].1;
+        for (idx, (id, stats)) in base.iter().enumerate() {
+            if id.block != blk {
+                continue;
+            }
+            let mut row: Vec<String> =
+                vec![id.to_string(), format!("{:.3}", stats.out_norm)];
+            for (_, log) in &records {
+                row.push(format!("{:.3}", log[idx].1.jta_err));
+            }
+            table.push_row(&row);
+        }
+        table.emit(Some(&exp::results_dir()), &format!("fig1_block{blk}"));
+    }
+
+    // Shape check: total JTA error should not increase with K.
+    let totals: Vec<f64> = records
+        .iter()
+        .map(|(_, log)| log.iter().map(|(_, s)| s.jta_err).sum())
+        .collect();
+    eprintln!("[fig1] total JTA error by K: {totals:?}");
+}

@@ -1,0 +1,52 @@
+//! **Figure 2** — ablation on the candidate size K: perplexity on both
+//! corpora vs K ∈ {1, 5, 10, 25, 50} at 4-bit g128. Shape target
+//! (DESIGN.md E5): significant drop from K=1 to K=5, then diminishing
+//! returns — the basis for the paper's K=5 default.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::perplexity_pair;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::Table;
+
+fn main() {
+    let mc = &exp::bench_models()[exp::bench_models().len() - 1];
+    let wb = exp::load_workbench(mc);
+    let (n_calib, seq) = exp::calib_size();
+    let ppl_tokens = exp::ppl_tokens();
+    let ks: Vec<usize> = if exp::quick() { vec![1, 5, 10] } else { vec![1, 5, 10, 25, 50] };
+
+    let mut table = Table::new(
+        &format!("Figure 2 — K ablation on {} (4-bit g128)", mc.name),
+        &["K", "ppl in-domain", "ppl shifted", "quant secs"],
+    );
+    let mut series = Vec::new();
+    for &k in &ks {
+        // K=1 means one sampled path; the greedy path is always reserved,
+        // matching Algorithm 4 (K candidates + Babai point).
+        let cfg = QuantConfig { k, ..QuantConfig::paper_defaults(4, 128) };
+        let t0 = std::time::Instant::now();
+        let (qm, _) =
+            quantize_model(&wb.model, &wb.corpus, Method::KleinRandomK, &cfg, n_calib, seq, None)
+                .expect("quantize");
+        let secs = t0.elapsed().as_secs_f64();
+        let (pin, psh) = perplexity_pair(&qm, &wb.corpus, &wb.shifted, mc.max_seq, ppl_tokens);
+        table.push_row(&[
+            k.to_string(),
+            format!("{pin:.3}"),
+            format!("{psh:.3}"),
+            format!("{secs:.2}"),
+        ]);
+        eprintln!("[fig2] K={k}: ppl {pin:.3}/{psh:.3} ({secs:.1}s)");
+        series.push(pin);
+    }
+    table.emit(Some(&exp::results_dir()), "fig2_k_ablation");
+    // Shape note: K=5 should capture most of the K=50 improvement.
+    if series.len() >= 2 {
+        eprintln!(
+            "[fig2] improvement K1->K5: {:.4}; K5->Kmax: {:.4}",
+            series[0] - series[1],
+            series[1] - series[series.len() - 1]
+        );
+    }
+}

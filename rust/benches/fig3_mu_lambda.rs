@@ -1,0 +1,75 @@
+//! **Figure 3 + Table 4** — sensitivity of the JTA knobs (μ, λ) on
+//! shifted-corpus perplexity at 3-bit g128. Emits the full (μ, λ) grid
+//! (Table 4) plus the two 1-D sweeps with the other knob fixed at 0.6
+//! (Figure 3). Shape target (DESIGN.md E6): U-shaped μ curve with an
+//! interior optimum; λ flatter with a robust interior operating point.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::perplexity;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::Table;
+
+fn main() {
+    let mc = &exp::bench_models()[exp::bench_models().len() - 1];
+    let wb = exp::load_workbench(mc);
+    let (n_calib, seq) = exp::calib_size();
+    let ppl_tokens = exp::ppl_tokens();
+
+    let grid: Vec<f64> = if exp::quick() {
+        vec![0.1, 0.4, 0.6, 0.8]
+    } else {
+        vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+    };
+
+    let run = |mu: f64, lambda: f64| -> f64 {
+        let cfg = QuantConfig { mu, lambda, ..QuantConfig::paper_defaults(3, 128) };
+        match quantize_model(&wb.model, &wb.corpus, Method::Ojbkq, &cfg, n_calib, seq, None) {
+            Ok((qm, _)) => perplexity(&qm, &wb.shifted, mc.max_seq, ppl_tokens),
+            Err(e) => {
+                eprintln!("[fig3] mu={mu} lambda={lambda} failed: {e}");
+                f64::NAN
+            }
+        }
+    };
+
+    // Full grid (Table 4).
+    let mut headers: Vec<String> = vec!["mu \\ lambda".into()];
+    headers.extend(grid.iter().map(|l| format!("{l:.1}")));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table4 = Table::new(
+        &format!("Table 4 — shifted-corpus PPL on {} under (mu, lambda), 3-bit", mc.name),
+        &href,
+    );
+    let mut best = (f64::INFINITY, 0.0, 0.0);
+    for &mu in &grid {
+        let mut row: Vec<String> = vec![format!("{mu:.1}")];
+        for &lambda in &grid {
+            let p = run(mu, lambda);
+            if p < best.0 {
+                best = (p, mu, lambda);
+            }
+            row.push(format!("{p:.4}"));
+        }
+        eprintln!("[fig3] grid row mu={mu} done");
+        table4.push_row(&row);
+    }
+    table4.emit(Some(&exp::results_dir()), "table4_mu_lambda_grid");
+    eprintln!("[fig3] grid optimum: ppl={:.4} at (mu={}, lambda={})", best.0, best.1, best.2);
+
+    // 1-D sweeps with the other knob at 0.6 (Figure 3 panels). Reuses the
+    // grid's sample points plus the boundary values the paper plots.
+    let sweep: Vec<f64> =
+        vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+    let mut fig3 = Table::new(
+        &format!("Figure 3 — 1-D sensitivity on {} (other knob = 0.6)", mc.name),
+        &["value", "ppl (vary mu)", "ppl (vary lambda)"],
+    );
+    for &v in &sweep {
+        let p_mu = run(v, 0.6);
+        let p_la = run(0.6, v);
+        fig3.push_row(&[format!("{v:.1}"), format!("{p_mu:.4}"), format!("{p_la:.4}")]);
+        eprintln!("[fig3] sweep v={v}: mu-curve {p_mu:.4}, lambda-curve {p_la:.4}");
+    }
+    fig3.emit(Some(&exp::results_dir()), "fig3_mu_lambda_sweeps");
+}

@@ -1,0 +1,134 @@
+//! **§Perf** — whole-stack solver profiling (DESIGN.md E8): GEMM
+//! substrate throughput, per-stage layer-solve breakdown, PPI block-size
+//! sweep, native-vs-PJRT decode throughput, and column scaling. Drives
+//! the before/after iteration log in EXPERIMENTS.md §Perf.
+
+use ojbkq::bench::exp;
+use ojbkq::bench::{gflops, Bencher};
+use ojbkq::linalg::{cholesky_upper_jittered, matmul, syrk_upper};
+use ojbkq::quant::klein::alpha_for;
+use ojbkq::quant::ppi::{decode_tile, PpiInput};
+use ojbkq::quant::{jta, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::rng::Rng;
+use ojbkq::runtime::SolverRuntime;
+use ojbkq::tensor::Matrix;
+
+fn main() {
+    let mut rng = Rng::new(0x9E2F);
+
+    // --- 1. GEMM substrate roofline.
+    let mut t_gemm = Table::new("Perf — GEMM substrate", &["op", "shape", "GFLOP/s"]);
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512), (1024, 256, 512)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let stats =
+            Bencher::new(&format!("gemm {m}x{k}x{n}")).warmup(2).iters(8).run(|| matmul(&a, &b));
+        t_gemm.push_row(&[
+            "gemm".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.2}", gflops(2.0 * (m * k * n) as f64, &stats)),
+        ]);
+    }
+    for &(p, m) in &[(1024usize, 256usize), (2048, 384)] {
+        let x = Matrix::randn(p, m, 1.0, &mut rng);
+        let stats =
+            Bencher::new(&format!("syrk {p}x{m}")).warmup(2).iters(8).run(|| syrk_upper(&x, 0.1));
+        t_gemm.push_row(&[
+            "syrk (X̃ᵀX̃)".into(),
+            format!("{p}x{m}"),
+            format!("{:.2}", gflops((p * m * m) as f64, &stats)),
+        ]);
+    }
+    t_gemm.emit(Some(&exp::results_dir()), "perf_gemm");
+
+    // --- 2. Layer-solve stage breakdown (m=256, n=256, p=1024, K=5).
+    let (m, n, p, k) = if exp::quick() { (128, 128, 512, 5) } else { (256, 256, 1024, 5) };
+    let w = Matrix::randn(m, n, 0.5, &mut rng);
+    let x = Matrix::randn(p, m, 1.0, &mut rng);
+    let cfg = QuantConfig { k, ..QuantConfig::paper_defaults(4, 128) };
+    let mut t_stage = Table::new(
+        &format!("Perf — layer solve stages (m={m} n={n} p={p} K={k})"),
+        &["stage", "p50 ms"],
+    );
+    let sys_stats = Bencher::new("jta system (gram+rhs)")
+        .warmup(1)
+        .iters(5)
+        .run(|| jta::build_system(&w, &x, &x, &cfg));
+    let sys = jta::build_system(&w, &x, &x, &cfg);
+    let chol_stats = Bencher::new("cholesky")
+        .warmup(1)
+        .iters(5)
+        .run(|| cholesky_upper_jittered(&sys.gram, 1e-6).unwrap());
+    let (r, _) = cholesky_upper_jittered(&sys.gram, 1e-6).unwrap();
+    let solve_stats =
+        Bencher::new("triangular solves").warmup(1).iters(5).run(|| jta::solve_real(&r, &sys.rhs));
+    let s_tile = Matrix::from_fn(m, 64, |_, _| 0.1);
+    let qbar = Matrix::from_fn(m, 64, |_, _| 7.5);
+    let alpha: Vec<f32> = (0..64)
+        .map(|j| {
+            let mn = (0..m)
+                .map(|i| {
+                    let v = r.get(i, i) as f64 * s_tile.get(i, j) as f64;
+                    v * v
+                })
+                .fold(f64::INFINITY, f64::min);
+            alpha_for(k, m, mn) as f32
+        })
+        .collect();
+    let uniforms = Rng::new(1).uniform_vec_f32((k + 1) * m * 64);
+    let decode_stats = Bencher::new("ppi decode (1 tile)").warmup(1).iters(5).run(|| {
+        decode_tile(&PpiInput {
+            r: &r,
+            s: &s_tile,
+            qbar: &qbar,
+            qmax: 15.0,
+            k,
+            block: 16,
+            alpha: &alpha,
+            uniforms: &uniforms,
+        })
+    });
+    for (name, st) in [
+        ("gram+rhs", &sys_stats),
+        ("cholesky", &chol_stats),
+        ("tri solves", &solve_stats),
+        ("ppi decode/tile", &decode_stats),
+    ] {
+        t_stage.push_row(&[name.to_string(), format!("{:.2}", st.p50 * 1e3)]);
+    }
+    t_stage.emit(Some(&exp::results_dir()), "perf_stages");
+
+    // --- 3. PPI block-size sweep (the Appendix-A B parameter).
+    let mut t_block = Table::new("Perf — PPI block size sweep", &["B", "p50 ms"]);
+    for &b in &[1usize, 4, 8, 16, 32, 64] {
+        let st = Bencher::new(&format!("ppi B={b}")).warmup(1).iters(5).run(|| {
+            decode_tile(&PpiInput {
+                r: &r,
+                s: &s_tile,
+                qbar: &qbar,
+                qmax: 15.0,
+                k,
+                block: b,
+                alpha: &alpha,
+                uniforms: &uniforms,
+            })
+        });
+        t_block.push_row(&[b.to_string(), format!("{:.2}", st.p50 * 1e3)]);
+    }
+    t_block.emit(Some(&exp::results_dir()), "perf_block_sweep");
+
+    // --- 4. Native vs PJRT decode.
+    if let Ok(rt) = SolverRuntime::new(&exp::artifacts_dir()) {
+        if rt.select_variant(m, 64, k).is_some() {
+            let mut t_backend =
+                Table::new("Perf — decode backend comparison", &["backend", "p50 ms"]);
+            t_backend.push_row(&["native".to_string(), format!("{:.2}", decode_stats.p50 * 1e3)]);
+            let st = Bencher::new("pjrt decode (1 tile)").warmup(1).iters(5).run(|| {
+                rt.decode_tile(&r, &s_tile, &qbar, 15.0, k, &alpha, &uniforms).expect("pjrt")
+            });
+            t_backend.push_row(&["pjrt".to_string(), format!("{:.2}", st.p50 * 1e3)]);
+            t_backend.emit(Some(&exp::results_dir()), "perf_backend");
+        }
+    }
+}

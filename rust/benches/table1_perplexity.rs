@@ -1,0 +1,92 @@
+//! **Table 1** — perplexity across models × methods at {W4, W3} × {g128,
+//! g0}. Left value = in-domain corpus ("C4" role), right = shifted corpus
+//! ("WikiText-2" role). Shape targets (DESIGN.md E1): Ours ≤ Ours(R) ≤
+//! Ours(N) ≈ GPTQ/AWQ ≪ RTN, gaps widening at 3-bit and g0.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::perplexity_pair;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::{mark_best_min, Table};
+use ojbkq::util::fmt_secs;
+
+fn main() {
+    let models = exp::bench_models();
+    let (n_calib, seq) = exp::calib_size();
+    let ppl_tokens = exp::ppl_tokens();
+    let settings: Vec<(u8, usize)> = if exp::quick() {
+        vec![(4, 128), (3, 128)]
+    } else {
+        vec![(4, 128), (3, 128), (4, 0), (3, 0)]
+    };
+
+    for (wbit, group) in settings {
+        let label = format!(
+            "Table 1 — W{wbit}A16 g{} perplexity (in-domain / shifted)",
+            if group == 0 { "0".into() } else { group.to_string() }
+        );
+        let mut headers: Vec<String> = vec!["Method".into()];
+        for m in &models {
+            headers.push(m.name.clone());
+        }
+        let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&label, &href);
+
+        // Collect per-model columns: rows = BF16 + methods.
+        let methods = exp::table_methods();
+        let mut cells: Vec<Vec<String>> = vec![Vec::new(); methods.len() + 1];
+        // For best-marking we need numeric columns per model over methods.
+        for mc in &models {
+            let wb = exp::load_workbench(mc);
+            let t0 = std::time::Instant::now();
+            let (fp_in, fp_sh) =
+                perplexity_pair(&wb.model, &wb.corpus, &wb.shifted, mc.max_seq, ppl_tokens);
+            cells[0].push(format!("{fp_in:.2}/{fp_sh:.2}"));
+            let mut in_vals = Vec::new();
+            let mut sh_vals = Vec::new();
+            for &method in &methods {
+                let cfg = QuantConfig::paper_defaults(wbit, group);
+                let quantized = quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None);
+                match quantized {
+                    Ok((qm, _rep)) => {
+                        let (pin, psh) = perplexity_pair(
+                            &qm,
+                            &wb.corpus,
+                            &wb.shifted,
+                            mc.max_seq,
+                            ppl_tokens,
+                        );
+                        in_vals.push(pin);
+                        sh_vals.push(psh);
+                    }
+                    Err(e) => {
+                        eprintln!("[table1] {} {} failed: {e}", mc.name, method.label());
+                        in_vals.push(f64::NAN);
+                        sh_vals.push(f64::NAN);
+                    }
+                }
+            }
+            let mi = mark_best_min(&in_vals, 2);
+            let ms = mark_best_min(&sh_vals, 2);
+            for (i, (a, b)) in mi.into_iter().zip(ms).enumerate() {
+                cells[i + 1].push(format!("{a}/{b}"));
+            }
+            eprintln!(
+                "[table1] {} W{wbit} g{group} done in {}",
+                mc.name,
+                fmt_secs(t0.elapsed().as_secs_f64())
+            );
+        }
+        let mut row: Vec<String> = vec!["BF16".into()];
+        row.extend(cells[0].clone());
+        table.push_row(&row);
+        for (i, &method) in exp::table_methods().iter().enumerate() {
+            let mut row: Vec<String> = vec![method.label().into()];
+            row.extend(cells[i + 1].clone());
+            table.push_row(&row);
+        }
+        table.emit(Some(&exp::results_dir()), &format!("table1_w{wbit}_g{group}"));
+    }
+    // Sanity print of the headline ordering on the first model.
+    let _ = Method::all();
+}

@@ -1,0 +1,86 @@
+//! **Table 2** — zero-shot accuracy on the six multiple-choice suites
+//! (ARC-C/ARC-E/BoolQ/Hella/PIQA/Wino analogues) under 4-bit and 3-bit
+//! g128 quantization. Shape target (DESIGN.md E2): all methods ≈ BF16 at
+//! 4-bit; at 3-bit the gaps widen and Ours degrades most gracefully.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::{zero_shot_accuracy, ZeroShotTask};
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::{mark_best_max, Table};
+
+fn main() {
+    let models = exp::bench_models();
+    let (n_calib, seq) = exp::calib_size();
+    let n_items = if exp::quick() { 40 } else { 120 };
+    let tasks = ZeroShotTask::suite();
+    let seed = 0xE0E0;
+
+    for wbit in [4u8, 3u8] {
+        for mc in &models {
+            let wb = exp::load_workbench(mc);
+            let mut headers: Vec<String> = vec!["Method".into()];
+            headers.extend(tasks.iter().map(|t| t.name.to_string()));
+            headers.push("Average".into());
+            let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            let mut table =
+                Table::new(&format!("Table 2 — {} zero-shot, {wbit}-bit g128", mc.name), &href);
+
+            // BF16 row.
+            let fp_accs: Vec<f64> = tasks
+                .iter()
+                .map(|t| zero_shot_accuracy(&wb.model, &wb.corpus, t, n_items, seed))
+                .collect();
+            let fp_avg = fp_accs.iter().sum::<f64>() / fp_accs.len() as f64;
+            let mut row: Vec<String> = vec!["BF16".into()];
+            row.extend(fp_accs.iter().map(|a| format!("{a:.2}")));
+            row.push(format!("{fp_avg:.2}"));
+            table.push_row(&row);
+
+            // Method rows (paper Table 2 set: GPTQ/AWQ/QUIP/O(N)/O(R)/O).
+            let methods = [
+                Method::Gptq,
+                Method::Awq,
+                Method::Quip,
+                Method::BabaiNaive,
+                Method::KleinRandomK,
+                Method::Ojbkq,
+            ];
+            let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); tasks.len() + 1];
+            for &method in &methods {
+                let cfg = QuantConfig::paper_defaults(wbit, 128);
+                let accs: Vec<f64> = match quantize_model(
+                    &wb.model, &wb.corpus, method, &cfg, n_calib, seq, None,
+                ) {
+                    Ok((qm, _)) => tasks
+                        .iter()
+                        .map(|t| zero_shot_accuracy(&qm, &wb.corpus, t, n_items, seed))
+                        .collect(),
+                    Err(e) => {
+                        eprintln!("[table2] {} {} failed: {e}", mc.name, method.label());
+                        vec![f64::NAN; tasks.len()]
+                    }
+                };
+                for (i, a) in accs.iter().enumerate() {
+                    per_task[i].push(*a);
+                }
+                per_task[tasks.len()].push(accs.iter().sum::<f64>() / accs.len() as f64);
+                eprintln!("[table2] {} {wbit}-bit {} done", mc.name, method.label());
+            }
+            // Mark best/second-best per column, then assemble rows.
+            let marked: Vec<Vec<String>> =
+                per_task.iter().map(|col| mark_best_max(col, 2)).collect();
+            for (mi, &method) in methods.iter().enumerate() {
+                let mut row: Vec<String> = vec![method.label().into()];
+                for col in &marked {
+                    row.push(col[mi].clone());
+                }
+                table.push_row(&row);
+            }
+            table.emit(
+                Some(&exp::results_dir()),
+                &format!("table2_{}_w{wbit}", mc.name.replace('.', "_")),
+            );
+        }
+    }
+}

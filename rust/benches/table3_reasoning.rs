@@ -1,0 +1,73 @@
+//! **Table 3** — generative "reasoning" accuracy (GSM8K/GPQA/MBPP
+//! analogues) under 4-bit g128 quantization. Shape target (DESIGN.md E3):
+//! Ours attains the highest average and tracks BF16 most closely; greedy
+//! multi-token generation amplifies per-layer quantization error.
+
+use ojbkq::bench::exp;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::eval::{reasoning_accuracy, ReasoningTask};
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::{mark_best_max, Table};
+
+fn main() {
+    let models = exp::bench_models();
+    let (n_calib, seq) = exp::calib_size();
+    let n_items = if exp::quick() { 20 } else { 60 };
+    let tasks = ReasoningTask::suite();
+    let seed = 0x7A51;
+
+    for mc in &models {
+        let wb = exp::load_workbench(mc);
+        let mut headers: Vec<String> = vec!["Method".into()];
+        headers.extend(tasks.iter().map(|t| t.name.to_string()));
+        headers.push("Avg".into());
+        let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(
+            &format!("Table 3 — {} reasoning accuracy, 4-bit g128", mc.name),
+            &href,
+        );
+
+        let fp: Vec<f64> = tasks
+            .iter()
+            .map(|t| reasoning_accuracy(&wb.model, &wb.corpus, t, n_items, seed))
+            .collect();
+        let mut row: Vec<String> = vec!["BF16".into()];
+        row.extend(fp.iter().map(|a| format!("{a:.2}")));
+        row.push(format!("{:.2}", fp.iter().sum::<f64>() / fp.len() as f64));
+        table.push_row(&row);
+
+        let methods = [Method::Gptq, Method::Awq, Method::Quip, Method::Ojbkq];
+        let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); tasks.len() + 1];
+        for &method in &methods {
+            let cfg = QuantConfig::paper_defaults(4, 128);
+            let accs: Vec<f64> =
+                match quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None) {
+                    Ok((qm, _)) => tasks
+                        .iter()
+                        .map(|t| reasoning_accuracy(&qm, &wb.corpus, t, n_items, seed))
+                        .collect(),
+                    Err(e) => {
+                        eprintln!("[table3] {} {} failed: {e}", mc.name, method.label());
+                        vec![f64::NAN; tasks.len()]
+                    }
+                };
+            for (i, a) in accs.iter().enumerate() {
+                per_task[i].push(*a);
+            }
+            per_task[tasks.len()].push(accs.iter().sum::<f64>() / accs.len() as f64);
+            eprintln!("[table3] {} {} done", mc.name, method.label());
+        }
+        let marked: Vec<Vec<String>> = per_task.iter().map(|c| mark_best_max(c, 2)).collect();
+        for (mi, &method) in methods.iter().enumerate() {
+            let mut row: Vec<String> = vec![method.label().into()];
+            for col in &marked {
+                row.push(col[mi].clone());
+            }
+            table.push_row(&row);
+        }
+        table.emit(
+            Some(&exp::results_dir()),
+            &format!("table3_{}", mc.name.replace('.', "_")),
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Shared experiment plumbing for the `cargo bench` harnesses in
+//! `rust/benches/` — zoo loading, method grids, and scale control.
+//!
+//! Every bench honors `OJBKQ_BENCH_QUICK=1` (reduced model set / token
+//! budgets so the full suite stays CI-sized) and writes its tables to
+//! `results/` as markdown + CSV via [`crate::report::Table::emit`].
+
+use crate::config::ModelConfig;
+use crate::coordinator::Workbench;
+use crate::quant::Method;
+use std::path::PathBuf;
+
+/// Reduced-scale mode toggle.
+pub fn quick() -> bool {
+    std::env::var("OJBKQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Where bench tables land.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("OJBKQ_RESULTS").unwrap_or_else(|_| "results".into());
+    PathBuf::from(dir)
+}
+
+/// Artifact directory (trained models + AOT kernels).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("OJBKQ_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+/// The model zoo a bench iterates, scaled by quick mode.
+pub fn bench_models() -> Vec<ModelConfig> {
+    let all = ModelConfig::zoo();
+    if quick() {
+        all.into_iter().take(1).collect()
+    } else {
+        // tiny + small by default (a full `cargo bench` stays ~1h on one
+        // core); base-2M and med-5M join with OJBKQ_BENCH_FULL=1.
+        let n = if std::env::var("OJBKQ_BENCH_FULL").is_ok() { 4 } else { 2 };
+        all.into_iter().take(n).collect()
+    }
+}
+
+/// Load a workbench for a zoo entry (trained artifacts or fallback).
+pub fn load_workbench(cfg: &ModelConfig) -> Workbench {
+    let wb = Workbench::load(&artifacts_dir(), &cfg.name);
+    if !wb.trained {
+        eprintln!(
+            "[bench] WARNING: {} has no trained artifacts (run `make artifacts`); \
+             using random-init fallback — absolute numbers will be meaningless",
+            cfg.name
+        );
+    }
+    wb
+}
+
+/// Methods in the paper's Table-1 row order.
+pub fn table_methods() -> Vec<Method> {
+    vec![
+        Method::Rtn,
+        Method::Gptq,
+        Method::Awq,
+        Method::Quip,
+        Method::BabaiNaive,
+        Method::KleinRandomK,
+        Method::Ojbkq,
+    ]
+}
+
+/// Calibration size (sequences, seq_len) per scale mode.
+pub fn calib_size() -> (usize, usize) {
+    if quick() {
+        (4, 64)
+    } else {
+        (8, 128)
+    }
+}
+
+/// Perplexity evaluation token budget.
+pub fn ppl_tokens() -> usize {
+    if quick() {
+        1_024
+    } else {
+        4_096
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_knobs_consistent() {
+        // Not asserting env behavior (global), just that defaults are sane.
+        let (n, s) = calib_size();
+        assert!(n >= 4 && s >= 64);
+        assert!(ppl_tokens() >= 1_024);
+        assert!(!table_methods().is_empty());
+    }
+}

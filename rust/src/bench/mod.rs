@@ -1,0 +1,143 @@
+//! Measurement harness (no `criterion` offline).
+//!
+//! Every `cargo bench` target in `rust/benches/` uses [`Bencher`] for
+//! timing (warmup + fixed-iteration sampling + robust statistics) and
+//! [`crate::report`] for emitting the paper-shaped tables. The harness is
+//! deliberately simple and deterministic: wall-clock medians over a fixed
+//! number of samples, no adaptive stopping, so runs are reproducible.
+
+pub mod exp;
+
+use crate::util::{fmt_secs, mean, percentile, stddev};
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (seconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Build from raw per-iteration seconds.
+    pub fn from_samples(samples: Vec<f64>) -> Stats {
+        let mean_v = mean(&samples);
+        let std_v = stddev(&samples);
+        let p50 = percentile(&samples, 50.0);
+        let p95 = percentile(&samples, 95.0);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Stats { samples, mean: mean_v, std: std_v, p50, p95, min, max }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50={} mean={} ±{} p95={} (n={})",
+            fmt_secs(self.p50),
+            fmt_secs(self.mean),
+            fmt_secs(self.std),
+            fmt_secs(self.p95),
+            self.samples.len()
+        )
+    }
+}
+
+/// Fixed-plan micro/macro benchmark runner.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Label printed with results.
+    pub name: String,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        Bencher { warmup: 2, iters: 10, name: name.to_string() }
+    }
+
+    pub fn warmup(mut self, w: usize) -> Bencher {
+        self.warmup = w;
+        self
+    }
+
+    pub fn iters(mut self, i: usize) -> Bencher {
+        self.iters = i.max(1);
+        self
+    }
+
+    /// Time `f`, returning stats. The closure's return value is consumed
+    /// via `std::hint::black_box` so the optimizer cannot elide work.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(samples);
+        eprintln!("[bench] {:<40} {}", self.name, stats.summary());
+        stats
+    }
+
+    /// Time a single long-running invocation (macro benchmarks like full
+    /// pipeline quantization where iteration is too expensive).
+    pub fn run_once<T>(&self, f: impl FnOnce() -> T) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f());
+        let secs = t0.elapsed().as_secs_f64();
+        eprintln!("[bench] {:<40} once={}", self.name, fmt_secs(secs));
+        (out, secs)
+    }
+}
+
+/// Throughput helper: FLOPs/sec from a flop count and stats (p50-based).
+pub fn gflops(flops: f64, stats: &Stats) -> f64 {
+    if stats.p50 <= 0.0 {
+        return 0.0;
+    }
+    flops / stats.p50 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn bencher_collects_requested_iters() {
+        let b = Bencher::new("noop").warmup(1).iters(5);
+        let mut count = 0;
+        let stats = b.run(|| {
+            count += 1;
+            count
+        });
+        assert_eq!(stats.samples.len(), 5);
+        assert_eq!(count, 6); // 1 warmup + 5 recorded
+    }
+
+    #[test]
+    fn gflops_sane() {
+        let s = Stats::from_samples(vec![0.5]);
+        assert!((gflops(1e9, &s) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal command-line argument parser (no `clap` offline).
+//!
+//! Supports the subcommand + `--key value` / `--flag` grammar used by the
+//! `ojbkq` binary, the examples, and the bench harnesses, with typed
+//! getters, defaults, and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: optional subcommand, positional args, and options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (e.g. `quantize`).
+    pub subcommand: Option<String>,
+    /// Remaining positional (non-flag) tokens.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable core).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; exits with a clear message on a value
+    /// that does not parse (CLI misuse should not panic with a backtrace).
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse::<T>().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a {}, got {v:?}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// usize option.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_parse(key, default)
+    }
+
+    /// f64 option.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get_parse(key, default)
+    }
+
+    /// f32 option.
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get_parse(key, default)
+    }
+
+    /// u64 option.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get_parse(key, default)
+    }
+
+    /// Boolean flag (present = true) or `--key true/false`.
+    pub fn get_flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of T.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse::<T>().unwrap_or_else(|_| {
+                        eprintln!("error: --{key} list element {s:?} failed to parse");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = toks("quantize model.bin out.bin --wbit 4");
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.positional, vec!["model.bin", "out.bin"]);
+        assert_eq!(a.get_usize("wbit", 3), 4);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = toks("run --k=5 --verbose --mu 0.6");
+        assert_eq!(a.get_usize("k", 0), 5);
+        assert!(a.get_flag("verbose"));
+        assert!(!a.get_flag("quiet"));
+        assert!((a.get_f64("mu", 0.0) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = toks("eval");
+        assert_eq!(a.get_str("method", "ojbkq"), "ojbkq");
+        assert_eq!(a.get_usize("k", 5), 5);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = toks("sweep --ks 1,5,10,25");
+        assert_eq!(a.get_list::<usize>("ks", &[]), vec![1, 5, 10, 25]);
+        let b = toks("sweep");
+        assert_eq!(b.get_list::<usize>("ks", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = toks("x --fast --wbit 3");
+        assert!(a.get_flag("fast"));
+        assert_eq!(a.get_usize("wbit", 0), 3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Configuration system: typed configs for models, quantization methods,
+//! and experiments, with a minimal INI/TOML-flavored text format
+//! (`key = value` lines, `[section]` headers, `#` comments) so runs are
+//! reproducible from checked-in files without a serde dependency.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::quant::QuantConfig;
+
+/// Raw parsed config file: section -> key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse the text format. Unknown syntax errors carry line numbers.
+    pub fn parse(text: &str) -> anyhow::Result<RawConfig> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+            } else {
+                anyhow::bail!("config parse error on line {}: {raw:?}", lineno + 1);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> anyhow::Result<RawConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path:?}: {e}"))?;
+        RawConfig::parse(&text)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section).and_then(|s| s.get(key)).map(|v| v.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> T {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Model architecture hyperparameters (mirrors `python/compile/pretrain.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// The zoo of tiny models standing in for the paper's LLM families
+    /// (see DESIGN.md §2). Names echo the paper's abbreviations.
+    pub fn zoo() -> Vec<ModelConfig> {
+        vec![
+            ModelConfig::named("tiny-0.2M"),
+            ModelConfig::named("small-0.8M"),
+            ModelConfig::named("base-2M"),
+            ModelConfig::named("med-5M"),
+        ]
+    }
+
+    /// Look up a zoo preset by name.
+    pub fn named(name: &str) -> ModelConfig {
+        let (vocab, d, l, h, ff, seq) = match name {
+            "tiny-0.2M" => (256, 96, 2, 4, 256, 128),
+            "small-0.8M" => (512, 128, 4, 4, 352, 128),
+            "base-2M" => (512, 192, 6, 6, 512, 128),
+            "med-5M" => (512, 256, 8, 8, 704, 128),
+            other => panic!("unknown model preset {other:?}"),
+        };
+        ModelConfig {
+            name: name.to_string(),
+            vocab_size: vocab,
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: ff,
+            max_seq: seq,
+        }
+    }
+
+    /// Parameter count (embeddings + blocks; head is tied to embedding).
+    pub fn param_count(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = 3 * self.d_model * self.d_ff;
+        let norms = 2 * self.d_model;
+        self.vocab_size * self.d_model + self.n_layers * (attn + mlp + norms) + self.d_model
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0, "d_model must divide n_heads");
+        self.d_model / self.n_heads
+    }
+}
+
+/// Experiment-level config: which model, which method, which data sizes.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub quant: QuantConfig,
+    pub calib_sequences: usize,
+    pub calib_seq_len: usize,
+    pub eval_tokens: usize,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn default_for(model: ModelConfig) -> ExperimentConfig {
+        ExperimentConfig {
+            model,
+            quant: QuantConfig::default(),
+            calib_sequences: 32,
+            calib_seq_len: 128,
+            eval_tokens: 16_384,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let raw = RawConfig::parse(
+            "# top comment\n[model]\nname = \"small-0.8M\"\nd_model = 128 # inline\n\n[quant]\nwbit=4\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("model", "name"), Some("small-0.8M"));
+        assert_eq!(raw.get_parse::<usize>("model", "d_model", 0), 128);
+        assert_eq!(raw.get_parse::<usize>("quant", "wbit", 0), 4);
+        assert_eq!(raw.get_parse::<usize>("quant", "missing", 7), 7);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RawConfig::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn zoo_presets_consistent() {
+        for cfg in ModelConfig::zoo() {
+            assert_eq!(cfg.d_model % cfg.n_heads, 0, "{}", cfg.name);
+            assert!(cfg.param_count() > 0);
+        }
+        // Names roughly reflect parameter counts.
+        let small = ModelConfig::named("small-0.8M").param_count();
+        assert!((500_000..1_500_000).contains(&small), "small={small}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_preset_panics() {
+        let _ = ModelConfig::named("nope");
+    }
+}

@@ -1,0 +1,284 @@
+//! Data substrate: the synthetic corpus standing in for C4/WikiText-2
+//! (see DESIGN.md §2), calibration sampling, and corpus I/O.
+//!
+//! The canonical corpus is generated at build time by
+//! `python/compile/pretrain.py` (the same token stream the tiny LMs are
+//! trained on) and saved to `artifacts/corpus_{model}.bin`; Rust loads it
+//! for calibration and evaluation. For solver-only benches and unit tests
+//! this module also carries an independent Rust generator with the same
+//! statistical design: an order-2 Markov grammar with Zipfian noise —
+//! non-trivial bigram/trigram structure a small transformer can learn,
+//! plus a heavy-tailed unigram marginal like natural text.
+
+use crate::rng::Rng;
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+
+/// A token corpus with a train/eval split.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub tokens: Vec<u16>,
+    pub vocab_size: usize,
+    /// Index where the held-out split starts.
+    pub eval_start: usize,
+}
+
+impl Corpus {
+    /// Training split.
+    pub fn train(&self) -> &[u16] {
+        &self.tokens[..self.eval_start]
+    }
+
+    /// Held-out split (perplexity + task evaluation).
+    pub fn eval(&self) -> &[u16] {
+        &self.tokens[self.eval_start..]
+    }
+
+    /// Sample `count` calibration sequences of `seq_len` tokens from the
+    /// train split (paper: 128 C4 samples of 2048 tokens; scaled down).
+    pub fn calibration(&self, count: usize, seq_len: usize, rng: &mut Rng) -> Vec<Vec<u16>> {
+        let train = self.train();
+        assert!(train.len() > seq_len + 1, "corpus too small for seq_len {seq_len}");
+        (0..count)
+            .map(|_| {
+                let start = rng.below((train.len() - seq_len) as u64) as usize;
+                train[start..start + seq_len].to_vec()
+            })
+            .collect()
+    }
+
+    /// Non-overlapping eval windows of `seq_len`, up to `max_tokens`.
+    pub fn eval_windows(&self, seq_len: usize, max_tokens: usize) -> Vec<&[u16]> {
+        let eval = self.eval();
+        let mut out = Vec::new();
+        let mut used = 0usize;
+        let mut pos = 0usize;
+        while pos + seq_len <= eval.len() && used < max_tokens {
+            out.push(&eval[pos..pos + seq_len]);
+            pos += seq_len;
+            used += seq_len;
+        }
+        out
+    }
+}
+
+/// The order-2 Markov + Zipf synthetic grammar.
+///
+/// Construction (deterministic in `seed`):
+/// * each context hash `h(cur, prev mod 8)` selects 4 preferred
+///   successors with weights (0.55, 0.25, 0.12, 0.08). Reducing `prev`
+///   to 8 classes keeps the context table at `8·vocab` entries — dense
+///   enough to be *learnable* from a few hundred thousand tokens, while
+///   still requiring attention over more than the last token (a pure
+///   bigram model cannot resolve the 8-way successor ambiguity);
+/// * with probability `noise` the next token is drawn from a Zipf(1.1)
+///   marginal instead (heavy-tailed unigram like natural text).
+#[derive(Debug, Clone)]
+pub struct SyntheticGrammar {
+    vocab_size: usize,
+    noise: f64,
+    zipf_cdf: Vec<f64>,
+    seed: u64,
+}
+
+impl SyntheticGrammar {
+    pub fn new(vocab_size: usize, noise: f64, seed: u64) -> SyntheticGrammar {
+        let mut weights: Vec<f64> =
+            (1..=vocab_size).map(|r| 1.0 / (r as f64).powf(1.1)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        for w in weights.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        SyntheticGrammar { vocab_size, noise, zipf_cdf: weights, seed }
+    }
+
+    /// The 4 preferred successors of a context, with cumulative weights.
+    fn successors(&self, prev: u16, cur: u16) -> [u16; 4] {
+        let mut h = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(((prev & 7) as u64) << 32 | cur as u64);
+        let mut out = [0u16; 4];
+        for slot in out.iter_mut() {
+            *slot = (crate::rng::splitmix64(&mut h) % self.vocab_size as u64) as u16;
+        }
+        out
+    }
+
+    fn zipf_sample(&self, u: f64) -> u16 {
+        match self.zipf_cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.vocab_size - 1) as u16,
+        }
+    }
+
+    /// Generate `n` tokens.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut out = Vec::with_capacity(n);
+        let mut prev = self.zipf_sample(rng.uniform());
+        let mut cur = self.zipf_sample(rng.uniform());
+        out.push(prev);
+        if n > 1 {
+            out.push(cur);
+        }
+        const CUM: [f64; 4] = [0.55, 0.80, 0.92, 1.0];
+        while out.len() < n {
+            let next = if rng.uniform() < self.noise {
+                self.zipf_sample(rng.uniform())
+            } else {
+                let succ = self.successors(prev, cur);
+                let u = rng.uniform();
+                let mut pick = succ[3];
+                for (i, &c) in CUM.iter().enumerate() {
+                    if u < c {
+                        pick = succ[i];
+                        break;
+                    }
+                }
+                pick
+            };
+            out.push(next);
+            prev = cur;
+            cur = next;
+        }
+        out
+    }
+
+    /// Build a corpus with a 90/10 train/eval split.
+    pub fn corpus(&self, n: usize, rng: &mut Rng) -> Corpus {
+        let tokens = self.generate(n, rng);
+        Corpus { tokens, vocab_size: self.vocab_size, eval_start: n * 9 / 10 }
+    }
+}
+
+const CORPUS_MAGIC: &str = "OJBC1";
+
+/// Save a corpus (`OJBC1` format: magic, `vocab n eval_start`, u16 LE).
+pub fn save_corpus(c: &Corpus, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{CORPUS_MAGIC}")?;
+    writeln!(w, "{} {} {}", c.vocab_size, c.tokens.len(), c.eval_start)?;
+    let mut bytes = Vec::with_capacity(c.tokens.len() * 2);
+    for &t in &c.tokens {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load an `OJBC1` corpus (as written by pretrain.py or [`save_corpus`]).
+pub fn load_corpus(path: &Path) -> anyhow::Result<Corpus> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening corpus {path:?}: {e} (run `make artifacts`)"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    anyhow::ensure!(line.trim() == CORPUS_MAGIC, "bad corpus magic {line:?}");
+    line.clear();
+    r.read_line(&mut line)?;
+    let dims: Vec<usize> =
+        line.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+    anyhow::ensure!(dims.len() == 3, "bad corpus header {line:?}");
+    let (vocab_size, n, eval_start) = (dims[0], dims[1], dims[2]);
+    let mut buf = vec![0u8; n * 2];
+    r.read_exact(&mut buf)?;
+    let tokens: Vec<u16> =
+        buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+    anyhow::ensure!(tokens.iter().all(|&t| (t as usize) < vocab_size), "token out of vocab");
+    Ok(Corpus { tokens, vocab_size, eval_start })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_tokens_in_vocab() {
+        let g = SyntheticGrammar::new(128, 0.2, 7);
+        let mut rng = Rng::new(1);
+        let toks = g.generate(5_000, &mut rng);
+        assert_eq!(toks.len(), 5_000);
+        assert!(toks.iter().all(|&t| t < 128));
+    }
+
+    #[test]
+    fn grammar_is_learnable_structure() {
+        // The bigram conditional entropy must be far below the unigram
+        // entropy — otherwise there is nothing for the LM to learn.
+        let vocab = 64usize;
+        let g = SyntheticGrammar::new(vocab, 0.15, 3);
+        let mut rng = Rng::new(2);
+        let toks = g.generate(200_000, &mut rng);
+        let mut uni = vec![0f64; vocab];
+        let mut big = std::collections::HashMap::<(u16, u16), Vec<f64>>::new();
+        for w in toks.windows(3) {
+            uni[w[2] as usize] += 1.0;
+            big.entry((w[0], w[1])).or_insert_with(|| vec![0.0; vocab])[w[2] as usize] += 1.0;
+        }
+        let ent = |counts: &[f64]| {
+            let total: f64 = counts.iter().sum();
+            if total < 1.0 {
+                return 0.0;
+            }
+            -counts
+                .iter()
+                .filter(|&&c| c > 0.0)
+                .map(|&c| (c / total) * (c / total).ln())
+                .sum::<f64>()
+        };
+        let h_uni = ent(&uni);
+        let mut h_cond = 0.0;
+        let mut mass = 0.0;
+        for counts in big.values() {
+            let t: f64 = counts.iter().sum();
+            h_cond += t * ent(counts);
+            mass += t;
+        }
+        h_cond /= mass;
+        assert!(
+            h_cond < 0.7 * h_uni,
+            "conditional entropy {h_cond:.3} not much below unigram {h_uni:.3}"
+        );
+    }
+
+    #[test]
+    fn corpus_split_and_calibration() {
+        let g = SyntheticGrammar::new(64, 0.2, 5);
+        let mut rng = Rng::new(3);
+        let c = g.corpus(10_000, &mut rng);
+        assert_eq!(c.train().len(), 9_000);
+        assert_eq!(c.eval().len(), 1_000);
+        let calib = c.calibration(8, 32, &mut rng);
+        assert_eq!(calib.len(), 8);
+        assert!(calib.iter().all(|s| s.len() == 32));
+        let windows = c.eval_windows(100, 550);
+        assert_eq!(windows.len(), 6); // ceil: windows until >= 550 tokens
+    }
+
+    #[test]
+    fn corpus_io_roundtrip() {
+        let g = SyntheticGrammar::new(32, 0.3, 9);
+        let mut rng = Rng::new(4);
+        let c = g.corpus(2_000, &mut rng);
+        let dir = std::env::temp_dir().join("ojbkq_test_data");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.bin");
+        save_corpus(&c, &path).unwrap();
+        let c2 = load_corpus(&path).unwrap();
+        assert_eq!(c.tokens, c2.tokens);
+        assert_eq!(c.eval_start, c2.eval_start);
+        assert_eq!(c.vocab_size, c2.vocab_size);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = SyntheticGrammar::new(64, 0.2, 11);
+        let a = g.generate(500, &mut Rng::new(1));
+        let b = g.generate(500, &mut Rng::new(1));
+        assert_eq!(a, b);
+        let c = g.generate(500, &mut Rng::new(2));
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,190 @@
+//! Zero-shot multiple-choice evaluation — the Table-2 substitute.
+//!
+//! Mechanism identical to LM-harness: each item is a context plus N
+//! candidate continuations; the model scores each continuation by
+//! length-normalized log-likelihood and picks the argmax. The true
+//! continuation comes from the held-out corpus; distractors are windows
+//! sampled elsewhere (or, for the Winogrande analogue, minimal
+//! perturbations of the truth). Task parameters mirror the difficulty
+//! spread of the paper's six suites.
+
+use crate::data::Corpus;
+use crate::model::Model;
+use crate::rng::Rng;
+
+/// A zero-shot task configuration.
+#[derive(Debug, Clone)]
+pub struct ZeroShotTask {
+    pub name: &'static str,
+    /// Context tokens shown before the choices.
+    pub context_len: usize,
+    /// Continuation length being scored.
+    pub cont_len: usize,
+    /// Number of choices (1 true + n−1 distractors).
+    pub n_choices: usize,
+    /// Winogrande-style minimal-pair distractors (perturb 1 token).
+    pub minimal_pair: bool,
+}
+
+impl ZeroShotTask {
+    /// The six suites standing in for ARC-C/ARC-E/BoolQ/Hella/PIQA/Wino.
+    pub fn suite() -> Vec<ZeroShotTask> {
+        vec![
+            ZeroShotTask { name: "ARC-C", context_len: 12, cont_len: 8, n_choices: 4, minimal_pair: false },
+            ZeroShotTask { name: "ARC-E", context_len: 32, cont_len: 4, n_choices: 4, minimal_pair: false },
+            ZeroShotTask { name: "BoolQ", context_len: 24, cont_len: 6, n_choices: 2, minimal_pair: false },
+            ZeroShotTask { name: "Hella", context_len: 24, cont_len: 12, n_choices: 4, minimal_pair: false },
+            ZeroShotTask { name: "PIQA", context_len: 16, cont_len: 8, n_choices: 2, minimal_pair: false },
+            ZeroShotTask { name: "Wino", context_len: 32, cont_len: 4, n_choices: 2, minimal_pair: true },
+        ]
+    }
+}
+
+/// One evaluation item.
+struct Item {
+    context: Vec<u16>,
+    choices: Vec<Vec<u16>>,
+    answer: usize,
+}
+
+/// Build `n_items` items deterministically from the corpus eval split.
+fn build_items(task: &ZeroShotTask, corpus: &Corpus, n_items: usize, seed: u64) -> Vec<Item> {
+    let eval = corpus.eval();
+    let span = task.context_len + task.cont_len;
+    assert!(eval.len() > span * 2, "eval split too small");
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    (0..n_items)
+        .map(|_| {
+            let start = rng.below((eval.len() - span) as u64) as usize;
+            let context = eval[start..start + task.context_len].to_vec();
+            let truth = eval[start + task.context_len..start + span].to_vec();
+            let mut choices = Vec::with_capacity(task.n_choices);
+            let answer = rng.below(task.n_choices as u64) as usize;
+            for c in 0..task.n_choices {
+                if c == answer {
+                    choices.push(truth.clone());
+                } else if task.minimal_pair {
+                    // Perturb one position of the truth with a random token.
+                    let mut alt = truth.clone();
+                    let pos = rng.below(alt.len() as u64) as usize;
+                    let mut t = rng.below(corpus.vocab_size as u64) as u16;
+                    if t == alt[pos] {
+                        t = (t + 1) % corpus.vocab_size as u16;
+                    }
+                    alt[pos] = t;
+                    choices.push(alt);
+                } else {
+                    // Distractor: continuation from an unrelated window.
+                    let s2 = rng.below((eval.len() - task.cont_len) as u64) as usize;
+                    choices.push(eval[s2..s2 + task.cont_len].to_vec());
+                }
+            }
+            Item { context, choices, answer }
+        })
+        .collect()
+}
+
+/// Length-normalized continuation log-likelihood.
+fn choice_score(model: &Model, context: &[u16], cont: &[u16]) -> f64 {
+    let mut seq = context.to_vec();
+    seq.extend_from_slice(cont);
+    let logits = model.forward(&seq);
+    let mut ll = 0.0f64;
+    for (off, &tok) in cont.iter().enumerate() {
+        let pos = context.len() + off - 1; // logits at pos predict pos+1
+        let ls = crate::util::log_softmax(logits.row(pos));
+        ll += ls[tok as usize] as f64;
+    }
+    ll / cont.len() as f64
+}
+
+/// Accuracy (%) of `model` on `task` with `n_items` items.
+pub fn zero_shot_accuracy(
+    model: &Model,
+    corpus: &Corpus,
+    task: &ZeroShotTask,
+    n_items: usize,
+    seed: u64,
+) -> f64 {
+    let items = build_items(task, corpus, n_items, seed);
+    let mut correct = 0usize;
+    for item in &items {
+        let scores: Vec<f64> = item
+            .choices
+            .iter()
+            .map(|c| choice_score(model, &item.context, c))
+            .collect();
+        let pick = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pick == item.answer {
+            correct += 1;
+        }
+    }
+    100.0 * correct as f64 / n_items.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::SyntheticGrammar;
+
+    fn setup() -> (Model, Corpus) {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+        };
+        let mut rng = Rng::new(1);
+        (Model::random(cfg, &mut rng), SyntheticGrammar::new(32, 0.2, 3).corpus(8_000, &mut rng))
+    }
+
+    #[test]
+    fn items_deterministic_and_well_formed() {
+        let (_, corpus) = setup();
+        let task = &ZeroShotTask::suite()[0];
+        let a = build_items(task, &corpus, 10, 42);
+        let b = build_items(task, &corpus, 10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+        for item in &a {
+            assert_eq!(item.choices.len(), 4);
+            assert_eq!(item.context.len(), task.context_len);
+            assert!(item.answer < 4);
+            assert_eq!(item.choices[item.answer].len(), task.cont_len);
+        }
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let (model, corpus) = setup();
+        let task = ZeroShotTask {
+            name: "x",
+            context_len: 8,
+            cont_len: 4,
+            n_choices: 4,
+            minimal_pair: false,
+        };
+        let acc = zero_shot_accuracy(&model, &corpus, &task, 60, 7);
+        // Chance = 25%; random model should be within noise of chance.
+        assert!(acc > 5.0 && acc < 60.0, "acc={acc}");
+    }
+
+    #[test]
+    fn suite_has_six_named_tasks() {
+        let suite = ZeroShotTask::suite();
+        assert_eq!(suite.len(), 6);
+        let names: Vec<&str> = suite.iter().map(|t| t.name).collect();
+        assert!(names.contains(&"ARC-C") && names.contains(&"Wino"));
+    }
+}

@@ -1,0 +1,44 @@
+//! # OJBKQ — Objective-Joint Babai-Klein Quantization
+//!
+//! A production reproduction of *"OJBKQ: Objective-Joint Babai-Klein
+//! Quantization"* (Wang, Zhao, Lu, Gu, Chang — 2026): layer-wise
+//! post-training quantization of transformer language models formulated as
+//! box-constrained integer least-squares (BILS), solved per weight column
+//! by the box-constrained Babai nearest-plane algorithm augmented with K
+//! Klein-randomized decoding paths, with candidates selected under the
+//! Joint Target Alignment (JTA) objective.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — pipeline coordinator, solver library, model /
+//!   data / eval substrates, PJRT runtime for AOT artifacts.
+//! * **L2 (`python/compile/model.py`)** — the JAX layer-solve graph,
+//!   AOT-lowered once to HLO text artifacts by `python/compile/aot.py`.
+//! * **L1 (`python/compile/kernels/babai_klein.py`)** — the Pallas
+//!   PPI-KBabai kernel (path-isolated parallel K-path back-substitution).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` plus pretrained tiny-LM weights, and the Rust
+//! binary is self-contained afterwards.
+//!
+//! Entry points: [`coordinator::Pipeline`] drives end-to-end quantization;
+//! [`quant`] exposes every solver (RTN / GPTQ / AWQ / QuIP / Babai /
+//! Klein / OJBKQ); [`eval`] measures perplexity, zero-shot and reasoning
+//! accuracy; [`bench`] is the measurement harness used by `cargo bench`.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod parallel;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;

@@ -1,0 +1,100 @@
+//! Cholesky factorization `G = RᵀR` with `R` upper-triangular.
+//!
+//! This is the factorization at the heart of OJBKQ (Algorithm 1 line 2):
+//! `X̃ᵀX̃ + λ²I = RᵀR`. Matching the paper's design note, no matrix inverse
+//! is ever formed anywhere in the pipeline — downstream consumers use the
+//! triangular solves in [`super::trsm`].
+//!
+//! Calibration Gram matrices are frequently near-singular (p < m, or
+//! correlated activations), so [`cholesky_upper_jittered`] escalates a
+//! diagonal jitter geometrically until the factorization succeeds — the
+//! same dampening trick GPTQ uses, exposed explicitly.
+
+use crate::tensor::Matrix;
+
+/// Failure: the matrix is not numerically positive definite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CholeskyError {
+    /// Pivot index where positive-definiteness failed.
+    pub pivot: usize,
+    /// The offending pivot value.
+    pub value: f64,
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cholesky failed at pivot {} (value {:.3e})", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for CholeskyError {}
+
+/// Factor a symmetric positive-definite `G` (only the upper triangle is
+/// read) into upper-triangular `R` with `G = RᵀR`. Diagonal accumulations
+/// run in f64 to keep large `m` stable in f32 storage.
+pub fn cholesky_upper(g: &Matrix) -> Result<Matrix, CholeskyError> {
+    let n = g.rows();
+    assert_eq!(g.cols(), n, "cholesky needs square input");
+    let mut r = Matrix::zeros(n, n);
+    // Row-by-row (upper-looking): for each row i,
+    //   R[i,i] = sqrt(G[i,i] - sum_{k<i} R[k,i]^2)
+    //   R[i,j] = (G[i,j] - sum_{k<i} R[k,i]R[k,j]) / R[i,i]
+    for i in 0..n {
+        let mut diag = g.get(i, i) as f64;
+        for k in 0..i {
+            let v = r.get(k, i) as f64;
+            diag -= v * v;
+        }
+        if !(diag > 0.0) || !diag.is_finite() {
+            return Err(CholeskyError { pivot: i, value: diag });
+        }
+        let rii = diag.sqrt();
+        r.set(i, i, rii as f32);
+        let inv = (1.0 / rii) as f32;
+        // Compute the remainder of row i. The k-loop walks rows of R
+        // (contiguous), accumulating into a scratch row — unit stride.
+        let mut scratch: Vec<f32> = (i + 1..n).map(|j| g.get(i, j)).collect();
+        for k in 0..i {
+            let rki = r.get(k, i);
+            if rki == 0.0 {
+                continue;
+            }
+            let rk = &r.row(k)[i + 1..n];
+            for (s, &v) in scratch.iter_mut().zip(rk) {
+                *s -= rki * v;
+            }
+        }
+        for (off, s) in scratch.into_iter().enumerate() {
+            r.set(i, i + 1 + off, s * inv);
+        }
+    }
+    Ok(r)
+}
+
+/// Cholesky with geometric jitter escalation: tries `G`, then
+/// `G + jitter·mean(diag)·I` with jitter ∈ {j0, 10·j0, 100·j0, …} up to
+/// 10 attempts. Returns `(R, jitter_used)` where jitter is the *absolute*
+/// value added to the diagonal (0.0 when no jitter was needed).
+pub fn cholesky_upper_jittered(g: &Matrix, j0: f64) -> Result<(Matrix, f64), CholeskyError> {
+    match cholesky_upper(g) {
+        Ok(r) => return Ok((r, 0.0)),
+        Err(_) => {}
+    }
+    let n = g.rows();
+    let mean_diag: f64 =
+        (0..n).map(|i| g.get(i, i) as f64).sum::<f64>().max(1e-30) / n.max(1) as f64;
+    let mut jitter = j0 * mean_diag;
+    let mut last_err = CholeskyError { pivot: 0, value: 0.0 };
+    for _ in 0..10 {
+        let mut gj = g.clone();
+        for i in 0..n {
+            gj.add_at(i, i, jitter as f32);
+        }
+        match cholesky_upper(&gj) {
+            Ok(r) => return Ok((r, jitter)),
+            Err(e) => last_err = e,
+        }
+        jitter *= 10.0;
+    }
+    Err(last_err)
+}

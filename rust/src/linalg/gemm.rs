@@ -1,0 +1,211 @@
+//! Blocked f32 GEMM and friends.
+//!
+//! The pre-solve cost of every layer quantization is dominated by Gram
+//! matrix formation `X̃ᵀX̃` and target GEMMs `XW`, so this file carries the
+//! crate's FLOP throughput. The kernels are cache-blocked and written so
+//! LLVM auto-vectorizes the inner loops (contiguous unit-stride FMAs over
+//! the output row); no unsafe, no intrinsics.
+
+use crate::tensor::Matrix;
+
+/// Cache block sizes. `MC×KC` A-panel (~128 KiB) fits L2; `KC×NC` B-panel
+/// rows stream through L1. Tuned on the CI CPU in the §Perf pass.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 512;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dim: {:?} vs {:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm(1.0, a, b, 0.0, &mut c);
+    c
+}
+
+/// General `C = alpha·A·B + beta·C` (row-major, no transposes).
+pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "gemm inner dim");
+    assert_eq!(c.shape(), (m, n), "gemm output shape");
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.map_inplace(|v| v * beta);
+        }
+    }
+    if m == 0 || n == 0 || k == 0 || alpha == 0.0 {
+        return;
+    }
+    // Loop order jc (N) -> pc (K) -> ic (M); inner micro-kernel accumulates
+    // a row of C against a K-panel of B with the K dimension unrolled 4×:
+    // each pass over the (contiguous, vectorizable) C row performs 4 FMAs
+    // per load/store instead of 1, quadrupling arithmetic intensity
+    // (§Perf iteration 3: 13.5 → see perf_gemm.md).
+    let a_s = a.as_slice();
+    let b_s = b.as_slice();
+    let c_s = c.as_mut_slice();
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kbk = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                for i in ic..ic + mb {
+                    let c_row = &mut c_s[i * n + jc..i * n + jc + nb];
+                    let a_row = &a_s[i * k + pc..i * k + pc + kbk];
+                    let mut p = 0usize;
+                    while p + 4 <= kbk {
+                        let a0 = alpha * a_row[p];
+                        let a1 = alpha * a_row[p + 1];
+                        let a2 = alpha * a_row[p + 2];
+                        let a3 = alpha * a_row[p + 3];
+                        if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                            let base = (pc + p) * n + jc;
+                            let b0 = &b_s[base..base + nb];
+                            let b1 = &b_s[base + n..base + n + nb];
+                            let b2 = &b_s[base + 2 * n..base + 2 * n + nb];
+                            let b3 = &b_s[base + 3 * n..base + 3 * n + nb];
+                            for j in 0..nb {
+                                c_row[j] +=
+                                    a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                            }
+                        }
+                        p += 4;
+                    }
+                    for (off, &aip) in a_row[p..].iter().enumerate() {
+                        let aip = alpha * aip;
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let b_row = &b_s[(pc + p + off) * n + jc..(pc + p + off) * n + jc + nb];
+                        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                            *cv += aip * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` for `A: p×m`, `B: p×n` → `C: m×n`, without materializing
+/// the transpose. Both operands are walked row-by-row (unit stride).
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (p, m) = a.shape();
+    let (pb, n) = b.shape();
+    assert_eq!(p, pb, "gemm_tn leading dim");
+    let mut c = Matrix::zeros(m, n);
+    let a_s = a.as_slice();
+    let b_s = b.as_slice();
+    let c_s = c.as_mut_slice();
+    // Rank-4 accumulation: four sample rows per pass over C (see
+    // syrk_upper for the rationale). C fits L2 for our m,n (≤ ~1k); the
+    // inner loop is contiguous over n.
+    let mut r = 0usize;
+    while r + 4 <= p {
+        let a0r = &a_s[r * m..(r + 1) * m];
+        let a1r = &a_s[(r + 1) * m..(r + 2) * m];
+        let a2r = &a_s[(r + 2) * m..(r + 3) * m];
+        let a3r = &a_s[(r + 3) * m..(r + 4) * m];
+        let b0 = &b_s[r * n..(r + 1) * n];
+        let b1 = &b_s[(r + 1) * n..(r + 2) * n];
+        let b2 = &b_s[(r + 2) * n..(r + 3) * n];
+        let b3 = &b_s[(r + 3) * n..(r + 4) * n];
+        for i in 0..m {
+            let (a0, a1, a2, a3) = (a0r[i], a1r[i], a2r[i], a3r[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let c_row = &mut c_s[i * n..i * n + n];
+            for j in 0..n {
+                c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        r += 4;
+    }
+    for rr in r..p {
+        let a_row = &a_s[rr * m..(rr + 1) * m];
+        let b_row = &b_s[rr * n..(rr + 1) * n];
+        for i in 0..m {
+            let av = a_row[i];
+            if av == 0.0 {
+                continue;
+            }
+            let c_row = &mut c_s[i * n..i * n + n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Symmetric Gram matrix `G = AᵀA + ridge·I` for `A: p×m` → `G: m×m`.
+/// Computes the upper triangle then mirrors — half the FLOPs of `gemm_tn`.
+pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
+    let (p, m) = a.shape();
+    let mut g = Matrix::zeros(m, m);
+    let a_s = a.as_slice();
+    let g_s = g.as_mut_slice();
+    // Rank-4 updates: four sample rows per pass over G's upper triangle,
+    // so each G row is loaded/stored once per 4 FMAs (§Perf iteration 4).
+    let mut r = 0usize;
+    while r + 4 <= p {
+        let row0 = &a_s[r * m..(r + 1) * m];
+        let row1 = &a_s[(r + 1) * m..(r + 2) * m];
+        let row2 = &a_s[(r + 2) * m..(r + 3) * m];
+        let row3 = &a_s[(r + 3) * m..(r + 4) * m];
+        for i in 0..m {
+            let (a0, a1, a2, a3) = (row0[i], row1[i], row2[i], row3[i]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let g_row = &mut g_s[i * m + i..i * m + m];
+            let (b0, b1, b2, b3) = (&row0[i..], &row1[i..], &row2[i..], &row3[i..]);
+            for j in 0..g_row.len() {
+                g_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        r += 4;
+    }
+    for rr in r..p {
+        let row = &a_s[rr * m..(rr + 1) * m];
+        for i in 0..m {
+            let av = row[i];
+            if av == 0.0 {
+                continue;
+            }
+            let g_row = &mut g_s[i * m + i..i * m + m];
+            for (gv, &bv) in g_row.iter_mut().zip(&row[i..]) {
+                *gv += av * bv;
+            }
+        }
+    }
+    // Mirror the strictly-upper part and add the ridge.
+    for i in 0..m {
+        g_s[i * m + i] += ridge;
+        for j in i + 1..m {
+            g_s[j * m + i] = g_s[i * m + j];
+        }
+    }
+    g
+}
+
+/// `y = A · x`.
+pub fn gemv(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, k) = a.shape();
+    assert_eq!(k, x.len(), "gemv inner dim");
+    let a_s = a.as_slice();
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let row = &a_s[i * k..(i + 1) * k];
+        let mut acc = 0.0f32;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        y[i] = acc;
+    }
+    y
+}

@@ -1,0 +1,185 @@
+//! Numerical linear algebra substrate.
+//!
+//! Everything the OJBKQ pipeline needs, written from scratch (the build is
+//! offline — no BLAS/LAPACK): blocked GEMM with f32 micro-kernels,
+//! symmetric rank-k update for Gram matrices, Cholesky factorization with
+//! adaptive jitter, triangular solves (vector and multiple-RHS), and
+//! random orthogonal matrix generation for the QuIP-style baseline.
+
+mod cholesky;
+mod gemm;
+mod orthogonal;
+mod trsm;
+
+pub use cholesky::{cholesky_upper, cholesky_upper_jittered, CholeskyError};
+pub use gemm::{gemm, gemm_tn, gemv, matmul, syrk_upper};
+pub use orthogonal::{random_orthogonal, signed_permutation};
+pub use trsm::{solve_lower_t, solve_upper_mat, trsv_lower_t, trsv_upper};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::Matrix;
+
+    /// Naive triple-loop reference used to validate the blocked GEMM.
+    fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!(a.cols(), b.rows());
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                let aik = a.get(i, k);
+                for j in 0..b.cols() {
+                    c.add_at(i, j, aik * b.get(k, j));
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_on_odd_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (65, 130, 31)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let r = matmul_naive(&a, &b);
+            assert!(c.rel_err(&r) < 1e-5, "({m},{k},{n}) rel={}", c.rel_err(&r));
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_transpose_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(40, 13, 1.0, &mut rng);
+        let b = Matrix::randn(40, 21, 1.0, &mut rng);
+        let c = gemm_tn(&a, &b);
+        let r = matmul(&a.transpose(), &b);
+        assert!(c.rel_err(&r) < 1e-5);
+    }
+
+    #[test]
+    fn syrk_matches_ata() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(50, 17, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.0);
+        let r = matmul(&a.transpose(), &a);
+        // syrk fills the full symmetric matrix.
+        assert!(g.rel_err(&r) < 1e-5);
+        for i in 0..17 {
+            for j in 0..17 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_adds_ridge() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(10, 6, 1.0, &mut rng);
+        let g0 = syrk_upper(&a, 0.0);
+        let g1 = syrk_upper(&a, 2.5);
+        for i in 0..6 {
+            assert!((g1.get(i, i) - g0.get(i, i) - 2.5).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(23, 11, 1.0, &mut rng);
+        let x: Vec<f32> = (0..11).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let y = gemv(&a, &x);
+        let xm = Matrix::from_vec(11, 1, x);
+        let r = matmul(&a, &xm);
+        for i in 0..23 {
+            assert!((y[i] - r.get(i, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(6);
+        for &n in &[1usize, 2, 8, 33, 64] {
+            let a = Matrix::randn(n + 5, n, 1.0, &mut rng);
+            let g = syrk_upper(&a, 0.1);
+            let r = cholesky_upper(&g).expect("spd");
+            let rtr = gemm_tn(&r, &r);
+            assert!(rtr.rel_err(&g) < 1e-4, "n={n} rel={}", rtr.rel_err(&g));
+            // Upper-triangular with positive diagonal.
+            for i in 0..n {
+                assert!(r.get(i, i) > 0.0);
+                for j in 0..i {
+                    assert_eq!(r.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite_but_jitter_recovers() {
+        let mut g = Matrix::eye(4);
+        g.set(2, 2, -1.0);
+        assert!(cholesky_upper(&g).is_err());
+        let (r, jitter) = cholesky_upper_jittered(&g, 1e-8).expect("jitter should recover");
+        assert!(jitter > 0.0);
+        assert!(r.all_finite());
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let mut rng = Rng::new(7);
+        let n = 24;
+        let a = Matrix::randn(n + 3, n, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.5);
+        let r = cholesky_upper(&g).unwrap();
+        let x_true: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).sin()).collect();
+        // b = R^T R x
+        let rx = gemv(&r, &x_true);
+        let b = {
+            let rt = r.transpose();
+            gemv(&rt, &rx)
+        };
+        let u = trsv_lower_t(&r, &b); // solves R^T u = b
+        let x = trsv_upper(&r, &u); // solves R x = u
+        for i in 0..n {
+            assert!((x[i] - x_true[i]).abs() < 1e-2, "i={i} {} vs {}", x[i], x_true[i]);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_solve_matches_vector_solve() {
+        let mut rng = Rng::new(8);
+        let n = 16;
+        let a = Matrix::randn(n + 2, n, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.3);
+        let r = cholesky_upper(&g).unwrap();
+        let b = Matrix::randn(n, 5, 1.0, &mut rng);
+        let xm = solve_upper_mat(&r, &b);
+        for j in 0..5 {
+            let xv = trsv_upper(&r, &b.col(j));
+            for i in 0..n {
+                assert!((xm.get(i, j) - xv[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Rng::new(9);
+        for &n in &[4usize, 16, 48] {
+            let q = random_orthogonal(n, &mut rng);
+            let qtq = gemm_tn(&q, &q);
+            assert!(qtq.rel_err(&Matrix::eye(n)) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn signed_permutation_is_orthogonal() {
+        let mut rng = Rng::new(10);
+        let q = signed_permutation(12, &mut rng);
+        let qtq = gemm_tn(&q, &q);
+        assert!(qtq.rel_err(&Matrix::eye(12)) < 1e-6);
+    }
+}

@@ -1,0 +1,72 @@
+//! Random orthogonal matrices — the incoherence-processing substrate for
+//! the QuIP-style baseline ([`crate::quant::quip`]).
+//!
+//! QuIP multiplies weights/Hessians by random orthogonal matrices so that
+//! the lattice basis becomes "incoherent" (no dominant axis). We generate
+//! them by Gram–Schmidt (QR) on a Gaussian matrix — Haar-distributed up to
+//! sign convention — plus a cheaper signed-permutation variant used in
+//! ablations.
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Haar-random `n×n` orthogonal matrix via modified Gram–Schmidt on a
+/// Gaussian sample. Columns are re-orthogonalized once ("twice is enough")
+/// for f32 robustness at n up to ~1k.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Matrix {
+    let g = Matrix::randn(n, n, 1.0, rng);
+    // Work column-major on a transposed copy so each vector is contiguous.
+    let gt = g.transpose();
+    let mut cols: Vec<Vec<f32>> = (0..n).map(|i| gt.row(i).to_vec()).collect();
+    for i in 0..n {
+        // Two MGS passes against previous columns.
+        for _pass in 0..2 {
+            for j in 0..i {
+                let dot: f64 = cols[i]
+                    .iter()
+                    .zip(&cols[j])
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                let d = dot as f32;
+                // Split borrow: clone-free via raw indexing.
+                let (left, right) = cols.split_at_mut(i);
+                let cj = &left[j];
+                for (v, &u) in right[0].iter_mut().zip(cj) {
+                    *v -= d * u;
+                }
+            }
+        }
+        let norm: f64 = cols[i].iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        let inv = if norm > 1e-12 { (1.0 / norm) as f32 } else { 0.0 };
+        for v in cols[i].iter_mut() {
+            *v *= inv;
+        }
+        // Degenerate column (measure-zero): replace with a canonical basis
+        // vector orthogonal by construction after re-orthogonalization.
+        if inv == 0.0 {
+            for (k, v) in cols[i].iter_mut().enumerate() {
+                *v = if k == i { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    let mut q = Matrix::zeros(n, n);
+    for (j, c) in cols.iter().enumerate() {
+        for (i, &v) in c.iter().enumerate() {
+            q.set(i, j, v);
+        }
+    }
+    q
+}
+
+/// Random signed permutation matrix — an O(n) orthogonal transform used as
+/// a cheap incoherence ablation (rotates axes without mixing them).
+pub fn signed_permutation(n: usize, rng: &mut Rng) -> Matrix {
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut q = Matrix::zeros(n, n);
+    for (i, &p) in perm.iter().enumerate() {
+        let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+        q.set(i, p, sign);
+    }
+    q
+}

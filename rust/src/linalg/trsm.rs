@@ -1,0 +1,108 @@
+//! Triangular solves against an upper-triangular factor `R` (and its
+//! transpose), vector and multiple-right-hand-side forms.
+//!
+//! Algorithm 1 lines 3–4 of the paper: solve `Rᵀu = c` (forward
+//! substitution on the implicitly-lower `Rᵀ`) then `Rv = u` (backward
+//! substitution). `R` is stored upper-triangular row-major; we never form
+//! `Rᵀ` or any inverse.
+
+use crate::tensor::Matrix;
+
+/// Solve `Rᵀ u = b` where `R` is upper-triangular (so `Rᵀ` is lower).
+/// Forward substitution: `u[i] = (b[i] - Σ_{k<i} R[k,i]·u[k]) / R[i,i]`.
+pub fn trsv_lower_t(r: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut u = b.to_vec();
+    for i in 0..n {
+        let ui = u[i] / r.get(i, i);
+        u[i] = ui;
+        if ui != 0.0 {
+            // Scatter the update along column i of R = row i of Rᵀ:
+            // u[j] -= R[i,j] * u[i] for j > i — row i of R is contiguous.
+            let ri = &r.row(i)[i + 1..n];
+            for (uj, &rij) in u[i + 1..].iter_mut().zip(ri) {
+                *uj -= rij * ui;
+            }
+        }
+    }
+    u
+}
+
+/// Solve `R v = b` for upper-triangular `R` (backward substitution).
+pub fn trsv_upper(r: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut v = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i] as f64;
+        let ri = &r.row(i)[i + 1..n];
+        for (k, &rij) in ri.iter().enumerate() {
+            acc -= rij as f64 * v[i + 1 + k] as f64;
+        }
+        v[i] = (acc / r.get(i, i) as f64) as f32;
+    }
+    v
+}
+
+/// Multiple-RHS `Rᵀ U = B` (B: n×nrhs), column-blocked so the inner loop
+/// runs contiguously across RHS columns.
+pub fn solve_lower_t(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.rows(), n);
+    let nrhs = b.cols();
+    let mut u = b.clone();
+    for i in 0..n {
+        let inv = 1.0 / r.get(i, i);
+        for j in 0..nrhs {
+            let v = u.get(i, j) * inv;
+            u.set(i, j, v);
+        }
+        let ui_row: Vec<f32> = u.row(i).to_vec();
+        let ri: Vec<f32> = r.row(i)[i + 1..n].to_vec();
+        for (k, &rij) in ri.iter().enumerate() {
+            if rij == 0.0 {
+                continue;
+            }
+            let dst = u.row_mut(i + 1 + k);
+            for (d, &s) in dst.iter_mut().zip(&ui_row) {
+                *d -= rij * s;
+            }
+        }
+    }
+    u
+}
+
+/// Multiple-RHS `R V = B` (B: n×nrhs), backward substitution with
+/// row-contiguous updates.
+pub fn solve_upper_mat(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows();
+    assert_eq!(r.cols(), n);
+    assert_eq!(b.rows(), n);
+    let nrhs = b.cols();
+    let mut v = b.clone();
+    for i in (0..n).rev() {
+        // v[i,:] -= Σ_{j>i} R[i,j] · v[j,:]
+        let ri: Vec<f32> = r.row(i)[i + 1..n].to_vec();
+        let mut acc: Vec<f64> = v.row(i).iter().map(|&x| x as f64).collect();
+        for (k, &rij) in ri.iter().enumerate() {
+            if rij == 0.0 {
+                continue;
+            }
+            let src = v.row(i + 1 + k);
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a -= rij as f64 * s as f64;
+            }
+        }
+        let inv = 1.0 / r.get(i, i) as f64;
+        let dst = v.row_mut(i);
+        for (d, a) in dst.iter_mut().zip(acc) {
+            *d = (a * inv) as f32;
+        }
+        let _ = nrhs;
+    }
+    v
+}

@@ -1,0 +1,201 @@
+//! `ojbkq` — the OJBKQ quantization pipeline CLI (L3 leader entrypoint).
+//!
+//! ```text
+//! ojbkq info      [--artifacts DIR]
+//! ojbkq quantize  --model NAME [--method ours] [--wbit 4] [--group 128]
+//!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
+//!                 [--calib 32] [--seq 128] [--out PATH]
+//! ojbkq eval      --model NAME [--method ours] [--ppl-tokens 8192]
+//!                 [--zeroshot] [--reasoning] (quantize + evaluate)
+//! ojbkq methods   (list available solvers)
+//! ```
+//!
+//! Model NAME refers to the zoo presets (see `config::ModelConfig::zoo`)
+//! whose trained weights live in `artifacts/` after `make artifacts`.
+
+use ojbkq::cli::Args;
+use ojbkq::coordinator::{quantize_model, Workbench};
+use ojbkq::eval;
+use ojbkq::quant::{Backend, Method, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::runtime::SolverRuntime;
+use ojbkq::util::fmt_secs;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::parse();
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("methods") => cmd_methods(),
+        Some("quantize") => cmd_quantize(&args, false),
+        Some("eval") => cmd_quantize(&args, true),
+        _ => {
+            eprintln!(
+                "usage: ojbkq <info|methods|quantize|eval> [--options]\n\
+                 see `rust/src/main.rs` docs or README.md"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("artifacts", "artifacts"))
+}
+
+fn quant_config(args: &Args) -> QuantConfig {
+    let wbit = args.get_usize("wbit", 4) as u8;
+    let group = args.get_usize("group", 128);
+    let mut cfg = QuantConfig::paper_defaults(wbit, group);
+    cfg.k = args.get_usize("k", cfg.k);
+    cfg.mu = args.get_f64("mu", cfg.mu);
+    cfg.lambda = args.get_f64("lambda", cfg.lambda);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.ntile = args.get_usize("ntile", cfg.ntile);
+    cfg.block = args.get_usize("block", cfg.block);
+    cfg.backend = match args.get_str("backend", "native").as_str() {
+        "pjrt" => Backend::Pjrt,
+        _ => Backend::Native,
+    };
+    cfg
+}
+
+fn cmd_methods() -> i32 {
+    println!("available methods (--method):");
+    for m in Method::all() {
+        println!("  {:<10} {}", m.label().to_ascii_lowercase(), description(*m));
+    }
+    0
+}
+
+fn description(m: Method) -> &'static str {
+    match m {
+        Method::Fp => "no quantization (reference)",
+        Method::Rtn => "round-to-nearest",
+        Method::Gptq => "sequential error compensation (act-order on)",
+        Method::Awq => "activation-aware weight scaling",
+        Method::Quip => "incoherence rotation + greedy decode",
+        Method::BabaiNaive => "Ours(N): box-constrained Babai nearest-plane",
+        Method::KleinRandomK => "Ours(R): Random-K Babai/Klein",
+        Method::Ojbkq => "Ours: Random-K Babai/Klein + JTA objective",
+        Method::Qep => "QEP corner of JTA (mu=0, lambda=0)",
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    println!("artifacts dir: {dir:?}");
+    match SolverRuntime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT CPU client: ok");
+            println!("decoder artifact variants:");
+            for key in rt.registry() {
+                println!("  {}", key.file_name());
+            }
+            if rt.registry().is_empty() {
+                println!("  (none — run `make artifacts`)");
+            }
+        }
+        Err(e) => println!("PJRT runtime unavailable: {e}"),
+    }
+    for name in ["tiny-0.2M", "small-0.8M", "base-2M", "med-5M"] {
+        let present = dir.join(format!("model_{name}.bin")).exists();
+        println!("model {name:<12} trained-weights={}", if present { "yes" } else { "no" });
+    }
+    0
+}
+
+fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
+    let name = args.get_str("model", "small-0.8M");
+    let method = match Method::parse(&args.get_str("method", "ours")) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown method; see `ojbkq methods`");
+            return 2;
+        }
+    };
+    let cfg = quant_config(args);
+    let dir = artifacts_dir(args);
+    let wb = Workbench::load(&dir, &name);
+    if !wb.trained {
+        eprintln!("[warn] no trained artifacts for {name}; using random-init fallback");
+    }
+    let rt_holder;
+    let rt = if cfg.backend == Backend::Pjrt {
+        match SolverRuntime::new(&dir) {
+            Ok(r) => {
+                rt_holder = r;
+                Some(&rt_holder)
+            }
+            Err(e) => {
+                eprintln!("error: pjrt backend requested but runtime failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    let n_calib = args.get_usize("calib", 16);
+    let seq = args.get_usize("seq", 128);
+    println!(
+        "quantizing {name} with {} (wbit={} group={} K={} mu={} lambda={})",
+        method.label(),
+        cfg.wbit,
+        cfg.group_size,
+        cfg.k,
+        cfg.mu,
+        cfg.lambda
+    );
+    let (qmodel, report) =
+        match quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, rt) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("quantization failed: {e}");
+                return 1;
+            }
+        };
+    println!(
+        "done in {} (solver {}); compression {:.2}x over fp32",
+        fmt_secs(report.total_secs),
+        fmt_secs(report.solver_secs()),
+        report.compression_ratio()
+    );
+    if let Some(out) = args.get("out") {
+        if let Err(e) = ojbkq::model::save_model(&qmodel, std::path::Path::new(out)) {
+            eprintln!("saving {out}: {e}");
+            return 1;
+        }
+        println!("wrote dequantized model to {out}");
+    }
+    if and_eval {
+        let ppl_tokens = args.get_usize("ppl-tokens", 8_192);
+        let seq_len = wb.model.cfg.max_seq;
+        let (c4, wt2) =
+            eval::perplexity_pair(&qmodel, &wb.corpus, &wb.shifted, seq_len, ppl_tokens);
+        let (fc4, fwt2) =
+            eval::perplexity_pair(&wb.model, &wb.corpus, &wb.shifted, seq_len, ppl_tokens);
+        let mut t = Table::new(
+            &format!("{name} — {}", method.label()),
+            &["metric", "FP32", method.label()],
+        );
+        t.push_row(&["ppl (in-domain)".to_string(), format!("{fc4:.3}"), format!("{c4:.3}")]);
+        t.push_row(&["ppl (shifted)".to_string(), format!("{fwt2:.3}"), format!("{wt2:.3}")]);
+        if args.get_flag("zeroshot") {
+            for task in eval::ZeroShotTask::suite() {
+                let a = eval::zero_shot_accuracy(&qmodel, &wb.corpus, &task, 100, cfg.seed);
+                let f = eval::zero_shot_accuracy(&wb.model, &wb.corpus, &task, 100, cfg.seed);
+                t.push_row(&[task.name.to_string(), format!("{f:.1}"), format!("{a:.1}")]);
+            }
+        }
+        if args.get_flag("reasoning") {
+            for task in eval::ReasoningTask::suite() {
+                let a = eval::reasoning_accuracy(&qmodel, &wb.corpus, &task, 50, cfg.seed);
+                let f = eval::reasoning_accuracy(&wb.model, &wb.corpus, &task, 50, cfg.seed);
+                t.push_row(&[task.name.to_string(), format!("{f:.1}"), format!("{a:.1}")]);
+            }
+        }
+        t.emit(None, "eval");
+    }
+    0
+}

@@ -1,0 +1,161 @@
+//! Weight (de)serialization — the "OJBW1" format written by
+//! `python/compile/pretrain.py` and read here:
+//!
+//! ```text
+//! OJBW1\n
+//! vocab d_model n_layers n_heads d_ff max_seq\n
+//! { name\n rows cols\n <rows*cols f32 LE bytes> }*
+//! ```
+//!
+//! Tensor names: `embedding`, `final_norm` (1×d), and per block `b{i}.`
+//! + {`attn_norm` (1×d), `wq wk wv wo` (d×d), `mlp_norm` (1×d),
+//! `wgate wup` (d×ff), `wdown` (ff×d)}.
+
+use super::{Block, Model};
+use crate::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::{bytes_to_f32s, f32s_to_bytes};
+use std::collections::HashMap;
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "OJBW1";
+
+/// Save a model in OJBW1 format.
+pub fn save_model(model: &Model, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{MAGIC}")?;
+    let c = &model.cfg;
+    writeln!(
+        w,
+        "{} {} {} {} {} {}",
+        c.vocab_size, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq
+    )?;
+    let mut write_tensor = |name: &str, rows: usize, cols: usize, data: &[f32]| -> anyhow::Result<()> {
+        writeln!(w, "{name}")?;
+        writeln!(w, "{rows} {cols}")?;
+        w.write_all(&f32s_to_bytes(data))?;
+        Ok(())
+    };
+    write_tensor("embedding", c.vocab_size, c.d_model, model.embedding.as_slice())?;
+    for (i, b) in model.blocks.iter().enumerate() {
+        write_tensor(&format!("b{i}.attn_norm"), 1, c.d_model, &b.attn_norm)?;
+        write_tensor(&format!("b{i}.wq"), c.d_model, c.d_model, b.wq.as_slice())?;
+        write_tensor(&format!("b{i}.wk"), c.d_model, c.d_model, b.wk.as_slice())?;
+        write_tensor(&format!("b{i}.wv"), c.d_model, c.d_model, b.wv.as_slice())?;
+        write_tensor(&format!("b{i}.wo"), c.d_model, c.d_model, b.wo.as_slice())?;
+        write_tensor(&format!("b{i}.mlp_norm"), 1, c.d_model, &b.mlp_norm)?;
+        write_tensor(&format!("b{i}.wgate"), c.d_model, c.d_ff, b.wgate.as_slice())?;
+        write_tensor(&format!("b{i}.wup"), c.d_model, c.d_ff, b.wup.as_slice())?;
+        write_tensor(&format!("b{i}.wdown"), c.d_ff, c.d_model, b.wdown.as_slice())?;
+    }
+    write_tensor("final_norm", 1, c.d_model, &model.final_norm)?;
+    Ok(())
+}
+
+/// Load a model in OJBW1 format. `name` labels the returned config.
+pub fn load_model(path: &Path, name: &str) -> anyhow::Result<Model> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening model {path:?}: {e} (run `make artifacts`)"))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    anyhow::ensure!(line.trim() == MAGIC, "bad magic {line:?} in {path:?}");
+    line.clear();
+    r.read_line(&mut line)?;
+    let dims: Vec<usize> =
+        line.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+    anyhow::ensure!(dims.len() == 6, "bad config line {line:?}");
+    let cfg = ModelConfig {
+        name: name.to_string(),
+        vocab_size: dims[0],
+        d_model: dims[1],
+        n_layers: dims[2],
+        n_heads: dims[3],
+        d_ff: dims[4],
+        max_seq: dims[5],
+    };
+    let mut tensors: HashMap<String, Matrix> = HashMap::new();
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let tname = line.trim().to_string();
+        if tname.is_empty() {
+            continue;
+        }
+        line.clear();
+        r.read_line(&mut line)?;
+        let shape: Vec<usize> =
+            line.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
+        anyhow::ensure!(shape.len() == 2, "bad shape line {line:?} for {tname}");
+        let (rows, cols) = (shape[0], shape[1]);
+        let mut buf = vec![0u8; rows * cols * 4];
+        r.read_exact(&mut buf)?;
+        tensors.insert(tname, Matrix::from_vec(rows, cols, bytes_to_f32s(&buf)?));
+    }
+    let take = |tensors: &mut HashMap<String, Matrix>, name: &str| -> anyhow::Result<Matrix> {
+        tensors.remove(name).ok_or_else(|| anyhow::anyhow!("missing tensor {name}"))
+    };
+    let take_vec = |tensors: &mut HashMap<String, Matrix>, name: &str| -> anyhow::Result<Vec<f32>> {
+        Ok(take(tensors, name)?.into_vec())
+    };
+    let embedding = take(&mut tensors, "embedding")?;
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        blocks.push(Block {
+            attn_norm: take_vec(&mut tensors, &format!("b{i}.attn_norm"))?,
+            wq: take(&mut tensors, &format!("b{i}.wq"))?,
+            wk: take(&mut tensors, &format!("b{i}.wk"))?,
+            wv: take(&mut tensors, &format!("b{i}.wv"))?,
+            wo: take(&mut tensors, &format!("b{i}.wo"))?,
+            mlp_norm: take_vec(&mut tensors, &format!("b{i}.mlp_norm"))?,
+            wgate: take(&mut tensors, &format!("b{i}.wgate"))?,
+            wup: take(&mut tensors, &format!("b{i}.wup"))?,
+            wdown: take(&mut tensors, &format!("b{i}.wdown"))?,
+        });
+    }
+    let final_norm = take_vec(&mut tensors, "final_norm")?;
+    let model = Model { cfg, embedding, blocks, final_norm };
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig {
+            name: "rt".into(),
+            vocab_size: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            max_seq: 8,
+        };
+        let mut rng = Rng::new(1);
+        let m = Model::random(cfg, &mut rng);
+        let dir = std::env::temp_dir().join("ojbkq_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        save_model(&m, &path).unwrap();
+        let m2 = load_model(&path, "rt").unwrap();
+        assert_eq!(m.embedding, m2.embedding);
+        assert_eq!(m.blocks[1].wdown, m2.blocks[1].wdown);
+        assert_eq!(m.final_norm, m2.final_norm);
+        // Same forward outputs.
+        let toks: Vec<u16> = vec![3, 7, 1, 0];
+        assert!(m.forward(&toks).rel_err(&m2.forward(&toks)) < 1e-12);
+    }
+
+    #[test]
+    fn load_missing_file_errors_with_hint() {
+        let err = load_model(Path::new("/nonexistent/m.bin"), "x").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,522 @@
+//! Transformer model substrate: a GPT-style decoder-only LM implemented
+//! forward-only in Rust, numerically mirroring the JAX training
+//! definition in `python/compile/pretrain.py` (which trains the tiny-LM
+//! zoo at build time and exports weights to `artifacts/`).
+//!
+//! Architecture (per [`crate::config::ModelConfig`]):
+//! token embedding + sinusoidal positions → N × [RMSNorm → causal MHA →
+//! residual → RMSNorm → SwiGLU MLP → residual] → RMSNorm → tied LM head.
+//!
+//! The seven quantizable linears per block (`Q K V O Gate Up Down`) are
+//! addressed by [`LinearId`], and [`Model::forward_with_taps`] captures
+//! the *inputs* of any requested linears — the `X` / `X̃` matrices of the
+//! paper's layer-wise objectives — in one pass.
+
+mod io;
+
+pub use io::{load_model, save_model};
+
+use crate::config::ModelConfig;
+use crate::linalg::matmul;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+use std::collections::HashMap;
+
+/// Which linear inside a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinearKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl LinearKind {
+    /// Quantization order within a block (paper: all linear modules).
+    pub fn all() -> &'static [LinearKind] {
+        &[
+            LinearKind::Q,
+            LinearKind::K,
+            LinearKind::V,
+            LinearKind::O,
+            LinearKind::Gate,
+            LinearKind::Up,
+            LinearKind::Down,
+        ]
+    }
+
+    /// The tap point whose output feeds this linear.
+    pub fn tap(&self) -> TapPoint {
+        match self {
+            LinearKind::Q | LinearKind::K | LinearKind::V => TapPoint::AttnIn,
+            LinearKind::O => TapPoint::OIn,
+            LinearKind::Gate | LinearKind::Up => TapPoint::MlpIn,
+            LinearKind::Down => TapPoint::DownIn,
+        }
+    }
+
+    /// Serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinearKind::Q => "wq",
+            LinearKind::K => "wk",
+            LinearKind::V => "wv",
+            LinearKind::O => "wo",
+            LinearKind::Gate => "wgate",
+            LinearKind::Up => "wup",
+            LinearKind::Down => "wdown",
+        }
+    }
+}
+
+/// Fully-qualified linear layer address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinearId {
+    pub block: usize,
+    pub kind: LinearKind,
+}
+
+impl std::fmt::Display for LinearId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "b{}.{}", self.block, self.kind.name())
+    }
+}
+
+/// Activation capture points inside a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TapPoint {
+    /// Post-attn-RMSNorm (input of Q/K/V).
+    AttnIn,
+    /// Concatenated attention heads (input of O).
+    OIn,
+    /// Post-mlp-RMSNorm (input of Gate/Up).
+    MlpIn,
+    /// `silu(gate) ⊙ up` (input of Down).
+    DownIn,
+}
+
+/// A capture request + storage: rows accumulate across forward calls.
+#[derive(Debug, Default)]
+pub struct TapSet {
+    want: Vec<(usize, TapPoint)>,
+    data: HashMap<(usize, TapPoint), Vec<Matrix>>,
+}
+
+impl TapSet {
+    pub fn request(block: usize, points: &[TapPoint]) -> TapSet {
+        TapSet { want: points.iter().map(|&p| (block, p)).collect(), data: HashMap::new() }
+    }
+
+    fn record(&mut self, block: usize, point: TapPoint, x: &Matrix) {
+        if self.want.contains(&(block, point)) {
+            self.data.entry((block, point)).or_default().push(x.clone());
+        }
+    }
+
+    /// Concatenated captured rows for a tap.
+    pub fn take(&mut self, block: usize, point: TapPoint) -> Option<Matrix> {
+        let mats = self.data.remove(&(block, point))?;
+        let mut it = mats.into_iter();
+        let mut acc = it.next()?;
+        for m in it {
+            acc = acc.vstack(&m);
+        }
+        Some(acc)
+    }
+}
+
+/// One transformer block's parameters.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub attn_norm: Vec<f32>,
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub mlp_norm: Vec<f32>,
+    pub wgate: Matrix,
+    pub wup: Matrix,
+    pub wdown: Matrix,
+}
+
+/// The model: embeddings + blocks + final norm (LM head tied).
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// `vocab × d` token embedding (also the tied output head).
+    pub embedding: Matrix,
+    pub blocks: Vec<Block>,
+    pub final_norm: Vec<f32>,
+}
+
+impl Model {
+    /// Random init (unit tests / solver benches; trained weights come from
+    /// `artifacts/` via [`load_model`]).
+    pub fn random(cfg: ModelConfig, rng: &mut Rng) -> Model {
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        let std_d = 1.0 / (d as f32).sqrt();
+        let std_ff = 1.0 / (ff as f32).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| Block {
+                attn_norm: vec![1.0; d],
+                wq: Matrix::randn(d, d, std_d, rng),
+                wk: Matrix::randn(d, d, std_d, rng),
+                wv: Matrix::randn(d, d, std_d, rng),
+                wo: Matrix::randn(d, d, std_d, rng),
+                mlp_norm: vec![1.0; d],
+                wgate: Matrix::randn(d, ff, std_d, rng),
+                wup: Matrix::randn(d, ff, std_d, rng),
+                wdown: Matrix::randn(ff, d, std_ff, rng),
+            })
+            .collect();
+        Model {
+            embedding: Matrix::randn(cfg.vocab_size, cfg.d_model, 0.02, rng),
+            blocks,
+            final_norm: vec![1.0; cfg.d_model],
+            cfg,
+        }
+    }
+
+    /// Borrow a linear's weight.
+    pub fn linear(&self, id: LinearId) -> &Matrix {
+        let b = &self.blocks[id.block];
+        match id.kind {
+            LinearKind::Q => &b.wq,
+            LinearKind::K => &b.wk,
+            LinearKind::V => &b.wv,
+            LinearKind::O => &b.wo,
+            LinearKind::Gate => &b.wgate,
+            LinearKind::Up => &b.wup,
+            LinearKind::Down => &b.wdown,
+        }
+    }
+
+    /// Replace a linear's weight (with e.g. a dequantized matrix).
+    pub fn set_linear(&mut self, id: LinearId, w: Matrix) {
+        let b = &mut self.blocks[id.block];
+        let slot = match id.kind {
+            LinearKind::Q => &mut b.wq,
+            LinearKind::K => &mut b.wk,
+            LinearKind::V => &mut b.wv,
+            LinearKind::O => &mut b.wo,
+            LinearKind::Gate => &mut b.wgate,
+            LinearKind::Up => &mut b.wup,
+            LinearKind::Down => &mut b.wdown,
+        };
+        assert_eq!(slot.shape(), w.shape(), "linear {id} shape");
+        *slot = w;
+    }
+
+    /// All linear ids in quantization order.
+    pub fn linear_ids(&self) -> Vec<LinearId> {
+        let mut out = Vec::new();
+        for block in 0..self.blocks.len() {
+            for &kind in LinearKind::all() {
+                out.push(LinearId { block, kind });
+            }
+        }
+        out
+    }
+
+    /// Logits for one token sequence (`seq × vocab`).
+    pub fn forward(&self, tokens: &[u16]) -> Matrix {
+        self.forward_with_taps(tokens, &mut TapSet::default())
+    }
+
+    /// Tap-only forward that stops after `until_block` (inclusive) — the
+    /// coordinator's calibration captures never need later blocks or the
+    /// LM head, which roughly halves capture cost mid-network.
+    pub fn forward_prefix_taps(&self, tokens: &[u16], taps: &mut TapSet, until_block: usize) {
+        self.forward_impl(tokens, taps, Some(until_block));
+    }
+
+    /// Forward pass recording requested activation taps.
+    pub fn forward_with_taps(&self, tokens: &[u16], taps: &mut TapSet) -> Matrix {
+        self.forward_impl(tokens, taps, None)
+            .expect("full forward always yields logits")
+    }
+
+    fn forward_impl(
+        &self,
+        tokens: &[u16],
+        taps: &mut TapSet,
+        until_block: Option<usize>,
+    ) -> Option<Matrix> {
+        let seq = tokens.len();
+        assert!(seq <= self.cfg.max_seq, "sequence too long");
+        let d = self.cfg.d_model;
+        // Token embedding + sinusoidal positions (matches pretrain.py).
+        let mut x = Matrix::zeros(seq, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let emb = self.embedding.row(tok as usize);
+            let row = x.row_mut(t);
+            row.copy_from_slice(emb);
+            // Sinusoidal positions scaled to the embedding init std so
+            // position does not swamp token identity (twin of
+            // pretrain.pos_encoding).
+            for i in 0..d / 2 {
+                let freq = (-(2.0 * i as f64 / d as f64) * 10_000f64.ln()).exp();
+                let angle = t as f64 * freq;
+                row[2 * i] += 0.02 * angle.sin() as f32;
+                row[2 * i + 1] += 0.02 * angle.cos() as f32;
+            }
+        }
+        for (bi, block) in self.blocks.iter().enumerate() {
+            // Attention.
+            let h = rmsnorm(&x, &block.attn_norm);
+            taps.record(bi, TapPoint::AttnIn, &h);
+            let q = matmul(&h, &block.wq);
+            let k = matmul(&h, &block.wk);
+            let v = matmul(&h, &block.wv);
+            let attn = causal_attention(&q, &k, &v, self.cfg.n_heads);
+            taps.record(bi, TapPoint::OIn, &attn);
+            let o = matmul(&attn, &block.wo);
+            x = x.add(&o);
+            // MLP (SwiGLU).
+            let h2 = rmsnorm(&x, &block.mlp_norm);
+            taps.record(bi, TapPoint::MlpIn, &h2);
+            let g = matmul(&h2, &block.wgate);
+            let u = matmul(&h2, &block.wup);
+            let act = Matrix::from_fn(seq, self.cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j));
+            taps.record(bi, TapPoint::DownIn, &act);
+            let down = matmul(&act, &block.wdown);
+            x = x.add(&down);
+            if until_block == Some(bi) {
+                return None;
+            }
+        }
+        let xf = rmsnorm(&x, &self.final_norm);
+        // Tied head: logits = x · Eᵀ.
+        Some(matmul(&xf, &self.embedding.transpose()))
+    }
+
+    /// Sum of token negative log-likelihoods for positions `1..seq`
+    /// (predicting token t from prefix `..t`), plus the token count.
+    pub fn sequence_nll(&self, tokens: &[u16]) -> (f64, usize) {
+        if tokens.len() < 2 {
+            return (0.0, 0);
+        }
+        let logits = self.forward(tokens);
+        let mut nll = 0.0f64;
+        for t in 0..tokens.len() - 1 {
+            let ls = crate::util::log_softmax(logits.row(t));
+            nll -= ls[tokens[t + 1] as usize] as f64;
+        }
+        (nll, tokens.len() - 1)
+    }
+
+    /// Greedy continuation of `prompt` by `n` tokens.
+    pub fn greedy_continue(&self, prompt: &[u16], n: usize) -> Vec<u16> {
+        let mut ctx: Vec<u16> = prompt.to_vec();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let window = if ctx.len() > self.cfg.max_seq {
+                &ctx[ctx.len() - self.cfg.max_seq..]
+            } else {
+                &ctx[..]
+            };
+            let logits = self.forward(window);
+            let last = logits.row(logits.rows() - 1);
+            let next = crate::util::argmax(last) as u16;
+            out.push(next);
+            ctx.push(next);
+        }
+        out
+    }
+}
+
+/// RMSNorm with learned gain (eps = 1e-5, matching pretrain.py).
+pub fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
+    let (rows, cols) = x.shape();
+    assert_eq!(gain.len(), cols);
+    let mut out = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        let row = x.row(i);
+        let ms: f64 =
+            row.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / cols as f64;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        let dst = out.row_mut(i);
+        for j in 0..cols {
+            dst[j] = (row[j] as f64 * inv) as f32 * gain[j];
+        }
+    }
+    out
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Multi-head causal self-attention on a single sequence.
+/// `q,k,v: seq×d`; returns the concatenated head outputs (`seq×d`).
+pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let (seq, d) = q.shape();
+    assert_eq!(d % n_heads, 0);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = Matrix::zeros(seq, d);
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        for t in 0..seq {
+            // scores over positions 0..=t
+            let qt = &q.row(t)[c0..c0 + hd];
+            let mut scores = Vec::with_capacity(t + 1);
+            for u in 0..=t {
+                let ku = &k.row(u)[c0..c0 + hd];
+                let dot: f64 =
+                    qt.iter().zip(ku).map(|(&a, &b)| a as f64 * b as f64).sum();
+                scores.push((dot * scale) as f32);
+            }
+            let ls = crate::util::log_softmax(&scores);
+            let dst_full = out.row_mut(t);
+            for (u, &l) in ls.iter().enumerate() {
+                let w = (l as f64).exp() as f32;
+                let vu = &v.row(u)[c0..c0 + hd];
+                for (x, &vv) in dst_full[c0..c0 + hd].iter_mut().zip(vu) {
+                    *x += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let mut rng = Rng::new(1);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = (0..10).map(|i| (i * 3 % 32) as u16).collect();
+        let logits = m.forward(&toks);
+        assert_eq!(logits.shape(), (10, 32));
+        assert!(logits.all_finite());
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // Logits at position t must not depend on tokens after t.
+        let mut rng = Rng::new(2);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let a: Vec<u16> = vec![1, 2, 3, 4, 5, 6];
+        let mut b = a.clone();
+        b[5] = 31; // change the last token only
+        let la = m.forward(&a);
+        let lb = m.forward(&b);
+        for t in 0..5 {
+            for j in 0..32 {
+                assert!(
+                    (la.get(t, j) - lb.get(t, j)).abs() < 1e-5,
+                    "t={t} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn taps_capture_linear_inputs() {
+        let mut rng = Rng::new(3);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = vec![5, 9, 13, 2];
+        let mut taps = TapSet::request(1, &[TapPoint::AttnIn, TapPoint::DownIn]);
+        let _ = m.forward_with_taps(&toks, &mut taps);
+        let attn_in = taps.take(1, TapPoint::AttnIn).unwrap();
+        assert_eq!(attn_in.shape(), (4, 16));
+        let down_in = taps.take(1, TapPoint::DownIn).unwrap();
+        assert_eq!(down_in.shape(), (4, 24));
+        // Untapped point absent.
+        assert!(taps.take(0, TapPoint::AttnIn).is_none());
+    }
+
+    #[test]
+    fn taps_accumulate_across_calls() {
+        let mut rng = Rng::new(4);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let mut taps = TapSet::request(0, &[TapPoint::MlpIn]);
+        let _ = m.forward_with_taps(&[1, 2, 3], &mut taps);
+        let _ = m.forward_with_taps(&[4, 5], &mut taps);
+        assert_eq!(taps.take(0, TapPoint::MlpIn).unwrap().rows(), 5);
+    }
+
+    #[test]
+    fn set_linear_changes_output() {
+        let mut rng = Rng::new(5);
+        let mut m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = vec![7, 8, 9];
+        let before = m.forward(&toks);
+        let id = LinearId { block: 0, kind: LinearKind::Gate };
+        let w = m.linear(id).map(|v| v * 1.5);
+        m.set_linear(id, w);
+        let after = m.forward(&toks);
+        assert!(before.rel_err(&after) > 1e-6);
+    }
+
+    #[test]
+    fn nll_reasonable_for_random_model() {
+        let mut rng = Rng::new(6);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = (0..12).map(|_| rng.below(32) as u16).collect();
+        let (nll, count) = m.sequence_nll(&toks);
+        assert_eq!(count, 11);
+        let per_tok = nll / count as f64;
+        // Random model ≈ uniform: per-token NLL near ln(32) ≈ 3.47.
+        assert!((per_tok - (32f64).ln()).abs() < 1.0, "per_tok={per_tok}");
+    }
+
+    #[test]
+    fn greedy_continue_deterministic() {
+        let mut rng = Rng::new(7);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let a = m.greedy_continue(&[1, 2, 3], 5);
+        let b = m.greedy_continue(&[1, 2, 3], 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Matrix::from_vec(1, 4, vec![2.0, -2.0, 2.0, -2.0]);
+        let y = rmsnorm(&x, &[1.0; 4]);
+        for j in 0..4 {
+            assert!((y.get(0, j).abs() - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // With v rows one-hot per position, outputs are attention weights;
+        // they must be non-negative and sum to 1 per (t, head).
+        let seq = 4;
+        let d = 8;
+        let mut rng = Rng::new(8);
+        let q = Matrix::randn(seq, d, 1.0, &mut rng);
+        let k = Matrix::randn(seq, d, 1.0, &mut rng);
+        let v = Matrix::full(seq, d, 1.0);
+        let out = causal_attention(&q, &k, &v, 2);
+        for t in 0..seq {
+            for j in 0..d {
+                assert!((out.get(t, j) - 1.0).abs() < 1e-4, "t={t} j={j} {}", out.get(t, j));
+            }
+        }
+    }
+}

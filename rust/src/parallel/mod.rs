@@ -1,0 +1,126 @@
+//! Data-parallel execution substrate (no rayon offline).
+//!
+//! The coordinator parallelizes layer quantization across *weight columns*
+//! (the paper's outer level of parallelism) and, inside the native solver,
+//! across the K Klein paths (the inner level). Both reduce to the
+//! [`parallel_for_chunks`] primitive below, built on `std::thread::scope`.
+//!
+//! Threads are spawned per call — on the target machine layer solves run
+//! for milliseconds-to-seconds, so spawn cost (~10 µs) is noise, and the
+//! scoped design means zero `unsafe` and no channel plumbing.
+
+/// Number of worker threads to use: `OJBKQ_THREADS` env override, else
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("OJBKQ_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `[0, n)` into at most `parts` contiguous ranges of near-equal
+/// size (difference ≤ 1). Empty ranges are omitted.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let mut out = Vec::with_capacity(parts.min(n));
+    let base = n / parts;
+    let rem = n % parts;
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        if len == 0 {
+            continue;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `body(range)` over a partition of `[0, n)` on up to
+/// [`num_threads`] threads. `body` must be `Sync` (shared immutably).
+/// Results are returned in range order.
+pub fn parallel_for_chunks<T, F>(n: usize, body: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let ranges = split_ranges(n, num_threads());
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&body).collect();
+    }
+    let mut out: Vec<Option<T>> = ranges.iter().map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in ranges.iter().cloned() {
+            let body = &body;
+            handles.push(scope.spawn(move || body(r)));
+        }
+        for (slot, h) in out.iter_mut().zip(handles) {
+            *slot = Some(h.join().expect("parallel worker panicked"));
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Parallel map over indices `0..n`, preserving order. Convenience
+/// wrapper over [`parallel_for_chunks`].
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let chunks = parallel_for_chunks(n, |r| r.map(&f).collect::<Vec<T>>());
+    chunks.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for &(n, p) in &[(0usize, 4usize), (1, 4), (7, 3), (12, 4), (5, 8), (100, 7)] {
+            let rs = split_ranges(n, p);
+            let total: usize = rs.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n, "n={n} p={p}");
+            // Contiguous and ordered.
+            let mut expect = 0;
+            for r in &rs {
+                assert_eq!(r.start, expect);
+                expect = r.end;
+            }
+            // Balanced.
+            if let (Some(min), Some(max)) =
+                (rs.iter().map(|r| r.len()).min(), rs.iter().map(|r| r.len()).max())
+            {
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map(100, |i| i * i);
+        let expect: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn parallel_for_chunks_runs_everything_once() {
+        let counter = AtomicUsize::new(0);
+        let _ = parallel_for_chunks(1000, |r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn zero_n_is_fine() {
+        let out: Vec<usize> = parallel_map(0, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! AWQ baseline (Lin et al., 2024): activation-aware weight scaling.
+//!
+//! Salient input channels (large mean |activation|) get their weights
+//! scaled *up* before RTN — shrinking their relative rounding error — and
+//! the inverse scale is folded back at runtime. The exponent of the
+//! per-channel scale `s_i = (mean|x_i|)^α` is grid-searched on the
+//! calibration set to minimize output MSE (the paper's full-precision
+//! mapping objective, Eq. 3).
+//!
+//! We keep AWQ's original objective (calibrating against `XW` with the
+//! given activations) — differences in alignment target between methods
+//! are exactly what the paper's JTA analysis studies.
+
+use super::rtn;
+use super::{QuantConfig, QuantizedLinear};
+use crate::linalg::matmul;
+use crate::tensor::Matrix;
+
+/// Number of grid points for the α search (α = i / GRID, i = 0..GRID).
+const GRID: usize = 20;
+
+/// AWQ-quantize a layer against calibration activations `x` (`p×m`).
+pub fn quantize(w: &Matrix, x: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    let (m, _n) = w.shape();
+    assert_eq!(x.cols(), m);
+    // Per-input-channel salience: mean |x_i| over the calibration set.
+    let p = x.rows();
+    let mut salience = vec![0.0f64; m];
+    for r in 0..p {
+        let row = x.row(r);
+        for (s, &v) in salience.iter_mut().zip(row) {
+            *s += v.abs() as f64;
+        }
+    }
+    for s in salience.iter_mut() {
+        *s = (*s / p.max(1) as f64).max(1e-8);
+    }
+    // Normalize so the geometric mean is 1 (keeps scales centered and the
+    // α grid comparable across layers — matches the reference impl).
+    let log_mean: f64 = salience.iter().map(|s| s.ln()).sum::<f64>() / m as f64;
+    let norm = log_mean.exp();
+    for s in salience.iter_mut() {
+        *s /= norm;
+    }
+
+    let y_ref = matmul(x, w);
+    let mut best: Option<(f64, QuantizedLinear, Vec<f32>)> = None;
+    for gi in 0..=GRID {
+        let alpha = gi as f64 / GRID as f64;
+        let scale: Vec<f32> = salience.iter().map(|&s| (s.powf(alpha)) as f32).collect();
+        // W' = diag(scale)·W; runtime folds diag(1/scale) into activations.
+        let mut w_scaled = w.clone();
+        for i in 0..m {
+            let si = scale[i];
+            for v in w_scaled.row_mut(i) {
+                *v *= si;
+            }
+        }
+        let q = rtn::quantize(&w_scaled, cfg);
+        // Effective weight the runtime sees: diag(1/scale)·dq(W').
+        let mut w_eff = q.dequantize();
+        for i in 0..m {
+            let inv = 1.0 / scale[i];
+            for v in w_eff.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        let err = matmul(x, &w_eff).sub(&y_ref).frob_sq();
+        if best.as_ref().map(|(e, _, _)| err < *e).unwrap_or(true) {
+            best = Some((err, q, scale));
+        }
+    }
+    let (_, mut q, scale) = best.unwrap();
+    // Store the effective dense weight (scales folded) for the eval path.
+    let mut w_eff = q.dequantize();
+    for i in 0..m {
+        let inv = 1.0 / scale[i];
+        for v in w_eff.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    q.effective = Some(w_eff);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rt_err(w_hat: &Matrix, w: &Matrix, x: &Matrix) -> f64 {
+        matmul(x, w_hat).sub(&matmul(x, w)).frob()
+    }
+
+    /// Activations with a few dominant (salient) channels — the regime
+    /// AWQ is built for.
+    fn salient_layer(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(m, n, 0.5, &mut rng);
+        let mut x = Matrix::randn(p, m, 1.0, &mut rng);
+        for r in 0..p {
+            let row = x.row_mut(r);
+            for i in 0..m / 8 {
+                row[i * 8] *= 8.0; // every 8th channel is 8x hotter
+            }
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn awq_beats_rtn_on_salient_activations() {
+        let mut wins = 0;
+        for seed in 0..5 {
+            let (w, x) = salient_layer(64, 24, 128, seed);
+            let cfg = QuantConfig { wbit: 3, group_size: 32, ..Default::default() };
+            let q_awq = quantize(&w, &x, &cfg);
+            let q_rtn = rtn::quantize(&w, &cfg);
+            if rt_err(&q_awq.dequantize(), &w, &x) < rt_err(&q_rtn.dequantize(), &w, &x) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "awq won only {wins}/5");
+    }
+
+    #[test]
+    fn alpha_zero_included_so_never_much_worse_than_rtn() {
+        // α=0 gives scale ≡ 1 (pure RTN), so grid search can only improve
+        // the calibration objective.
+        let (w, x) = salient_layer(32, 16, 64, 42);
+        let cfg = QuantConfig { wbit: 4, group_size: 0, ..Default::default() };
+        let q_awq = quantize(&w, &x, &cfg);
+        let q_rtn = rtn::quantize(&w, &cfg);
+        let e_awq = rt_err(&q_awq.dequantize(), &w, &x);
+        let e_rtn = rt_err(&q_rtn.dequantize(), &w, &x);
+        assert!(e_awq <= e_rtn * 1.0001, "awq {e_awq} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn effective_weight_finite_and_shaped() {
+        let (w, x) = salient_layer(24, 8, 48, 7);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        let q = quantize(&w, &x, &cfg);
+        let eff = q.dequantize();
+        assert_eq!(eff.shape(), (24, 8));
+        assert!(eff.all_finite());
+    }
+
+    #[test]
+    fn deterministic() {
+        let (w, x) = salient_layer(16, 8, 32, 9);
+        let cfg = QuantConfig { wbit: 4, ..Default::default() };
+        let a = quantize(&w, &x, &cfg);
+        let b = quantize(&w, &x, &cfg);
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.dequantize(), b.dequantize());
+    }
+}

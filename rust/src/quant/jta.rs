@@ -1,0 +1,198 @@
+//! Joint Target Alignment (JTA) — the paper's unified selection objective
+//! (§3.1, Eq. 6–8):
+//!
+//! `Y*(μ) = (1−μ)·XW + μ·X̃W`
+//! `S(Ŵ) = ||X̃Ŵ − Y*(μ)||²_F + λ²||Ŵ − W||²_F`
+//!
+//! Special cases: (μ=1, λ=0) = runtime-consistent (GPTQ/QuIP, Eq. 1);
+//! (μ=0, λ=0) = mismatch target (QEP, Eq. 4); the full-precision mapping
+//! objective (AWQ, Eq. 3) corresponds to calibrating with `X̃ := X`.
+//!
+//! This module builds the stacked least-squares system of Eq. 8 in its
+//! normal-equation form: `G = X̃ᵀX̃ + λ²I` and RHS `B = X̃ᵀY* + λ²W`, from
+//! which the real-valued solution `Ŵ_real = G⁻¹B` is obtained via the
+//! Cholesky factor and two triangular solves — no inverse materialized.
+
+use super::{LambdaMode, QuantConfig};
+use crate::linalg::{gemm_tn, matmul, solve_lower_t, solve_upper_mat, syrk_upper};
+use crate::tensor::Matrix;
+
+/// `Y*(μ) = (1−μ)·Y_fp + μ·Y_rt` (Eq. 6), computed from precomputed
+/// outputs.
+pub fn interp_target(y_fp: &Matrix, y_rt: &Matrix, mu: f32) -> Matrix {
+    assert_eq!(y_fp.shape(), y_rt.shape());
+    let mut out = y_fp.scale(1.0 - mu);
+    out.axpy(mu, y_rt);
+    out
+}
+
+/// Resolve the absolute λ² used in the Gram matrix. `Relative` scales the
+/// knob by the mean diagonal of `X̃ᵀX̃` so the paper's λ ∈ [0.1, 0.8] sweep
+/// stays meaningful regardless of activation magnitude.
+pub fn lambda_sq_abs(cfg: &QuantConfig, gram_diag_mean: f64) -> f64 {
+    let l2 = cfg.lambda * cfg.lambda;
+    match cfg.lambda_mode {
+        LambdaMode::Absolute => l2,
+        LambdaMode::Relative => l2 * gram_diag_mean,
+    }
+}
+
+/// The assembled per-layer system.
+pub struct JtaSystem {
+    /// `G = X̃ᵀX̃ + λ²_abs·I` (m×m).
+    pub gram: Matrix,
+    /// `B = X̃ᵀ·Y*(μ) + λ²_abs·W` (m×n).
+    pub rhs: Matrix,
+    /// The λ² actually added.
+    pub lambda_sq: f64,
+}
+
+/// Build `G` and `B` for a layer (Eq. 8's normal equations).
+pub fn build_system(w: &Matrix, x_fp: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> JtaSystem {
+    let m = w.rows();
+    assert_eq!(x_rt.cols(), m);
+    let gram0 = syrk_upper(x_rt, 0.0);
+    let diag_mean: f64 =
+        (0..m).map(|i| gram0.get(i, i) as f64).sum::<f64>() / m.max(1) as f64;
+    let lambda_sq = lambda_sq_abs(cfg, diag_mean);
+    let mut gram = gram0;
+    for i in 0..m {
+        gram.add_at(i, i, lambda_sq as f32);
+    }
+    // Y*(μ): avoid forming both outputs when μ is at a boundary.
+    let mu = cfg.mu as f32;
+    let y_star = if mu == 0.0 {
+        matmul(x_fp, w)
+    } else if mu == 1.0 {
+        matmul(x_rt, w)
+    } else {
+        let y_fp = matmul(x_fp, w);
+        let y_rt = matmul(x_rt, w);
+        interp_target(&y_fp, &y_rt, mu)
+    };
+    let mut rhs = gemm_tn(x_rt, &y_star);
+    rhs.axpy(lambda_sq as f32, w);
+    JtaSystem { gram, rhs, lambda_sq }
+}
+
+/// Real-valued (unconstrained) solution `Ŵ_real` of the JTA system given
+/// the Cholesky factor `R` of `G`: Algorithm 1 line 3, all RHS at once.
+pub fn solve_real(r: &Matrix, rhs: &Matrix) -> Matrix {
+    let u = solve_lower_t(r, rhs);
+    solve_upper_mat(r, &u)
+}
+
+/// The full JTA score `S(Ŵ)` of a candidate dequantized weight (Eq. 7) —
+/// used in tests/diagnostics; the solver itself compares candidates in the
+/// equivalent q-space residual metric.
+pub fn score(
+    w_hat: &Matrix,
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+) -> f64 {
+    let y_fp = matmul(x_fp, w);
+    let y_rt = matmul(x_rt, w);
+    let y_star = interp_target(&y_fp, &y_rt, cfg.mu as f32);
+    let y_hat = matmul(x_rt, w_hat);
+    let gram = syrk_upper(x_rt, 0.0);
+    let m = w.rows();
+    let diag_mean: f64 = (0..m).map(|i| gram.get(i, i) as f64).sum::<f64>() / m.max(1) as f64;
+    let l2 = lambda_sq_abs(cfg, diag_mean);
+    y_hat.sub(&y_star).frob_sq() + l2 * w_hat.sub(w).frob_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky_upper;
+    use crate::rng::Rng;
+
+    fn cfg(mu: f64, lambda: f64) -> QuantConfig {
+        QuantConfig { mu, lambda, ..Default::default() }
+    }
+
+    #[test]
+    fn interp_boundaries() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 4, 1.0, &mut rng);
+        let b = Matrix::randn(5, 4, 1.0, &mut rng);
+        assert_eq!(interp_target(&a, &b, 0.0), a);
+        assert_eq!(interp_target(&a, &b, 1.0), b);
+        let mid = interp_target(&a, &b, 0.5);
+        assert!((mid.get(2, 2) - 0.5 * (a.get(2, 2) + b.get(2, 2))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambda_zero_recovers_ls_solution() {
+        // With λ=0 and μ=1 the real solution of the system is exactly W
+        // (X̃Ŵ = X̃W is solved by Ŵ=W when X̃ has full column rank).
+        let mut rng = Rng::new(2);
+        let m = 16;
+        let w = Matrix::randn(m, 6, 1.0, &mut rng);
+        let x = Matrix::randn(64, m, 1.0, &mut rng);
+        let sys = build_system(&w, &x, &x, &cfg(1.0, 0.0));
+        let r = cholesky_upper(&sys.gram).unwrap();
+        let w_real = solve_real(&r, &sys.rhs);
+        assert!(w_real.rel_err(&w) < 1e-3, "rel={}", w_real.rel_err(&w));
+    }
+
+    #[test]
+    fn large_lambda_pins_solution_to_w() {
+        // As λ→∞ the drift penalty dominates and Ŵ_real → W even when the
+        // activation targets disagree.
+        let mut rng = Rng::new(3);
+        let m = 12;
+        let w = Matrix::randn(m, 4, 1.0, &mut rng);
+        let x_fp = Matrix::randn(48, m, 1.0, &mut rng);
+        let x_rt = x_fp.map(|v| v + 0.3); // drifted runtime activations
+        let sys = build_system(
+            &w,
+            &x_fp,
+            &x_rt,
+            &QuantConfig { mu: 0.0, lambda: 100.0, ..Default::default() },
+        );
+        let r = cholesky_upper(&sys.gram).unwrap();
+        let w_real = solve_real(&r, &sys.rhs);
+        assert!(w_real.rel_err(&w) < 1e-2, "rel={}", w_real.rel_err(&w));
+    }
+
+    #[test]
+    fn mu_interpolates_solutions() {
+        // The μ=0 and μ=1 solutions differ when X̃ ≠ X; μ=0.5's solution
+        // sits between them (linearity of the normal equations in Y*).
+        let mut rng = Rng::new(4);
+        let m = 10;
+        let w = Matrix::randn(m, 3, 1.0, &mut rng);
+        let x_fp = Matrix::randn(40, m, 1.0, &mut rng);
+        let noise = Matrix::randn(40, m, 0.2, &mut rng);
+        let x_rt = x_fp.add(&noise);
+        let solve = |mu: f64| {
+            let sys = build_system(&w, &x_fp, &x_rt, &cfg(mu, 0.0));
+            let r = cholesky_upper(&sys.gram).unwrap();
+            solve_real(&r, &sys.rhs)
+        };
+        let w0 = solve(0.0);
+        let w1 = solve(1.0);
+        let wm = solve(0.5);
+        assert!(w0.rel_err(&w1) > 1e-4, "targets should differ under drift");
+        let expect = interp_target(&w0, &w1, 0.5);
+        assert!(wm.rel_err(&expect) < 1e-3, "rel={}", wm.rel_err(&expect));
+    }
+
+    #[test]
+    fn score_special_cases() {
+        let mut rng = Rng::new(5);
+        let m = 8;
+        let w = Matrix::randn(m, 4, 1.0, &mut rng);
+        let w_hat = w.map(|v| v + 0.01);
+        let x = Matrix::randn(32, m, 1.0, &mut rng);
+        // μ=1, λ=0 on identical activations = plain runtime-consistent MSE.
+        let s = score(&w_hat, &w, &x, &x, &cfg(1.0, 0.0));
+        let direct = matmul(&x, &w_hat).sub(&matmul(&x, &w)).frob_sq();
+        assert!((s - direct).abs() / direct.max(1e-12) < 1e-5);
+        // Perfect candidate scores ~0.
+        assert!(score(&w, &w, &x, &x, &cfg(0.5, 0.3)) < 1e-6);
+    }
+}

@@ -1,0 +1,392 @@
+//! Klein-randomized Babai decoding with K-best selection (paper §3.4,
+//! Algorithms 3–4) — "Ours(R)" when paired with the runtime-consistent
+//! objective.
+//!
+//! At each back-substitution step the code is *sampled* from the discrete
+//! Gaussian restricted to the box (Eq. 13):
+//!
+//! `Pr(q_i = v) ∝ exp(−α · r̄ᵢᵢ² · (cᵢ − v)²)`, `v ∈ {0, …, 2^b−1}`
+//!
+//! with `r̄ᵢᵢ = R(i,i)·s(i)`. (Eq. 13 as printed omits the square on
+//! `r̄ᵢᵢ`; we follow Liu–Ling–Stehlé (2011), which the paper cites for its
+//! α schedule and where the exponent is `ln(ρ)·r²ᵢᵢ(c−v)²/min r²ᵢᵢ` —
+//! dimensionally consistent and reducing to greedy as α → ∞.)
+//!
+//! The temperature is data-driven: `α = ln(ρ)/min_i r̄ᵢᵢ²` where ρ solves
+//! `K = (eρ)^(2m/ρ)` — larger K ⇒ smaller ρ ⇒ more exploration.
+
+use super::babai::{center, decode_greedy, residual_sq};
+use super::rtn::round_code;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Solve `K = (eρ)^(2m/ρ)` for ρ on the branch ρ ≥ 1 (where the map is
+/// monotone decreasing in ρ), by bisection on
+/// `g(ρ) = (2m/ρ)(1 + ln ρ) − ln K`. For K ≤ 1 the root escapes to
+/// infinity (pure greedy); we clamp to `RHO_MAX`.
+pub fn solve_rho(k: usize, m: usize) -> f64 {
+    const RHO_MAX: f64 = 1e9;
+    if k <= 1 {
+        return RHO_MAX;
+    }
+    let ln_k = (k as f64).ln();
+    let g = |rho: f64| (2.0 * m as f64 / rho) * (1.0 + rho.ln()) - ln_k;
+    // g(1) = 2m − ln K > 0 for any sane (K, m); g decreases towards −lnK.
+    if g(1.0) <= 0.0 {
+        return 1.0;
+    }
+    let (mut lo, mut hi) = (1.0f64, 2.0f64);
+    while g(hi) > 0.0 && hi < RHO_MAX {
+        hi *= 2.0;
+    }
+    if hi >= RHO_MAX {
+        return RHO_MAX;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// The Liu–Ling–Stehlé temperature: `α = ln(ρ(K, m)) / min_i r̄ᵢᵢ²`.
+/// `min_rbar_sq` is `min_i (R(i,i)·s(i))²` for the column.
+pub fn alpha_for(k: usize, m: usize, min_rbar_sq: f64) -> f64 {
+    let rho = solve_rho(k, m);
+    let a = rho.ln() / min_rbar_sq.max(1e-30);
+    a.max(0.0)
+}
+
+/// Sample one code from Eq. 13 given center `c`, squared diagonal
+/// `rbar_sq = (R(i,i)·s(i))²`, temperature `alpha`, box `[0, qmax]` and a
+/// uniform `u ∈ [0,1)`. Max-subtracted for stability; exactly reproduces
+/// greedy rounding as `alpha·rbar_sq → ∞`. This scalar is THE contract
+/// shared with the Pallas kernel — both backends implement this formula
+/// with the same cumulative-sum tie-breaking so identical uniforms give
+/// identical codes.
+#[inline]
+pub fn sample_code(c: f32, rbar_sq: f32, alpha: f32, qmax: f32, u: f32) -> f32 {
+    let n = qmax as usize + 1;
+    debug_assert!(n <= 256);
+    // Max exponent is at the clamped nearest integer.
+    let nearest = round_code(c, qmax);
+    let scale = alpha * rbar_sq;
+    // Significance window (§Perf): terms with RELATIVE exponent beyond
+    // EXP_CUTOFF contribute < e^-30 ≈ 1e-13 of the max weight — far below
+    // f32 cumsum resolution — and are treated as exact zeros. The same
+    // constant cuts the tail in the Pallas kernel and the numpy oracle,
+    // which keeps all three implementations decision-identical even where
+    // XLA's flush-to-zero vs libm subnormal handling would diverge.
+    // Window radius: relative exponent scale·(dv² − dn²) ≤ 30 ⇔
+    // |v − c| ≤ sqrt(30/scale + dn²).
+    const EXP_CUTOFF: f32 = 30.0;
+    let dn0 = c - nearest;
+    let (lo, hi) = if scale > 0.0 && scale.is_finite() {
+        let w = (EXP_CUTOFF / scale + dn0 * dn0).sqrt();
+        let lo = ((c - w).max(0.0) as usize).min(n - 1).min(nearest as usize);
+        let hi = (((c + w).ceil().min(qmax).max(0.0)) as usize)
+            .min(n - 1)
+            .max(nearest as usize);
+        (lo, hi)
+    } else {
+        (0, n - 1)
+    };
+    let mut weights = [0.0f32; 256];
+    let mut total = 0.0f32;
+    let dn = c - nearest;
+    for (off, w) in weights[lo..=hi].iter_mut().enumerate() {
+        let dv = c - (lo + off) as f32;
+        // exponent relative to the max term (≥ 0 difference).
+        let ex = -scale * (dv * dv - dn * dn);
+        *w = ex.exp();
+        total += *w;
+    }
+    if !(total > 0.0) || !total.is_finite() {
+        return nearest;
+    }
+    let target = u * total;
+    let mut acc = 0.0f32;
+    for (off, &w) in weights[lo..=hi].iter().enumerate() {
+        acc += w;
+        if target < acc {
+            return (lo + off) as f32;
+        }
+    }
+    hi as f32
+}
+
+/// One Klein-randomized decode of a column (Algorithm 3). `uniforms`
+/// supplies one `[0,1)` value per row, consumed at row `i` — the explicit
+/// form shared with the PPI decoder and the PJRT artifact.
+pub fn decode_sampled_with_uniforms(
+    r: &Matrix,
+    s: &[f32],
+    qbar: &[f32],
+    qmax: f32,
+    alpha: f32,
+    uniforms: &[f32],
+) -> Vec<f32> {
+    let m = r.rows();
+    assert_eq!(uniforms.len(), m);
+    let mut q = vec![0.0f32; m];
+    let mut e = vec![0.0f32; m];
+    for i in (0..m).rev() {
+        let c = center(r, s, qbar, &e, i, m);
+        let rbar = r.get(i, i) * s[i];
+        let qi = sample_code(c, rbar * rbar, alpha, qmax, uniforms[i]);
+        q[i] = qi;
+        e[i] = s[i] * (qbar[i] - qi);
+    }
+    q
+}
+
+/// Convenience wrapper drawing uniforms from an [`Rng`].
+pub fn decode_sampled(
+    r: &Matrix,
+    s: &[f32],
+    qbar: &[f32],
+    qmax: f32,
+    alpha: f32,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let m = r.rows();
+    let uniforms = rng.uniform_vec_f32(m);
+    decode_sampled_with_uniforms(r, s, qbar, qmax, alpha, &uniforms)
+}
+
+/// K-best randomized decoding (Algorithm 4): the greedy Babai point plus
+/// `k` independent Klein traces; returns the minimum-residual candidate
+/// and its residual. Reference implementation — the production hot path
+/// is the tiled [`super::ppi`] decoder.
+pub fn decode_kbest(
+    r: &Matrix,
+    s: &[f32],
+    qbar: &[f32],
+    qmax: f32,
+    k: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, f64) {
+    let m = r.rows();
+    let min_rbar_sq = (0..m)
+        .map(|i| {
+            let v = r.get(i, i) as f64 * s[i] as f64;
+            v * v
+        })
+        .fold(f64::INFINITY, f64::min);
+    let alpha = alpha_for(k.max(1), m, min_rbar_sq) as f32;
+    // Reserved greedy path guarantees the Babai point is in the set.
+    let mut best = decode_greedy(r, s, qbar, qmax);
+    let mut best_res = residual_sq(r, s, qbar, &best);
+    for _ in 0..k {
+        let cand = decode_sampled(r, s, qbar, qmax, alpha, rng);
+        let res = residual_sq(r, s, qbar, &cand);
+        if res < best_res {
+            best_res = res;
+            best = cand;
+        }
+    }
+    (best, best_res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cholesky_upper, syrk_upper};
+
+    fn setup(m: usize, seed: u64) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        // Mildly ill-conditioned Gram so Babai is beatable.
+        let a = Matrix::randn(m + 2, m, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.05);
+        let r = cholesky_upper(&g).unwrap();
+        let s: Vec<f32> = (0..m).map(|_| 0.05 + 0.2 * rng.uniform_f32()).collect();
+        let qbar: Vec<f32> = (0..m).map(|_| 15.0 * rng.uniform_f32()).collect();
+        (r, s, qbar)
+    }
+
+    #[test]
+    fn rho_monotone_decreasing_in_k() {
+        let m = 128;
+        let r5 = solve_rho(5, m);
+        let r10 = solve_rho(10, m);
+        let r50 = solve_rho(50, m);
+        assert!(r5 > r10 && r10 > r50, "{r5} {r10} {r50}");
+        assert!(r50 >= 1.0);
+    }
+
+    #[test]
+    fn rho_satisfies_equation() {
+        let (k, m) = (8usize, 64usize);
+        let rho = solve_rho(k, m);
+        let lhs = (k as f64).ln();
+        let rhs = (2.0 * m as f64 / rho) * (1.0 + rho.ln());
+        assert!((lhs - rhs).abs() < 1e-6, "lhs={lhs} rhs={rhs}");
+    }
+
+    #[test]
+    fn k1_is_effectively_greedy() {
+        // ρ(K=1) clamps to RHO_MAX, so sharpness is maximal and strictly
+        // above any K>1 setting; sampling then matches greedy rounding
+        // except within a vanishing band around half-integers.
+        let a1 = alpha_for(1, 64, 0.01);
+        let a5 = alpha_for(5, 64, 0.01);
+        let a50 = alpha_for(50, 64, 0.01);
+        assert!(a1 > a5 && a5 > a50, "{a1} {a5} {a50}");
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let c = 15.0 * rng.uniform_f32();
+            if (c.fract() - 0.5).abs() < 0.05 {
+                continue; // skip the half-integer rounding boundary band
+            }
+            let v = sample_code(c, 0.01, a1 as f32, 15.0, rng.uniform_f32());
+            assert_eq!(v, round_code(c, 15.0), "c={c}");
+        }
+    }
+
+    #[test]
+    fn sample_code_greedy_limit() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let c = 15.0 * rng.uniform_f32();
+            let u = rng.uniform_f32();
+            let v = sample_code(c, 1.0, 1e9, 15.0, u);
+            assert_eq!(v, round_code(c, 15.0), "c={c} u={u}");
+        }
+    }
+
+    #[test]
+    fn sample_code_distribution_matches_eq13() {
+        // Empirical frequencies vs the analytic distribution at moderate
+        // temperature.
+        let (c, rbar_sq, alpha, qmax) = (6.3f32, 1.0f32, 0.8f32, 15.0f32);
+        let n = qmax as usize + 1;
+        let probs: Vec<f64> = {
+            let w: Vec<f64> = (0..n)
+                .map(|v| (-(alpha * rbar_sq) as f64 * ((c - v as f32) as f64).powi(2)).exp())
+                .collect();
+            let t: f64 = w.iter().sum();
+            w.into_iter().map(|x| x / t).collect()
+        };
+        let mut rng = Rng::new(2);
+        let trials = 60_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            counts[sample_code(c, rbar_sq, alpha, qmax, rng.uniform_f32()) as usize] += 1;
+        }
+        for v in 0..n {
+            let emp = counts[v] as f64 / trials as f64;
+            assert!(
+                (emp - probs[v]).abs() < 0.01,
+                "v={v} emp={emp:.4} analytic={:.4}",
+                probs[v]
+            );
+        }
+    }
+
+    /// Full-range reference sampler (no significance window) — the
+    /// pre-optimization semantics the windowed fast path must preserve.
+    fn sample_code_full(c: f32, rbar_sq: f32, alpha: f32, qmax: f32, u: f32) -> f32 {
+        let n = qmax as usize + 1;
+        let nearest = round_code(c, qmax);
+        let mut weights = [0.0f32; 256];
+        let mut total = 0.0f32;
+        let scale = alpha * rbar_sq;
+        for (v, w) in weights.iter_mut().take(n).enumerate() {
+            let dv = c - v as f32;
+            let dn = c - nearest;
+            *w = (-scale * (dv * dv - dn * dn)).exp();
+            total += *w;
+        }
+        if !(total > 0.0) || !total.is_finite() {
+            return nearest;
+        }
+        let target = u * total;
+        let mut acc = 0.0f32;
+        for (v, &w) in weights.iter().take(n).enumerate() {
+            acc += w;
+            if target < acc {
+                return v as f32;
+            }
+        }
+        qmax
+    }
+
+    /// §Perf regression guard: the significance-window fast path must be
+    /// equivalent to the full enumeration across the whole (c, scale, u)
+    /// envelope — including half-integer centers at high sharpness, the
+    /// case that originally exposed a floor-vs-ceil window bug.
+    #[test]
+    fn windowed_sampler_equals_full_enumeration() {
+        let mut rng = Rng::new(0x5EED5);
+        for _ in 0..100_000 {
+            let c = 18.0 * rng.uniform_f32() - 1.5;
+            let scale = (10.0f32).powf(4.0 * rng.uniform_f32() - 1.0); // 0.1..1e3
+            // Avoid the measure-zero u≈0 / u≈1 boundaries where the
+            // deliberately-dropped e^-30 tail mass can flip the pick.
+            let u = 1e-6 + (1.0 - 2e-6) * rng.uniform_f32();
+            let a = sample_code(c, 1.0, scale, 15.0, u);
+            let b = sample_code_full(c, 1.0, scale, 15.0, u);
+            assert_eq!(a, b, "c={c} scale={scale} u={u}");
+        }
+    }
+
+    #[test]
+    fn sampled_codes_respect_box() {
+        let (r, s, qbar) = setup(32, 3);
+        let mut rng = Rng::new(4);
+        let q = decode_sampled(&r, &s, &qbar, 7.0, 0.5, &mut rng);
+        for &v in &q {
+            assert!((0.0..=7.0).contains(&v) && v.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn kbest_never_worse_than_greedy() {
+        for seed in 0..10 {
+            let (r, s, qbar) = setup(32, 50 + seed);
+            let greedy = decode_greedy(&r, &s, &qbar, 15.0);
+            let greedy_res = residual_sq(&r, &s, &qbar, &greedy);
+            let mut rng = Rng::new(seed);
+            let (_, best_res) = decode_kbest(&r, &s, &qbar, 15.0, 5, &mut rng);
+            assert!(
+                best_res <= greedy_res + 1e-9,
+                "seed={seed} kbest {best_res} vs greedy {greedy_res}"
+            );
+        }
+    }
+
+    #[test]
+    fn kbest_residual_monotone_in_k_on_average() {
+        // Property from the paper's Fig. 2: more candidates => better
+        // residual (on average; individual seeds share the greedy floor).
+        let mut tot1 = 0.0;
+        let mut tot5 = 0.0;
+        let mut tot25 = 0.0;
+        for seed in 0..12 {
+            let (r, s, qbar) = setup(48, 200 + seed);
+            let mut rng1 = Rng::new(seed);
+            let mut rng5 = Rng::new(seed);
+            let mut rng25 = Rng::new(seed);
+            tot1 += decode_kbest(&r, &s, &qbar, 15.0, 1, &mut rng1).1;
+            tot5 += decode_kbest(&r, &s, &qbar, 15.0, 5, &mut rng5).1;
+            tot25 += decode_kbest(&r, &s, &qbar, 15.0, 25, &mut rng25).1;
+        }
+        assert!(tot5 <= tot1 + 1e-9, "K=5 {tot5} should beat K=1 {tot1}");
+        assert!(tot25 <= tot5 + 1e-9, "K=25 {tot25} should beat K=5 {tot5}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (r, s, qbar) = setup(24, 9);
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let qa = decode_kbest(&r, &s, &qbar, 15.0, 5, &mut a);
+        let qb = decode_kbest(&r, &s, &qbar, 15.0, 5, &mut b);
+        assert_eq!(qa.0, qb.0);
+        assert_eq!(qa.1, qb.1);
+    }
+}

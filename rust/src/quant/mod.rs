@@ -1,0 +1,331 @@
+//! Quantization solver library — the paper's contribution plus every
+//! baseline it compares against, implemented from scratch on the same
+//! substrate so comparisons are apples-to-apples.
+//!
+//! Solvers (paper Table 1 rows):
+//! * [`rtn`] — round-to-nearest (naive baseline).
+//! * [`gptq`] — compensation-based sequential solver (Frantar et al.),
+//!   with optional activation ordering.
+//! * [`awq`] — activation-aware weight scaling + RTN (Lin et al.).
+//! * [`quip`] — incoherence processing via random orthogonal rotations +
+//!   LDLQ-style greedy decoding (Chee et al.).
+//! * [`babai`] — box-constrained Babai nearest-plane decoding = "Ours(N)".
+//! * [`klein`] — Klein-randomized Babai with K-best selection = "Ours(R)".
+//! * [`ojbkq`] — Random-K Babai/Klein under the JTA objective = "Ours".
+//!
+//! Shared plumbing: [`scales`] (group-wise scale/zero calibration),
+//! [`qtensor`] (packed integer weight storage), [`jta`] (the Joint Target
+//! Alignment objective, Eq. 6–8), [`ppi`] (the Parallel Path-Isolated
+//! K-best decoder of Appendix A — the performance-critical hot path,
+//! mirrored by the Pallas kernel at `python/compile/kernels/`).
+
+pub mod awq;
+pub mod babai;
+pub mod gptq;
+pub mod jta;
+pub mod klein;
+pub mod ojbkq;
+pub mod ppi;
+pub mod qgemm;
+pub mod qtensor;
+pub mod quip;
+pub mod rtn;
+pub mod scales;
+pub mod sphere;
+
+pub use qtensor::QuantizedLinear;
+pub use scales::GroupScales;
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Which solver quantizes a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// FP reference (no quantization) — the BF16 row of the tables.
+    Fp,
+    /// Round-to-nearest.
+    Rtn,
+    /// GPTQ-style error compensation.
+    Gptq,
+    /// AWQ-style activation-aware scaling.
+    Awq,
+    /// QuIP-style incoherence rotation + greedy decode.
+    Quip,
+    /// Ours(N): box-constrained Babai nearest-plane.
+    BabaiNaive,
+    /// Ours(R): Random-K Babai/Klein, runtime-consistent objective.
+    KleinRandomK,
+    /// Ours: Random-K Babai/Klein + JTA objective.
+    Ojbkq,
+    /// QEP-style corrective patch (Arai & Ichikawa 2025): the paper's
+    /// Eq. 4 corner of JTA — runtime activations, full-precision
+    /// reference (μ=0, λ=0) — with Random-K decoding.
+    Qep,
+}
+
+impl Method {
+    /// All methods in the paper's table order.
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Rtn,
+            Method::Gptq,
+            Method::Awq,
+            Method::Quip,
+            Method::BabaiNaive,
+            Method::KleinRandomK,
+            Method::Ojbkq,
+        ]
+    }
+
+    /// Paper label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp => "BF16",
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::Awq => "AWQ",
+            Method::Quip => "QUIP",
+            Method::BabaiNaive => "Ours(N)",
+            Method::KleinRandomK => "Ours(R)",
+            Method::Ojbkq => "Ours",
+            Method::Qep => "QEP",
+        }
+    }
+
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fp" | "bf16" | "fp32" => Method::Fp,
+            "rtn" => Method::Rtn,
+            "gptq" => Method::Gptq,
+            "awq" => Method::Awq,
+            "quip" => Method::Quip,
+            "babai" | "ours-n" | "ours(n)" => Method::BabaiNaive,
+            "klein" | "ours-r" | "ours(r)" => Method::KleinRandomK,
+            "ojbkq" | "ours" => Method::Ojbkq,
+            "qep" => Method::Qep,
+            _ => return None,
+        })
+    }
+}
+
+/// Which backend executes the K-path decode hot loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Hand-optimized Rust ([`ppi`]).
+    Native,
+    /// AOT-compiled Pallas kernel through PJRT ([`crate::runtime`]).
+    Pjrt,
+}
+
+/// Layer-wise μ scheduling — the paper's Limitations section names
+/// per-layer adaptive (μ, λ) as future work; [`MuSchedule::DepthLinear`]
+/// implements the natural first instance: interpolate μ with network
+/// depth (early layers see little activation drift so the target choice
+/// barely matters; deep layers accumulate drift and benefit from leaning
+/// on the runtime-consistent reference). Ablated in
+/// `rust/benches/ablation_design.rs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MuSchedule {
+    /// Use `QuantConfig::mu` for every layer.
+    Fixed,
+    /// μ(depth) = start + (end − start) · block/(n_blocks−1).
+    DepthLinear { start: f64, end: f64 },
+}
+
+/// How the JTA `λ` is interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LambdaMode {
+    /// `λ_abs² = λ² · mean(diag(X̃ᵀX̃))` — scale-free, default. The paper
+    /// sweeps λ ∈ [0.1, 0.8] against LLM activations; relative mode keeps
+    /// that range meaningful on our synthetic substrate.
+    Relative,
+    /// Use λ as given.
+    Absolute,
+}
+
+/// Full quantization configuration (paper defaults: Table 1 setup).
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Weight bit-width (paper: 3 or 4).
+    pub wbit: u8,
+    /// Rows per scale group; 0 = one group per column (paper "g=0").
+    pub group_size: usize,
+    /// Number of Klein-randomized paths K (paper default 5); the greedy
+    /// Babai path is always reserved in addition.
+    pub k: usize,
+    /// JTA interpolation knob μ ∈ [0,1] (Eq. 6).
+    pub mu: f64,
+    /// Optional per-layer μ schedule (overrides `mu` when not Fixed).
+    pub mu_schedule: MuSchedule,
+    /// JTA weight-drift regularizer λ (Eq. 7).
+    pub lambda: f64,
+    /// Interpretation of λ.
+    pub lambda_mode: LambdaMode,
+    /// GPTQ activation ordering (paper enables it for the baseline).
+    pub act_order: bool,
+    /// Decode backend for the OJBKQ family.
+    pub backend: Backend,
+    /// Column tile width fed to the PPI decoder / PJRT artifact.
+    pub ntile: usize,
+    /// PPI look-ahead block size B (Appendix A, Algorithm 2).
+    pub block: usize,
+    /// Base RNG seed (forked per layer/column for determinism under
+    /// parallel execution).
+    pub seed: u64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            wbit: 4,
+            group_size: 128,
+            k: 5,
+            // Paper: (μ=0.1, λ=0.2) for 4-bit, (0.6, 0.6) for 3-bit.
+            mu: 0.1,
+            mu_schedule: MuSchedule::Fixed,
+            lambda: 0.2,
+            lambda_mode: LambdaMode::Relative,
+            act_order: true,
+            backend: Backend::Native,
+            ntile: 64,
+            block: 16,
+            seed: 0xBABA1,
+        }
+    }
+}
+
+impl QuantConfig {
+    /// Paper defaults per bit-width (§4 Ablations).
+    pub fn paper_defaults(wbit: u8, group_size: usize) -> QuantConfig {
+        let (mu, lambda) = if wbit <= 3 { (0.6, 0.6) } else { (0.1, 0.2) };
+        QuantConfig { wbit, group_size, mu, lambda, ..QuantConfig::default() }
+    }
+
+    /// Max integer code value `2^wbit - 1`.
+    pub fn box_max(&self) -> u8 {
+        (1u16 << self.wbit).saturating_sub(1).min(255) as u8
+    }
+
+    /// Effective group size for an `m`-row weight (0 → whole column).
+    pub fn effective_group(&self, m: usize) -> usize {
+        if self.group_size == 0 || self.group_size > m {
+            m
+        } else {
+            self.group_size
+        }
+    }
+}
+
+/// Per-layer quantization diagnostics, used by Figure-1-style reporting
+/// and the coordinator's metrics stream.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    /// `||X̃·Ŵ − Y*(μ)||_F` — the JTA reconstruction error (Fig. 1).
+    pub jta_err: f64,
+    /// `||X̃·Ŵ − X̃·W||_F` — runtime-consistent proxy error (Eq. 1).
+    pub rt_err: f64,
+    /// `||X·W||_F` — the original output norm (Fig. 1 reference line).
+    pub out_norm: f64,
+    /// Wall-clock seconds spent in the solver.
+    pub solve_secs: f64,
+}
+
+/// Uniform entry point: quantize one linear layer.
+///
+/// * `w` — full-precision weight, `m×n` (inputs × outputs, `y = xW`).
+/// * `x_fp` — full-precision calibration activations, `p×m`.
+/// * `x_rt` — runtime activations from the partially-quantized prefix.
+///
+/// Returns the quantized layer and diagnostics. Deterministic given
+/// `cfg.seed` and a `layer_id` (used to fork RNG streams).
+pub fn quantize_layer(
+    method: Method,
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    layer_id: u64,
+    rt: Option<&crate::runtime::SolverRuntime>,
+) -> anyhow::Result<(QuantizedLinear, LayerStats)> {
+    assert_eq!(x_fp.cols(), w.rows(), "activation/weight shape mismatch");
+    assert_eq!(x_rt.cols(), w.rows(), "runtime activation/weight shape mismatch");
+    let mut rng = Rng::new(cfg.seed).fork(layer_id);
+    let t0 = std::time::Instant::now();
+    let q = match method {
+        Method::Fp => QuantizedLinear::identity(w),
+        Method::Rtn => rtn::quantize(w, cfg),
+        Method::Gptq => gptq::quantize(w, x_rt, cfg)?,
+        Method::Awq => awq::quantize(w, x_rt, cfg),
+        Method::Quip => quip::quantize(w, x_rt, cfg, &mut rng)?,
+        Method::BabaiNaive => ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_naive(cfg), &mut rng, rt)?,
+        Method::KleinRandomK => {
+            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_random_k(cfg), &mut rng, rt)?
+        }
+        Method::Ojbkq => ojbkq::quantize(w, x_fp, x_rt, cfg, &mut rng, rt)?,
+        Method::Qep => {
+            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_qep(cfg), &mut rng, rt)?
+        }
+    };
+    let solve_secs = t0.elapsed().as_secs_f64();
+    let stats = layer_stats(&q, w, x_fp, x_rt, cfg, solve_secs);
+    Ok((q, stats))
+}
+
+/// Compute diagnostics for a quantized layer.
+pub fn layer_stats(
+    q: &QuantizedLinear,
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    solve_secs: f64,
+) -> LayerStats {
+    use crate::linalg::matmul;
+    let w_hat = q.dequantize();
+    let y_fp = matmul(x_fp, w);
+    let y_rt = matmul(x_rt, w);
+    let y_hat = matmul(x_rt, &w_hat);
+    let y_star = jta::interp_target(&y_fp, &y_rt, cfg.mu as f32);
+    LayerStats {
+        jta_err: y_hat.sub(&y_star).frob(),
+        rt_err: y_hat.sub(&y_rt).frob(),
+        out_norm: y_fp.frob(),
+        solve_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(&m.label().to_ascii_lowercase()), Some(m), "{m:?}");
+        }
+        assert_eq!(Method::parse("nope"), None);
+        assert_eq!(Method::parse("ours"), Some(Method::Ojbkq));
+    }
+
+    #[test]
+    fn config_box_max_and_groups() {
+        let c3 = QuantConfig { wbit: 3, ..Default::default() };
+        assert_eq!(c3.box_max(), 7);
+        let c4 = QuantConfig { wbit: 4, ..Default::default() };
+        assert_eq!(c4.box_max(), 15);
+        let g0 = QuantConfig { group_size: 0, ..Default::default() };
+        assert_eq!(g0.effective_group(300), 300);
+        assert_eq!(c4.effective_group(300), 128);
+        assert_eq!(c4.effective_group(64), 64);
+    }
+
+    #[test]
+    fn paper_defaults_per_bitwidth() {
+        let c3 = QuantConfig::paper_defaults(3, 128);
+        assert_eq!((c3.mu, c3.lambda), (0.6, 0.6));
+        let c4 = QuantConfig::paper_defaults(4, 128);
+        assert_eq!((c4.mu, c4.lambda), (0.1, 0.2));
+    }
+}

@@ -1,0 +1,283 @@
+//! The OJBKQ layer solver — end-to-end per-layer quantization
+//! (paper Algorithms 1, 3, 4 + Appendix A), orchestrating:
+//!
+//! 1. scale/zero calibration (§3.2),
+//! 2. the JTA normal-equation system `G = X̃ᵀX̃+λ²I`, `B = X̃ᵀY*+λ²W`,
+//! 3. Cholesky `G = RᵀR` (jittered if near-singular) — *no inverse*,
+//! 4. the real-valued solution `Ŵ_real` via triangular solves and its
+//!    code-space image `Q̄ = Ŵ_real ⊘ S + Z`,
+//! 5. tiled Random-K Babai/Klein decoding (native PPI or the AOT Pallas
+//!    artifact via PJRT), selecting the minimum-residual candidate.
+//!
+//! The paper's three reported variants are configuration points:
+//! * **Ours(N)** — [`variant_naive`]: K=0 (greedy only), μ=1, λ=0.
+//! * **Ours(R)** — [`variant_random_k`]: K>0, μ=1, λ=0.
+//! * **Ours** — the given `(K, μ, λ)` (paper defaults per bit-width).
+
+use super::klein::alpha_for;
+use super::ppi::{decode_tile, PpiInput};
+use super::scales::{self};
+use super::{jta, Backend, QuantConfig, QuantizedLinear};
+use crate::linalg::cholesky_upper_jittered;
+use crate::rng::Rng;
+use crate::runtime::SolverRuntime;
+use crate::tensor::Matrix;
+
+/// Ours(N): deterministic box-constrained Babai under the
+/// runtime-consistent objective (Eq. 1).
+pub fn variant_naive(cfg: &QuantConfig) -> QuantConfig {
+    QuantConfig { k: 0, mu: 1.0, lambda: 0.0, ..cfg.clone() }
+}
+
+/// Ours(R): Random-K Babai/Klein under the runtime-consistent objective.
+pub fn variant_random_k(cfg: &QuantConfig) -> QuantConfig {
+    QuantConfig { mu: 1.0, lambda: 0.0, ..cfg.clone() }
+}
+
+/// QEP corner (Eq. 4): runtime activations, full-precision reference.
+pub fn variant_qep(cfg: &QuantConfig) -> QuantConfig {
+    QuantConfig { mu: 0.0, lambda: 0.0, ..cfg.clone() }
+}
+
+/// Quantize one layer with OJBKQ. `rng` must already be forked per layer;
+/// column tiles fork sub-streams so results are independent of tile
+/// iteration order. `rt` supplies the PJRT backend when
+/// `cfg.backend == Backend::Pjrt`.
+pub fn quantize(
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+    rt: Option<&SolverRuntime>,
+) -> anyhow::Result<QuantizedLinear> {
+    let (m, n) = w.shape();
+    // 2–3. JTA system + Cholesky (Algorithm 1 line 2).
+    let sys = jta::build_system(w, x_fp, x_rt, cfg);
+    // Decode ordering: Babai decides row m−1 first (uncompensated), so we
+    // sort rows by ASCENDING Gram diagonal — the highest-curvature
+    // feature is decided first, exactly GPTQ's act_order under the
+    // Babai/GPTQ order reversal (Chen et al. 2025). The paper lists
+    // weight permutation as future work; we enable it behind the same
+    // `act_order` flag as the GPTQ baseline for a like-for-like
+    // comparison (ablate with act_order=false). Scales are computed on
+    // the permuted weight (group boundaries follow decode order, exactly
+    // like the GPTQ reference's default) and the dequantized effective
+    // weight is un-permuted at the end.
+    let perm: Vec<usize> = if cfg.act_order {
+        let mut idx: Vec<usize> = (0..m).collect();
+        idx.sort_by(|&a, &b| {
+            sys.gram
+                .get(a, a)
+                .partial_cmp(&sys.gram.get(b, b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    } else {
+        (0..m).collect()
+    };
+    let permuted = cfg.act_order;
+    let gram_p = if permuted {
+        Matrix::from_fn(m, m, |i, j| sys.gram.get(perm[i], perm[j]))
+    } else {
+        sys.gram.clone()
+    };
+    let rhs_p = if permuted { sys.rhs.permute_rows(&perm) } else { sys.rhs.clone() };
+    let w_p = if permuted { w.permute_rows(&perm) } else { w.clone() };
+    // 1. Scales/zeros (Algorithm 1 line 1) — in decode order.
+    let sc = scales::compute(&w_p, cfg);
+    let (r, _jitter) = cholesky_upper_jittered(&gram_p, 1e-6)
+        .map_err(|e| anyhow::anyhow!("gram cholesky failed: {e}"))?;
+    // 4. Real-valued solution and its code-space center (lines 3–4).
+    let w_real = jta::solve_real(&r, &rhs_p);
+    let mut qbar = Matrix::zeros(m, n);
+    for i in 0..m {
+        let g = sc.group_of(i);
+        for j in 0..n {
+            let s = sc.scales.get(g, j);
+            let z = sc.zeros.get(g, j);
+            qbar.set(i, j, w_real.get(i, j) / s + z);
+        }
+    }
+    // 5. Tiled Random-K decode.
+    let qmax = cfg.box_max() as f32;
+    let ntile = cfg.ntile.max(1).min(n);
+    let mut codes = vec![0u8; m * n];
+    let mut tile_idx = 0u64;
+    let mut c0 = 0usize;
+    while c0 < n {
+        let width = ntile.min(n - c0);
+        let s_tile = sc.scale_tile(c0, width);
+        let qbar_tile = qbar.block(0, c0, m, width);
+        // Per-column Klein temperature from the lattice geometry.
+        let alpha: Vec<f32> = (0..width)
+            .map(|j| {
+                if cfg.k == 0 {
+                    return 1.0;
+                }
+                let min_rbar_sq = (0..m)
+                    .map(|i| {
+                        let v = r.get(i, i) as f64 * s_tile.get(i, j) as f64;
+                        v * v
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                alpha_for(cfg.k, m, min_rbar_sq) as f32
+            })
+            .collect();
+        let mut trng = rng.fork(tile_idx);
+        let uniforms = trng.uniform_vec_f32((cfg.k + 1) * m * width);
+        let q_tile = match cfg.backend {
+            Backend::Native => {
+                let out = decode_tile(&PpiInput {
+                    r: &r,
+                    s: &s_tile,
+                    qbar: &qbar_tile,
+                    qmax,
+                    k: cfg.k,
+                    block: cfg.block,
+                    alpha: &alpha,
+                    uniforms: &uniforms,
+                });
+                out.q
+            }
+            Backend::Pjrt => {
+                let rt = rt.ok_or_else(|| {
+                    anyhow::anyhow!("PJRT backend requested but no SolverRuntime provided")
+                })?;
+                rt.decode_tile(&r, &s_tile, &qbar_tile, qmax, cfg.k, &alpha, &uniforms)?
+            }
+        };
+        for i in 0..m {
+            for j in 0..width {
+                codes[i * n + c0 + j] = q_tile.get(i, j) as u8;
+            }
+        }
+        c0 += width;
+        tile_idx += 1;
+    }
+    let mut q = QuantizedLinear::new(codes, sc, cfg.wbit, m, n);
+    if permuted {
+        // Codes/scales live in decode order; expose the runtime weight in
+        // the original feature order via the effective matrix.
+        let inv = crate::tensor::invert_perm(&perm);
+        let w_hat = q.dequantize().permute_rows(&inv);
+        q.effective = Some(w_hat);
+    }
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::quant::rtn;
+
+    fn layer(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(m, n, 0.5, &mut rng);
+        let x_fp = Matrix::randn(p, m, 1.0, &mut rng);
+        let noise = Matrix::randn(p, m, 0.05, &mut rng);
+        let x_rt = x_fp.add(&noise);
+        (w, x_fp, x_rt)
+    }
+
+    fn rt_err(w_hat: &Matrix, w: &Matrix, x_rt: &Matrix) -> f64 {
+        matmul(x_rt, w_hat).sub(&matmul(x_rt, w)).frob()
+    }
+
+    #[test]
+    fn ojbkq_beats_rtn_on_runtime_error() {
+        let (w, x_fp, x_rt) = layer(48, 32, 96, 1);
+        let cfg = QuantConfig { wbit: 3, group_size: 0, k: 5, ntile: 16, ..Default::default() };
+        let mut rng = Rng::new(2);
+        let q = quantize(&w, &x_fp, &x_rt, &variant_random_k(&cfg), &mut rng, None).unwrap();
+        let q_rtn = rtn::quantize(&w, &cfg);
+        let e_ours = rt_err(&q.dequantize(), &w, &x_rt);
+        let e_rtn = rt_err(&q_rtn.dequantize(), &w, &x_rt);
+        assert!(e_ours < e_rtn, "ours {e_ours} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn random_k_no_worse_than_naive() {
+        let mut worse = 0;
+        for seed in 0..5 {
+            let (w, x_fp, x_rt) = layer(32, 24, 64, 10 + seed);
+            let cfg =
+                QuantConfig { wbit: 3, group_size: 16, k: 8, ntile: 8, ..Default::default() };
+            let mut rng_a = Rng::new(seed);
+            let mut rng_b = Rng::new(seed);
+            let qn =
+                quantize(&w, &x_fp, &x_rt, &variant_naive(&cfg), &mut rng_a, None).unwrap();
+            let qr =
+                quantize(&w, &x_fp, &x_rt, &variant_random_k(&cfg), &mut rng_b, None).unwrap();
+            let en = rt_err(&qn.dequantize(), &w, &x_rt);
+            let er = rt_err(&qr.dequantize(), &w, &x_rt);
+            if er > en * 1.001 {
+                worse += 1;
+            }
+        }
+        // The greedy path is reserved inside Random-K, so in the *lattice
+        // metric* it never loses; in output MSE it can only lose via the
+        // (tiny) metric mismatch. Allow at most one seed of noise.
+        assert!(worse <= 1, "random-K lost on {worse}/5 seeds");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_tiling() {
+        let (w, x_fp, x_rt) = layer(24, 20, 48, 3);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, k: 3, ntile: 7, ..Default::default() };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let qa = quantize(&w, &x_fp, &x_rt, &cfg, &mut a, None).unwrap();
+        let qb = quantize(&w, &x_fp, &x_rt, &cfg, &mut b, None).unwrap();
+        assert_eq!(qa.codes, qb.codes);
+    }
+
+    #[test]
+    fn identical_activations_make_mu_irrelevant() {
+        // With X̃ == X, Y*(μ) is the same for every μ; codes must agree.
+        let (w, x_fp, _) = layer(16, 12, 32, 4);
+        let mk = |mu: f64| {
+            let cfg = QuantConfig {
+                wbit: 4,
+                group_size: 0,
+                k: 0,
+                mu,
+                lambda: 0.0,
+                ntile: 12,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(5);
+            quantize(&w, &x_fp, &x_fp, &cfg, &mut rng, None).unwrap().codes
+        };
+        assert_eq!(mk(0.0), mk(1.0));
+    }
+
+    #[test]
+    fn codes_respect_box_for_3bit() {
+        let (w, x_fp, x_rt) = layer(20, 10, 40, 6);
+        let cfg = QuantConfig { wbit: 3, group_size: 0, k: 4, ..Default::default() };
+        let mut rng = Rng::new(7);
+        let q = quantize(&w, &x_fp, &x_rt, &cfg, &mut rng, None).unwrap();
+        assert!(q.codes.iter().all(|&c| c <= 7));
+    }
+
+    #[test]
+    fn tile_width_does_not_change_greedy_result() {
+        // Greedy decode consumes no randomness, so tiling is pure
+        // bookkeeping and must not alter codes.
+        let (w, x_fp, x_rt) = layer(24, 30, 48, 8);
+        let mk = |ntile: usize| {
+            let cfg = QuantConfig {
+                wbit: 4,
+                group_size: 8,
+                ntile,
+                ..variant_naive(&QuantConfig::default())
+            };
+            let mut rng = Rng::new(1);
+            quantize(&w, &x_fp, &x_rt, &cfg, &mut rng, None).unwrap().codes
+        };
+        assert_eq!(mk(5), mk(30));
+        assert_eq!(mk(64), mk(30));
+    }
+}

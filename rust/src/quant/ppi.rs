@@ -1,0 +1,421 @@
+//! Parallel Path-Isolated K-best Babai decoding (**PPI-KBabai**, paper
+//! Appendix A, Algorithm 2) — the performance-critical native hot path,
+//! mirrored 1:1 by the Pallas kernel in
+//! `python/compile/kernels/babai_klein.py`.
+//!
+//! Works on a *column tile* of the layer: all columns share the Cholesky
+//! factor `R`; per-column scales enter element-wise. Each of the K+1
+//! decoding paths (path 0 reserved greedy) owns an isolated error buffer
+//! `E_p = S ⊙ (Q̄ − Q_p)` — the paper's fix for cross-path interference —
+//! and rows are processed high→low in blocks of `B` with the accumulated
+//! look-ahead update `ADJ = R[J, F] · E[F]` done as one GEMM per block
+//! instead of m rank-1 updates.
+//!
+//! Consumes explicit `uniforms` (path-major `(K+1) × m × ntile`) so the
+//! native and PJRT backends are fed identical randomness and can be
+//! compared exactly.
+
+use super::klein::sample_code;
+use super::rtn::round_code;
+use crate::linalg::gemm;
+use crate::tensor::Matrix;
+
+/// Input to one tile decode.
+pub struct PpiInput<'a> {
+    /// Shared `m×m` upper-triangular Cholesky factor.
+    pub r: &'a Matrix,
+    /// Per-(row, column) scales, `m×ntile`.
+    pub s: &'a Matrix,
+    /// Real-valued LS solution in code space, `m×ntile`.
+    pub qbar: &'a Matrix,
+    /// Box upper bound `2^b − 1`.
+    pub qmax: f32,
+    /// Number of *sampled* paths (greedy path 0 is additional).
+    pub k: usize,
+    /// Look-ahead block size `B`.
+    pub block: usize,
+    /// Per-column Klein temperature α (length ntile).
+    pub alpha: &'a [f32],
+    /// Uniform randomness, length `(k+1)·m·ntile`, layout `[path][row][col]`.
+    /// Path 0's values are ignored (greedy).
+    pub uniforms: &'a [f32],
+}
+
+/// Result of one tile decode.
+pub struct PpiOutput {
+    /// Best codes per column, `m×ntile`.
+    pub q: Matrix,
+    /// Winning residual `||R·(s⊙(q−q̄))||²` per column.
+    pub resid: Vec<f64>,
+    /// Residuals of every path, `(k+1)×ntile` (Fig. 1 diagnostics).
+    pub path_resids: Matrix,
+    /// Index of the winning path per column (0 = greedy Babai).
+    pub winner: Vec<usize>,
+}
+
+/// Decode one column tile. Paths run in parallel (they are isolated by
+/// construction); each path's inner loop is the blocked Algorithm 2.
+pub fn decode_tile(inp: &PpiInput) -> PpiOutput {
+    let m = inp.r.rows();
+    let ntile = inp.qbar.cols();
+    assert_eq!(inp.r.cols(), m);
+    assert_eq!(inp.s.shape(), (m, ntile));
+    assert_eq!(inp.alpha.len(), ntile);
+    let paths = inp.k + 1;
+    assert_eq!(inp.uniforms.len(), paths * m * ntile, "uniform buffer size");
+
+    // Decode all paths jointly: buffers are (m × paths·ntile) with path p
+    // occupying columns [p·ntile, (p+1)·ntile) — still strictly
+    // path-isolated (no cross-path reads), but the Algorithm-2 look-ahead
+    // update becomes ONE wide GEMM per block ("propagate error to all K
+    // paths simultaneously using matrix multiplication"), which is both
+    // the paper's formulation and ~1.3× faster than per-path GEMMs.
+    let (q_wide, e_wide) = decode_paths_fused(inp, paths);
+
+    // Residuals for every path in one wide GEMM: RE = R · E_wide, then
+    // column sums of squares.
+    let wide = paths * ntile;
+    let mut re = Matrix::zeros(m, wide);
+    gemm(1.0, inp.r, &e_wide, 0.0, &mut re);
+    let mut path_resids = Matrix::zeros(paths, ntile);
+    let mut acc = vec![0.0f64; wide];
+    for i in 0..m {
+        let row = re.row(i);
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64 * v as f64;
+        }
+    }
+    for p in 0..paths {
+        for j in 0..ntile {
+            path_resids.set(p, j, acc[p * ntile + j] as f32);
+        }
+    }
+
+    // Select the winner per column (Algorithm 4's argmin).
+    let mut q = Matrix::zeros(m, ntile);
+    let mut resid = vec![0.0f64; ntile];
+    let mut winner = vec![0usize; ntile];
+    for j in 0..ntile {
+        let mut best_p = 0usize;
+        for p in 1..paths {
+            if path_resids.get(p, j) < path_resids.get(best_p, j) {
+                best_p = p;
+            }
+        }
+        winner[j] = best_p;
+        resid[j] = path_resids.get(best_p, j) as f64;
+        for i in 0..m {
+            q.set(i, j, q_wide.get(i, best_p * ntile + j));
+        }
+    }
+    PpiOutput { q, resid, path_resids, winner }
+}
+
+/// Fused blocked back-substitution over all paths at once. Buffers are
+/// `(m × paths·ntile)`; returns the wide `(Q, E)` pair.
+fn decode_paths_fused(inp: &PpiInput, paths: usize) -> (Matrix, Matrix) {
+    let m = inp.r.rows();
+    let ntile = inp.qbar.cols();
+    let wide = paths * ntile;
+    let b = inp.block.max(1);
+    let mut q = Matrix::zeros(m, wide);
+    let mut e = Matrix::zeros(m, wide);
+    let mut j_hi = m;
+    while j_hi > 0 {
+        let j_lo = j_hi.saturating_sub(b);
+        let blk = j_hi - j_lo;
+        // 1. Global vectorized look-ahead for ALL paths in one GEMM:
+        //    ADJ = R[J, F] · E[F, :]  (B × paths·ntile).
+        let mut adj = Matrix::zeros(blk, wide);
+        if j_hi < m {
+            let r_panel = inp.r.block(j_lo, j_hi, blk, m - j_hi);
+            let e_panel = e.block(j_hi, 0, m - j_hi, wide);
+            gemm(1.0, &r_panel, &e_panel, 0.0, &mut adj);
+        }
+        // 2. Local sequential sweep inside the block.
+        for i in (j_lo..j_hi).rev() {
+            let rii = inp.r.get(i, i);
+            let mut local = vec![0.0f32; wide];
+            for l in i + 1..j_hi {
+                let ril = inp.r.get(i, l);
+                if ril == 0.0 {
+                    continue;
+                }
+                let el = e.row(l);
+                for (acc, &ev) in local.iter_mut().zip(el) {
+                    *acc += ril * ev;
+                }
+            }
+            let adj_row: Vec<f32> = adj.row(i - j_lo).to_vec();
+            let qbar_row = inp.qbar.row(i);
+            let s_row = inp.s.row(i);
+            let q_row = q.row_mut(i);
+            for p in 0..paths {
+                let greedy = p == 0;
+                for j in 0..ntile {
+                    let col = p * ntile + j;
+                    let s_ij = s_row[j];
+                    let c = qbar_row[j] + (adj_row[col] + local[col]) / (rii * s_ij);
+                    let code = if greedy {
+                        round_code(c, inp.qmax)
+                    } else {
+                        let rbar = rii * s_ij;
+                        let u = inp.uniforms[(p * m + i) * ntile + j];
+                        sample_code(c, rbar * rbar, inp.alpha[j], inp.qmax, u)
+                    };
+                    q_row[col] = code;
+                }
+            }
+            // Error row: E = S ⊙ (Q̄ − Q), replicated across paths.
+            let e_row = e.row_mut(i);
+            for p in 0..paths {
+                for j in 0..ntile {
+                    let col = p * ntile + j;
+                    e_row[col] = s_row[j] * (qbar_row[j] - q_row[col]);
+                }
+            }
+        }
+        j_hi = j_lo;
+    }
+    (q, e)
+}
+
+/// Blocked back-substitution for one path (reference form kept for the
+/// path-parallel configuration and documentation; the fused variant above
+/// is the default hot path).
+#[allow(dead_code)]
+fn decode_one_path(inp: &PpiInput, p: usize) -> (Matrix, Matrix) {
+    let m = inp.r.rows();
+    let ntile = inp.qbar.cols();
+    let b = inp.block.max(1);
+    let greedy = p == 0;
+    let mut q = Matrix::zeros(m, ntile);
+    let mut e = Matrix::zeros(m, ntile); // weight-space error, filled high→low
+    // adj[i][j] accumulates Σ_{l ≥ block end} R(i,l)·E(l,j) for the rows of
+    // the *current* block only — recomputed per block via GEMM.
+    let mut j_hi = m;
+    while j_hi > 0 {
+        let j_lo = j_hi.saturating_sub(b);
+        let blk = j_hi - j_lo;
+        // 1. Global vectorized look-ahead: ADJ = R[J, F] · E[F, :] where
+        //    F = [j_hi, m) are the already-processed rows.
+        let mut adj = Matrix::zeros(blk, ntile);
+        if j_hi < m {
+            let r_panel = inp.r.block(j_lo, j_hi, blk, m - j_hi);
+            let e_panel = e.block(j_hi, 0, m - j_hi, ntile);
+            gemm(1.0, &r_panel, &e_panel, 0.0, &mut adj);
+        }
+        // 2. Local sequential sweep inside the block (rows couple through
+        //    rows of the same block, so this part is inherently ordered).
+        for i in (j_lo..j_hi).rev() {
+            let rii = inp.r.get(i, i);
+            // local contributions from rows (i, j_hi) within the block
+            let mut local = vec![0.0f32; ntile];
+            for l in i + 1..j_hi {
+                let ril = inp.r.get(i, l);
+                if ril == 0.0 {
+                    continue;
+                }
+                let el = e.row(l);
+                for (acc, &ev) in local.iter_mut().zip(el) {
+                    *acc += ril * ev;
+                }
+            }
+            let adj_row = adj.row(i - j_lo);
+            for j in 0..ntile {
+                let s_ij = inp.s.get(i, j);
+                let c = inp.qbar.get(i, j) + (adj_row[j] + local[j]) / (rii * s_ij);
+                let code = if greedy {
+                    round_code(c, inp.qmax)
+                } else {
+                    let rbar = rii * s_ij;
+                    let u = inp.uniforms[(p * m + i) * ntile + j];
+                    sample_code(c, rbar * rbar, inp.alpha[j], inp.qmax, u)
+                };
+                q.set(i, j, code);
+                e.set(i, j, s_ij * (inp.qbar.get(i, j) - code));
+            }
+        }
+        j_hi = j_lo;
+    }
+    (q, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cholesky_upper, syrk_upper};
+    use crate::quant::babai::{decode_greedy, residual_sq};
+    use crate::quant::klein::{alpha_for, decode_sampled_with_uniforms};
+    use crate::rng::Rng;
+
+    struct Fixture {
+        r: Matrix,
+        s: Matrix,
+        qbar: Matrix,
+        alpha: Vec<f32>,
+    }
+
+    fn fixture(m: usize, ntile: usize, seed: u64) -> Fixture {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::randn(m + 4, m, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.05);
+        let r = cholesky_upper(&g).unwrap();
+        let s = Matrix::from_fn(m, ntile, |_, _| 0.05 + 0.2 * rng.uniform_f32());
+        let qbar = Matrix::from_fn(m, ntile, |_, _| 15.0 * rng.uniform_f32());
+        let alpha: Vec<f32> = (0..ntile)
+            .map(|j| {
+                let min_rbar_sq = (0..m)
+                    .map(|i| {
+                        let v = r.get(i, i) as f64 * s.get(i, j) as f64;
+                        v * v
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                alpha_for(5, m, min_rbar_sq) as f32
+            })
+            .collect();
+        Fixture { r, s, qbar, alpha }
+    }
+
+    fn uniforms(k: usize, m: usize, ntile: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).uniform_vec_f32((k + 1) * m * ntile)
+    }
+
+    #[test]
+    fn greedy_path_matches_reference_babai_exactly() {
+        for &block in &[1usize, 4, 16, 64] {
+            let f = fixture(48, 6, 11);
+            let u = uniforms(0, 48, 6, 1);
+            let out = decode_tile(&PpiInput {
+                r: &f.r,
+                s: &f.s,
+                qbar: &f.qbar,
+                qmax: 15.0,
+                k: 0,
+                block,
+                alpha: &f.alpha,
+                uniforms: &u,
+            });
+            for j in 0..6 {
+                let sj = f.s.col(j);
+                let qj = f.qbar.col(j);
+                let expect = decode_greedy(&f.r, &sj, &qj, 15.0);
+                assert_eq!(out.q.col(j), expect, "block={block} col={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_paths_match_reference_klein_exactly() {
+        let (m, ntile, k) = (32usize, 4usize, 3usize);
+        let f = fixture(m, ntile, 13);
+        let u = uniforms(k, m, ntile, 2);
+        let out = decode_tile(&PpiInput {
+            r: &f.r,
+            s: &f.s,
+            qbar: &f.qbar,
+            qmax: 15.0,
+            k,
+            block: 8,
+            alpha: &f.alpha,
+            uniforms: &u,
+        });
+        // Reconstruct each sampled path column via the per-column reference,
+        // feeding it the same uniforms slice.
+        for p in 1..=k {
+            for j in 0..ntile {
+                let sj = f.s.col(j);
+                let qj = f.qbar.col(j);
+                let col_u: Vec<f32> = (0..m).map(|i| u[(p * m + i) * ntile + j]).collect();
+                let expect =
+                    decode_sampled_with_uniforms(&f.r, &sj, &qj, 15.0, f.alpha[j], &col_u);
+                // The tile output only exposes the winner, so compare path
+                // residuals instead: recompute the reference residual and
+                // check it equals the tile's recorded path residual.
+                let expect_res = residual_sq(&f.r, &sj, &qj, &expect);
+                let got = out.path_resids.get(p, j) as f64;
+                assert!(
+                    (got - expect_res).abs() <= 1e-3 * expect_res.max(1.0),
+                    "p={p} j={j}: tile {got} vs ref {expect_res}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_does_not_change_results() {
+        let (m, ntile, k) = (40usize, 5usize, 2usize);
+        let f = fixture(m, ntile, 17);
+        let u = uniforms(k, m, ntile, 3);
+        let base = decode_tile(&PpiInput {
+            r: &f.r,
+            s: &f.s,
+            qbar: &f.qbar,
+            qmax: 15.0,
+            k,
+            block: 1,
+            alpha: &f.alpha,
+            uniforms: &u,
+        });
+        for &block in &[2usize, 7, 16, 40, 100] {
+            let out = decode_tile(&PpiInput {
+                r: &f.r,
+                s: &f.s,
+                qbar: &f.qbar,
+                qmax: 15.0,
+                k,
+                block,
+                alpha: &f.alpha,
+                uniforms: &u,
+            });
+            assert_eq!(out.q.as_slice(), base.q.as_slice(), "block={block}");
+        }
+    }
+
+    #[test]
+    fn winner_residual_is_min_over_paths() {
+        let f = fixture(24, 8, 19);
+        let u = uniforms(4, 24, 8, 5);
+        let out = decode_tile(&PpiInput {
+            r: &f.r,
+            s: &f.s,
+            qbar: &f.qbar,
+            qmax: 15.0,
+            k: 4,
+            block: 8,
+            alpha: &f.alpha,
+            uniforms: &u,
+        });
+        for j in 0..8 {
+            for p in 0..5 {
+                assert!(
+                    out.resid[j] <= out.path_resids.get(p, j) as f64 + 1e-6,
+                    "col {j} path {p}"
+                );
+            }
+        }
+        // Winner never worse than the reserved greedy path.
+        for j in 0..8 {
+            assert!(out.resid[j] <= out.path_resids.get(0, j) as f64 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn codes_in_box_and_integer() {
+        let f = fixture(16, 3, 23);
+        let u = uniforms(3, 16, 3, 7);
+        let out = decode_tile(&PpiInput {
+            r: &f.r,
+            s: &f.s,
+            qbar: &f.qbar,
+            qmax: 7.0,
+            k: 3,
+            block: 4,
+            alpha: &f.alpha,
+            uniforms: &u,
+        });
+        for &v in out.q.as_slice() {
+            assert!((0.0..=7.0).contains(&v) && v.fract() == 0.0);
+        }
+    }
+}

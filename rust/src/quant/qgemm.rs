@@ -1,0 +1,128 @@
+//! Quantized GEMM — inference directly on integer codes.
+//!
+//! The deployment payoff of weight-only PTQ is running `y = x·Ŵ` without
+//! ever materializing the dense f32 `Ŵ = S⊙(Q−Z)`. Per scale group the
+//! product factorizes:
+//!
+//! `y_j = Σ_g s_{g,j} · ( Σ_{i∈g} x_i·q_{ij}  −  z_{g,j} · Σ_{i∈g} x_i )`
+//!
+//! so the inner loop is a plain integer-code dot product plus one
+//! group-level correction using the precomputable per-group activation
+//! sums — the standard W4A16 kernel structure (cf. AWQ/GPTQ runtimes),
+//! here in portable Rust over the unpacked code buffer.
+
+use super::QuantizedLinear;
+use crate::tensor::Matrix;
+
+/// `y = x · Ŵ` for a single activation row `x` (length m), straight from
+/// codes. Falls back to the dense effective weight when the layer
+/// carries one (AWQ/QuIP transforms fold into `effective`).
+pub fn qgemv(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), q.m);
+    if let Some(eff) = &q.effective {
+        return crate::linalg::gemv(&eff.transpose(), x);
+    }
+    let gs = q.scales.group_size;
+    let n_groups = q.scales.n_groups();
+    // Per-group activation sums (the z-correction term).
+    let mut gsum = vec![0.0f32; n_groups];
+    for (i, &xv) in x.iter().enumerate() {
+        gsum[i / gs] += xv;
+    }
+    let mut y = vec![0.0f32; q.n];
+    let mut acc = vec![0.0f32; q.n]; // per-group code-dot accumulator
+    for g in 0..n_groups {
+        acc.fill(0.0);
+        let r0 = g * gs;
+        let r1 = (r0 + gs).min(q.m);
+        for i in r0..r1 {
+            let xv = x[i];
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &q.codes[i * q.n..(i + 1) * q.n];
+            for (a, &code) in acc.iter_mut().zip(row) {
+                *a += xv * code as f32;
+            }
+        }
+        for j in 0..q.n {
+            let s = q.scales.scales.get(g, j);
+            let z = q.scales.zeros.get(g, j);
+            y[j] += s * (acc[j] - z * gsum[g]);
+        }
+    }
+    y
+}
+
+/// `Y = X · Ŵ` for a batch of rows.
+pub fn qgemm(q: &QuantizedLinear, x: &Matrix) -> Matrix {
+    assert_eq!(x.cols(), q.m);
+    let mut y = Matrix::zeros(x.rows(), q.n);
+    for r in 0..x.rows() {
+        let row = qgemv(q, x.row(r));
+        y.row_mut(r).copy_from_slice(&row);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::quant::{rtn, QuantConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn qgemm_matches_dequantized_matmul() {
+        let mut rng = Rng::new(1);
+        for &(m, n, gs) in &[(32usize, 16usize, 8usize), (48, 24, 16), (33, 7, 16), (20, 5, 0)] {
+            let w = Matrix::randn(m, n, 0.5, &mut rng);
+            let cfg = QuantConfig { wbit: 4, group_size: gs, ..Default::default() };
+            let q = rtn::quantize(&w, &cfg);
+            let x = Matrix::randn(5, m, 1.0, &mut rng);
+            let dense = matmul(&x, &q.dequantize());
+            let packed = qgemm(&q, &x);
+            assert!(
+                packed.rel_err(&dense) < 1e-4,
+                "(m={m},n={n},gs={gs}) rel={}",
+                packed.rel_err(&dense)
+            );
+        }
+    }
+
+    #[test]
+    fn qgemv_effective_fallback() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(16, 8, 0.5, &mut rng);
+        let mut q = rtn::quantize(&w, &QuantConfig::default());
+        q.effective = Some(w.clone()); // pretend a transform folded here
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = qgemv(&q, &x);
+        let expect = crate::linalg::gemv(&w.transpose(), &x);
+        for (a, b) in y.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_activation_rows_short_circuit() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(24, 6, 0.5, &mut rng);
+        let cfg = QuantConfig { wbit: 3, group_size: 8, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let y = qgemv(&q, &vec![0.0; 24]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn three_bit_codes_supported() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(32, 12, 0.5, &mut rng);
+        let cfg = QuantConfig { wbit: 3, group_size: 16, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let x = Matrix::randn(3, 32, 1.0, &mut rng);
+        let dense = matmul(&x, &q.dequantize());
+        let packed = qgemm(&q, &x);
+        assert!(packed.rel_err(&dense) < 1e-4);
+    }
+}

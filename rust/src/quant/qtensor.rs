@@ -1,0 +1,192 @@
+//! Quantized linear layer storage: integer codes + group scales, with
+//! sub-byte bit-packing for honest memory-footprint accounting and a
+//! dequantization path used by the evaluation forward pass.
+
+use super::scales::GroupScales;
+use crate::tensor::Matrix;
+
+/// A quantized `m×n` linear layer: `Ŵ = S ⊙ (Q − Z)` (paper §3.2), plus
+/// an optional dense "effective" override for transform-based methods
+/// (AWQ folds activation scaling, QuIP folds rotations) whose runtime
+/// weight is not literally `S⊙(Q−Z)`.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    /// Integer codes, row-major `m×n`, one byte per code (unpacked form).
+    pub codes: Vec<u8>,
+    /// Group scale/zero tables.
+    pub scales: GroupScales,
+    /// Bit width.
+    pub wbit: u8,
+    /// Rows (input features).
+    pub m: usize,
+    /// Columns (output features).
+    pub n: usize,
+    /// Dense effective weight for transformed methods; when `Some`, it is
+    /// what [`Self::dequantize`] returns.
+    pub effective: Option<Matrix>,
+}
+
+impl QuantizedLinear {
+    /// Wrap raw codes.
+    pub fn new(codes: Vec<u8>, scales: GroupScales, wbit: u8, m: usize, n: usize) -> Self {
+        assert_eq!(codes.len(), m * n);
+        debug_assert!(codes.iter().all(|&c| (c as u16) < (1 << wbit)));
+        QuantizedLinear { codes, scales, wbit, m, n, effective: None }
+    }
+
+    /// FP passthrough pseudo-layer (the BF16 table rows): codes are empty
+    /// and `dequantize` returns the original weight.
+    pub fn identity(w: &Matrix) -> Self {
+        QuantizedLinear {
+            codes: Vec::new(),
+            scales: GroupScales {
+                scales: Matrix::zeros(1, w.cols()),
+                zeros: Matrix::zeros(1, w.cols()),
+                group_size: w.rows().max(1),
+                m: w.rows(),
+            },
+            wbit: 0,
+            m: w.rows(),
+            n: w.cols(),
+            effective: Some(w.clone()),
+        }
+    }
+
+    /// Code at (i, j).
+    #[inline]
+    pub fn code(&self, i: usize, j: usize) -> u8 {
+        self.codes[i * self.n + j]
+    }
+
+    /// Dequantize to a dense `m×n` f32 matrix.
+    pub fn dequantize(&self) -> Matrix {
+        if let Some(eff) = &self.effective {
+            return eff.clone();
+        }
+        let mut w = Matrix::zeros(self.m, self.n);
+        for i in 0..self.m {
+            let g = self.scales.group_of(i);
+            let row = w.row_mut(i);
+            for (j, slot) in row.iter_mut().enumerate() {
+                let s = self.scales.scales.get(g, j);
+                let z = self.scales.zeros.get(g, j);
+                *slot = s * (self.codes[i * self.n + j] as f32 - z);
+            }
+        }
+        w
+    }
+
+    /// Serialized (packed) size in bytes: codes at `wbit` bits each plus
+    /// f16-equivalent scale/zero tables — the number a deployment would
+    /// ship. Used for the compression-ratio reporting in EXPERIMENTS.md.
+    pub fn packed_bytes(&self) -> usize {
+        if self.wbit == 0 {
+            return self.m * self.n * 4;
+        }
+        let code_bits = self.m * self.n * self.wbit as usize;
+        let table_entries = self.scales.scales.len() + self.scales.zeros.len();
+        code_bits.div_ceil(8) + table_entries * 2
+    }
+
+    /// Pack codes into a dense little-endian bitstream.
+    pub fn pack_codes(&self) -> Vec<u8> {
+        pack_bits(&self.codes, self.wbit)
+    }
+}
+
+/// Pack `codes` (values < 2^wbit) into a little-endian bitstream.
+pub fn pack_bits(codes: &[u8], wbit: u8) -> Vec<u8> {
+    assert!(wbit >= 1 && wbit <= 8);
+    let total_bits = codes.len() * wbit as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!((c as u16) < (1u16 << wbit));
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + wbit as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += wbit as usize;
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`]; `n` is the code count.
+pub fn unpack_bits(packed: &[u8], wbit: u8, n: usize) -> Vec<u8> {
+    assert!(wbit >= 1 && wbit <= 8);
+    let mask = ((1u16 << wbit) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + wbit as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += wbit as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{scales, QuantConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        let mut rng = Rng::new(1);
+        for wbit in 1..=8u8 {
+            let n = 257; // odd length to exercise tail handling
+            let codes: Vec<u8> = (0..n).map(|_| (rng.below(1 << wbit)) as u8).collect();
+            let packed = pack_bits(&codes, wbit);
+            assert_eq!(packed.len(), (n * wbit as usize).div_ceil(8));
+            let back = unpack_bits(&packed, wbit, n);
+            assert_eq!(back, codes, "wbit={wbit}");
+        }
+    }
+
+    #[test]
+    fn dequantize_matches_formula() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(32, 6, 1.0, &mut rng);
+        let cfg = QuantConfig { wbit: 4, group_size: 16, ..Default::default() };
+        let sc = scales::compute(&w, &cfg);
+        let codes: Vec<u8> = (0..32 * 6).map(|_| rng.below(16) as u8).collect();
+        let q = QuantizedLinear::new(codes.clone(), sc.clone(), 4, 32, 6);
+        let d = q.dequantize();
+        for i in 0..32 {
+            for j in 0..6 {
+                let expect = sc.scale(i, j) * (codes[i * 6 + j] as f32 - sc.zero(i, j));
+                assert!((d.get(i, j) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_passthrough() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(8, 8, 1.0, &mut rng);
+        let q = QuantizedLinear::identity(&w);
+        assert_eq!(q.dequantize(), w);
+        assert_eq!(q.packed_bytes(), 8 * 8 * 4);
+    }
+
+    #[test]
+    fn packed_bytes_compression_ratio() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(256, 64, 1.0, &mut rng);
+        let cfg = QuantConfig { wbit: 4, group_size: 128, ..Default::default() };
+        let sc = scales::compute(&w, &cfg);
+        let q = QuantizedLinear::new(vec![0u8; 256 * 64], sc, 4, 256, 64);
+        let fp_bytes = 256 * 64 * 4;
+        let ratio = fp_bytes as f64 / q.packed_bytes() as f64;
+        // 4-bit + small tables ≈ 7-8x compression over f32.
+        assert!(ratio > 6.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,112 @@
+//! QuIP-style baseline (Chee et al., 2024): incoherence processing with
+//! random orthogonal rotations + LDLQ-style greedy decoding.
+//!
+//! The weight is conjugated by Haar-random orthogonal matrices,
+//! `W̃ = Uᵀ W V`, which spreads outliers ("incoherence"), the Hessian is
+//! rotated accordingly (`H̃ = Uᵀ H U`), the rotated weight is quantized
+//! with the compensation-based greedy solver (LDLQ ≙ our GPTQ core), and
+//! the effective runtime weight is `Ŵ = U·dq(W̃)·Vᵀ`.
+//!
+//! Matching the paper's observation, this baseline is strong at g=0 on
+//! well-behaved models but brittle on small/sensitive ones — the rotation
+//! spreads *every* column's range, so per-group scale adaptation is lost
+//! (rotated weights don't align with group boundaries).
+
+use super::{gptq, QuantConfig, QuantizedLinear};
+use crate::linalg::{matmul, random_orthogonal};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// QuIP-quantize a layer against runtime activations `x` (`p×m`).
+pub fn quantize(
+    w: &Matrix,
+    x: &Matrix,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+) -> anyhow::Result<QuantizedLinear> {
+    let (m, n) = w.shape();
+    assert_eq!(x.cols(), m);
+    let u = random_orthogonal(m, rng);
+    let v = random_orthogonal(n, rng);
+    // W̃ = Uᵀ W V.
+    let w_rot = matmul(&matmul(&u.transpose(), w), &v);
+    // Rotated activations: y = xW = (xU)(UᵀWV)Vᵀ, so the solver sees X̃U.
+    let x_rot = matmul(x, &u);
+    // LDLQ on the rotated problem. QuIP does not use activation ordering.
+    let quip_cfg = QuantConfig { act_order: false, ..cfg.clone() };
+    let mut q = gptq::quantize(&w_rot, &x_rot, &quip_cfg)?;
+    // Effective runtime weight: undo the rotation.
+    let w_hat_rot = q.dequantize();
+    let w_hat = matmul(&matmul(&u, &w_hat_rot), &v.transpose());
+    q.effective = Some(w_hat);
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn;
+
+    fn layer(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        // Weight with strong outlier rows — the case incoherence helps.
+        let mut w = Matrix::randn(m, n, 0.3, &mut rng);
+        for j in 0..n {
+            w.set(3 % m, j, w.get(3 % m, j) * 10.0);
+        }
+        let x = Matrix::randn(p, m, 1.0, &mut rng);
+        (w, x)
+    }
+
+    fn rt_err(w_hat: &Matrix, w: &Matrix, x: &Matrix) -> f64 {
+        matmul(x, w_hat).sub(&matmul(x, w)).frob()
+    }
+
+    #[test]
+    fn quip_runs_and_is_reasonable_at_g0() {
+        let (w, x) = layer(32, 16, 64, 1);
+        let cfg = QuantConfig { wbit: 4, group_size: 0, ..Default::default() };
+        let mut rng = Rng::new(2);
+        let q = quantize(&w, &x, &cfg, &mut rng).unwrap();
+        let e_quip = rt_err(&q.dequantize(), &w, &x);
+        let e_rtn = rt_err(&rtn::quantize(&w, &cfg).dequantize(), &w, &x);
+        // At g=0 with outliers, incoherence should not be catastrophically
+        // worse than RTN (it is usually much better).
+        assert!(e_quip < e_rtn * 1.2, "quip {e_quip} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn rotation_roundtrip_at_high_bits() {
+        // At 8 bits the quantization error is tiny, so Ŵ ≈ W through the
+        // rotate→quantize→unrotate pipeline — catches transform bugs.
+        let (w, x) = layer(24, 12, 48, 3);
+        let cfg = QuantConfig { wbit: 8, group_size: 0, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let q = quantize(&w, &x, &cfg, &mut rng).unwrap();
+        let rel = q.dequantize().rel_err(&w);
+        assert!(rel < 0.02, "rel={rel}");
+    }
+
+    #[test]
+    fn effective_shape_and_finite() {
+        let (w, x) = layer(16, 20, 32, 5);
+        let cfg = QuantConfig { wbit: 3, group_size: 0, ..Default::default() };
+        let mut rng = Rng::new(6);
+        let q = quantize(&w, &x, &cfg, &mut rng).unwrap();
+        let eff = q.dequantize();
+        assert_eq!(eff.shape(), (16, 20));
+        assert!(eff.all_finite());
+    }
+
+    #[test]
+    fn different_seeds_different_rotations_similar_quality() {
+        let (w, x) = layer(24, 12, 48, 7);
+        let cfg = QuantConfig { wbit: 4, group_size: 0, ..Default::default() };
+        let mut r1 = Rng::new(10);
+        let mut r2 = Rng::new(20);
+        let e1 = rt_err(&quantize(&w, &x, &cfg, &mut r1).unwrap().dequantize(), &w, &x);
+        let e2 = rt_err(&quantize(&w, &x, &cfg, &mut r2).unwrap().dequantize(), &w, &x);
+        let ratio = e1 / e2.max(1e-12);
+        assert!((0.5..2.0).contains(&ratio), "e1={e1} e2={e2}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Round-to-nearest (RTN) — the naive baseline: `q = clamp(⌊w/s + z⌉)`.
+//! Also the building block AWQ reuses after rescaling.
+
+use super::scales::{self, GroupScales};
+use super::{QuantConfig, QuantizedLinear};
+use crate::tensor::Matrix;
+
+/// RTN-quantize a weight matrix under `cfg`.
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    let sc = scales::compute(w, cfg);
+    quantize_with_scales(w, &sc, cfg)
+}
+
+/// RTN with externally-provided scales (AWQ path, GPTQ static groups).
+pub fn quantize_with_scales(w: &Matrix, sc: &GroupScales, cfg: &QuantConfig) -> QuantizedLinear {
+    let (m, n) = w.shape();
+    let qmax = cfg.box_max() as f32;
+    let mut codes = vec![0u8; m * n];
+    for i in 0..m {
+        let g = sc.group_of(i);
+        let row = w.row(i);
+        for j in 0..n {
+            let s = sc.scales.get(g, j);
+            let z = sc.zeros.get(g, j);
+            let q = (row[j] / s + z).round().clamp(0.0, qmax);
+            codes[i * n + j] = q as u8;
+        }
+    }
+    QuantizedLinear::new(codes, sc.clone(), cfg.wbit, m, n)
+}
+
+/// Scalar RTN in code space: `clamp(round(c), 0, qmax)` — shared helper
+/// for the greedy paths of every lattice solver.
+#[inline]
+pub fn round_code(c: f32, qmax: f32) -> f32 {
+    c.round().clamp(0.0, qmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rtn_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(64, 16, 1.0, &mut rng);
+        let cfg = QuantConfig { wbit: 4, group_size: 32, ..Default::default() };
+        let q = quantize(&w, &cfg);
+        let d = q.dequantize();
+        for i in 0..64 {
+            for j in 0..16 {
+                let s = q.scales.scale(i, j);
+                let err = (d.get(i, j) - w.get(i, j)).abs();
+                assert!(err <= 0.5 * s + 1e-5, "err={err} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_representable_weights_roundtrip() {
+        // Build weights already on the quantization grid: w = s*(q-z).
+        let mut rng = Rng::new(2);
+        let m = 32;
+        let n = 4;
+        let cfg = QuantConfig { wbit: 4, group_size: 0, ..Default::default() };
+        let mut grid = Matrix::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                grid.set(i, j, 0.1 * (rng.below(16) as f32 - 8.0));
+            }
+            // Pin the column's extremes so the calibrated scale matches
+            // the construction grid exactly (s = 1.5/15 = 0.1, z = 8).
+            grid.set(0, j, 0.1 * (0.0 - 8.0));
+            grid.set(1, j, 0.1 * (15.0 - 8.0));
+        }
+        let q = quantize(&grid, &cfg);
+        let d = q.dequantize();
+        assert!(d.rel_err(&grid) < 1e-4, "rel={}", d.rel_err(&grid));
+    }
+
+    #[test]
+    fn lower_bits_more_error() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(128, 8, 1.0, &mut rng);
+        let e3 = {
+            let cfg = QuantConfig { wbit: 3, group_size: 128, ..Default::default() };
+            quantize(&w, &cfg).dequantize().sub(&w).frob()
+        };
+        let e4 = {
+            let cfg = QuantConfig { wbit: 4, group_size: 128, ..Default::default() };
+            quantize(&w, &cfg).dequantize().sub(&w).frob()
+        };
+        let e8 = {
+            let cfg = QuantConfig { wbit: 8, group_size: 128, ..Default::default() };
+            quantize(&w, &cfg).dequantize().sub(&w).frob()
+        };
+        assert!(e3 > e4 && e4 > e8, "e3={e3} e4={e4} e8={e8}");
+    }
+
+    #[test]
+    fn smaller_groups_no_worse() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(256, 8, 1.0, &mut rng);
+        let err = |gs: usize| {
+            let cfg = QuantConfig { wbit: 3, group_size: gs, ..Default::default() };
+            quantize(&w, &cfg).dequantize().sub(&w).frob()
+        };
+        // Finer groups adapt scales better -> monotone (weakly) lower error.
+        assert!(err(32) <= err(128) * 1.02);
+        assert!(err(128) <= err(0) * 1.02);
+    }
+
+    #[test]
+    fn round_code_clamps() {
+        assert_eq!(round_code(-3.2, 15.0), 0.0);
+        assert_eq!(round_code(20.0, 15.0), 15.0);
+        assert_eq!(round_code(7.4, 15.0), 7.0);
+        assert_eq!(round_code(7.5, 15.0), 8.0);
+    }
+}

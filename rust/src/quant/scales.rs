@@ -1,0 +1,200 @@
+//! Group-wise scale / zero-point calibration (the paper's `S`, `Z`
+//! matrices, §3.2). Standard asymmetric min–max ("Absmax-style") statistics
+//! computed per (row-group, output-column) cell:
+//!
+//! `s = (max − min) / (2^b − 1)`, `z = clamp(round(−min/s), 0, 2^b−1)`,
+//! so `ŵ = s · (q − z)` covers the group's range.
+//!
+//! In the BILS formulation `D_j = diag(s_j)` is the per-column diagonal
+//! scale (the group structure is just a piecewise-constant pattern in
+//! `s_j`), so these vectors feed straight into `R̄ = R·D`.
+
+use super::QuantConfig;
+use crate::tensor::Matrix;
+
+/// Per-layer scale/zero-point tables: `(n_groups × n)` matrices plus the
+/// grouping metadata needed to expand them to full per-row vectors.
+#[derive(Debug, Clone)]
+pub struct GroupScales {
+    /// Scales, `n_groups × n`.
+    pub scales: Matrix,
+    /// Zero-points (stored as f32 integers), `n_groups × n`.
+    pub zeros: Matrix,
+    /// Rows per group (last group may be short).
+    pub group_size: usize,
+    /// Number of weight rows `m`.
+    pub m: usize,
+}
+
+impl GroupScales {
+    /// Number of groups.
+    pub fn n_groups(&self) -> usize {
+        self.scales.rows()
+    }
+
+    /// Group index of row `i`.
+    #[inline]
+    pub fn group_of(&self, i: usize) -> usize {
+        i / self.group_size
+    }
+
+    /// Scale for (row, col).
+    #[inline]
+    pub fn scale(&self, i: usize, j: usize) -> f32 {
+        self.scales.get(self.group_of(i), j)
+    }
+
+    /// Zero-point for (row, col).
+    #[inline]
+    pub fn zero(&self, i: usize, j: usize) -> f32 {
+        self.zeros.get(self.group_of(i), j)
+    }
+
+    /// Expand column `j`'s scales to a full length-`m` vector
+    /// (`s_j` in the paper — the diagonal of `D_j`).
+    pub fn col_scale_vec(&self, j: usize) -> Vec<f32> {
+        (0..self.m).map(|i| self.scale(i, j)).collect()
+    }
+
+    /// Expand column `j`'s zero-points to a full length-`m` vector.
+    pub fn col_zero_vec(&self, j: usize) -> Vec<f32> {
+        (0..self.m).map(|i| self.zero(i, j)).collect()
+    }
+
+    /// Full `m × ntile` scale matrix for columns `[c0, c0+w)` — the `S`
+    /// tile handed to the PPI decoder / PJRT artifact.
+    pub fn scale_tile(&self, c0: usize, w: usize) -> Matrix {
+        Matrix::from_fn(self.m, w, |i, j| self.scale(i, c0 + j))
+    }
+
+    /// Full `m × ntile` zero-point matrix for columns `[c0, c0+w)`.
+    pub fn zero_tile(&self, c0: usize, w: usize) -> Matrix {
+        Matrix::from_fn(self.m, w, |i, j| self.zero(i, c0 + j))
+    }
+}
+
+/// Compute asymmetric min–max scales/zeros for `w` (`m×n`) under `cfg`.
+/// Degenerate groups (constant weight) get `s = 1, z = clamp(round(-w))`
+/// …actually `s=1, z` chosen so the constant is representable exactly.
+pub fn compute(w: &Matrix, cfg: &QuantConfig) -> GroupScales {
+    let (m, n) = w.shape();
+    let gs = cfg.effective_group(m);
+    let n_groups = m.div_ceil(gs);
+    let qmax = cfg.box_max() as f32;
+    let mut scales = Matrix::zeros(n_groups, n);
+    let mut zeros = Matrix::zeros(n_groups, n);
+    for g in 0..n_groups {
+        let r0 = g * gs;
+        let r1 = (r0 + gs).min(m);
+        for j in 0..n {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in r0..r1 {
+                let v = w.get(i, j);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            // Always include zero in the range so zero weights stay exact
+            // (standard practice; keeps RTN sane on sparse rows).
+            lo = lo.min(0.0);
+            hi = hi.max(0.0);
+            let range = hi - lo;
+            if range <= 0.0 || !range.is_finite() {
+                scales.set(g, j, 1.0);
+                zeros.set(g, j, 0.0);
+                continue;
+            }
+            let s = range / qmax;
+            let z = (-lo / s).round().clamp(0.0, qmax);
+            scales.set(g, j, s);
+            zeros.set(g, j, z);
+        }
+    }
+    GroupScales { scales, zeros, group_size: gs, m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn cfg(wbit: u8, gs: usize) -> QuantConfig {
+        QuantConfig { wbit, group_size: gs, ..Default::default() }
+    }
+
+    #[test]
+    fn ranges_are_covered() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(64, 8, 1.0, &mut rng);
+        let sc = compute(&w, &cfg(4, 16));
+        assert_eq!(sc.n_groups(), 4);
+        // Every weight must be inside [s*(0-z), s*(qmax-z)] of its cell up
+        // to the half-step the integer zero-point rounding can shift the
+        // representable window by.
+        for j in 0..8 {
+            for i in 0..64 {
+                let s = sc.scale(i, j);
+                let z = sc.zero(i, j);
+                let lo = s * (0.0 - z);
+                let hi = s * (15.0 - z);
+                let v = w.get(i, j);
+                let slack = 0.5 * s + 1e-4;
+                assert!(
+                    v >= lo - slack && v <= hi + slack,
+                    "w[{i},{j}]={v} not in [{lo},{hi}]±{slack}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn group_zero_means_whole_column() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(100, 3, 1.0, &mut rng);
+        let sc = compute(&w, &cfg(4, 0));
+        assert_eq!(sc.n_groups(), 1);
+        assert_eq!(sc.group_size, 100);
+    }
+
+    #[test]
+    fn degenerate_group_safe() {
+        let w = Matrix::zeros(32, 2);
+        let sc = compute(&w, &cfg(4, 16));
+        for g in 0..sc.n_groups() {
+            assert_eq!(sc.scales.get(g, 0), 1.0);
+            assert_eq!(sc.zeros.get(g, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn tiles_match_point_lookups() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(48, 10, 1.0, &mut rng);
+        let sc = compute(&w, &cfg(3, 16));
+        let tile = sc.scale_tile(4, 3);
+        for i in 0..48 {
+            for j in 0..3 {
+                assert_eq!(tile.get(i, j), sc.scale(i, 4 + j));
+            }
+        }
+        let sv = sc.col_scale_vec(7);
+        for i in 0..48 {
+            assert_eq!(sv[i], sc.scale(i, 7));
+        }
+    }
+
+    #[test]
+    fn zero_is_exactly_representable() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::rand_uniform(32, 4, 0.5, 1.5, &mut rng); // all-positive
+        let sc = compute(&w, &cfg(4, 32));
+        for j in 0..4 {
+            let s = sc.scale(0, j);
+            let z = sc.zero(0, j);
+            // Dequantizing code z gives exactly 0.
+            assert_eq!(s * (z - z), 0.0);
+            // And 0 is inside the box image.
+            assert!(z >= 0.0 && z <= 15.0);
+        }
+    }
+}

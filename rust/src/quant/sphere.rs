@@ -1,0 +1,226 @@
+//! Box-constrained Schnorr–Euchner sphere decoding — the *optimal* BILS
+//! solver (paper §2: "the Babai point is the first integer point found by
+//! the Schnorr-Euchner sphere-decoding algorithm, which enumerates
+//! integer points in an ellipsoid to find the optimal solution", extended
+//! to the box-constrained case per Wen & Chang 2021).
+//!
+//! Exponential worst case — usable only for small/medium `m` — but
+//! invaluable as an **optimality oracle**: property tests verify that
+//! every suboptimal solver (Babai, Klein K-best, PPI) never beats it, and
+//! `rust/benches/ablation_design.rs` quantifies the Babai→optimal gap
+//! that Random-K is designed to close.
+//!
+//! Depth-first enumeration in the same weight-space-error coordinates as
+//! [`super::babai`]: at level `i`, candidate code `v` contributes
+//! `(R(i,i)·s(i)·(v − c_i))²`; the (≤ 2^wbit) box values are visited in
+//! Schnorr–Euchner order (ascending distance from the center), so the
+//! first radius violation prunes the remaining siblings too.
+
+use super::babai::{decode_greedy, residual_sq};
+use crate::tensor::Matrix;
+
+/// Result of an exact (or node-capped) solve.
+#[derive(Debug, Clone)]
+pub struct SphereResult {
+    /// Best codes found.
+    pub q: Vec<f32>,
+    /// Their residual `||R·(s⊙(q−q̄))||²`.
+    pub resid: f64,
+    /// Nodes expanded (search-effort diagnostic).
+    pub nodes: u64,
+    /// True iff the search ran to completion (result provably optimal).
+    pub optimal: bool,
+}
+
+struct Search<'a> {
+    r: &'a Matrix,
+    s: &'a [f32],
+    qbar: &'a [f32],
+    qmax: f32,
+    max_nodes: u64,
+    nodes: u64,
+    capped: bool,
+    best_q: Vec<f32>,
+    best_res: f64,
+    cur: Vec<f32>,
+    e: Vec<f32>,
+}
+
+impl Search<'_> {
+    fn center(&self, i: usize) -> f32 {
+        let m = self.r.rows();
+        let mut acc = 0.0f64;
+        let row = &self.r.row(i)[i + 1..m];
+        for (off, &rij) in row.iter().enumerate() {
+            acc += rij as f64 * self.e[i + 1 + off] as f64;
+        }
+        self.qbar[i] + (acc / (self.r.get(i, i) as f64 * self.s[i] as f64)) as f32
+    }
+
+    fn dive(&mut self, i: usize, part: f64) {
+        if self.nodes >= self.max_nodes {
+            self.capped = true;
+            return;
+        }
+        self.nodes += 1;
+        let c = self.center(i);
+        let rbar = self.r.get(i, i) as f64 * self.s[i] as f64;
+        // Schnorr–Euchner order: box values by ascending distance from c.
+        let n = self.qmax as usize + 1;
+        let mut order: Vec<u8> = (0..n as u8).collect();
+        order.sort_by(|&a, &b| {
+            let da = (a as f32 - c).abs();
+            let db = (b as f32 - c).abs();
+            da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for &vu in &order {
+            let v = vu as f32;
+            let d = (v - c) as f64;
+            let contrib = rbar * rbar * d * d;
+            if part + contrib >= self.best_res {
+                break; // ordered ⇒ all remaining siblings prune too
+            }
+            self.cur[i] = v;
+            if i == 0 {
+                self.best_res = part + contrib;
+                self.best_q.copy_from_slice(&self.cur);
+            } else {
+                self.e[i] = self.s[i] * (self.qbar[i] - v);
+                self.dive(i - 1, part + contrib);
+                if self.capped {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Exact box-constrained ILS solve of one column. `max_nodes` bounds the
+/// search; the Babai point seeds the radius, so the result is never worse
+/// than Babai even when capped (`optimal == false`).
+pub fn decode_optimal(
+    r: &Matrix,
+    s: &[f32],
+    qbar: &[f32],
+    qmax: f32,
+    max_nodes: u64,
+) -> SphereResult {
+    let m = r.rows();
+    assert_eq!(r.cols(), m);
+    assert_eq!(s.len(), m);
+    assert_eq!(qbar.len(), m);
+    let babai = decode_greedy(r, s, qbar, qmax);
+    let best_res = residual_sq(r, s, qbar, &babai);
+    let mut search = Search {
+        r,
+        s,
+        qbar,
+        qmax,
+        max_nodes,
+        nodes: 0,
+        capped: false,
+        best_q: babai,
+        // Tiny slack so the (equal-residual) Babai leaf itself is not
+        // pruned before a strictly better leaf can replace it.
+        best_res: best_res + 1e-9 * best_res.max(1e-9),
+        cur: vec![0.0; m],
+        e: vec![0.0; m],
+    };
+    search.dive(m - 1, 0.0);
+    let optimal = !search.capped;
+    // Report the true residual of the returned point.
+    let resid = residual_sq(r, s, qbar, &search.best_q);
+    SphereResult { q: search.best_q, resid, nodes: search.nodes, optimal }
+}
+
+/// Brute-force solver for very small cases — validates the sphere
+/// decoder itself in tests.
+pub fn decode_exhaustive(r: &Matrix, s: &[f32], qbar: &[f32], qmax: f32) -> (Vec<f32>, f64) {
+    let m = r.rows();
+    let n = qmax as usize + 1;
+    assert!((n as f64).powi(m as i32) <= 2e6, "exhaustive only for tiny cases");
+    let total = n.pow(m as u32);
+    let mut best_q = vec![0.0f32; m];
+    let mut best_res = f64::INFINITY;
+    let mut q = vec![0.0f32; m];
+    for code in 0..total {
+        let mut x = code;
+        for qi in q.iter_mut() {
+            *qi = (x % n) as f32;
+            x /= n;
+        }
+        let res = residual_sq(r, s, qbar, &q);
+        if res < best_res {
+            best_res = res;
+            best_q.copy_from_slice(&q);
+        }
+    }
+    (best_q, best_res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::klein::decode_kbest;
+    use crate::rng::Rng;
+    use crate::testutil::{check_cases, gen_dim, gen_solver_case};
+
+    #[test]
+    fn sphere_matches_exhaustive_on_tiny_cases() {
+        check_cases(0x5E, 15, |rng, _| {
+            let m = gen_dim(rng, 2, 5);
+            let qmax = 7.0; // 8^5 = 32k points max
+            let case = gen_solver_case(rng, m, 3);
+            let exact = decode_exhaustive(&case.r, &case.s, &case.qbar, qmax);
+            let sphere = decode_optimal(&case.r, &case.s, &case.qbar, qmax, u64::MAX);
+            assert!(sphere.optimal);
+            assert!(
+                (sphere.resid - exact.1).abs() <= 1e-6 * exact.1.max(1e-9),
+                "sphere {} vs exhaustive {}",
+                sphere.resid,
+                exact.1
+            );
+        });
+    }
+
+    #[test]
+    fn suboptimal_solvers_never_beat_the_oracle() {
+        check_cases(0x5F, 12, |rng, case_idx| {
+            let m = gen_dim(rng, 4, 12);
+            let case = gen_solver_case(rng, m, 4);
+            let opt = decode_optimal(&case.r, &case.s, &case.qbar, case.qmax, 5_000_000);
+            let greedy = crate::quant::babai::decode_greedy(
+                &case.r, &case.s, &case.qbar, case.qmax,
+            );
+            let greedy_res = residual_sq(&case.r, &case.s, &case.qbar, &greedy);
+            let mut krng = Rng::new(900 + case_idx as u64);
+            let (_, kres) = decode_kbest(&case.r, &case.s, &case.qbar, case.qmax, 8, &mut krng);
+            assert!(opt.resid <= greedy_res + 1e-6, "oracle beaten by Babai");
+            assert!(opt.resid <= kres + 1e-6, "oracle beaten by Klein K-best");
+            // And K-best closes (part of) the Babai->optimal gap.
+            assert!(kres <= greedy_res + 1e-9);
+        });
+    }
+
+    #[test]
+    fn node_cap_still_returns_at_least_babai() {
+        let mut rng = Rng::new(3);
+        let case = gen_solver_case(&mut rng, 24, 4);
+        let capped = decode_optimal(&case.r, &case.s, &case.qbar, case.qmax, 50);
+        assert!(!capped.optimal);
+        let greedy =
+            crate::quant::babai::decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let greedy_res = residual_sq(&case.r, &case.s, &case.qbar, &greedy);
+        assert!(capped.resid <= greedy_res + 1e-6);
+    }
+
+    #[test]
+    fn optimal_point_in_box() {
+        let mut rng = Rng::new(4);
+        let case = gen_solver_case(&mut rng, 8, 3);
+        let opt = decode_optimal(&case.r, &case.s, &case.qbar, case.qmax, u64::MAX);
+        for &v in &opt.q {
+            assert!(v >= 0.0 && v <= case.qmax && v.fract() == 0.0);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Table/report emission — regenerates the paper's tables in markdown and
+//! CSV, with best/second-best annotation matching the paper's bold /
+//! underline convention.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-oriented table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row<S: ToString>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    /// Render as github-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(3)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> =
+                cells.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Print markdown to stdout and also write `<dir>/<stem>.md` + `.csv`
+    /// when `dir` is Some. Bench harnesses call this with
+    /// `results/` so every paper table lands on disk.
+    pub fn emit(&self, dir: Option<&Path>, stem: &str) {
+        println!("{}", self.to_markdown());
+        if let Some(d) = dir {
+            let _ = std::fs::create_dir_all(d);
+            let _ = std::fs::write(d.join(format!("{stem}.md")), self.to_markdown());
+            let _ = std::fs::write(d.join(format!("{stem}.csv")), self.to_csv());
+        }
+    }
+}
+
+/// Annotate the minimum (bold) and second-minimum (underline) of a series
+/// of numeric cells, paper-style. Returns formatted strings.
+pub fn mark_best_min(values: &[f64], decimals: usize) -> Vec<String> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    values
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let s = format!("{v:.decimals$}");
+            if !idx.is_empty() && i == idx[0] {
+                format!("**{s}**")
+            } else if idx.len() > 1 && i == idx[1] {
+                format!("_{s}_")
+            } else {
+                s
+            }
+        })
+        .collect()
+}
+
+/// Same but maximum is best (accuracy tables).
+pub fn mark_best_max(values: &[f64], decimals: usize) -> Vec<String> {
+    let neg: Vec<f64> = values.iter().map(|v| -v).collect();
+    let marked = mark_best_min(&neg, decimals);
+    // Re-render the numbers positively while keeping the markers.
+    values
+        .iter()
+        .zip(marked)
+        .map(|(v, m)| {
+            let s = format!("{v:.decimals$}");
+            if m.starts_with("**") {
+                format!("**{s}**")
+            } else if m.starts_with('_') {
+                format!("_{s}_")
+            } else {
+                s
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.push_row(&["1", "2"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.lines().count() >= 4);
+        assert!(md.contains("| 1"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a"]);
+        t.push_row(&["x,y"]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn best_marking_min() {
+        let m = mark_best_min(&[3.0, 1.0, 2.0], 1);
+        assert_eq!(m, vec!["3.0", "**1.0**", "_2.0_"]);
+    }
+
+    #[test]
+    fn best_marking_max() {
+        let m = mark_best_max(&[3.0, 1.0, 2.0], 0);
+        assert_eq!(m, vec!["**3**", "1", "_2_"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.push_row(&["only-one"]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Padding of decode-tile inputs up to a static artifact shape.
+//!
+//! Padding must be *semantically inert*: the decode of real rows/columns
+//! must be identical with and without padding. The construction:
+//!
+//! * `R` → block-diagonal `[R 0; 0 I]`: pad rows never influence real
+//!   rows (the look-ahead term `R[i, pad]·E[pad]` is zero) and decode to
+//!   `q = round(0) = 0` themselves.
+//! * `S` pads with 1 (any positive value works; 1 keeps α finite).
+//! * `Q̄` pads with 0 → pad codes are 0, pad errors are 0.
+//! * `α` pads with 1.
+//! * `uniforms` pad with 0.5 (value irrelevant — pad centers are exact
+//!   integers so every path rounds/samples to the same code 0... almost:
+//!   sampling at an exact integer center still has tail mass, so pad
+//!   columns may decode nonzero on sampled paths. That is still inert:
+//!   pad columns are cropped, and pad *rows* cannot affect real rows
+//!   because `R[real, pad] = 0` and column residuals are per-column).
+
+use crate::tensor::Matrix;
+
+/// Inputs padded to the artifact's static shape.
+pub struct PaddedTile {
+    pub r: Matrix,
+    pub s: Matrix,
+    pub qbar: Matrix,
+    pub alpha: Vec<f32>,
+    pub uniforms: Vec<f32>,
+}
+
+/// Pad `(r, s, qbar, alpha, uniforms)` from `(m, ntile)` up to `(mm, tt)`.
+pub fn pad_decode_inputs(
+    r: &Matrix,
+    s: &Matrix,
+    qbar: &Matrix,
+    alpha: &[f32],
+    uniforms: &[f32],
+    k: usize,
+    mm: usize,
+    tt: usize,
+) -> PaddedTile {
+    let m = r.rows();
+    let ntile = qbar.cols();
+    assert!(mm >= m && tt >= ntile);
+    assert_eq!(uniforms.len(), (k + 1) * m * ntile);
+
+    let mut r_pad = r.pad_to(mm, mm);
+    for i in m..mm {
+        r_pad.set(i, i, 1.0);
+    }
+    let mut s_pad = Matrix::full(mm, tt, 1.0);
+    s_pad.set_block(0, 0, s);
+    let qbar_pad = qbar.pad_to(mm, tt);
+    let mut alpha_pad = vec![1.0f32; tt];
+    alpha_pad[..ntile].copy_from_slice(alpha);
+    let mut uni_pad = vec![0.5f32; (k + 1) * mm * tt];
+    for p in 0..=k {
+        for i in 0..m {
+            for j in 0..ntile {
+                uni_pad[(p * mm + i) * tt + j] = uniforms[(p * m + i) * ntile + j];
+            }
+        }
+    }
+    PaddedTile { r: r_pad, s: s_pad, qbar: qbar_pad, alpha: alpha_pad, uniforms: uni_pad }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cholesky_upper, syrk_upper};
+    use crate::quant::klein::alpha_for;
+    use crate::quant::ppi::{decode_tile, PpiInput};
+    use crate::rng::Rng;
+
+    /// The semantic-inertness property, checked against the native
+    /// decoder: decoding the padded problem and cropping equals decoding
+    /// the original problem.
+    #[test]
+    fn padding_is_semantically_inert() {
+        let (m, ntile, k) = (24usize, 5usize, 3usize);
+        let (mm, tt) = (40usize, 8usize);
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(m + 4, m, 1.0, &mut rng);
+        let g = syrk_upper(&a, 0.05);
+        let r = cholesky_upper(&g).unwrap();
+        let s = Matrix::from_fn(m, ntile, |_, _| 0.05 + 0.2 * rng.uniform_f32());
+        let qbar = Matrix::from_fn(m, ntile, |_, _| 15.0 * rng.uniform_f32());
+        let alpha: Vec<f32> = (0..ntile)
+            .map(|j| {
+                let mn = (0..m)
+                    .map(|i| {
+                        let v = r.get(i, i) as f64 * s.get(i, j) as f64;
+                        v * v
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                alpha_for(k, m, mn) as f32
+            })
+            .collect();
+        let uniforms = Rng::new(2).uniform_vec_f32((k + 1) * m * ntile);
+
+        let base = decode_tile(&PpiInput {
+            r: &r,
+            s: &s,
+            qbar: &qbar,
+            qmax: 15.0,
+            k,
+            block: 8,
+            alpha: &alpha,
+            uniforms: &uniforms,
+        });
+        let p = pad_decode_inputs(&r, &s, &qbar, &alpha, &uniforms, k, mm, tt);
+        let padded = decode_tile(&PpiInput {
+            r: &p.r,
+            s: &p.s,
+            qbar: &p.qbar,
+            qmax: 15.0,
+            k,
+            block: 8,
+            alpha: &p.alpha,
+            uniforms: &p.uniforms,
+        });
+        let cropped = padded.q.block(0, 0, m, ntile);
+        assert_eq!(cropped.as_slice(), base.q.as_slice());
+    }
+
+    #[test]
+    fn pad_shapes() {
+        let r = Matrix::eye(4);
+        let s = Matrix::full(4, 2, 0.1);
+        let qbar = Matrix::zeros(4, 2);
+        let alpha = vec![1.0; 2];
+        let uniforms = vec![0.3; 2 * 4 * 2]; // k=1
+        let p = pad_decode_inputs(&r, &s, &qbar, &alpha, &uniforms, 1, 6, 3);
+        assert_eq!(p.r.shape(), (6, 6));
+        assert_eq!(p.r.get(5, 5), 1.0);
+        assert_eq!(p.r.get(4, 5), 0.0);
+        assert_eq!(p.s.get(5, 2), 1.0);
+        assert_eq!(p.uniforms.len(), 2 * 6 * 3);
+        // Original uniform mapped to right position.
+        assert_eq!(p.uniforms[(1 * 6 + 3) * 3 + 1], 0.3);
+    }
+}

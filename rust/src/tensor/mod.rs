@@ -1,0 +1,436 @@
+//! Dense row-major `f32` matrix type — the storage substrate for model
+//! weights, activations, Hessians and triangular factors.
+//!
+//! Deliberately minimal: a contiguous `Vec<f32>` with shape metadata and
+//! the handful of structural operations the rest of the crate needs.
+//! Numerics (GEMM, Cholesky, triangular solves) live in [`crate::linalg`].
+
+use crate::rng::Rng;
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    /// Zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity (or rectangular eye).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch {rows}x{cols} vs {}", data.len());
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. `N(0, std²)` entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32(0.0, std)).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. uniform `[lo, hi)` entries.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.range(lo as f64, hi as f64) as f32).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable contiguous row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j` (strided gather).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.data[i * self.cols + j] = v[i];
+        }
+    }
+
+    /// Raw storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw mutable storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = row[j];
+            }
+        }
+        t
+    }
+
+    /// Copy a block `[r0..r0+h) × [c0..c0+w)`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for i in 0..h {
+            out.row_mut(i).copy_from_slice(&self.row(r0 + i)[c0..c0 + w]);
+        }
+        out
+    }
+
+    /// Paste `src` at `(r0, c0)`.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Matrix) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols, "block out of range");
+        for i in 0..src.rows {
+            let cols = self.cols;
+            self.data[(r0 + i) * cols + c0..(r0 + i) * cols + c0 + src.cols]
+                .copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Columns `[c0, c0+w)` as a new matrix (used by the column tiler).
+    pub fn col_range(&self, c0: usize, w: usize) -> Matrix {
+        self.block(0, c0, self.rows, w)
+    }
+
+    /// Element-wise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Element-wise out-of-place map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale by a constant, out of place.
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        self.map(|v| alpha * v)
+    }
+
+    /// Hadamard (element-wise) product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.frob_sq().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Mean of entries.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// True iff every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// `||a - b||_F / max(||b||_F, eps)` — relative error helper used all
+    /// over the tests and benches.
+    pub fn rel_err(&self, reference: &Matrix) -> f64 {
+        let denom = reference.frob().max(1e-12);
+        self.sub(reference).frob() / denom
+    }
+
+    /// Pad to `(new_rows, new_cols)` with zeros (tiler support).
+    pub fn pad_to(&self, new_rows: usize, new_cols: usize) -> Matrix {
+        assert!(new_rows >= self.rows && new_cols >= self.cols);
+        let mut out = Matrix::zeros(new_rows, new_cols);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    /// Concatenate vertically: `[self; other]`.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = Vec::with_capacity((self.rows + other.rows) * self.cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    /// Gather rows by index (activation subsampling, act-order permutes).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Permute columns: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Permute rows: `out[i, :] = self[perm[i], :]`.
+    pub fn permute_rows(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.rows);
+        self.gather_rows(perm)
+    }
+}
+
+/// Inverse of a permutation vector.
+pub fn invert_perm(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32)
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = sample();
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(2), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(m.col(1), vec![1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.shape(), (4, 3));
+        assert_eq!(t.get(2, 1), m.get(1, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn block_and_set_block() {
+        let m = sample();
+        let b = m.block(1, 1, 2, 2);
+        assert_eq!(b.as_slice(), &[5.0, 6.0, 9.0, 10.0]);
+        let mut z = Matrix::zeros(3, 4);
+        z.set_block(1, 1, &b);
+        assert_eq!(z.get(2, 2), 10.0);
+        assert_eq!(z.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(1, 3, vec![3.0, 4.0, 0.0]);
+        assert!((m.frob() - 5.0).abs() < 1e-6);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn axpy_sub_add() {
+        let a = sample();
+        let mut b = a.clone();
+        b.axpy(2.0, &a);
+        assert_eq!(b.get(1, 1), 15.0);
+        assert_eq!(b.sub(&a).get(1, 1), 10.0);
+        assert_eq!(a.add(&a).get(2, 3), 22.0);
+    }
+
+    #[test]
+    fn permutations_invert() {
+        let m = sample();
+        let perm = vec![2, 0, 3, 1];
+        let inv = invert_perm(&perm);
+        let back = m.permute_cols(&perm).permute_cols(&inv);
+        assert_eq!(back, m);
+        let rperm = vec![1, 2, 0];
+        let rback = m.permute_rows(&rperm).permute_rows(&invert_perm(&rperm));
+        assert_eq!(rback, m);
+    }
+
+    #[test]
+    fn pad_and_col_range() {
+        let m = sample();
+        let p = m.pad_to(5, 6);
+        assert_eq!(p.shape(), (5, 6));
+        assert_eq!(p.get(1, 2), 6.0);
+        assert_eq!(p.get(4, 5), 0.0);
+        let c = m.col_range(1, 2);
+        assert_eq!(c.shape(), (3, 2));
+        assert_eq!(c.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let m = sample();
+        let v = m.vstack(&m);
+        assert_eq!(v.shape(), (6, 4));
+        assert_eq!(v.get(4, 1), m.get(1, 1));
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let m = sample();
+        assert!(m.rel_err(&m) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0; 5]);
+    }
+}

