@@ -34,7 +34,13 @@ fn main() -> anyhow::Result<()> {
     let x = taps.take(block, TapPoint::AttnIn).expect("tap");
     let id = LinearId { block, kind: LinearKind::Q };
     let w = wb.model.linear(id);
-    println!("layer {id} of {name}: X is {}x{}, W is {}x{}\n", x.rows(), x.cols(), w.rows(), w.cols());
+    println!(
+        "layer {id} of {name}: X is {}x{}, W is {}x{}\n",
+        x.rows(),
+        x.cols(),
+        w.rows(),
+        w.cols()
+    );
 
     // Build the BILS geometry for a handful of columns.
     let cfg = QuantConfig::paper_defaults(3, 128);

@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         &format!("End-to-end: {name} W{wbit}A16 g{group}"),
-        &["method", "ppl in-domain", "ppl shifted", "Δppl", "compress", "quant time"],
+        &["method", "ppl in-domain", "ppl shifted", "Δppl", "compress", "quant time", "capture"],
     );
     table.push_row(&[
         "BF16".into(),
@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         format!("{fp_sh:.3}"),
         "-".into(),
         "1.00x".into(),
+        "-".into(),
         "-".into(),
     ]);
     for method in methods {
@@ -78,6 +79,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:+.3}", pin - fp_in),
             format!("{:.2}x", report.compression_ratio()),
             fmt_secs(report.total_secs),
+            fmt_secs(report.capture_secs),
         ]);
         eprintln!("[pipeline] {} done ({})", method.label(), fmt_secs(report.total_secs));
     }

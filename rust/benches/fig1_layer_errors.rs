@@ -27,7 +27,7 @@ fn main() {
         let calib = wb.corpus.calibration(n_calib, seq.min(mc.max_seq), &mut rng);
         let mut layer_log: Vec<(LinearId, LayerStats)> = Vec::new();
         {
-            let mut p = Pipeline::new(wb.model.clone(), calib, Method::Ojbkq, cfg, None);
+            let mut p = Pipeline::new(&wb.model, calib, Method::Ojbkq, cfg, None);
             p.on_layer = Some(Box::new(|id, stats| layer_log.push((id, stats.clone()))));
             let _ = p.run().expect("pipeline");
         }

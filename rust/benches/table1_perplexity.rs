@@ -46,9 +46,16 @@ fn main() {
             let mut sh_vals = Vec::new();
             for &method in &methods {
                 let cfg = QuantConfig::paper_defaults(wbit, group);
-                let quantized = quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None);
+                let quantized =
+                    quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None);
                 match quantized {
-                    Ok((qm, _rep)) => {
+                    Ok((qm, rep)) => {
+                        eprintln!(
+                            "[table1] {} {}: {}",
+                            mc.name,
+                            method.label(),
+                            exp::timing_summary(&rep)
+                        );
                         let (pin, psh) = perplexity_pair(
                             &qm,
                             &wb.corpus,

@@ -6,8 +6,9 @@
 //! `results/` as markdown + CSV via [`crate::report::Table::emit`].
 
 use crate::config::ModelConfig;
-use crate::coordinator::Workbench;
+use crate::coordinator::{PipelineReport, Workbench};
 use crate::quant::Method;
+use crate::util::fmt_secs;
 use std::path::PathBuf;
 
 /// Reduced-scale mode toggle.
@@ -81,6 +82,20 @@ pub fn ppl_tokens() -> usize {
     } else {
         4_096
     }
+}
+
+/// One-line timing decomposition of a pipeline run: total wall clock,
+/// activation-capture share, solver share, and the number of
+/// transformer-block advances the captures cost (linear in depth under
+/// streaming capture).
+pub fn timing_summary(report: &PipelineReport) -> String {
+    format!(
+        "total {} (capture {} / solve {}; {} block-steps)",
+        fmt_secs(report.total_secs),
+        fmt_secs(report.capture_secs),
+        fmt_secs(report.solver_secs()),
+        report.capture_block_steps
+    )
 }
 
 #[cfg(test)]

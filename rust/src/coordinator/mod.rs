@@ -1,28 +1,54 @@
 //! The layer-wise PTQ pipeline coordinator — the L3 system that drives
-//! everything (paper §3.1 "End-to-end layer-wise procedure").
+//! everything (paper §3.1 "End-to-end layer-wise procedure"), built on a
+//! **streaming activation-propagation engine**.
 //!
-//! For each transformer block, in network order:
+//! The paper's procedure needs two activation views per linear group: the
+//! full-precision inputs `X` and the runtime inputs `X̃` from the
+//! partially-quantized prefix. The naive realization (re-running every
+//! calibration sequence from block 0 for each of the four groups of each
+//! block) costs O(n_blocks²·calib) forwards and dominates wall-clock. The
+//! streaming engine instead keeps **paired hidden-state caches** — one FP
+//! and one runtime matrix per calibration sequence — and advances each
+//! exactly once per block via [`Model::block_step`]:
 //!
-//! 1. run the calibration set through the **full-precision** model once,
-//!    capturing the inputs `X` of all four tap points;
-//! 2. for each linear group (`[Q K V] → [O] → [Gate Up] → [Down]`):
-//!    re-run the **partially quantized** model to capture the *runtime*
-//!    inputs `X̃` (upstream layers — including earlier groups of the same
-//!    block — already quantized), then quantize every linear in the
-//!    group with the configured solver and splice the dequantized weight
-//!    back into the running model.
+//! 1. one FP `block_step` per sequence captures all four reference taps
+//!    (`X`) of the block and advances the FP cache;
+//! 2. the runtime taps (`X̃`) are produced by recomputing only the
+//!    *intra-block* stage invalidated by the previous group's weight
+//!    splice — `AttnIn` is a norm of the resident state, `OIn` re-runs
+//!    attention with the freshly spliced Q/K/V, `MlpIn` applies the
+//!    attention residual + norm, `DownIn` the SwiGLU with the spliced
+//!    Gate/Up — never re-touching blocks `< block`;
+//! 3. after the `Down` splice the runtime cache advances via the MLP
+//!    residual, completing that cache's single step for the block.
+//!
+//! Summed over a block, the runtime refreshes cost exactly one block
+//! forward, so calibration is **linear in depth**: `2·n_blocks·n_calib`
+//! block advances total (tracked in
+//! [`PipelineReport::capture_block_steps`]). Per-sequence steps run in
+//! parallel via [`crate::parallel::parallel_map`]; results are stacked in
+//! sequence order, so the pipeline stays bit-exactly deterministic.
+//!
+//! [`CaptureMode::Reforward`] retains the legacy O(n_blocks²) prefix
+//! re-forward path — used by equivalence tests and the Figure-4 speedup
+//! bench, never by the default pipeline.
 //!
 //! This is exactly the error-propagation regime the JTA objective is
 //! designed for: `X̃` drifts from `X` as quantization progresses, and μ
 //! controls which reference the layer aligns to.
+//!
+//! [`Model::block_step`]: crate::model::Model::block_step
 
 use crate::config::ModelConfig;
 use crate::data::Corpus;
 use crate::model::{LinearId, LinearKind, Model, TapPoint, TapSet};
+use crate::parallel::parallel_map;
 use crate::quant::{quantize_layer, LayerStats, Method, QuantConfig};
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
 use crate::tensor::Matrix;
+use std::collections::HashMap;
+use std::time::Instant;
 
 /// Per-layer record in the pipeline report.
 #[derive(Debug, Clone)]
@@ -40,6 +66,13 @@ pub struct LayerRecord {
 pub struct PipelineReport {
     pub layers: Vec<LayerRecord>,
     pub total_secs: f64,
+    /// Wall-clock seconds spent producing calibration activations
+    /// (embedding, block advances and intra-block tap refreshes).
+    pub capture_secs: f64,
+    /// Number of transformer-block advances performed for calibration —
+    /// `2·n_blocks·n_calib` under streaming capture, quadratic in depth
+    /// under [`CaptureMode::Reforward`].
+    pub capture_block_steps: u64,
     pub method: String,
 }
 
@@ -51,39 +84,84 @@ impl PipelineReport {
         fp as f64 / packed.max(1) as f64
     }
 
-    /// Total solver seconds (excluding calibration forwards).
+    /// Total solver seconds (excluding calibration captures).
     pub fn solver_secs(&self) -> f64 {
         self.layers.iter().map(|l| l.stats.solve_secs).sum()
     }
 }
 
-/// The pipeline: owns the reference model, the progressively-quantized
-/// model, and the calibration set.
+/// How the pipeline obtains calibration activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CaptureMode {
+    /// Streaming activation propagation: paired resident hidden-state
+    /// caches advanced once per block (default; linear in depth).
+    Streaming,
+    /// Legacy prefix re-forwards from block 0 for every capture
+    /// (quadratic in depth). Kept for equivalence tests and benches.
+    Reforward,
+}
+
+/// Linear groups sharing a tap point, in dataflow order.
+const GROUPS: [(&[LinearKind], TapPoint); 4] = [
+    (&[LinearKind::Q, LinearKind::K, LinearKind::V], TapPoint::AttnIn),
+    (&[LinearKind::O], TapPoint::OIn),
+    (&[LinearKind::Gate, LinearKind::Up], TapPoint::MlpIn),
+    (&[LinearKind::Down], TapPoint::DownIn),
+];
+
+/// The pipeline: borrows the reference model, owns the progressively
+/// quantized model, the calibration set, and the paired FP / runtime
+/// hidden-state caches (one matrix per calibration sequence).
 pub struct Pipeline<'a> {
-    fp_model: Model,
+    fp_model: &'a Model,
     quant_model: Model,
     calib: Vec<Vec<u16>>,
     method: Method,
     cfg: QuantConfig,
     rt: Option<&'a SolverRuntime>,
+    capture_mode: CaptureMode,
+    /// FP hidden states at the entry of the current block.
+    fp_hidden: Vec<Matrix>,
+    /// Runtime (partially-quantized) hidden states at the same position.
+    rt_hidden: Vec<Matrix>,
     /// Progress callback (layer id, stats) for streaming metrics.
     pub on_layer: Option<Box<dyn FnMut(LinearId, &LayerStats) + 'a>>,
 }
 
 impl<'a> Pipeline<'a> {
+    /// Build a pipeline. Borrows `model` as the FP reference and clones it
+    /// exactly once for the progressively-quantized working copy.
     pub fn new(
-        model: Model,
+        model: &'a Model,
         calib: Vec<Vec<u16>>,
         method: Method,
         cfg: QuantConfig,
         rt: Option<&'a SolverRuntime>,
     ) -> Pipeline<'a> {
         assert!(!calib.is_empty(), "empty calibration set");
-        Pipeline { quant_model: model.clone(), fp_model: model, calib, method, cfg, rt, on_layer: None }
+        Pipeline {
+            fp_model: model,
+            quant_model: model.clone(),
+            calib,
+            method,
+            cfg,
+            rt,
+            capture_mode: CaptureMode::Streaming,
+            fp_hidden: Vec::new(),
+            rt_hidden: Vec::new(),
+            on_layer: None,
+        }
     }
 
-    /// Run the calibration set through `model`, capturing `points` of
-    /// `block`. Only blocks `0..=block` are computed.
+    /// Select the capture strategy (default: [`CaptureMode::Streaming`]).
+    pub fn with_capture_mode(mut self, mode: CaptureMode) -> Pipeline<'a> {
+        self.capture_mode = mode;
+        self
+    }
+
+    /// Legacy capture: run the calibration set through `model` from the
+    /// embedding, capturing `points` of `block`. Only blocks `0..=block`
+    /// are computed. `CaptureMode::Reforward` only.
     fn capture(model: &Model, calib: &[Vec<u16>], block: usize, points: &[TapPoint]) -> TapSet {
         let mut taps = TapSet::request(block, points);
         for seq in calib {
@@ -94,7 +172,7 @@ impl<'a> Pipeline<'a> {
 
     /// Execute the pipeline; returns the quantized model and report.
     pub fn run(mut self) -> anyhow::Result<(Model, PipelineReport)> {
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let mut report =
             PipelineReport { method: self.method.label().to_string(), ..Default::default() };
         if self.method == Method::Fp {
@@ -102,66 +180,225 @@ impl<'a> Pipeline<'a> {
             return Ok((self.quant_model, report));
         }
         let n_blocks = self.fp_model.blocks.len();
-        // Linear groups sharing a tap point, in dataflow order.
-        let groups: [(&[LinearKind], TapPoint); 4] = [
-            (&[LinearKind::Q, LinearKind::K, LinearKind::V], TapPoint::AttnIn),
-            (&[LinearKind::O], TapPoint::OIn),
-            (&[LinearKind::Gate, LinearKind::Up], TapPoint::MlpIn),
-            (&[LinearKind::Down], TapPoint::DownIn),
-        ];
+        if self.capture_mode == CaptureMode::Streaming {
+            // Embed every calibration sequence once; the paired caches
+            // then advance exactly once per block. Quantization never
+            // touches the embedding, so the runtime cache starts as an
+            // exact copy of the FP cache.
+            let tc = Instant::now();
+            let model = self.fp_model;
+            let calib = &self.calib;
+            self.fp_hidden = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+            self.rt_hidden = self.fp_hidden.clone();
+            report.capture_secs += tc.elapsed().as_secs_f64();
+        }
         for block in 0..n_blocks {
-            // One FP capture of all tap points for this block.
-            let mut fp_taps = Self::capture(
-                &self.fp_model,
-                &self.calib,
-                block,
-                &[TapPoint::AttnIn, TapPoint::OIn, TapPoint::MlpIn, TapPoint::DownIn],
-            );
-            let mut fp_x: std::collections::HashMap<TapPoint, Matrix> = Default::default();
-            for p in [TapPoint::AttnIn, TapPoint::OIn, TapPoint::MlpIn, TapPoint::DownIn] {
-                fp_x.insert(p, fp_taps.take(block, p).expect("fp tap missing"));
-            }
-            for (kinds, point) in groups.iter() {
-                // Runtime capture reflects all quantization done so far.
-                let mut rt_taps = Self::capture(&self.quant_model, &self.calib, block, &[*point]);
-                let x_rt = rt_taps.take(block, *point).expect("rt tap missing");
-                let x_fp = &fp_x[point];
-                for &kind in kinds.iter() {
-                    let id = LinearId { block, kind };
-                    let w = self.fp_model.linear(id).clone();
-                    let layer_uid = (block * 8 + layer_index(kind)) as u64;
-                    // Per-layer μ schedule (paper Limitations / future
-                    // work): resolve the depth-interpolated μ here so
-                    // every solver sees a plain fixed-μ config.
-                    let mut layer_cfg = self.cfg.clone();
-                    if let crate::quant::MuSchedule::DepthLinear { start, end } =
-                        self.cfg.mu_schedule
-                    {
-                        let frac = if n_blocks > 1 {
-                            block as f64 / (n_blocks - 1) as f64
-                        } else {
-                            0.0
-                        };
-                        layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
-                    }
-                    let (q, stats) =
-                        quantize_layer(self.method, &w, x_fp, &x_rt, &layer_cfg, layer_uid, self.rt)?;
-                    if let Some(cb) = self.on_layer.as_mut() {
-                        cb(id, &stats);
-                    }
-                    report.layers.push(LayerRecord {
-                        id,
-                        packed_bytes: q.packed_bytes(),
-                        fp_bytes: w.len() * 4,
-                        stats,
-                    });
-                    self.quant_model.set_linear(id, q.dequantize());
-                }
+            match self.capture_mode {
+                CaptureMode::Streaming => self.run_block_streaming(block, n_blocks, &mut report)?,
+                CaptureMode::Reforward => self.run_block_reforward(block, n_blocks, &mut report)?,
             }
         }
         report.total_secs = t0.elapsed().as_secs_f64();
         Ok((self.quant_model, report))
     }
+
+    /// Advance the FP cache one block (in parallel over sequences),
+    /// returning the four stacked reference tap matrices.
+    fn step_fp(
+        &mut self,
+        block: usize,
+        report: &mut PipelineReport,
+    ) -> HashMap<TapPoint, Matrix> {
+        let t0 = Instant::now();
+        let model = self.fp_model;
+        let hidden = &self.fp_hidden;
+        let n = self.calib.len();
+        let stepped: Vec<(Matrix, TapSet)> = parallel_map(n, |i| {
+            let mut h = hidden[i].clone();
+            let mut taps = TapSet::request(block, &TapPoint::all());
+            model.block_step(&mut h, block, &mut taps);
+            (h, taps)
+        });
+        let mut new_hidden = Vec::with_capacity(n);
+        let mut parts: HashMap<TapPoint, Vec<Matrix>> = HashMap::new();
+        for (h, mut taps) in stepped {
+            new_hidden.push(h);
+            for p in TapPoint::all() {
+                parts.entry(p).or_default().push(taps.take(block, p).expect("fp tap missing"));
+            }
+        }
+        self.fp_hidden = new_hidden;
+        report.capture_block_steps += n as u64;
+        report.capture_secs += t0.elapsed().as_secs_f64();
+        parts.into_iter().map(|(p, v)| (p, stack_rows(&v))).collect()
+    }
+
+    /// Quantize one block under streaming capture: a single FP cache
+    /// advance, four intra-block runtime refreshes (one per group, each
+    /// recomputing only the stage invalidated by the previous splice),
+    /// and a single runtime cache advance.
+    fn run_block_streaming(
+        &mut self,
+        block: usize,
+        n_blocks: usize,
+        report: &mut PipelineReport,
+    ) -> anyhow::Result<()> {
+        let n = self.calib.len();
+        let fp_x = self.step_fp(block, report);
+
+        // Group [Q K V]: AttnIn is a norm of the resident runtime state —
+        // no upstream weights of this block are involved.
+        let t0 = Instant::now();
+        let attn_in: Vec<Matrix> = {
+            let model = &self.quant_model;
+            let hidden = &self.rt_hidden;
+            parallel_map(n, |i| model.attn_in(&hidden[i], block))
+        };
+        let x_rt = stack_rows(&attn_in);
+        let cap = t0.elapsed().as_secs_f64();
+        report.capture_secs += cap;
+        let x_fp = &fp_x[&TapPoint::AttnIn];
+        self.quantize_group(report, block, n_blocks, GROUPS[0].0, x_fp, &x_rt, cap)?;
+
+        // Group [O]: re-run attention with the freshly spliced Q/K/V.
+        let t0 = Instant::now();
+        let ctx: Vec<Matrix> = {
+            let model = &self.quant_model;
+            parallel_map(n, |i| model.attn_ctx(&attn_in[i], block))
+        };
+        let x_rt = stack_rows(&ctx);
+        let cap = t0.elapsed().as_secs_f64();
+        report.capture_secs += cap;
+        let x_fp = &fp_x[&TapPoint::OIn];
+        self.quantize_group(report, block, n_blocks, GROUPS[1].0, x_fp, &x_rt, cap)?;
+
+        // Group [Gate Up]: attention residual + MLP norm after the O
+        // splice.
+        let t0 = Instant::now();
+        let (x_mid, mlp_in): (Vec<Matrix>, Vec<Matrix>) = {
+            let model = &self.quant_model;
+            let hidden = &self.rt_hidden;
+            parallel_map(n, |i| {
+                let mid = model.post_attn(&hidden[i], &ctx[i], block);
+                let h2 = model.mlp_in(&mid, block);
+                (mid, h2)
+            })
+            .into_iter()
+            .unzip()
+        };
+        let x_rt = stack_rows(&mlp_in);
+        let cap = t0.elapsed().as_secs_f64();
+        report.capture_secs += cap;
+        let x_fp = &fp_x[&TapPoint::MlpIn];
+        self.quantize_group(report, block, n_blocks, GROUPS[2].0, x_fp, &x_rt, cap)?;
+
+        // Group [Down]: SwiGLU with the spliced Gate/Up.
+        let t0 = Instant::now();
+        let act: Vec<Matrix> = {
+            let model = &self.quant_model;
+            parallel_map(n, |i| model.mlp_act(&mlp_in[i], block))
+        };
+        let x_rt = stack_rows(&act);
+        let cap = t0.elapsed().as_secs_f64();
+        report.capture_secs += cap;
+        let x_fp = &fp_x[&TapPoint::DownIn];
+        self.quantize_group(report, block, n_blocks, GROUPS[3].0, x_fp, &x_rt, cap)?;
+
+        // Advance the runtime cache through the MLP residual with the
+        // spliced Down — completing this cache's single step for the
+        // block. Blocks `< block` are never touched again.
+        let t0 = Instant::now();
+        self.rt_hidden = {
+            let model = &self.quant_model;
+            parallel_map(n, |i| model.post_mlp(&x_mid[i], &act[i], block))
+        };
+        report.capture_block_steps += n as u64;
+        report.capture_secs += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Quantize one block under legacy prefix re-forward capture.
+    fn run_block_reforward(
+        &mut self,
+        block: usize,
+        n_blocks: usize,
+        report: &mut PipelineReport,
+    ) -> anyhow::Result<()> {
+        let n = self.calib.len() as u64;
+        let t0 = Instant::now();
+        let mut fp_taps = Self::capture(self.fp_model, &self.calib, block, &TapPoint::all());
+        report.capture_block_steps += n * (block as u64 + 1);
+        report.capture_secs += t0.elapsed().as_secs_f64();
+        let mut fp_x: HashMap<TapPoint, Matrix> = HashMap::new();
+        for p in TapPoint::all() {
+            fp_x.insert(p, fp_taps.take(block, p).expect("fp tap missing"));
+        }
+        for (kinds, point) in GROUPS.iter() {
+            // Runtime capture reflects all quantization done so far.
+            let t0 = Instant::now();
+            let mut rt_taps = Self::capture(&self.quant_model, &self.calib, block, &[*point]);
+            let x_rt = rt_taps.take(block, *point).expect("rt tap missing");
+            report.capture_block_steps += n * (block as u64 + 1);
+            let cap = t0.elapsed().as_secs_f64();
+            report.capture_secs += cap;
+            self.quantize_group(report, block, n_blocks, kinds, &fp_x[point], &x_rt, cap)?;
+        }
+        Ok(())
+    }
+
+    /// Quantize every linear of one group against `(x_fp, x_rt)` and
+    /// splice the dequantized weights into the running model.
+    #[allow(clippy::too_many_arguments)]
+    fn quantize_group(
+        &mut self,
+        report: &mut PipelineReport,
+        block: usize,
+        n_blocks: usize,
+        kinds: &[LinearKind],
+        x_fp: &Matrix,
+        x_rt: &Matrix,
+        capture_secs: f64,
+    ) -> anyhow::Result<()> {
+        let per_layer_capture = capture_secs / kinds.len() as f64;
+        for &kind in kinds {
+            let id = LinearId { block, kind };
+            let w = self.fp_model.linear(id).clone();
+            let layer_uid = (block * 8 + layer_index(kind)) as u64;
+            // Per-layer μ schedule (paper Limitations / future work):
+            // resolve the depth-interpolated μ here so every solver sees
+            // a plain fixed-μ config.
+            let mut layer_cfg = self.cfg.clone();
+            if let crate::quant::MuSchedule::DepthLinear { start, end } = self.cfg.mu_schedule {
+                let frac = if n_blocks > 1 {
+                    block as f64 / (n_blocks - 1) as f64
+                } else {
+                    0.0
+                };
+                layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
+            }
+            let (q, mut stats) =
+                quantize_layer(self.method, &w, x_fp, x_rt, &layer_cfg, layer_uid, self.rt)?;
+            stats.capture_secs = per_layer_capture;
+            if let Some(cb) = self.on_layer.as_mut() {
+                cb(id, &stats);
+            }
+            report.layers.push(LayerRecord {
+                id,
+                packed_bytes: q.packed_bytes(),
+                fp_bytes: w.len() * 4,
+                stats,
+            });
+            self.quant_model.set_linear(id, q.dequantize());
+        }
+        Ok(())
+    }
+}
+
+/// Vertically stack per-sequence capture matrices in sequence order
+/// (the same single-allocation concatenation [`TapSet::take`] uses, so
+/// streaming and legacy captures agree bit-for-bit).
+fn stack_rows(parts: &[Matrix]) -> Matrix {
+    Matrix::vstack_all(parts)
 }
 
 fn layer_index(kind: LinearKind) -> usize {
@@ -169,7 +406,8 @@ fn layer_index(kind: LinearKind) -> usize {
 }
 
 /// Convenience wrapper: quantize `model` with `method` using `n_calib`
-/// sequences of `seq_len` drawn from the corpus train split.
+/// sequences of `seq_len` drawn from the corpus train split. The model is
+/// borrowed and cloned exactly once (for the working copy).
 pub fn quantize_model(
     model: &Model,
     corpus: &Corpus,
@@ -181,7 +419,7 @@ pub fn quantize_model(
 ) -> anyhow::Result<(Model, PipelineReport)> {
     let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
     let calib = corpus.calibration(n_calib, seq_len.min(model.cfg.max_seq), &mut rng);
-    Pipeline::new(model.clone(), calib, method, cfg.clone(), rt).run()
+    Pipeline::new(model, calib, method, cfg.clone(), rt).run()
 }
 
 /// Standard experiment setup: model + paired corpora (in-domain "C4" and
@@ -320,12 +558,35 @@ mod tests {
         let calib = corpus.calibration(2, 16, &mut rng);
         let mut seen = Vec::new();
         {
-            let mut p = Pipeline::new(model, calib, Method::Rtn, cfg, None);
+            let mut p = Pipeline::new(&model, calib, Method::Rtn, cfg, None);
             p.on_layer = Some(Box::new(|id, _| seen.push(id)));
             let _ = p.run().unwrap();
         }
         assert_eq!(seen.len(), 14);
         assert_eq!(seen[0], LinearId { block: 0, kind: LinearKind::Q });
+    }
+
+    #[test]
+    fn streaming_capture_cost_is_linear_in_depth() {
+        let (model, corpus) = setup();
+        let mut rng = Rng::new(9);
+        let n_calib = 3usize;
+        let calib = corpus.calibration(n_calib, 16, &mut rng);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        let (_, rep) =
+            Pipeline::new(&model, calib.clone(), Method::Rtn, cfg.clone(), None).run().unwrap();
+        let n_blocks = model.blocks.len() as u64;
+        // One FP advance + one runtime advance per block per sequence.
+        assert_eq!(rep.capture_block_steps, 2 * n_calib as u64 * n_blocks);
+        // Legacy: 5 prefix forwards per block (1 FP + 4 runtime), each
+        // (block+1) blocks deep — quadratic in depth.
+        let (_, rep_legacy) = Pipeline::new(&model, calib, Method::Rtn, cfg, None)
+            .with_capture_mode(CaptureMode::Reforward)
+            .run()
+            .unwrap();
+        let quadratic: u64 = (0..n_blocks).map(|b| 5 * n_calib as u64 * (b + 1)).sum();
+        assert_eq!(rep_legacy.capture_block_steps, quadratic);
+        assert!(rep.capture_block_steps < rep_legacy.capture_block_steps);
     }
 
     #[test]

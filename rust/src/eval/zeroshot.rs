@@ -29,13 +29,20 @@ pub struct ZeroShotTask {
 impl ZeroShotTask {
     /// The six suites standing in for ARC-C/ARC-E/BoolQ/Hella/PIQA/Wino.
     pub fn suite() -> Vec<ZeroShotTask> {
+        let t = |name, context_len, cont_len, n_choices, minimal_pair| ZeroShotTask {
+            name,
+            context_len,
+            cont_len,
+            n_choices,
+            minimal_pair,
+        };
         vec![
-            ZeroShotTask { name: "ARC-C", context_len: 12, cont_len: 8, n_choices: 4, minimal_pair: false },
-            ZeroShotTask { name: "ARC-E", context_len: 32, cont_len: 4, n_choices: 4, minimal_pair: false },
-            ZeroShotTask { name: "BoolQ", context_len: 24, cont_len: 6, n_choices: 2, minimal_pair: false },
-            ZeroShotTask { name: "Hella", context_len: 24, cont_len: 12, n_choices: 4, minimal_pair: false },
-            ZeroShotTask { name: "PIQA", context_len: 16, cont_len: 8, n_choices: 2, minimal_pair: false },
-            ZeroShotTask { name: "Wino", context_len: 32, cont_len: 4, n_choices: 2, minimal_pair: true },
+            t("ARC-C", 12, 8, 4, false),
+            t("ARC-E", 32, 4, 4, false),
+            t("BoolQ", 24, 6, 2, false),
+            t("Hella", 24, 12, 4, false),
+            t("PIQA", 16, 8, 2, false),
+            t("Wino", 32, 4, 2, true),
         ]
     }
 }

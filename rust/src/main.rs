@@ -156,9 +156,11 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
             }
         };
     println!(
-        "done in {} (solver {}); compression {:.2}x over fp32",
+        "done in {} (capture {} / solver {}, {} block-steps); compression {:.2}x over fp32",
         fmt_secs(report.total_secs),
+        fmt_secs(report.capture_secs),
         fmt_secs(report.solver_secs()),
+        report.capture_block_steps,
         report.compression_ratio()
     );
     if let Some(out) = args.get("out") {

@@ -32,7 +32,11 @@ pub fn save_model(model: &Model, path: &Path) -> anyhow::Result<()> {
         "{} {} {} {} {} {}",
         c.vocab_size, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq
     )?;
-    let mut write_tensor = |name: &str, rows: usize, cols: usize, data: &[f32]| -> anyhow::Result<()> {
+    let mut write_tensor = |name: &str,
+                            rows: usize,
+                            cols: usize,
+                            data: &[f32]|
+     -> anyhow::Result<()> {
         writeln!(w, "{name}")?;
         writeln!(w, "{rows} {cols}")?;
         w.write_all(&f32s_to_bytes(data))?;

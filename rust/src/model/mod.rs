@@ -11,6 +11,17 @@
 //! addressed by [`LinearId`], and [`Model::forward_with_taps`] captures
 //! the *inputs* of any requested linears — the `X` / `X̃` matrices of the
 //! paper's layer-wise objectives — in one pass.
+//!
+//! The forward pass is factored into a **block-resident API** —
+//! [`Model::embed_sequence`] produces a hidden-state matrix, and
+//! [`Model::block_step`] advances it one transformer block (recording
+//! taps), with [`Model::lm_head`] projecting to logits. The streaming
+//! pipeline coordinator keeps one resident hidden state per calibration
+//! sequence and advances each exactly once per block, instead of
+//! re-forwarding the whole prefix; `block_step` itself is composed of the
+//! six per-stage pieces (`attn_in` → `attn_ctx` → `post_attn` → `mlp_in`
+//! → `mlp_act` → `post_mlp`) so a single stage can be recomputed after a
+//! weight splice without touching anything upstream.
 
 mod io;
 
@@ -98,6 +109,13 @@ pub enum TapPoint {
     DownIn,
 }
 
+impl TapPoint {
+    /// All four tap points in dataflow order.
+    pub fn all() -> [TapPoint; 4] {
+        [TapPoint::AttnIn, TapPoint::OIn, TapPoint::MlpIn, TapPoint::DownIn]
+    }
+}
+
 /// A capture request + storage: rows accumulate across forward calls.
 #[derive(Debug, Default)]
 pub struct TapSet {
@@ -116,15 +134,13 @@ impl TapSet {
         }
     }
 
-    /// Concatenated captured rows for a tap.
+    /// Concatenated captured rows for a tap (in capture order).
     pub fn take(&mut self, block: usize, point: TapPoint) -> Option<Matrix> {
         let mats = self.data.remove(&(block, point))?;
-        let mut it = mats.into_iter();
-        let mut acc = it.next()?;
-        for m in it {
-            acc = acc.vstack(&m);
+        if mats.is_empty() {
+            return None;
         }
-        Some(acc)
+        Some(Matrix::vstack_all(&mats))
     }
 }
 
@@ -227,9 +243,11 @@ impl Model {
         self.forward_with_taps(tokens, &mut TapSet::default())
     }
 
-    /// Tap-only forward that stops after `until_block` (inclusive) — the
-    /// coordinator's calibration captures never need later blocks or the
-    /// LM head, which roughly halves capture cost mid-network.
+    /// Legacy tap-only forward that stops after `until_block` (inclusive).
+    /// Retained for the coordinator's `CaptureMode::Reforward` equivalence
+    /// path and ad-hoc inspection; the streaming pipeline uses
+    /// [`Model::embed_sequence`] + [`Model::block_step`] instead, which
+    /// advance a resident hidden state once per block.
     pub fn forward_prefix_taps(&self, tokens: &[u16], taps: &mut TapSet, until_block: usize) {
         self.forward_impl(tokens, taps, Some(until_block));
     }
@@ -246,10 +264,23 @@ impl Model {
         taps: &mut TapSet,
         until_block: Option<usize>,
     ) -> Option<Matrix> {
+        let mut x = self.embed_sequence(tokens);
+        for bi in 0..self.blocks.len() {
+            self.block_step(&mut x, bi, taps);
+            if until_block == Some(bi) {
+                return None;
+            }
+        }
+        Some(self.lm_head(&x))
+    }
+
+    /// Token embedding + sinusoidal positions (matches pretrain.py): the
+    /// initial `seq × d` hidden-state matrix of the block-resident
+    /// forward API. Embed once, then advance with [`Model::block_step`].
+    pub fn embed_sequence(&self, tokens: &[u16]) -> Matrix {
         let seq = tokens.len();
         assert!(seq <= self.cfg.max_seq, "sequence too long");
         let d = self.cfg.d_model;
-        // Token embedding + sinusoidal positions (matches pretrain.py).
         let mut x = Matrix::zeros(seq, d);
         for (t, &tok) in tokens.iter().enumerate() {
             let emb = self.embedding.row(tok as usize);
@@ -265,33 +296,75 @@ impl Model {
                 row[2 * i + 1] += 0.02 * angle.cos() as f32;
             }
         }
-        for (bi, block) in self.blocks.iter().enumerate() {
-            // Attention.
-            let h = rmsnorm(&x, &block.attn_norm);
-            taps.record(bi, TapPoint::AttnIn, &h);
-            let q = matmul(&h, &block.wq);
-            let k = matmul(&h, &block.wk);
-            let v = matmul(&h, &block.wv);
-            let attn = causal_attention(&q, &k, &v, self.cfg.n_heads);
-            taps.record(bi, TapPoint::OIn, &attn);
-            let o = matmul(&attn, &block.wo);
-            x = x.add(&o);
-            // MLP (SwiGLU).
-            let h2 = rmsnorm(&x, &block.mlp_norm);
-            taps.record(bi, TapPoint::MlpIn, &h2);
-            let g = matmul(&h2, &block.wgate);
-            let u = matmul(&h2, &block.wup);
-            let act = Matrix::from_fn(seq, self.cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j));
-            taps.record(bi, TapPoint::DownIn, &act);
-            let down = matmul(&act, &block.wdown);
-            x = x.add(&down);
-            if until_block == Some(bi) {
-                return None;
-            }
-        }
-        let xf = rmsnorm(&x, &self.final_norm);
-        // Tied head: logits = x · Eᵀ.
-        Some(matmul(&xf, &self.embedding.transpose()))
+        x
+    }
+
+    /// Advance a resident hidden state through block `block_idx` in place,
+    /// recording any requested taps. Composed of the per-stage pieces
+    /// below so the streaming coordinator can recompute an individual
+    /// stage (e.g. the attention context after a Q/K/V splice) without
+    /// re-running anything upstream — `forward` and the pipeline captures
+    /// therefore share the exact same arithmetic, bit for bit.
+    pub fn block_step(&self, hidden: &mut Matrix, block_idx: usize, taps: &mut TapSet) {
+        let h = self.attn_in(hidden, block_idx);
+        taps.record(block_idx, TapPoint::AttnIn, &h);
+        let ctx = self.attn_ctx(&h, block_idx);
+        taps.record(block_idx, TapPoint::OIn, &ctx);
+        let x_mid = self.post_attn(hidden, &ctx, block_idx);
+        let h2 = self.mlp_in(&x_mid, block_idx);
+        taps.record(block_idx, TapPoint::MlpIn, &h2);
+        let act = self.mlp_act(&h2, block_idx);
+        taps.record(block_idx, TapPoint::DownIn, &act);
+        *hidden = self.post_mlp(&x_mid, &act, block_idx);
+    }
+
+    /// Stage 1: post-attn-RMSNorm of the resident hidden state — the
+    /// `AttnIn` tap (input of Q/K/V).
+    pub fn attn_in(&self, hidden: &Matrix, block_idx: usize) -> Matrix {
+        rmsnorm(hidden, &self.blocks[block_idx].attn_norm)
+    }
+
+    /// Stage 2: Q/K/V projections + causal attention over `attn_in` — the
+    /// `OIn` tap (concatenated head outputs, input of O).
+    pub fn attn_ctx(&self, attn_in: &Matrix, block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let q = matmul(attn_in, &block.wq);
+        let k = matmul(attn_in, &block.wk);
+        let v = matmul(attn_in, &block.wv);
+        causal_attention(&q, &k, &v, self.cfg.n_heads)
+    }
+
+    /// Stage 3: output projection + attention residual:
+    /// `x_mid = hidden + ctx · Wo`.
+    pub fn post_attn(&self, hidden: &Matrix, ctx: &Matrix, block_idx: usize) -> Matrix {
+        hidden.add(&matmul(ctx, &self.blocks[block_idx].wo))
+    }
+
+    /// Stage 4: post-mlp-RMSNorm of `x_mid` — the `MlpIn` tap (input of
+    /// Gate/Up).
+    pub fn mlp_in(&self, x_mid: &Matrix, block_idx: usize) -> Matrix {
+        rmsnorm(x_mid, &self.blocks[block_idx].mlp_norm)
+    }
+
+    /// Stage 5: SwiGLU activation `silu(mlp_in·Wgate) ⊙ (mlp_in·Wup)` —
+    /// the `DownIn` tap (input of Down).
+    pub fn mlp_act(&self, mlp_in: &Matrix, block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let g = matmul(mlp_in, &block.wgate);
+        let u = matmul(mlp_in, &block.wup);
+        Matrix::from_fn(mlp_in.rows(), self.cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j))
+    }
+
+    /// Stage 6: down projection + MLP residual — the next block's resident
+    /// hidden state: `x' = x_mid + act · Wdown`.
+    pub fn post_mlp(&self, x_mid: &Matrix, act: &Matrix, block_idx: usize) -> Matrix {
+        x_mid.add(&matmul(act, &self.blocks[block_idx].wdown))
+    }
+
+    /// Final RMSNorm + tied LM head: `logits = norm(hidden) · Eᵀ`.
+    pub fn lm_head(&self, hidden: &Matrix) -> Matrix {
+        let xf = rmsnorm(hidden, &self.final_norm);
+        matmul(&xf, &self.embedding.transpose())
     }
 
     /// Sum of token negative log-likelihoods for positions `1..seq`
@@ -456,6 +529,65 @@ mod tests {
         let _ = m.forward_with_taps(&[1, 2, 3], &mut taps);
         let _ = m.forward_with_taps(&[4, 5], &mut taps);
         assert_eq!(taps.take(0, TapPoint::MlpIn).unwrap().rows(), 5);
+    }
+
+    #[test]
+    fn block_step_chain_matches_forward() {
+        // Embedding + per-block stepping + head must reproduce `forward`
+        // exactly (they share the same code path by construction).
+        let mut rng = Rng::new(21);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9];
+        let mut taps = TapSet::default();
+        let mut x = m.embed_sequence(&toks);
+        for bi in 0..m.blocks.len() {
+            m.block_step(&mut x, bi, &mut taps);
+        }
+        let logits = m.lm_head(&x);
+        assert!(logits.rel_err(&m.forward(&toks)) < 1e-12);
+    }
+
+    #[test]
+    fn block_step_taps_match_prefix_forward_taps() {
+        let mut rng = Rng::new(22);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = vec![7, 2, 9, 11];
+        for block in 0..m.blocks.len() {
+            let mut legacy = TapSet::request(block, &TapPoint::all());
+            m.forward_prefix_taps(&toks, &mut legacy, block);
+            let mut streaming = TapSet::request(block, &TapPoint::all());
+            let mut x = m.embed_sequence(&toks);
+            for bi in 0..=block {
+                let mut sink = TapSet::default();
+                let taps =
+                    if bi == block { &mut streaming } else { &mut sink };
+                m.block_step(&mut x, bi, taps);
+            }
+            for p in TapPoint::all() {
+                let a = legacy.take(block, p).unwrap();
+                let b = streaming.take(block, p).unwrap();
+                assert!(b.rel_err(&a) < 1e-12, "block {block} {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_stages_compose_into_block_step() {
+        let mut rng = Rng::new(23);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let toks: Vec<u16> = vec![8, 6, 7, 5, 3];
+        let x0 = m.embed_sequence(&toks);
+        // Manual stage composition.
+        let h = m.attn_in(&x0, 0);
+        let ctx = m.attn_ctx(&h, 0);
+        let x_mid = m.post_attn(&x0, &ctx, 0);
+        let h2 = m.mlp_in(&x_mid, 0);
+        let act = m.mlp_act(&h2, 0);
+        let manual = m.post_mlp(&x_mid, &act, 0);
+        // block_step on the same input.
+        let mut x = x0.clone();
+        m.block_step(&mut x, 0, &mut TapSet::default());
+        assert!(x.rel_err(&manual) < 1e-12);
     }
 
     #[test]

@@ -230,6 +230,10 @@ pub struct LayerStats {
     pub out_norm: f64,
     /// Wall-clock seconds spent in the solver.
     pub solve_secs: f64,
+    /// Wall-clock seconds of calibration capture attributed to this layer
+    /// (its group's activation refresh, split evenly across the group).
+    /// Filled in by the pipeline coordinator; 0 for standalone solves.
+    pub capture_secs: f64,
 }
 
 /// Uniform entry point: quantize one linear layer.
@@ -259,7 +263,9 @@ pub fn quantize_layer(
         Method::Gptq => gptq::quantize(w, x_rt, cfg)?,
         Method::Awq => awq::quantize(w, x_rt, cfg),
         Method::Quip => quip::quantize(w, x_rt, cfg, &mut rng)?,
-        Method::BabaiNaive => ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_naive(cfg), &mut rng, rt)?,
+        Method::BabaiNaive => {
+            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_naive(cfg), &mut rng, rt)?
+        }
         Method::KleinRandomK => {
             ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_random_k(cfg), &mut rng, rt)?
         }
@@ -293,6 +299,7 @@ pub fn layer_stats(
         rt_err: y_hat.sub(&y_rt).frob(),
         out_norm: y_fp.frob(),
         solve_secs,
+        capture_secs: 0.0,
     }
 }
 

@@ -44,7 +44,8 @@ impl Rng {
     /// advancing `self`. Used to hand each weight-column / data-shard its
     /// own generator so parallel order never changes results.
     pub fn fork(&self, stream: u64) -> Rng {
-        let mut sm = self.s[0] ^ self.s[2].rotate_left(17) ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut sm =
+            self.s[0] ^ self.s[2].rotate_left(17) ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
         let mut s = [0u64; 4];
         for slot in s.iter_mut() {
             *slot = splitmix64(&mut sm);

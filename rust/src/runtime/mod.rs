@@ -17,15 +17,16 @@
 //! `wbit` is NOT part of the variant key: the kernel takes `qmax` as a
 //! runtime input and masks box values above it, so one artifact serves
 //! every bit-width ≤ 4.
+//!
+//! The PJRT client itself (the `xla` crate + XLA C library) is only
+//! linked when the crate is built with the **`pjrt` cargo feature**.
+//! Without it, [`SolverRuntime::new`] returns an error and every caller
+//! falls back to the native decoder — the default build has no external
+//! dependencies beyond `anyhow`.
 
 mod tiler;
 
 pub use tiler::{pad_decode_inputs, PaddedTile};
-
-use crate::tensor::Matrix;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// Static-shape variant identifier, parsed from artifact file names.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -53,149 +54,255 @@ impl ArtifactKey {
     }
 }
 
-/// PJRT-backed solver runtime.
-pub struct SolverRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    registry: Vec<ArtifactKey>,
-    cache: Mutex<HashMap<ArtifactKey, xla::PjRtLoadedExecutable>>,
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! Built without the `pjrt` feature: an API-compatible stand-in whose
+    //! constructor always fails, steering every call site onto the native
+    //! decoder path.
+
+    use super::ArtifactKey;
+    use crate::tensor::Matrix;
+    use std::path::Path;
+
+    /// Unavailable PJRT runtime (crate built without the `pjrt` feature).
+    pub struct SolverRuntime {
+        registry: Vec<ArtifactKey>,
+    }
+
+    impl SolverRuntime {
+        /// Always errors: enable the `pjrt` cargo feature (and provide the
+        /// `xla` crate + XLA C library) for the real runtime.
+        pub fn new(_dir: &Path) -> anyhow::Result<SolverRuntime> {
+            anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` cargo feature")
+        }
+
+        /// Registered decoder variants (unreachable: `new` always errors).
+        pub fn registry(&self) -> &[ArtifactKey] {
+            &self.registry
+        }
+
+        /// No variant is ever available without the PJRT client.
+        pub fn select_variant(&self, _m: usize, _ntile: usize, _k: usize) -> Option<ArtifactKey> {
+            None
+        }
+
+        /// Always errors (unreachable: `new` always errors).
+        #[allow(clippy::too_many_arguments)]
+        pub fn decode_tile(
+            &self,
+            _r: &Matrix,
+            _s: &Matrix,
+            _qbar: &Matrix,
+            _qmax: f32,
+            _k: usize,
+            _alpha: &[f32],
+            _uniforms: &[f32],
+        ) -> anyhow::Result<Matrix> {
+            anyhow::bail!("PJRT runtime unavailable: built without the `pjrt` cargo feature")
+        }
+    }
 }
 
-impl SolverRuntime {
-    /// Create from an artifact directory (typically `artifacts/`). Scans
-    /// for decoder artifacts; errors if the directory is missing. An empty
-    /// registry is allowed (the runtime can still run model artifacts).
-    pub fn new(dir: &Path) -> anyhow::Result<SolverRuntime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
-        let mut registry = Vec::new();
-        let entries = std::fs::read_dir(dir).map_err(|e| {
-            anyhow::anyhow!("artifact dir {dir:?} unreadable: {e} (run `make artifacts`)")
-        })?;
-        for entry in entries.flatten() {
-            if let Some(name) = entry.file_name().to_str() {
-                if let Some(key) = ArtifactKey::parse(name) {
-                    registry.push(key);
+#[cfg(not(feature = "pjrt"))]
+pub use stub::SolverRuntime;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{pad_decode_inputs, ArtifactKey};
+    use crate::tensor::Matrix;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    /// PJRT-backed solver runtime.
+    pub struct SolverRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        registry: Vec<ArtifactKey>,
+        cache: Mutex<HashMap<ArtifactKey, xla::PjRtLoadedExecutable>>,
+    }
+
+    impl SolverRuntime {
+        /// Create from an artifact directory (typically `artifacts/`).
+        /// Scans for decoder artifacts; errors if the directory is
+        /// missing. An empty registry is allowed (the runtime can still
+        /// run model artifacts).
+        pub fn new(dir: &Path) -> anyhow::Result<SolverRuntime> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client init failed: {e:?}"))?;
+            let mut registry = Vec::new();
+            let entries = std::fs::read_dir(dir).map_err(|e| {
+                anyhow::anyhow!("artifact dir {dir:?} unreadable: {e} (run `make artifacts`)")
+            })?;
+            for entry in entries.flatten() {
+                if let Some(name) = entry.file_name().to_str() {
+                    if let Some(key) = ArtifactKey::parse(name) {
+                        registry.push(key);
+                    }
                 }
             }
+            registry.sort();
+            Ok(SolverRuntime {
+                client,
+                dir: dir.to_path_buf(),
+                registry,
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        registry.sort();
-        Ok(SolverRuntime {
-            client,
-            dir: dir.to_path_buf(),
-            registry,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
 
-    /// Registered decoder variants.
-    pub fn registry(&self) -> &[ArtifactKey] {
-        &self.registry
-    }
-
-    /// Smallest registered variant covering `(m, ntile)` with exact `k`.
-    pub fn select_variant(&self, m: usize, ntile: usize, k: usize) -> Option<ArtifactKey> {
-        self.registry
-            .iter()
-            .filter(|a| a.k == k && a.m >= m && a.ntile >= ntile)
-            .min_by_key(|a| (a.m, a.ntile))
-            .copied()
-    }
-
-    fn ensure_compiled(&self, key: ArtifactKey) -> anyhow::Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(&key) {
-            return Ok(());
+        /// Registered decoder variants.
+        pub fn registry(&self) -> &[ArtifactKey] {
+            &self.registry
         }
-        let path = self.dir.join(key.file_name());
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
-        cache.insert(key, exe);
-        Ok(())
+
+        /// Smallest registered variant covering `(m, ntile)` with exact `k`.
+        pub fn select_variant(&self, m: usize, ntile: usize, k: usize) -> Option<ArtifactKey> {
+            self.registry
+                .iter()
+                .filter(|a| a.k == k && a.m >= m && a.ntile >= ntile)
+                .min_by_key(|a| (a.m, a.ntile))
+                .copied()
+        }
+
+        fn ensure_compiled(&self, key: ArtifactKey) -> anyhow::Result<()> {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.contains_key(&key) {
+                return Ok(());
+            }
+            let path = self.dir.join(key.file_name());
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+            cache.insert(key, exe);
+            Ok(())
+        }
+
+        /// Decode one column tile through the AOT Pallas kernel. Contract
+        /// matches [`crate::quant::ppi::decode_tile`]: same inputs (with
+        /// `uniforms` laid out `[path][row][col]`), returns the winning codes.
+        pub fn decode_tile(
+            &self,
+            r: &Matrix,
+            s: &Matrix,
+            qbar: &Matrix,
+            qmax: f32,
+            k: usize,
+            alpha: &[f32],
+            uniforms: &[f32],
+        ) -> anyhow::Result<Matrix> {
+            let m = r.rows();
+            let ntile = qbar.cols();
+            let key = self.select_variant(m, ntile, k).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact variant for m={m} ntile={ntile} k={k}; registry={:?}",
+                    self.registry
+                )
+            })?;
+            self.ensure_compiled(key)?;
+            let padded = pad_decode_inputs(r, s, qbar, alpha, uniforms, k, key.m, key.ntile);
+
+            let lit = |data: &[f32], dims: &[i64]| -> anyhow::Result<xla::Literal> {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape {dims:?}: {e:?}"))
+            };
+            let mm = key.m as i64;
+            let tt = key.ntile as i64;
+            let kk = (k + 1) as i64;
+            let args = [
+                lit(padded.r.as_slice(), &[mm, mm])?,
+                lit(padded.s.as_slice(), &[mm, tt])?,
+                lit(padded.qbar.as_slice(), &[mm, tt])?,
+                lit(&padded.alpha, &[tt])?,
+                lit(&padded.uniforms, &[kk, mm, tt])?,
+                xla::Literal::scalar(qmax),
+            ];
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(&key).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", key.file_name()))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True; output 0 is Q (M×T).
+            let q_lit =
+                result.to_tuple1().map_err(|e| anyhow::anyhow!("unwrapping tuple: {e:?}"))?;
+            let q_flat: Vec<f32> = q_lit.to_vec().map_err(|e| anyhow::anyhow!("reading Q: {e:?}"))?;
+            let expected = key.m * key.ntile;
+            anyhow::ensure!(q_flat.len() == expected, "unexpected Q size {}", q_flat.len());
+            // Crop padding back off.
+            let q_full = Matrix::from_vec(key.m, key.ntile, q_flat);
+            Ok(q_full.block(0, 0, m, ntile))
+        }
+
+        /// Load, compile and run an arbitrary artifact by file stem — generic
+        /// escape hatch used by integration tests and examples that exercise
+        /// non-decoder artifacts.
+        pub fn run_artifact(
+            &self,
+            stem: &str,
+            inputs: &[xla::Literal],
+        ) -> anyhow::Result<xla::Literal> {
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+            let out = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("executing {stem}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
+            Ok(out)
+        }
     }
 
-    /// Decode one column tile through the AOT Pallas kernel. Contract
-    /// matches [`crate::quant::ppi::decode_tile`]: same inputs (with
-    /// `uniforms` laid out `[path][row][col]`), returns the winning codes.
-    pub fn decode_tile(
-        &self,
-        r: &Matrix,
-        s: &Matrix,
-        qbar: &Matrix,
-        qmax: f32,
-        k: usize,
-        alpha: &[f32],
-        uniforms: &[f32],
-    ) -> anyhow::Result<Matrix> {
-        let m = r.rows();
-        let ntile = qbar.cols();
-        let key = self.select_variant(m, ntile, k).ok_or_else(|| {
-            anyhow::anyhow!(
-                "no artifact variant for m={m} ntile={ntile} k={k}; registry={:?}",
-                self.registry
-            )
-        })?;
-        self.ensure_compiled(key)?;
-        let padded = pad_decode_inputs(r, s, qbar, alpha, uniforms, k, key.m, key.ntile);
+    #[cfg(test)]
+    mod tests {
+        use super::*;
 
-        let lit = |data: &[f32], dims: &[i64]| -> anyhow::Result<xla::Literal> {
-            xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| anyhow::anyhow!("literal reshape {dims:?}: {e:?}"))
-        };
-        let mm = key.m as i64;
-        let tt = key.ntile as i64;
-        let kk = (k + 1) as i64;
-        let args = [
-            lit(padded.r.as_slice(), &[mm, mm])?,
-            lit(padded.s.as_slice(), &[mm, tt])?,
-            lit(padded.qbar.as_slice(), &[mm, tt])?,
-            lit(&padded.alpha, &[tt])?,
-            lit(&padded.uniforms, &[kk, mm, tt])?,
-            xla::Literal::scalar(qmax),
-        ];
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(&key).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", key.file_name()))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True; output 0 is Q (M×T).
-        let q_lit =
-            result.to_tuple1().map_err(|e| anyhow::anyhow!("unwrapping tuple: {e:?}"))?;
-        let q_flat: Vec<f32> = q_lit.to_vec().map_err(|e| anyhow::anyhow!("reading Q: {e:?}"))?;
-        anyhow::ensure!(q_flat.len() == key.m * key.ntile, "unexpected Q size {}", q_flat.len());
-        // Crop padding back off.
-        let q_full = Matrix::from_vec(key.m, key.ntile, q_flat);
-        Ok(q_full.block(0, 0, m, ntile))
-    }
-
-    /// Load, compile and run an arbitrary artifact by file stem — generic
-    /// escape hatch used by integration tests and examples that exercise
-    /// non-decoder artifacts.
-    pub fn run_artifact(&self, stem: &str, inputs: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
-        let path = self.dir.join(format!("{stem}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
-        let out = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {stem}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result: {e:?}"))?;
-        Ok(out)
+        #[test]
+        fn variant_selection_prefers_smallest_cover() {
+            let rtm = SolverRuntime {
+                client: match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(_) => return, // no PJRT in this environment: skip
+                },
+                dir: PathBuf::from("/nonexistent"),
+                registry: vec![
+                    ArtifactKey { m: 64, ntile: 32, k: 5 },
+                    ArtifactKey { m: 128, ntile: 64, k: 5 },
+                    ArtifactKey { m: 256, ntile: 64, k: 5 },
+                    ArtifactKey { m: 128, ntile: 64, k: 0 },
+                ],
+                cache: Mutex::new(HashMap::new()),
+            };
+            assert_eq!(
+                rtm.select_variant(100, 40, 5),
+                Some(ArtifactKey { m: 128, ntile: 64, k: 5 })
+            );
+            assert_eq!(
+                rtm.select_variant(64, 32, 5),
+                Some(ArtifactKey { m: 64, ntile: 32, k: 5 })
+            );
+            assert_eq!(rtm.select_variant(300, 32, 5), None);
+            assert_eq!(
+                rtm.select_variant(65, 1, 0),
+                Some(ArtifactKey { m: 128, ntile: 64, k: 0 })
+            );
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::SolverRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -212,34 +319,10 @@ mod tests {
         );
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn variant_selection_prefers_smallest_cover() {
-        let rtm = SolverRuntime {
-            client: match xla::PjRtClient::cpu() {
-                Ok(c) => c,
-                Err(_) => return, // no PJRT in this environment: skip
-            },
-            dir: PathBuf::from("/nonexistent"),
-            registry: vec![
-                ArtifactKey { m: 64, ntile: 32, k: 5 },
-                ArtifactKey { m: 128, ntile: 64, k: 5 },
-                ArtifactKey { m: 256, ntile: 64, k: 5 },
-                ArtifactKey { m: 128, ntile: 64, k: 0 },
-            ],
-            cache: Mutex::new(HashMap::new()),
-        };
-        assert_eq!(
-            rtm.select_variant(100, 40, 5),
-            Some(ArtifactKey { m: 128, ntile: 64, k: 5 })
-        );
-        assert_eq!(
-            rtm.select_variant(64, 32, 5),
-            Some(ArtifactKey { m: 64, ntile: 32, k: 5 })
-        );
-        assert_eq!(rtm.select_variant(300, 32, 5), None);
-        assert_eq!(
-            rtm.select_variant(65, 1, 0),
-            Some(ArtifactKey { m: 128, ntile: 64, k: 0 })
-        );
+    fn stub_runtime_reports_unavailable() {
+        let err = SolverRuntime::new(std::path::Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

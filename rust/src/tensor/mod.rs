@@ -297,6 +297,26 @@ impl Matrix {
         Matrix { rows: self.rows + other.rows, cols: self.cols, data }
     }
 
+    /// Concatenate many matrices vertically in a single allocation (the
+    /// capture paths stack one part per calibration sequence; a pairwise
+    /// fold would re-copy the accumulator quadratically).
+    pub fn vstack_all(parts: &[Matrix]) -> Matrix {
+        assert!(!parts.is_empty(), "vstack_all of empty set");
+        let cols = parts[0].cols;
+        let total: usize = parts
+            .iter()
+            .map(|m| {
+                assert_eq!(m.cols, cols, "vstack_all column mismatch");
+                m.rows
+            })
+            .sum();
+        let mut data = Vec::with_capacity(total * cols);
+        for m in parts {
+            data.extend_from_slice(&m.data);
+        }
+        Matrix { rows: total, cols, data }
+    }
+
     /// Gather rows by index (activation subsampling, act-order permutes).
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(idx.len(), self.cols);
@@ -420,6 +440,15 @@ mod tests {
         let v = m.vstack(&m);
         assert_eq!(v.shape(), (6, 4));
         assert_eq!(v.get(4, 1), m.get(1, 1));
+    }
+
+    #[test]
+    fn vstack_all_matches_pairwise_fold() {
+        let m = sample();
+        let parts = vec![m.clone(), m.clone(), m.clone()];
+        let folded = m.vstack(&m).vstack(&m);
+        assert_eq!(Matrix::vstack_all(&parts), folded);
+        assert_eq!(Matrix::vstack_all(&[m.clone()]), m);
     }
 
     #[test]
