@@ -55,13 +55,23 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         &format!("End-to-end: {name} W{wbit}A16 g{group}"),
-        &["method", "ppl in-domain", "ppl shifted", "Δppl", "compress", "quant time", "capture"],
+        &[
+            "method",
+            "ppl in-domain",
+            "ppl shifted",
+            "Δppl",
+            "compress",
+            "resident",
+            "quant time",
+            "capture",
+        ],
     );
     table.push_row(&[
         "BF16".into(),
         format!("{fp_in:.3}"),
         format!("{fp_sh:.3}"),
         "-".into(),
+        "1.00x".into(),
         "1.00x".into(),
         "-".into(),
         "-".into(),
@@ -78,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             format!("{psh:.3}"),
             format!("{:+.3}", pin - fp_in),
             format!("{:.2}x", report.compression_ratio()),
+            format!("{:.2}x", report.resident_compression()),
             fmt_secs(report.total_secs),
             fmt_secs(report.capture_secs),
         ]);

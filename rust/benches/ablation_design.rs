@@ -78,6 +78,10 @@ fn main() {
                 ..base3.clone()
             },
         ),
+        // In-pipeline, the QEP corner reuses runtime taps as the
+        // reference and skips the FP tap cache (half the capture cost —
+        // see `quant::skip_fp_reference`), so this row also measures that
+        // substitution.
         ("QEP corner (μ=0,λ=0)", Method::Qep, base3.clone()),
         ("Ours(R) (μ=1,λ=0)", Method::KleinRandomK, base3.clone()),
     ];

@@ -147,7 +147,11 @@ fn pipeline_capture_speedup() {
     let (n_calib, seq) = if exp::quick() { (2usize, 48usize) } else { (4, 96) };
     let mut crng = Rng::new(0xCA11B);
     let calib = corpus.calibration(n_calib, seq, &mut crng);
-    let cfg = QuantConfig { group_size: 64, ..QuantConfig::default() };
+    // Dense execution on both legs: the re-forward path always captures
+    // from the dense spliced mirror, so packed execution on the streaming
+    // leg would conflate capture strategy with kernel choice (the packed
+    // engine is measured by `fig_qgemm`).
+    let cfg = QuantConfig { group_size: 64, packed_exec: false, ..QuantConfig::default() };
     let run = |mode: CaptureMode| {
         Bencher::new(&format!("pipeline {mode:?}")).run_once(|| {
             Pipeline::new(&model, calib.clone(), Method::Rtn, cfg.clone(), None)

@@ -1,0 +1,101 @@
+//! Packed-engine throughput and memory: quantized-GEMM execution vs the
+//! dense f32 splice it replaced.
+//!
+//! Two measurements on the fallback (random-init) model:
+//!  * per-layer `Y = X·Ŵ` throughput — [`PackedLinear::matmul`] on
+//!    bit-packed codes vs dense [`matmul`] on the dequantized weight, at
+//!    calibration-sized and serving-sized batches;
+//!  * whole-model forward latency + resident weight bytes —
+//!    [`QuantizedModel`] vs its dense dequantized twin.
+//!
+//! ```sh
+//! cargo bench --bench fig_qgemm             # full
+//! OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_qgemm
+//! ```
+
+use ojbkq::bench::{exp, Bencher};
+use ojbkq::coordinator::quantize_model;
+use ojbkq::infer::PackedLinear;
+use ojbkq::linalg::matmul;
+use ojbkq::model::LanguageModel;
+use ojbkq::quant::{rtn, Method, QuantConfig};
+use ojbkq::report::Table;
+use ojbkq::rng::Rng;
+use ojbkq::tensor::Matrix;
+
+fn main() {
+    layer_kernel_throughput();
+    model_forward_and_memory();
+}
+
+/// Per-layer kernel comparison across batch sizes.
+fn layer_kernel_throughput() {
+    let (m, n) = if exp::quick() { (256usize, 256usize) } else { (512, 512) };
+    let mut rng = Rng::new(0x46);
+    let w = Matrix::randn(m, n, 0.5, &mut rng);
+    let cfg = QuantConfig { wbit: 4, group_size: 64, ..Default::default() };
+    let q = rtn::quantize(&w, &cfg);
+    let packed = PackedLinear::from_quantized(&q, true);
+    let dense = q.dequantize();
+    let iters = if exp::quick() { 5 } else { 20 };
+    let mut table = Table::new(
+        &format!("fig_qgemm — packed vs dense GEMM, {m}×{n} W4 g64"),
+        &["batch", "dense p50 (s)", "packed p50 (s)", "dense GFLOP/s", "packed GFLOP/s"],
+    );
+    for &batch in &[8usize, 64, 256] {
+        let x = Matrix::randn(batch, m, 1.0, &mut rng);
+        let flops = 2.0 * batch as f64 * m as f64 * n as f64;
+        let sd = Bencher::new(&format!("dense  b={batch}")).iters(iters).run(|| matmul(&x, &dense));
+        let sp =
+            Bencher::new(&format!("packed b={batch}")).iters(iters).run(|| packed.matmul(&x));
+        table.push_row(&[
+            batch.to_string(),
+            format!("{:.5}", sd.p50),
+            format!("{:.5}", sp.p50),
+            format!("{:.2}", ojbkq::bench::gflops(flops, &sd)),
+            format!("{:.2}", ojbkq::bench::gflops(flops, &sp)),
+        ]);
+    }
+    table.emit(Some(&exp::results_dir()), "fig_qgemm_layer");
+}
+
+/// Whole-model forward latency + resident weight memory.
+fn model_forward_and_memory() {
+    let mc = &exp::bench_models()[0];
+    let wb = exp::load_workbench(mc);
+    let cfg = QuantConfig { wbit: 4, group_size: 64, packed_exec: true, ..Default::default() };
+    let (n_calib, seq) = if exp::quick() { (2usize, 32usize) } else { (4, 64) };
+    let (qm, report) =
+        quantize_model(&wb.model, &wb.corpus, Method::Rtn, &cfg, n_calib, seq, None)
+            .expect("pipeline");
+    let dense = qm.to_dense();
+    let mut rng = Rng::new(0x51);
+    let toks: Vec<u16> =
+        (0..mc.max_seq.min(64)).map(|_| rng.below(mc.vocab_size as u64) as u16).collect();
+    let iters = if exp::quick() { 3 } else { 10 };
+    let sd = Bencher::new("model forward dense").iters(iters).run(|| dense.forward(&toks));
+    let sp = Bencher::new("model forward packed").iters(iters).run(|| qm.forward(&toks));
+    let fp_bytes = qm.fp_weight_bytes();
+    let packed_bytes = qm.packed_weight_bytes();
+    let mut table = Table::new(
+        &format!("fig_qgemm — {} end-to-end, W4 g64 (RTN)", mc.name),
+        &["engine", "forward p50 (s)", "resident weight bytes", "vs f32"],
+    );
+    table.push_row(&[
+        "dense f32 splice".to_string(),
+        format!("{:.5}", sd.p50),
+        fp_bytes.to_string(),
+        "1.00x".to_string(),
+    ]);
+    table.push_row(&[
+        "packed integer codes".to_string(),
+        format!("{:.5}", sp.p50),
+        packed_bytes.to_string(),
+        format!("{:.2}x", report.resident_compression()),
+    ]);
+    table.emit(Some(&exp::results_dir()), "fig_qgemm_model");
+    assert!(
+        packed_bytes * 4 <= fp_bytes,
+        "W4 resident memory must be ≤ 1/4 of f32: {packed_bytes} vs {fp_bytes}"
+    );
+}

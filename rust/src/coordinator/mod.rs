@@ -1,6 +1,8 @@
 //! The layer-wise PTQ pipeline coordinator — the L3 system that drives
 //! everything (paper §3.1 "End-to-end layer-wise procedure"), built on a
-//! **streaming activation-propagation engine**.
+//! **streaming activation-propagation engine** that executes the
+//! progressively-quantized model through the **packed integer kernels**
+//! of [`crate::infer`].
 //!
 //! The paper's procedure needs two activation views per linear group: the
 //! full-precision inputs `X` and the runtime inputs `X̃` from the
@@ -9,10 +11,10 @@
 //! block) costs O(n_blocks²·calib) forwards and dominates wall-clock. The
 //! streaming engine instead keeps **paired hidden-state caches** — one FP
 //! and one runtime matrix per calibration sequence — and advances each
-//! exactly once per block via [`Model::block_step`]:
+//! exactly once per block:
 //!
-//! 1. one FP `block_step` per sequence captures all four reference taps
-//!    (`X`) of the block and advances the FP cache;
+//! 1. one FP [`Model::block_step`] per sequence captures all four
+//!    reference taps (`X`) of the block and advances the FP cache;
 //! 2. the runtime taps (`X̃`) are produced by recomputing only the
 //!    *intra-block* stage invalidated by the previous group's weight
 //!    splice — `AttnIn` is a norm of the resident state, `OIn` re-runs
@@ -22,16 +24,32 @@
 //! 3. after the `Down` splice the runtime cache advances via the MLP
 //!    residual, completing that cache's single step for the block.
 //!
+//! The runtime cache lives in a [`QuantizedModel`]: each solved layer is
+//! converted once into a [`PackedLinear`] and spliced as bit-packed
+//! integer codes (4–8× less resident memory than the dense f32 splice it
+//! replaces), so calibration exercises the same kernels as deployment —
+//! `quantize → capture → eval` never calls `dequantize()` on the hot
+//! path. `QuantConfig::packed_exec = false` restores the dense f32
+//! splice, which is numerically bit-identical to the pre-packed engine
+//! (used by the capture-equivalence tests and the dense CI leg).
+//!
+//! At the **QEP corner** (`μ=0, λ=0` — [`Method::Qep`], or OJBKQ
+//! configured onto it) the FP tap cache is skipped entirely and the
+//! runtime taps stand in for the reference
+//! ([`crate::quant::skip_fp_reference`]), halving capture cost to
+//! `n_blocks·n_calib` block advances.
+//!
 //! Summed over a block, the runtime refreshes cost exactly one block
 //! forward, so calibration is **linear in depth**: `2·n_blocks·n_calib`
-//! block advances total (tracked in
-//! [`PipelineReport::capture_block_steps`]). Per-sequence steps run in
+//! block advances total (`n_blocks·n_calib` under the QEP skip), tracked
+//! in [`PipelineReport::capture_block_steps`]. Per-sequence steps run in
 //! parallel via [`crate::parallel::parallel_map`]; results are stacked in
 //! sequence order, so the pipeline stays bit-exactly deterministic.
 //!
 //! [`CaptureMode::Reforward`] retains the legacy O(n_blocks²) prefix
-//! re-forward path — used by equivalence tests and the Figure-4 speedup
-//! bench, never by the default pipeline.
+//! re-forward path over a dense spliced [`Model`] mirror — used by
+//! equivalence tests and the Figure-4 speedup bench, never by the
+//! default pipeline.
 //!
 //! This is exactly the error-propagation regime the JTA objective is
 //! designed for: `X̃` drifts from `X` as quantization progresses, and μ
@@ -41,9 +59,10 @@
 
 use crate::config::ModelConfig;
 use crate::data::Corpus;
+use crate::infer::{PackedLinear, QuantizedModel};
 use crate::model::{LinearId, LinearKind, Model, TapPoint, TapSet};
 use crate::parallel::parallel_map;
-use crate::quant::{quantize_layer, LayerStats, Method, QuantConfig};
+use crate::quant::{quantize_layer, skip_fp_reference, LayerStats, Method, QuantConfig};
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
 use crate::tensor::Matrix;
@@ -55,10 +74,15 @@ use std::time::Instant;
 pub struct LayerRecord {
     pub id: LinearId,
     pub stats: LayerStats,
-    /// Packed size of the quantized layer (bytes).
+    /// Serialized (shipped) size of the quantized layer: codes at `wbit`
+    /// bits + f16-equivalent tables (bytes).
     pub packed_bytes: usize,
     /// FP32 size (bytes).
     pub fp_bytes: usize,
+    /// Resident size inside the packed execution engine
+    /// ([`PackedLinear::bytes`]): bit-packed codes + f32 tables, or the
+    /// dense fallback (bytes).
+    pub resident_bytes: usize,
 }
 
 /// Result of a full pipeline run.
@@ -70,18 +94,37 @@ pub struct PipelineReport {
     /// (embedding, block advances and intra-block tap refreshes).
     pub capture_secs: f64,
     /// Number of transformer-block advances performed for calibration —
-    /// `2·n_blocks·n_calib` under streaming capture, quadratic in depth
-    /// under [`CaptureMode::Reforward`].
+    /// `2·n_blocks·n_calib` under streaming capture (`n_blocks·n_calib`
+    /// when the QEP corner skips the FP cache), quadratic in depth under
+    /// [`CaptureMode::Reforward`].
     pub capture_block_steps: u64,
     pub method: String,
 }
 
 impl PipelineReport {
-    /// Overall compression ratio (fp bytes / packed bytes).
+    /// Shipped compression ratio (fp bytes / serialized packed bytes).
     pub fn compression_ratio(&self) -> f64 {
         let fp: usize = self.layers.iter().map(|l| l.fp_bytes).sum();
         let packed: usize = self.layers.iter().map(|l| l.packed_bytes).sum();
         fp as f64 / packed.max(1) as f64
+    }
+
+    /// Resident weight bytes of the execution engine across all
+    /// quantized layers (matches
+    /// [`QuantizedModel::packed_weight_bytes`] for the returned model).
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.resident_bytes).sum()
+    }
+
+    /// f32 bytes of the same layers in dense form.
+    pub fn fp_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.fp_bytes).sum()
+    }
+
+    /// Resident compression of the execution engine (f32 bytes / resident
+    /// packed bytes) — the memory the serving process actually saves.
+    pub fn resident_compression(&self) -> f64 {
+        self.fp_weight_bytes() as f64 / self.packed_weight_bytes().max(1) as f64
     }
 
     /// Total solver seconds (excluding calibration captures).
@@ -97,7 +140,8 @@ pub enum CaptureMode {
     /// caches advanced once per block (default; linear in depth).
     Streaming,
     /// Legacy prefix re-forwards from block 0 for every capture
-    /// (quadratic in depth). Kept for equivalence tests and benches.
+    /// (quadratic in depth), over a dense spliced model mirror. Kept for
+    /// equivalence tests and benches.
     Reforward,
 }
 
@@ -110,17 +154,29 @@ const GROUPS: [(&[LinearKind], TapPoint); 4] = [
 ];
 
 /// The pipeline: borrows the reference model, owns the progressively
-/// quantized model, the calibration set, and the paired FP / runtime
-/// hidden-state caches (one matrix per calibration sequence).
+/// quantized packed-execution model, the calibration set, and the paired
+/// FP / runtime hidden-state caches (one matrix per calibration
+/// sequence).
 pub struct Pipeline<'a> {
     fp_model: &'a Model,
-    quant_model: Model,
+    /// Packed execution engine holding every quantized layer so far
+    /// (dense passthrough for not-yet-quantized layers). Advances the
+    /// runtime hidden-state cache and is returned to the caller.
+    runtime: QuantizedModel,
+    /// Dense f32 mirror, spliced in lockstep — only materialized under
+    /// [`CaptureMode::Reforward`], whose prefix re-forwards need a
+    /// [`Model`].
+    dense_runtime: Option<Model>,
     calib: Vec<Vec<u16>>,
     method: Method,
     cfg: QuantConfig,
     rt: Option<&'a SolverRuntime>,
     capture_mode: CaptureMode,
-    /// FP hidden states at the entry of the current block.
+    /// The QEP-corner capture optimization (see
+    /// [`crate::quant::skip_fp_reference`]).
+    skip_fp: bool,
+    /// FP hidden states at the entry of the current block (empty when
+    /// `skip_fp`).
     fp_hidden: Vec<Matrix>,
     /// Runtime (partially-quantized) hidden states at the same position.
     rt_hidden: Vec<Matrix>,
@@ -129,8 +185,8 @@ pub struct Pipeline<'a> {
 }
 
 impl<'a> Pipeline<'a> {
-    /// Build a pipeline. Borrows `model` as the FP reference and clones it
-    /// exactly once for the progressively-quantized working copy.
+    /// Build a pipeline. Borrows `model` as the FP reference; the packed
+    /// working copy starts as an all-dense passthrough engine.
     pub fn new(
         model: &'a Model,
         calib: Vec<Vec<u16>>,
@@ -139,14 +195,17 @@ impl<'a> Pipeline<'a> {
         rt: Option<&'a SolverRuntime>,
     ) -> Pipeline<'a> {
         assert!(!calib.is_empty(), "empty calibration set");
+        let skip_fp = skip_fp_reference(method, &cfg);
         Pipeline {
             fp_model: model,
-            quant_model: model.clone(),
+            runtime: QuantizedModel::from_model(model),
+            dense_runtime: None,
             calib,
             method,
             cfg,
             rt,
             capture_mode: CaptureMode::Streaming,
+            skip_fp,
             fp_hidden: Vec::new(),
             rt_hidden: Vec::new(),
             on_layer: None,
@@ -170,27 +229,36 @@ impl<'a> Pipeline<'a> {
         taps
     }
 
-    /// Execute the pipeline; returns the quantized model and report.
-    pub fn run(mut self) -> anyhow::Result<(Model, PipelineReport)> {
+    /// Execute the pipeline; returns the packed quantized model and the
+    /// report.
+    pub fn run(mut self) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
         let t0 = Instant::now();
         let mut report =
             PipelineReport { method: self.method.label().to_string(), ..Default::default() };
         if self.method == Method::Fp {
             report.total_secs = t0.elapsed().as_secs_f64();
-            return Ok((self.quant_model, report));
+            return Ok((self.runtime, report));
         }
         let n_blocks = self.fp_model.blocks.len();
-        if self.capture_mode == CaptureMode::Streaming {
-            // Embed every calibration sequence once; the paired caches
-            // then advance exactly once per block. Quantization never
-            // touches the embedding, so the runtime cache starts as an
-            // exact copy of the FP cache.
-            let tc = Instant::now();
-            let model = self.fp_model;
-            let calib = &self.calib;
-            self.fp_hidden = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
-            self.rt_hidden = self.fp_hidden.clone();
-            report.capture_secs += tc.elapsed().as_secs_f64();
+        match self.capture_mode {
+            CaptureMode::Streaming => {
+                // Embed every calibration sequence once; the resident
+                // caches then advance exactly once per block.
+                // Quantization never touches the embedding, so the
+                // runtime cache starts as an exact copy of the FP cache
+                // (which is skipped entirely at the QEP corner).
+                let tc = Instant::now();
+                let model = self.fp_model;
+                let calib = &self.calib;
+                self.rt_hidden = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+                if !self.skip_fp {
+                    self.fp_hidden = self.rt_hidden.clone();
+                }
+                report.capture_secs += tc.elapsed().as_secs_f64();
+            }
+            CaptureMode::Reforward => {
+                self.dense_runtime = Some(self.fp_model.clone());
+            }
         }
         for block in 0..n_blocks {
             match self.capture_mode {
@@ -199,7 +267,7 @@ impl<'a> Pipeline<'a> {
             }
         }
         report.total_secs = t0.elapsed().as_secs_f64();
-        Ok((self.quant_model, report))
+        Ok((self.runtime, report))
     }
 
     /// Advance the FP cache one block (in parallel over sequences),
@@ -234,7 +302,8 @@ impl<'a> Pipeline<'a> {
     }
 
     /// Quantize one block under streaming capture: a single FP cache
-    /// advance, four intra-block runtime refreshes (one per group, each
+    /// advance (unless the QEP corner skips it), four intra-block runtime
+    /// refreshes through the packed engine (one per group, each
     /// recomputing only the stage invalidated by the previous splice),
     /// and a single runtime cache advance.
     fn run_block_streaming(
@@ -244,43 +313,44 @@ impl<'a> Pipeline<'a> {
         report: &mut PipelineReport,
     ) -> anyhow::Result<()> {
         let n = self.calib.len();
-        let fp_x = self.step_fp(block, report);
+        let fp_x: Option<HashMap<TapPoint, Matrix>> =
+            if self.skip_fp { None } else { Some(self.step_fp(block, report)) };
 
         // Group [Q K V]: AttnIn is a norm of the resident runtime state —
         // no upstream weights of this block are involved.
         let t0 = Instant::now();
         let attn_in: Vec<Matrix> = {
-            let model = &self.quant_model;
+            let engine = &self.runtime;
             let hidden = &self.rt_hidden;
-            parallel_map(n, |i| model.attn_in(&hidden[i], block))
+            parallel_map(n, |i| engine.attn_in(&hidden[i], block))
         };
         let x_rt = stack_rows(&attn_in);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = &fp_x[&TapPoint::AttnIn];
+        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::AttnIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[0].0, x_fp, &x_rt, cap)?;
 
         // Group [O]: re-run attention with the freshly spliced Q/K/V.
         let t0 = Instant::now();
         let ctx: Vec<Matrix> = {
-            let model = &self.quant_model;
-            parallel_map(n, |i| model.attn_ctx(&attn_in[i], block))
+            let engine = &self.runtime;
+            parallel_map(n, |i| engine.attn_ctx(&attn_in[i], block))
         };
         let x_rt = stack_rows(&ctx);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = &fp_x[&TapPoint::OIn];
+        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::OIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[1].0, x_fp, &x_rt, cap)?;
 
         // Group [Gate Up]: attention residual + MLP norm after the O
         // splice.
         let t0 = Instant::now();
         let (x_mid, mlp_in): (Vec<Matrix>, Vec<Matrix>) = {
-            let model = &self.quant_model;
+            let engine = &self.runtime;
             let hidden = &self.rt_hidden;
             parallel_map(n, |i| {
-                let mid = model.post_attn(&hidden[i], &ctx[i], block);
-                let h2 = model.mlp_in(&mid, block);
+                let mid = engine.post_attn(&hidden[i], &ctx[i], block);
+                let h2 = engine.mlp_in(&mid, block);
                 (mid, h2)
             })
             .into_iter()
@@ -289,19 +359,19 @@ impl<'a> Pipeline<'a> {
         let x_rt = stack_rows(&mlp_in);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = &fp_x[&TapPoint::MlpIn];
+        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::MlpIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[2].0, x_fp, &x_rt, cap)?;
 
         // Group [Down]: SwiGLU with the spliced Gate/Up.
         let t0 = Instant::now();
         let act: Vec<Matrix> = {
-            let model = &self.quant_model;
-            parallel_map(n, |i| model.mlp_act(&mlp_in[i], block))
+            let engine = &self.runtime;
+            parallel_map(n, |i| engine.mlp_act(&mlp_in[i], block))
         };
         let x_rt = stack_rows(&act);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = &fp_x[&TapPoint::DownIn];
+        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::DownIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[3].0, x_fp, &x_rt, cap)?;
 
         // Advance the runtime cache through the MLP residual with the
@@ -309,15 +379,16 @@ impl<'a> Pipeline<'a> {
         // block. Blocks `< block` are never touched again.
         let t0 = Instant::now();
         self.rt_hidden = {
-            let model = &self.quant_model;
-            parallel_map(n, |i| model.post_mlp(&x_mid[i], &act[i], block))
+            let engine = &self.runtime;
+            parallel_map(n, |i| engine.post_mlp(&x_mid[i], &act[i], block))
         };
         report.capture_block_steps += n as u64;
         report.capture_secs += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
-    /// Quantize one block under legacy prefix re-forward capture.
+    /// Quantize one block under legacy prefix re-forward capture (dense
+    /// spliced mirror).
     fn run_block_reforward(
         &mut self,
         block: usize,
@@ -325,29 +396,39 @@ impl<'a> Pipeline<'a> {
         report: &mut PipelineReport,
     ) -> anyhow::Result<()> {
         let n = self.calib.len() as u64;
-        let t0 = Instant::now();
-        let mut fp_taps = Self::capture(self.fp_model, &self.calib, block, &TapPoint::all());
-        report.capture_block_steps += n * (block as u64 + 1);
-        report.capture_secs += t0.elapsed().as_secs_f64();
-        let mut fp_x: HashMap<TapPoint, Matrix> = HashMap::new();
-        for p in TapPoint::all() {
-            fp_x.insert(p, fp_taps.take(block, p).expect("fp tap missing"));
-        }
+        let fp_x: Option<HashMap<TapPoint, Matrix>> = if self.skip_fp {
+            None
+        } else {
+            let t0 = Instant::now();
+            let mut fp_taps = Self::capture(self.fp_model, &self.calib, block, &TapPoint::all());
+            report.capture_block_steps += n * (block as u64 + 1);
+            report.capture_secs += t0.elapsed().as_secs_f64();
+            let mut m: HashMap<TapPoint, Matrix> = HashMap::new();
+            for p in TapPoint::all() {
+                m.insert(p, fp_taps.take(block, p).expect("fp tap missing"));
+            }
+            Some(m)
+        };
         for (kinds, point) in GROUPS.iter() {
             // Runtime capture reflects all quantization done so far.
             let t0 = Instant::now();
-            let mut rt_taps = Self::capture(&self.quant_model, &self.calib, block, &[*point]);
-            let x_rt = rt_taps.take(block, *point).expect("rt tap missing");
+            let x_rt = {
+                let dense = self.dense_runtime.as_ref().expect("reforward dense mirror");
+                let mut rt_taps = Self::capture(dense, &self.calib, block, &[*point]);
+                rt_taps.take(block, *point).expect("rt tap missing")
+            };
             report.capture_block_steps += n * (block as u64 + 1);
             let cap = t0.elapsed().as_secs_f64();
             report.capture_secs += cap;
-            self.quantize_group(report, block, n_blocks, kinds, &fp_x[point], &x_rt, cap)?;
+            let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[point]);
+            self.quantize_group(report, block, n_blocks, kinds, x_fp, &x_rt, cap)?;
         }
         Ok(())
     }
 
     /// Quantize every linear of one group against `(x_fp, x_rt)` and
-    /// splice the dequantized weights into the running model.
+    /// splice the packed execution form into the running engine (plus the
+    /// dense mirror when re-forward capture needs one).
     #[allow(clippy::too_many_arguments)]
     fn quantize_group(
         &mut self,
@@ -363,7 +444,7 @@ impl<'a> Pipeline<'a> {
         for &kind in kinds {
             let id = LinearId { block, kind };
             let w = self.fp_model.linear(id).clone();
-            let layer_uid = (block * 8 + layer_index(kind)) as u64;
+            let layer_uid = (block * 8 + kind.index()) as u64;
             // Per-layer μ schedule (paper Limitations / future work):
             // resolve the depth-interpolated μ here so every solver sees
             // a plain fixed-μ config.
@@ -382,13 +463,18 @@ impl<'a> Pipeline<'a> {
             if let Some(cb) = self.on_layer.as_mut() {
                 cb(id, &stats);
             }
+            let lin = PackedLinear::from_quantized(&q, self.cfg.packed_exec);
             report.layers.push(LayerRecord {
                 id,
                 packed_bytes: q.packed_bytes(),
                 fp_bytes: w.len() * 4,
+                resident_bytes: lin.bytes(),
                 stats,
             });
-            self.quant_model.set_linear(id, q.dequantize());
+            if let Some(dense) = self.dense_runtime.as_mut() {
+                dense.set_linear(id, q.dequantize());
+            }
+            self.runtime.set_layer(id, lin);
         }
         Ok(())
     }
@@ -401,13 +487,9 @@ fn stack_rows(parts: &[Matrix]) -> Matrix {
     Matrix::vstack_all(parts)
 }
 
-fn layer_index(kind: LinearKind) -> usize {
-    LinearKind::all().iter().position(|&k| k == kind).unwrap()
-}
-
 /// Convenience wrapper: quantize `model` with `method` using `n_calib`
-/// sequences of `seq_len` drawn from the corpus train split. The model is
-/// borrowed and cloned exactly once (for the working copy).
+/// sequences of `seq_len` drawn from the corpus train split; returns the
+/// packed execution model. The FP model is borrowed (never cloned).
 pub fn quantize_model(
     model: &Model,
     corpus: &Corpus,
@@ -416,7 +498,7 @@ pub fn quantize_model(
     n_calib: usize,
     seq_len: usize,
     rt: Option<&SolverRuntime>,
-) -> anyhow::Result<(Model, PipelineReport)> {
+) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
     let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
     let calib = corpus.calibration(n_calib, seq_len.min(model.cfg.max_seq), &mut rng);
     Pipeline::new(model, calib, method, cfg.clone(), rt).run()
@@ -471,6 +553,7 @@ impl Workbench {
 mod tests {
     use super::*;
     use crate::data::SyntheticGrammar;
+    use crate::model::LanguageModel;
 
     fn setup() -> (Model, Corpus) {
         let cfg = ModelConfig {
@@ -492,18 +575,30 @@ mod tests {
     #[test]
     fn pipeline_quantizes_every_linear() {
         let (model, corpus) = setup();
-        let cfg = QuantConfig { wbit: 4, group_size: 8, k: 2, ntile: 16, ..Default::default() };
+        let cfg = QuantConfig {
+            wbit: 4,
+            group_size: 8,
+            k: 2,
+            ntile: 16,
+            packed_exec: true,
+            ..Default::default()
+        };
         let (qm, report) =
             quantize_model(&model, &corpus, Method::Rtn, &cfg, 4, 24, None).unwrap();
         assert_eq!(report.layers.len(), 2 * 7);
         // Quantized model differs from FP but is finite.
         for id in qm.linear_ids() {
-            assert!(qm.linear(id).all_finite());
+            assert!(qm.layer(id).is_packed());
+            assert!(qm.layer(id).to_dense().all_finite());
         }
         // d=16 with group_size=8 carries heavy scale tables relative to
         // codes; ratio ≈ 4 here (realistic layers reach 6-8x, tested in
         // qtensor.rs).
         assert!(report.compression_ratio() > 3.0, "ratio={}", report.compression_ratio());
+        // The execution engine itself runs below dense f32 memory, and
+        // the report agrees with the engine's own accounting.
+        assert!(report.resident_compression() > 1.5, "{}", report.resident_compression());
+        assert_eq!(report.packed_weight_bytes(), qm.packed_weight_bytes());
     }
 
     #[test]
@@ -587,6 +682,42 @@ mod tests {
         let quadratic: u64 = (0..n_blocks).map(|b| 5 * n_calib as u64 * (b + 1)).sum();
         assert_eq!(rep_legacy.capture_block_steps, quadratic);
         assert!(rep.capture_block_steps < rep_legacy.capture_block_steps);
+    }
+
+    #[test]
+    fn qep_corner_skips_fp_tap_cache() {
+        let (model, corpus) = setup();
+        let mut rng = Rng::new(11);
+        let n_calib = 3usize;
+        let calib = corpus.calibration(n_calib, 16, &mut rng);
+        let n_blocks = model.blocks.len() as u64;
+        // μ=0, λ=0 through the config: only the runtime cache advances —
+        // half the block steps of the paired-cache default.
+        let cfg =
+            QuantConfig { wbit: 4, group_size: 8, mu: 0.0, lambda: 0.0, ..Default::default() };
+        let (qm, rep) =
+            Pipeline::new(&model, calib.clone(), Method::Rtn, cfg, None).run().unwrap();
+        assert_eq!(rep.capture_block_steps, n_calib as u64 * n_blocks);
+        for id in qm.linear_ids() {
+            assert!(qm.layer(id).to_dense().all_finite());
+        }
+        // Method::Qep pins the corner itself, whatever the config says.
+        let cfg2 = QuantConfig { wbit: 4, group_size: 8, k: 2, ntile: 16, ..Default::default() };
+        let (_, rep2) = Pipeline::new(&model, calib, Method::Qep, cfg2, None).run().unwrap();
+        assert_eq!(rep2.capture_block_steps, n_calib as u64 * n_blocks);
+        // The reforward path skips its FP prefix forwards too: 4 runtime
+        // prefix forwards per block, no FP pass.
+        let mut rng = Rng::new(12);
+        let calib2 = corpus.calibration(n_calib, 16, &mut rng);
+        let cfg3 =
+            QuantConfig { wbit: 4, group_size: 8, mu: 0.0, lambda: 0.0, ..Default::default() };
+        let (_, rep3) = Pipeline::new(&model, calib2, Method::Rtn, cfg3, None)
+            .with_capture_mode(CaptureMode::Reforward)
+            .run()
+            .unwrap();
+        let quadratic_rt_only: u64 =
+            (0..n_blocks).map(|b| 4 * n_calib as u64 * (b + 1)).sum();
+        assert_eq!(rep3.capture_block_steps, quadratic_rt_only);
     }
 
     #[test]

@@ -10,18 +10,26 @@ pub use reasoning::{reasoning_accuracy, ReasoningTask};
 pub use zeroshot::{zero_shot_accuracy, ZeroShotTask};
 
 use crate::data::Corpus;
-use crate::model::Model;
+use crate::model::LanguageModel;
+use crate::parallel::parallel_map;
 
 /// Perplexity of `model` on the corpus' held-out split, over up to
 /// `max_tokens` tokens in windows of `seq_len`:
-/// `exp(Σ NLL / Σ tokens)` — the paper's Table-1 metric.
-pub fn perplexity(model: &Model, corpus: &Corpus, seq_len: usize, max_tokens: usize) -> f64 {
+/// `exp(Σ NLL / Σ tokens)` — the paper's Table-1 metric. Windows are
+/// scored in parallel (they are independent) and reduced in window order,
+/// so the result is deterministic.
+pub fn perplexity<M: LanguageModel + Sync>(
+    model: &M,
+    corpus: &Corpus,
+    seq_len: usize,
+    max_tokens: usize,
+) -> f64 {
     let windows = corpus.eval_windows(seq_len, max_tokens);
     assert!(!windows.is_empty(), "no eval windows (corpus too small?)");
+    let per_window = parallel_map(windows.len(), |i| model.sequence_nll(windows[i]));
     let mut nll = 0.0f64;
     let mut count = 0usize;
-    for w in windows {
-        let (n, c) = model.sequence_nll(w);
+    for (n, c) in per_window {
         nll += n;
         count += c;
     }
@@ -31,8 +39,8 @@ pub fn perplexity(model: &Model, corpus: &Corpus, seq_len: usize, max_tokens: us
 /// Two perplexities mirroring the paper's "C4 / WikiText-2" pair: the
 /// held-out split of the training corpus, and a *shifted-distribution*
 /// variant (same grammar family, noisier) playing the out-of-domain role.
-pub fn perplexity_pair(
-    model: &Model,
+pub fn perplexity_pair<M: LanguageModel + Sync>(
+    model: &M,
     in_domain: &Corpus,
     shifted: &Corpus,
     seq_len: usize,
@@ -49,6 +57,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::data::SyntheticGrammar;
+    use crate::model::Model;
     use crate::rng::Rng;
 
     fn tiny() -> (Model, Corpus) {

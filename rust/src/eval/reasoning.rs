@@ -9,7 +9,7 @@
 //! one early wrong token derails every subsequent step.
 
 use crate::data::Corpus;
-use crate::model::Model;
+use crate::model::LanguageModel;
 use crate::rng::Rng;
 
 /// A generative task configuration.
@@ -36,8 +36,8 @@ impl ReasoningTask {
 
 /// Mean per-token match rate (%) of greedy generations against the true
 /// corpus continuations over `n_items` held-out items.
-pub fn reasoning_accuracy(
-    model: &Model,
+pub fn reasoning_accuracy<M: LanguageModel>(
+    model: &M,
     corpus: &Corpus,
     task: &ReasoningTask,
     n_items: usize,
@@ -69,6 +69,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::data::SyntheticGrammar;
+    use crate::model::Model;
 
     fn setup() -> (Model, Corpus) {
         let cfg = ModelConfig {

@@ -9,7 +9,7 @@
 //! spread of the paper's six suites.
 
 use crate::data::Corpus;
-use crate::model::Model;
+use crate::model::LanguageModel;
 use crate::rng::Rng;
 
 /// A zero-shot task configuration.
@@ -92,7 +92,7 @@ fn build_items(task: &ZeroShotTask, corpus: &Corpus, n_items: usize, seed: u64) 
 }
 
 /// Length-normalized continuation log-likelihood.
-fn choice_score(model: &Model, context: &[u16], cont: &[u16]) -> f64 {
+fn choice_score<M: LanguageModel>(model: &M, context: &[u16], cont: &[u16]) -> f64 {
     let mut seq = context.to_vec();
     seq.extend_from_slice(cont);
     let logits = model.forward(&seq);
@@ -106,8 +106,8 @@ fn choice_score(model: &Model, context: &[u16], cont: &[u16]) -> f64 {
 }
 
 /// Accuracy (%) of `model` on `task` with `n_items` items.
-pub fn zero_shot_accuracy(
-    model: &Model,
+pub fn zero_shot_accuracy<M: LanguageModel>(
+    model: &M,
     corpus: &Corpus,
     task: &ZeroShotTask,
     n_items: usize,
@@ -139,6 +139,7 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
     use crate::data::SyntheticGrammar;
+    use crate::model::Model;
 
     fn setup() -> (Model, Corpus) {
         let cfg = ModelConfig {

@@ -1,0 +1,308 @@
+//! Packed quantized inference engine — executing the transformer
+//! directly from bit-packed integer codes.
+//!
+//! This is the deployment half of OJBKQ: the solver library
+//! ([`crate::quant`]) produces per-layer codes + scale tables, and this
+//! module runs `y = x·Ŵ` from them **without ever materializing the
+//! dense f32 weight** (see DESIGN.md §Packed execution). Three layers:
+//!
+//! * [`PackedLinear`] — execution-ready layout converted once from a
+//!   [`crate::quant::QuantizedLinear`]: codes bit-packed into column
+//!   tiles, per-group scale and precomputed `s·z` correction tables, an
+//!   optional decode-order row permutation (act-order solvers), and an
+//!   explicit [`PackedLinear::bytes`] accounting hook. Transform methods
+//!   (AWQ/QuIP) and FP passthrough keep a dense fallback.
+//! * [`packed::qgemm_packed`] — blocked multi-row kernels that unpack
+//!   each tile row once into a stack buffer and accumulate across the
+//!   whole activation batch, parallelized over output tiles.
+//! * [`QuantizedModel`] — the packed twin of [`crate::model::Model`],
+//!   mirroring the block-resident API (`embed_sequence` / `block_step` /
+//!   `lm_head` and the six per-stage pieces) so the pipeline
+//!   coordinator's runtime hidden-state cache advances through integer
+//!   kernels, and the eval harnesses ([`crate::eval`]) score it through
+//!   [`LanguageModel`] at 4–8× lower weight memory.
+//!
+//! Everything outside the seven per-block linears (embeddings, norms,
+//! attention softmax, residuals) is shared arithmetic with the dense
+//! model — [`QuantizedModel::from_model`] therefore reproduces
+//! `Model::forward` bit for bit until layers are re-pointed at packed
+//! codes via [`QuantizedModel::set_layer`].
+
+pub mod packed;
+
+pub use packed::{PackedLinear, COL_TILE};
+
+use crate::config::ModelConfig;
+use crate::linalg::matmul;
+use crate::model::{
+    causal_attention, embed_tokens, rmsnorm, silu, LanguageModel, LinearId, LinearKind, Model,
+};
+use crate::tensor::Matrix;
+
+/// One transformer block of the packed engine: FP norms + seven
+/// execution-ready linears (indexed in [`LinearKind::all`] order).
+#[derive(Debug, Clone)]
+pub struct QuantizedBlock {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    linears: Vec<PackedLinear>,
+}
+
+impl QuantizedBlock {
+    fn lin(&self, kind: LinearKind) -> &PackedLinear {
+        &self.linears[kind.index()]
+    }
+}
+
+/// The packed-execution model: embeddings and norms in f32, every linear
+/// behind a [`PackedLinear`]. Mirrors the dense model's block-resident
+/// forward API stage for stage.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub cfg: ModelConfig,
+    /// `vocab × d` token embedding (also the tied output head).
+    pub embedding: Matrix,
+    pub blocks: Vec<QuantizedBlock>,
+    pub final_norm: Vec<f32>,
+}
+
+impl QuantizedModel {
+    /// Start from a dense model: every linear is an FP passthrough, so
+    /// the engine is numerically identical to `model` until layers are
+    /// replaced with [`QuantizedModel::set_layer`].
+    pub fn from_model(model: &Model) -> QuantizedModel {
+        let blocks = (0..model.blocks.len())
+            .map(|b| QuantizedBlock {
+                attn_norm: model.blocks[b].attn_norm.clone(),
+                mlp_norm: model.blocks[b].mlp_norm.clone(),
+                linears: LinearKind::all()
+                    .iter()
+                    .map(|&kind| {
+                        PackedLinear::dense(model.linear(LinearId { block: b, kind }).clone())
+                    })
+                    .collect(),
+            })
+            .collect();
+        QuantizedModel {
+            cfg: model.cfg.clone(),
+            embedding: model.embedding.clone(),
+            blocks,
+            final_norm: model.final_norm.clone(),
+        }
+    }
+
+    /// Borrow a layer.
+    pub fn layer(&self, id: LinearId) -> &PackedLinear {
+        self.blocks[id.block].lin(id.kind)
+    }
+
+    /// Replace a layer with its packed (or dense) execution form.
+    pub fn set_layer(&mut self, id: LinearId, lin: PackedLinear) {
+        let slot = &mut self.blocks[id.block].linears[id.kind.index()];
+        assert_eq!(slot.shape(), lin.shape(), "layer {id} shape");
+        *slot = lin;
+    }
+
+    /// All linear ids in quantization order.
+    pub fn linear_ids(&self) -> Vec<LinearId> {
+        let mut out = Vec::new();
+        for block in 0..self.blocks.len() {
+            for &kind in LinearKind::all() {
+                out.push(LinearId { block, kind });
+            }
+        }
+        out
+    }
+
+    /// Token embedding + positions (shared with the dense model).
+    pub fn embed_sequence(&self, tokens: &[u16]) -> Matrix {
+        embed_tokens(&self.embedding, &self.cfg, tokens)
+    }
+
+    /// Stage 1: post-attn-RMSNorm of the resident hidden state.
+    pub fn attn_in(&self, hidden: &Matrix, block_idx: usize) -> Matrix {
+        rmsnorm(hidden, &self.blocks[block_idx].attn_norm)
+    }
+
+    /// Stage 2: packed Q/K/V projections + causal attention.
+    pub fn attn_ctx(&self, attn_in: &Matrix, block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let q = block.lin(LinearKind::Q).matmul(attn_in);
+        let k = block.lin(LinearKind::K).matmul(attn_in);
+        let v = block.lin(LinearKind::V).matmul(attn_in);
+        causal_attention(&q, &k, &v, self.cfg.n_heads)
+    }
+
+    /// Stage 3: packed output projection + attention residual.
+    pub fn post_attn(&self, hidden: &Matrix, ctx: &Matrix, block_idx: usize) -> Matrix {
+        hidden.add(&self.blocks[block_idx].lin(LinearKind::O).matmul(ctx))
+    }
+
+    /// Stage 4: post-mlp-RMSNorm.
+    pub fn mlp_in(&self, x_mid: &Matrix, block_idx: usize) -> Matrix {
+        rmsnorm(x_mid, &self.blocks[block_idx].mlp_norm)
+    }
+
+    /// Stage 5: SwiGLU over packed Gate/Up.
+    pub fn mlp_act(&self, mlp_in: &Matrix, block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let g = block.lin(LinearKind::Gate).matmul(mlp_in);
+        let u = block.lin(LinearKind::Up).matmul(mlp_in);
+        Matrix::from_fn(mlp_in.rows(), self.cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j))
+    }
+
+    /// Stage 6: packed down projection + MLP residual.
+    pub fn post_mlp(&self, x_mid: &Matrix, act: &Matrix, block_idx: usize) -> Matrix {
+        x_mid.add(&self.blocks[block_idx].lin(LinearKind::Down).matmul(act))
+    }
+
+    /// Advance a resident hidden state one block in place (composition of
+    /// the six stages, same order as the dense model).
+    pub fn block_step(&self, hidden: &mut Matrix, block_idx: usize) {
+        let h = self.attn_in(hidden, block_idx);
+        let ctx = self.attn_ctx(&h, block_idx);
+        let x_mid = self.post_attn(hidden, &ctx, block_idx);
+        let h2 = self.mlp_in(&x_mid, block_idx);
+        let act = self.mlp_act(&h2, block_idx);
+        *hidden = self.post_mlp(&x_mid, &act, block_idx);
+    }
+
+    /// Final RMSNorm + tied LM head.
+    pub fn lm_head(&self, hidden: &Matrix) -> Matrix {
+        let xf = rmsnorm(hidden, &self.final_norm);
+        matmul(&xf, &self.embedding.transpose())
+    }
+
+    /// Resident weight bytes of the engine (Σ [`PackedLinear::bytes`]
+    /// over every linear) — the number behind the reported compression.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.blocks.iter().flat_map(|b| b.linears.iter().map(|l| l.bytes())).sum()
+    }
+
+    /// f32 bytes of the same linears in dense form.
+    pub fn fp_weight_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|b| {
+                b.linears.iter().map(|l| {
+                    let (m, n) = l.shape();
+                    m * n * 4
+                })
+            })
+            .sum()
+    }
+
+    /// Export as a dense [`Model`] (dequantizes every packed layer) —
+    /// serialization and parity-test support, not an execution path.
+    pub fn to_dense(&self) -> Model {
+        Model {
+            cfg: self.cfg.clone(),
+            embedding: self.embedding.clone(),
+            final_norm: self.final_norm.clone(),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| crate::model::Block {
+                    attn_norm: b.attn_norm.clone(),
+                    wq: b.lin(LinearKind::Q).to_dense(),
+                    wk: b.lin(LinearKind::K).to_dense(),
+                    wv: b.lin(LinearKind::V).to_dense(),
+                    wo: b.lin(LinearKind::O).to_dense(),
+                    mlp_norm: b.mlp_norm.clone(),
+                    wgate: b.lin(LinearKind::Gate).to_dense(),
+                    wup: b.lin(LinearKind::Up).to_dense(),
+                    wdown: b.lin(LinearKind::Down).to_dense(),
+                })
+                .collect(),
+        }
+    }
+}
+
+impl LanguageModel for QuantizedModel {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward(&self, tokens: &[u16]) -> Matrix {
+        let mut x = self.embed_sequence(tokens);
+        for bi in 0..self.blocks.len() {
+            self.block_step(&mut x, bi);
+        }
+        self.lm_head(&x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{rtn, QuantConfig};
+    use crate::rng::Rng;
+
+    fn tiny() -> Model {
+        let cfg = ModelConfig {
+            name: "inf".into(),
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 16,
+        };
+        let mut rng = Rng::new(0x1F);
+        Model::random(cfg, &mut rng)
+    }
+
+    #[test]
+    fn dense_passthrough_is_bit_exact() {
+        let m = tiny();
+        let qm = QuantizedModel::from_model(&m);
+        let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        assert!(qm.forward(&toks).rel_err(&m.forward(&toks)) < 1e-12);
+        assert_eq!(qm.packed_weight_bytes(), qm.fp_weight_bytes());
+        assert!(qm.to_dense().forward(&toks).rel_err(&m.forward(&toks)) < 1e-12);
+    }
+
+    #[test]
+    fn packed_layers_shrink_memory_and_track_dense() {
+        let m = tiny();
+        let mut qm = QuantizedModel::from_model(&m);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        for id in qm.linear_ids() {
+            let q = rtn::quantize(m.linear(id), &cfg);
+            qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+            assert!(qm.layer(id).is_packed());
+        }
+        assert!(qm.packed_weight_bytes() < qm.fp_weight_bytes());
+        // Packed forward tracks the dense dequantized model closely.
+        let dense = qm.to_dense();
+        let toks: Vec<u16> = vec![7, 2, 9, 11, 0, 5];
+        let rel = qm.forward(&toks).rel_err(&dense.forward(&toks));
+        assert!(rel < 1e-4, "rel={rel}");
+    }
+
+    #[test]
+    fn stage_composition_matches_block_step() {
+        let m = tiny();
+        let qm = QuantizedModel::from_model(&m);
+        let toks: Vec<u16> = vec![8, 6, 7, 5];
+        let x0 = qm.embed_sequence(&toks);
+        let h = qm.attn_in(&x0, 0);
+        let ctx = qm.attn_ctx(&h, 0);
+        let x_mid = qm.post_attn(&x0, &ctx, 0);
+        let h2 = qm.mlp_in(&x_mid, 0);
+        let act = qm.mlp_act(&h2, 0);
+        let manual = qm.post_mlp(&x_mid, &act, 0);
+        let mut x = x0.clone();
+        qm.block_step(&mut x, 0);
+        assert!(x.rel_err(&manual) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_layer_shape_mismatch_panics() {
+        let m = tiny();
+        let mut qm = QuantizedModel::from_model(&m);
+        let id = LinearId { block: 0, kind: LinearKind::Down };
+        qm.set_layer(id, PackedLinear::dense(Matrix::zeros(3, 3)));
+    }
+}

@@ -1,0 +1,382 @@
+//! Execution-ready packed weight layout + blocked integer kernels.
+//!
+//! [`PackedLinear`] is the deployment form of a solved
+//! [`QuantizedLinear`]: integer codes bit-packed (via
+//! [`crate::quant::qtensor::pack_bits`]) into **column tiles** of
+//! [`COL_TILE`] outputs, alongside the per-group scale table and a
+//! precomputed `s·z` correction table. The conversion happens once, after
+//! the solver; from then on every matmul runs straight off the bitstream:
+//!
+//! `y_j = Σ_g s_{g,j} · (Σ_{i∈g} x_i·q_{ij}) − (s·z)_{g,j} · Σ_{i∈g} x_i`
+//!
+//! [`qgemm_packed`] is the blocked multi-row kernel behind
+//! [`PackedLinear::matmul`]: per column tile, each packed code row is
+//! unpacked **once** into a stack buffer and accumulated across the whole
+//! activation batch (the row-at-a-time `qgemv` loop re-read every code
+//! per activation row), with large batches parallelized over tiles via
+//! [`crate::parallel`]. Act-order solvers (OJBKQ, GPTQ) keep their codes
+//! in decode order; the kernel gathers activations through the recorded
+//! row permutation instead of falling back to a dense weight. Genuine
+//! dense transforms (AWQ's folded scaling, QuIP's rotations) and FP
+//! passthrough layers use the [`PackedLinear::Dense`] fallback.
+
+use crate::linalg::matmul;
+use crate::parallel::parallel_map;
+use crate::quant::qtensor::{pack_bits, unpack_bits_range};
+use crate::quant::QuantizedLinear;
+use crate::tensor::Matrix;
+
+/// Output columns per packed tile — sized so one unpacked code row plus
+/// the per-row accumulator live comfortably in registers / L1.
+pub const COL_TILE: usize = 32;
+
+/// Minimum `batch·m·n` product before [`qgemm_packed`] fans tiles out to
+/// threads: the pipeline already parallelizes over calibration sequences
+/// (whose per-step matrices are small), so the kernel only adds its own
+/// parallelism for genuinely large single calls (eval batches, benches).
+const PARALLEL_FLOPS_MIN: usize = 1 << 21;
+
+/// Column-tiled bit-packed codes + scale/correction tables.
+#[derive(Debug, Clone)]
+pub struct PackedTiles {
+    m: usize,
+    n: usize,
+    wbit: u8,
+    group_size: usize,
+    n_groups: usize,
+    /// One little-endian bitstream per column tile; tile `t` holds the
+    /// `m × width(t)` codes of columns `[t·COL_TILE, …)`, row-major.
+    tiles: Vec<Vec<u8>>,
+    /// Group scales `s`, `n_groups × n`.
+    scales: Matrix,
+    /// Precomputed correction table `s·z`, `n_groups × n`.
+    corr: Matrix,
+    /// Decode-order row permutation: code row `i` multiplies activation
+    /// feature `perm[i]`.
+    perm: Option<Vec<u32>>,
+}
+
+impl PackedTiles {
+    fn from_quantized(q: &QuantizedLinear) -> PackedTiles {
+        let (m, n) = (q.m, q.n);
+        let n_tiles = n.div_ceil(COL_TILE);
+        let mut tiles = Vec::with_capacity(n_tiles);
+        let mut tile_codes: Vec<u8> = Vec::with_capacity(m * COL_TILE);
+        for t in 0..n_tiles {
+            let c0 = t * COL_TILE;
+            let w = COL_TILE.min(n - c0);
+            tile_codes.clear();
+            for i in 0..m {
+                tile_codes.extend_from_slice(&q.codes[i * n + c0..i * n + c0 + w]);
+            }
+            tiles.push(pack_bits(&tile_codes, q.wbit));
+        }
+        PackedTiles {
+            m,
+            n,
+            wbit: q.wbit,
+            group_size: q.scales.group_size,
+            n_groups: q.scales.n_groups(),
+            tiles,
+            scales: q.scales.scales.clone(),
+            corr: q.scales.scales.hadamard(&q.scales.zeros),
+            perm: q.perm.clone(),
+        }
+    }
+
+    /// Resident bytes of the packed representation (codes + f32 tables +
+    /// permutation) — what the execution engine actually holds in memory.
+    fn bytes(&self) -> usize {
+        let codes: usize = self.tiles.iter().map(|t| t.len()).sum();
+        let tables = (self.scales.len() + self.corr.len()) * 4;
+        let perm = self.perm.as_ref().map_or(0, |p| p.len() * 4);
+        codes + tables + perm
+    }
+
+    /// Reconstruct the dense `m×n` runtime weight in original feature
+    /// order: `ŵ = s·q − s·z` per cell, rows scattered through `perm`.
+    fn to_dense(&self) -> Matrix {
+        let mut deq = Matrix::zeros(self.m, self.n);
+        let mut row_codes = [0u8; COL_TILE];
+        for (ti, packed) in self.tiles.iter().enumerate() {
+            let c0 = ti * COL_TILE;
+            let w = COL_TILE.min(self.n - c0);
+            for i in 0..self.m {
+                let g = i / self.group_size;
+                unpack_bits_range(packed, self.wbit, i * w, &mut row_codes[..w]);
+                let drow = &mut deq.row_mut(i)[c0..c0 + w];
+                for (jj, slot) in drow.iter_mut().enumerate() {
+                    *slot = self.scales.get(g, c0 + jj) * row_codes[jj] as f32
+                        - self.corr.get(g, c0 + jj);
+                }
+            }
+        }
+        match &self.perm {
+            None => deq,
+            Some(p) => {
+                let mut out = Matrix::zeros(self.m, self.n);
+                for i in 0..self.m {
+                    out.row_mut(p[i] as usize).copy_from_slice(deq.row(i));
+                }
+                out
+            }
+        }
+    }
+}
+
+/// An execution-ready linear layer: packed integer codes or a dense f32
+/// fallback. Conversion from the solver output happens once
+/// ([`PackedLinear::from_quantized`]); the capture/eval hot path never
+/// materializes dense weights for packed layers.
+#[derive(Debug, Clone)]
+pub enum PackedLinear {
+    /// Bit-packed integer execution (RTN, Babai/Klein/OJBKQ, GPTQ —
+    /// including act-order layers, via the recorded row permutation).
+    Packed(PackedTiles),
+    /// Dense f32 execution: FP passthrough layers and transform methods
+    /// whose runtime weight is not `S⊙(Q−Z)` in any feature order
+    /// (AWQ, QuIP).
+    Dense(Matrix),
+}
+
+impl PackedLinear {
+    /// Convert a solved layer into execution form. With `packed_exec`
+    /// false everything becomes a dense splice (the numerically exact
+    /// legacy mode).
+    pub fn from_quantized(q: &QuantizedLinear, packed_exec: bool) -> PackedLinear {
+        if !packed_exec || q.wbit == 0 || (q.effective.is_some() && q.perm.is_none()) {
+            return PackedLinear::Dense(q.dequantize());
+        }
+        PackedLinear::Packed(PackedTiles::from_quantized(q))
+    }
+
+    /// Wrap a dense weight (FP passthrough).
+    pub fn dense(w: Matrix) -> PackedLinear {
+        PackedLinear::Dense(w)
+    }
+
+    /// `(m, n)` = (input features, output features).
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            PackedLinear::Packed(t) => (t.m, t.n),
+            PackedLinear::Dense(w) => w.shape(),
+        }
+    }
+
+    /// True when this layer executes through the integer kernel.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, PackedLinear::Packed(_))
+    }
+
+    /// Resident memory of this layer inside the execution engine.
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedLinear::Packed(t) => t.bytes(),
+            PackedLinear::Dense(w) => w.len() * 4,
+        }
+    }
+
+    /// Dense `m×n` runtime weight (original feature order) — export and
+    /// test support, not the execution path.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            PackedLinear::Packed(t) => t.to_dense(),
+            PackedLinear::Dense(w) => w.clone(),
+        }
+    }
+
+    /// `Y = X · Ŵ` for a batch of activation rows.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        match self {
+            PackedLinear::Packed(t) => qgemm_packed(t, x),
+            PackedLinear::Dense(w) => matmul(x, w),
+        }
+    }
+}
+
+/// Blocked multi-row quantized GEMM over the tiled bitstream.
+pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
+    assert_eq!(x.cols(), t.m, "activation/layer shape mismatch");
+    let b = x.rows();
+    // Gather activations into decode order once per call; every tile then
+    // reads the same permuted view.
+    let gathered;
+    let xp: &Matrix = match &t.perm {
+        Some(p) => {
+            gathered = Matrix::from_fn(b, t.m, |r, i| x.get(r, p[i] as usize));
+            &gathered
+        }
+        None => x,
+    };
+    // Per-group activation sums (the z-correction operand), `b × groups`.
+    let mut gsum = Matrix::zeros(b, t.n_groups);
+    for r in 0..b {
+        let row = xp.row(r);
+        let grow = gsum.row_mut(r);
+        for (i, &v) in row.iter().enumerate() {
+            grow[i / t.group_size] += v;
+        }
+    }
+    let n_tiles = t.tiles.len();
+    let tile_out: Vec<Matrix> = if n_tiles > 1 && b * t.m * t.n >= PARALLEL_FLOPS_MIN {
+        parallel_map(n_tiles, |ti| tile_matmul(t, xp, &gsum, ti))
+    } else {
+        (0..n_tiles).map(|ti| tile_matmul(t, xp, &gsum, ti)).collect()
+    };
+    let mut y = Matrix::zeros(b, t.n);
+    for (ti, block) in tile_out.iter().enumerate() {
+        y.set_block(0, ti * COL_TILE, block);
+    }
+    y
+}
+
+/// One output tile: unpack each code row once, accumulate across the
+/// whole batch, then apply the per-group scale/correction.
+fn tile_matmul(t: &PackedTiles, xp: &Matrix, gsum: &Matrix, ti: usize) -> Matrix {
+    let c0 = ti * COL_TILE;
+    let w = COL_TILE.min(t.n - c0);
+    let b = xp.rows();
+    let packed = &t.tiles[ti];
+    let mut out = Matrix::zeros(b, w);
+    let mut acc = vec![0.0f32; b * w];
+    let mut row_codes = [0u8; COL_TILE];
+    let mut codes_f = [0.0f32; COL_TILE];
+    for g in 0..t.n_groups {
+        acc.fill(0.0);
+        let r0 = g * t.group_size;
+        let r1 = (r0 + t.group_size).min(t.m);
+        for i in r0..r1 {
+            unpack_bits_range(packed, t.wbit, i * w, &mut row_codes[..w]);
+            for (cf, &c) in codes_f[..w].iter_mut().zip(&row_codes[..w]) {
+                *cf = c as f32;
+            }
+            for r in 0..b {
+                let xv = xp.get(r, i);
+                if xv == 0.0 {
+                    continue;
+                }
+                let arow = &mut acc[r * w..r * w + w];
+                for (a, &cf) in arow.iter_mut().zip(&codes_f[..w]) {
+                    *a += xv * cf;
+                }
+            }
+        }
+        for r in 0..b {
+            let gsv = gsum.get(r, g);
+            let orow = out.row_mut(r);
+            let arow = &acc[r * w..r * w + w];
+            for (jj, o) in orow.iter_mut().enumerate() {
+                *o += t.scales.get(g, c0 + jj) * arow[jj] - t.corr.get(g, c0 + jj) * gsv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{gptq, rtn, QuantConfig};
+    use crate::rng::Rng;
+
+    fn rand_layer(m: usize, n: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(m, n, 0.5, &mut rng);
+        let x = Matrix::randn(7, m, 1.0, &mut rng);
+        (w, x)
+    }
+
+    #[test]
+    fn packed_matmul_matches_dequantized_gemm() {
+        // Ragged groups (m % gs ≠ 0) and ragged tiles (n % COL_TILE ≠ 0)
+        // across every supported low bit-width.
+        for &wbit in &[2u8, 3, 4] {
+            for &(m, n, gs) in &[(48usize, 40usize, 16usize), (33, 37, 12), (20, 5, 0)] {
+                let (w, x) = rand_layer(m, n, wbit as u64 * 100 + m as u64);
+                let cfg = QuantConfig { wbit, group_size: gs, ..Default::default() };
+                let q = rtn::quantize(&w, &cfg);
+                let p = PackedLinear::from_quantized(&q, true);
+                assert!(p.is_packed());
+                let dense = matmul(&x, &q.dequantize());
+                let packed = p.matmul(&x);
+                assert!(
+                    packed.rel_err(&dense) < 1e-4,
+                    "wbit={wbit} m={m} n={n} gs={gs}: rel={}",
+                    packed.rel_err(&dense)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn act_order_perm_runs_packed_and_matches_effective() {
+        let (w, x) = rand_layer(40, 24, 9);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, act_order: true, ..Default::default() };
+        let q = gptq::quantize(&w, &x, &cfg).unwrap();
+        assert!(q.perm.is_some() && q.effective.is_some());
+        let p = PackedLinear::from_quantized(&q, true);
+        assert!(p.is_packed(), "perm layers must run on the integer kernel");
+        let dense = matmul(&x, &q.dequantize()); // effective, original order
+        let packed = p.matmul(&x);
+        assert!(packed.rel_err(&dense) < 1e-4, "rel={}", packed.rel_err(&dense));
+        // And the dense reconstruction agrees with the solver's effective.
+        assert!(p.to_dense().rel_err(&q.dequantize()) < 1e-5);
+    }
+
+    #[test]
+    fn effective_without_perm_falls_back_dense() {
+        let (w, x) = rand_layer(24, 12, 3);
+        let mut q = rtn::quantize(&w, &QuantConfig::default());
+        q.effective = Some(w.clone()); // a transform folded here (AWQ/QuIP)
+        let p = PackedLinear::from_quantized(&q, true);
+        assert!(!p.is_packed());
+        assert_eq!(p.matmul(&x), matmul(&x, &w));
+        assert_eq!(p.bytes(), 24 * 12 * 4);
+    }
+
+    #[test]
+    fn packed_exec_off_splices_dense() {
+        let (w, _) = rand_layer(16, 8, 4);
+        let q = rtn::quantize(&w, &QuantConfig { wbit: 4, group_size: 8, ..Default::default() });
+        let p = PackedLinear::from_quantized(&q, false);
+        assert!(!p.is_packed());
+        assert_eq!(p.to_dense(), q.dequantize());
+    }
+
+    #[test]
+    fn to_dense_matches_dequantize() {
+        for &(gs, wbit) in &[(16usize, 4u8), (12, 3), (0, 2)] {
+            let (w, _) = rand_layer(48, 37, gs as u64 + wbit as u64);
+            let cfg = QuantConfig { wbit, group_size: gs, ..Default::default() };
+            let q = rtn::quantize(&w, &cfg);
+            let p = PackedLinear::from_quantized(&q, true);
+            // `s·q − s·z` vs `s·(q−z)`: identical up to one f32 rounding.
+            assert!(p.to_dense().rel_err(&q.dequantize()) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn resident_bytes_beat_f32_by_4x_at_w4() {
+        let (w, _) = rand_layer(256, 64, 7);
+        let cfg = QuantConfig { wbit: 4, group_size: 128, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let p = PackedLinear::from_quantized(&q, true);
+        let fp = 256 * 64 * 4;
+        assert!(
+            p.bytes() * 4 <= fp,
+            "resident {} vs fp {} (ratio {:.2})",
+            p.bytes(),
+            fp,
+            fp as f64 / p.bytes() as f64
+        );
+    }
+
+    #[test]
+    fn zero_activation_batch_short_circuits() {
+        let (w, _) = rand_layer(24, 6, 5);
+        let cfg = QuantConfig { wbit: 3, group_size: 8, ..Default::default() };
+        let p = PackedLinear::from_quantized(&rtn::quantize(&w, &cfg), true);
+        let y = p.matmul(&Matrix::zeros(3, 24));
+        assert!(y.as_slice().iter().all(|&v| v == 0.0));
+    }
+}

@@ -21,10 +21,13 @@
 //! `artifacts/*.hlo.txt` plus pretrained tiny-LM weights, and the Rust
 //! binary is self-contained afterwards.
 //!
-//! Entry points: [`coordinator::Pipeline`] drives end-to-end quantization;
-//! [`quant`] exposes every solver (RTN / GPTQ / AWQ / QuIP / Babai /
-//! Klein / OJBKQ); [`eval`] measures perplexity, zero-shot and reasoning
-//! accuracy; [`bench`] is the measurement harness used by `cargo bench`.
+//! Entry points: [`coordinator::Pipeline`] drives end-to-end quantization
+//! and returns a packed-execution [`infer::QuantizedModel`]; [`quant`]
+//! exposes every solver (RTN / GPTQ / AWQ / QuIP / Babai / Klein /
+//! OJBKQ); [`infer`] executes the quantized model straight from
+//! bit-packed integer codes; [`eval`] measures perplexity, zero-shot and
+//! reasoning accuracy on any [`model::LanguageModel`]; [`bench`] is the
+//! measurement harness used by `cargo bench`.
 
 pub mod bench;
 pub mod cli;
@@ -32,6 +35,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod infer;
 pub mod linalg;
 pub mod model;
 pub mod parallel;

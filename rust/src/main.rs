@@ -4,11 +4,16 @@
 //! ojbkq info      [--artifacts DIR]
 //! ojbkq quantize  --model NAME [--method ours] [--wbit 4] [--group 128]
 //!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
-//!                 [--calib 32] [--seq 128] [--out PATH]
+//!                 [--calib 32] [--seq 128] [--out PATH] [--dense-exec]
 //! ojbkq eval      --model NAME [--method ours] [--ppl-tokens 8192]
 //!                 [--zeroshot] [--reasoning] (quantize + evaluate)
 //! ojbkq methods   (list available solvers)
 //! ```
+//!
+//! Quantized execution is on by default: the pipeline returns a packed
+//! [`ojbkq::infer::QuantizedModel`] whose calibration captures and evals
+//! run straight from bit-packed integer codes. `--dense-exec` restores
+//! the legacy dense f32 splice (also: `OJBKQ_DENSE_EXEC=1`).
 //!
 //! Model NAME refers to the zoo presets (see `config::ModelConfig::zoo`)
 //! whose trained weights live in `artifacts/` after `make artifacts`.
@@ -58,6 +63,9 @@ fn quant_config(args: &Args) -> QuantConfig {
         "pjrt" => Backend::Pjrt,
         _ => Backend::Native,
     };
+    if args.get_flag("dense-exec") {
+        cfg.packed_exec = false;
+    }
     cfg
 }
 
@@ -163,8 +171,19 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
         report.capture_block_steps,
         report.compression_ratio()
     );
+    if report.layers.is_empty() {
+        println!("packed engine: FP passthrough (no layers quantized; full f32 resident)");
+    } else {
+        println!(
+            "packed engine: {} resident weight bytes ({:.2}x below the {} f32 bytes; {} execution)",
+            report.packed_weight_bytes(),
+            report.resident_compression(),
+            report.fp_weight_bytes(),
+            if cfg.packed_exec { "integer-kernel" } else { "dense" }
+        );
+    }
     if let Some(out) = args.get("out") {
-        if let Err(e) = ojbkq::model::save_model(&qmodel, std::path::Path::new(out)) {
+        if let Err(e) = ojbkq::model::save_model(&qmodel.to_dense(), std::path::Path::new(out)) {
             eprintln!("saving {out}: {e}");
             return 1;
         }

@@ -59,6 +59,13 @@ impl LinearKind {
         ]
     }
 
+    /// Position of this kind in [`LinearKind::all`] order — the canonical
+    /// per-block slot index shared by the coordinator's layer UIDs and the
+    /// packed execution engine's layer table.
+    pub fn index(&self) -> usize {
+        Self::all().iter().position(|k| k == self).unwrap()
+    }
+
     /// The tap point whose output feeds this linear.
     pub fn tap(&self) -> TapPoint {
         match self {
@@ -278,25 +285,7 @@ impl Model {
     /// initial `seq × d` hidden-state matrix of the block-resident
     /// forward API. Embed once, then advance with [`Model::block_step`].
     pub fn embed_sequence(&self, tokens: &[u16]) -> Matrix {
-        let seq = tokens.len();
-        assert!(seq <= self.cfg.max_seq, "sequence too long");
-        let d = self.cfg.d_model;
-        let mut x = Matrix::zeros(seq, d);
-        for (t, &tok) in tokens.iter().enumerate() {
-            let emb = self.embedding.row(tok as usize);
-            let row = x.row_mut(t);
-            row.copy_from_slice(emb);
-            // Sinusoidal positions scaled to the embedding init std so
-            // position does not swamp token identity (twin of
-            // pretrain.pos_encoding).
-            for i in 0..d / 2 {
-                let freq = (-(2.0 * i as f64 / d as f64) * 10_000f64.ln()).exp();
-                let angle = t as f64 * freq;
-                row[2 * i] += 0.02 * angle.sin() as f32;
-                row[2 * i + 1] += 0.02 * angle.cos() as f32;
-            }
-        }
-        x
+        embed_tokens(&self.embedding, &self.cfg, tokens)
     }
 
     /// Advance a resident hidden state through block `block_idx` in place,
@@ -366,10 +355,47 @@ impl Model {
         let xf = rmsnorm(hidden, &self.final_norm);
         matmul(&xf, &self.embedding.transpose())
     }
+}
+
+/// Shared embedding stage: token rows + sinusoidal positions scaled to
+/// the embedding init std so position does not swamp token identity
+/// (twin of pretrain.pos_encoding). Used by both the dense [`Model`] and
+/// the packed [`crate::infer::QuantizedModel`], which must agree bit for
+/// bit on everything except the linear kernels.
+pub fn embed_tokens(embedding: &Matrix, cfg: &ModelConfig, tokens: &[u16]) -> Matrix {
+    let seq = tokens.len();
+    assert!(seq <= cfg.max_seq, "sequence too long");
+    let d = cfg.d_model;
+    let mut x = Matrix::zeros(seq, d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        let emb = embedding.row(tok as usize);
+        let row = x.row_mut(t);
+        row.copy_from_slice(emb);
+        for i in 0..d / 2 {
+            let freq = (-(2.0 * i as f64 / d as f64) * 10_000f64.ln()).exp();
+            let angle = t as f64 * freq;
+            row[2 * i] += 0.02 * angle.sin() as f32;
+            row[2 * i + 1] += 0.02 * angle.cos() as f32;
+        }
+    }
+    x
+}
+
+/// A causal language model the evaluation harnesses can score: the dense
+/// FP [`Model`] and the packed-execution [`crate::infer::QuantizedModel`]
+/// both implement it, so perplexity / zero-shot / reasoning evals run
+/// identically on either (Table 1–3 of the paper compare exactly these
+/// two execution forms).
+pub trait LanguageModel {
+    /// Architecture metadata (`max_seq` bounds scoring windows).
+    fn config(&self) -> &ModelConfig;
+
+    /// Logits for one token sequence (`seq × vocab`).
+    fn forward(&self, tokens: &[u16]) -> Matrix;
 
     /// Sum of token negative log-likelihoods for positions `1..seq`
     /// (predicting token t from prefix `..t`), plus the token count.
-    pub fn sequence_nll(&self, tokens: &[u16]) -> (f64, usize) {
+    fn sequence_nll(&self, tokens: &[u16]) -> (f64, usize) {
         if tokens.len() < 2 {
             return (0.0, 0);
         }
@@ -383,15 +409,13 @@ impl Model {
     }
 
     /// Greedy continuation of `prompt` by `n` tokens.
-    pub fn greedy_continue(&self, prompt: &[u16], n: usize) -> Vec<u16> {
+    fn greedy_continue(&self, prompt: &[u16], n: usize) -> Vec<u16> {
+        let max_seq = self.config().max_seq;
         let mut ctx: Vec<u16> = prompt.to_vec();
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            let window = if ctx.len() > self.cfg.max_seq {
-                &ctx[ctx.len() - self.cfg.max_seq..]
-            } else {
-                &ctx[..]
-            };
+            let window =
+                if ctx.len() > max_seq { &ctx[ctx.len() - max_seq..] } else { &ctx[..] };
             let logits = self.forward(window);
             let last = logits.row(logits.rows() - 1);
             let next = crate::util::argmax(last) as u16;
@@ -399,6 +423,16 @@ impl Model {
             ctx.push(next);
         }
         out
+    }
+}
+
+impl LanguageModel for Model {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward(&self, tokens: &[u16]) -> Matrix {
+        Model::forward(self, tokens)
     }
 }
 

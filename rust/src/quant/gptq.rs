@@ -102,14 +102,20 @@ pub fn quantize(w: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<
 
     // Un-permute rows of the code matrix back to original feature order.
     // Scales were computed in permuted space with permuted group
-    // boundaries, so we keep codes+scales in permuted space and attach the
-    // inverse permutation through an effective dense weight.
-    let inv = invert_perm(&perm);
-    let q_p = QuantizedLinear::new(codes_p, sc, cfg.wbit, m, n);
-    let w_hat_p = q_p.dequantize();
-    let w_hat = w_hat_p.permute_rows(&inv);
-    let mut q = q_p;
-    q.effective = Some(w_hat);
+    // boundaries, so under act_order we keep codes+scales in permuted
+    // space and attach the inverse permutation through an effective dense
+    // weight, plus the decode-order row permutation so the packed
+    // execution engine can stay on integer codes. Without act_order the
+    // permutation is the identity: codes+scales are already in feature
+    // order and neither field is needed (and the packed kernel skips the
+    // activation gather entirely).
+    let mut q = QuantizedLinear::new(codes_p, sc, cfg.wbit, m, n);
+    if cfg.act_order {
+        let inv = invert_perm(&perm);
+        let w_hat = q.dequantize().permute_rows(&inv);
+        q.effective = Some(w_hat);
+        q.perm = Some(perm.iter().map(|&p| p as u32).collect());
+    }
     Ok(q)
 }
 

@@ -60,7 +60,11 @@ pub enum Method {
     Ojbkq,
     /// QEP-style corrective patch (Arai & Ichikawa 2025): the paper's
     /// Eq. 4 corner of JTA — runtime activations, full-precision
-    /// reference (μ=0, λ=0) — with Random-K decoding.
+    /// reference (μ=0, λ=0) — with Random-K decoding. Standalone
+    /// [`quantize_layer`] calls use the true `X` reference; in-pipeline
+    /// the FP tap cache is skipped and the runtime taps stand in for it
+    /// (ROADMAP capture optimization — see [`skip_fp_reference`]), which
+    /// realizes the self-referential target `X̃W` instead.
     Qep,
 }
 
@@ -174,6 +178,13 @@ pub struct QuantConfig {
     /// Base RNG seed (forked per layer/column for determinism under
     /// parallel execution).
     pub seed: u64,
+    /// Execute the progressively-quantized runtime model through the
+    /// packed integer kernels of [`crate::infer`] (default). When false,
+    /// the pipeline splices dense dequantized f32 weights as before —
+    /// the numerically bit-identical legacy mode, kept selectable for
+    /// capture-equivalence tests and A/B CI runs (`OJBKQ_DENSE_EXEC=1`
+    /// flips the default).
+    pub packed_exec: bool,
 }
 
 impl Default for QuantConfig {
@@ -192,6 +203,10 @@ impl Default for QuantConfig {
             ntile: 64,
             block: 16,
             seed: 0xBABA1,
+            packed_exec: !matches!(
+                std::env::var("OJBKQ_DENSE_EXEC").as_deref(),
+                Ok("1") | Ok("true") | Ok("yes")
+            ),
         }
     }
 }
@@ -218,6 +233,30 @@ impl QuantConfig {
     }
 }
 
+/// True when the pipeline may skip streaming the full-precision reference
+/// tap cache for `(method, cfg)` — the ROADMAP's "reuse runtime captures
+/// for the FP reference" item, which halves calibration capture cost
+/// (one resident hidden-state cache instead of two).
+///
+/// This holds at the QEP corner `(μ=0, λ=0)` — [`Method::Qep`], or
+/// [`Method::Ojbkq`] configured onto that corner — where the pipeline
+/// substitutes the runtime taps for the reference (`X := X̃`), realizing
+/// the self-referential corner `‖X̃Ŵ − X̃W‖²` in place of Eq. 4's
+/// mismatch target. Standalone [`quantize_layer`] calls with an explicit
+/// `x_fp` are unaffected. Schedules that vary μ across depth never
+/// qualify.
+///
+/// Side effect on diagnostics: with the FP cache skipped, per-layer
+/// [`LayerStats`] are computed against the runtime taps too, so
+/// `out_norm` reports `‖X̃W‖_F` rather than `‖XW‖_F` at this corner
+/// (the two drift apart with depth).
+pub fn skip_fp_reference(method: Method, cfg: &QuantConfig) -> bool {
+    if method == Method::Qep {
+        return true;
+    }
+    matches!(cfg.mu_schedule, MuSchedule::Fixed) && cfg.mu == 0.0 && cfg.lambda == 0.0
+}
+
 /// Per-layer quantization diagnostics, used by Figure-1-style reporting
 /// and the coordinator's metrics stream.
 #[derive(Debug, Clone)]
@@ -227,6 +266,8 @@ pub struct LayerStats {
     /// `||X̃·Ŵ − X̃·W||_F` — runtime-consistent proxy error (Eq. 1).
     pub rt_err: f64,
     /// `||X·W||_F` — the original output norm (Fig. 1 reference line).
+    /// Under the QEP-corner capture skip ([`skip_fp_reference`]) the
+    /// pipeline substitutes runtime taps, making this `||X̃·W||_F`.
     pub out_norm: f64,
     /// Wall-clock seconds spent in the solver.
     pub solve_secs: f64,
@@ -326,6 +367,30 @@ mod tests {
         assert_eq!(g0.effective_group(300), 300);
         assert_eq!(c4.effective_group(300), 128);
         assert_eq!(c4.effective_group(64), 64);
+    }
+
+    #[test]
+    fn fp_reference_skip_matches_qep_corner() {
+        let corner = QuantConfig { mu: 0.0, lambda: 0.0, ..Default::default() };
+        assert!(skip_fp_reference(Method::Ojbkq, &corner));
+        assert!(skip_fp_reference(Method::Rtn, &corner));
+        // Method::Qep pins (μ=0, λ=0) itself, whatever the config says.
+        assert!(skip_fp_reference(Method::Qep, &QuantConfig::default()));
+        // Any interpolation or drift penalty needs the true FP reference.
+        assert!(!skip_fp_reference(Method::Ojbkq, &QuantConfig::default()));
+        assert!(!skip_fp_reference(
+            Method::Ojbkq,
+            &QuantConfig { mu: 0.0, lambda: 0.1, ..Default::default() }
+        ));
+        assert!(!skip_fp_reference(
+            Method::Ojbkq,
+            &QuantConfig {
+                mu: 0.0,
+                lambda: 0.0,
+                mu_schedule: MuSchedule::DepthLinear { start: 0.0, end: 1.0 },
+                ..Default::default()
+            }
+        ));
     }
 
     #[test]

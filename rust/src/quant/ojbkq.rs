@@ -35,6 +35,10 @@ pub fn variant_random_k(cfg: &QuantConfig) -> QuantConfig {
 }
 
 /// QEP corner (Eq. 4): runtime activations, full-precision reference.
+/// Note the pipeline substitutes runtime taps for that reference when it
+/// skips the FP cache at this corner
+/// ([`crate::quant::skip_fp_reference`]); pass a true `x_fp` here to get
+/// the literal Eq. 4 objective.
 pub fn variant_qep(cfg: &QuantConfig) -> QuantConfig {
     QuantConfig { mu: 0.0, lambda: 0.0, ..cfg.clone() }
 }
@@ -158,10 +162,13 @@ pub fn quantize(
     let mut q = QuantizedLinear::new(codes, sc, cfg.wbit, m, n);
     if permuted {
         // Codes/scales live in decode order; expose the runtime weight in
-        // the original feature order via the effective matrix.
+        // the original feature order via the effective matrix, and record
+        // the row permutation so the packed execution engine can keep the
+        // integer codes and gather activations instead.
         let inv = crate::tensor::invert_perm(&perm);
         let w_hat = q.dequantize().permute_rows(&inv);
         q.effective = Some(w_hat);
+        q.perm = Some(perm.iter().map(|&p| p as u32).collect());
     }
     Ok(q)
 }

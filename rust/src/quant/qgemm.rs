@@ -14,23 +14,39 @@
 use super::QuantizedLinear;
 use crate::tensor::Matrix;
 
+/// Reusable per-call scratch for [`qgemv_into`]: the per-group activation
+/// sums and the per-group code-dot accumulator. Allocated once and reused
+/// across rows by [`qgemm`] (the original `qgemv` allocated both vectors
+/// — plus the output — on every call, which dominated small-layer GEMMs).
+#[derive(Debug, Default)]
+pub struct QgemvScratch {
+    gsum: Vec<f32>,
+    acc: Vec<f32>,
+}
+
 /// `y = x · Ŵ` for a single activation row `x` (length m), straight from
-/// codes. Falls back to the dense effective weight when the layer
-/// carries one (AWQ/QuIP transforms fold into `effective`).
-pub fn qgemv(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
+/// codes, written into `y` (length n). Falls back to the dense effective
+/// weight when the layer carries one (AWQ/QuIP transforms fold into
+/// `effective`). `scratch` is resized on first use and reused verbatim
+/// afterwards — contents need not be zeroed by the caller.
+pub fn qgemv_into(q: &QuantizedLinear, x: &[f32], y: &mut [f32], scratch: &mut QgemvScratch) {
     assert_eq!(x.len(), q.m);
+    assert_eq!(y.len(), q.n);
     if let Some(eff) = &q.effective {
-        return crate::linalg::gemv(&eff.transpose(), x);
+        y.copy_from_slice(&crate::linalg::gemv(&eff.transpose(), x));
+        return;
     }
     let gs = q.scales.group_size;
     let n_groups = q.scales.n_groups();
     // Per-group activation sums (the z-correction term).
-    let mut gsum = vec![0.0f32; n_groups];
+    scratch.gsum.resize(n_groups, 0.0);
+    scratch.gsum.fill(0.0);
     for (i, &xv) in x.iter().enumerate() {
-        gsum[i / gs] += xv;
+        scratch.gsum[i / gs] += xv;
     }
-    let mut y = vec![0.0f32; q.n];
-    let mut acc = vec![0.0f32; q.n]; // per-group code-dot accumulator
+    scratch.acc.resize(q.n, 0.0);
+    let acc = &mut scratch.acc; // per-group code-dot accumulator
+    y.fill(0.0);
     for g in 0..n_groups {
         acc.fill(0.0);
         let r0 = g * gs;
@@ -45,22 +61,28 @@ pub fn qgemv(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
                 *a += xv * code as f32;
             }
         }
-        for j in 0..q.n {
+        for (j, yv) in y.iter_mut().enumerate() {
             let s = q.scales.scales.get(g, j);
             let z = q.scales.zeros.get(g, j);
-            y[j] += s * (acc[j] - z * gsum[g]);
+            *yv += s * (acc[j] - z * scratch.gsum[g]);
         }
     }
+}
+
+/// `y = x · Ŵ` — allocating convenience wrapper over [`qgemv_into`].
+pub fn qgemv(q: &QuantizedLinear, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; q.n];
+    qgemv_into(q, x, &mut y, &mut QgemvScratch::default());
     y
 }
 
-/// `Y = X · Ŵ` for a batch of rows.
+/// `Y = X · Ŵ` for a batch of rows (one shared scratch across rows).
 pub fn qgemm(q: &QuantizedLinear, x: &Matrix) -> Matrix {
     assert_eq!(x.cols(), q.m);
     let mut y = Matrix::zeros(x.rows(), q.n);
+    let mut scratch = QgemvScratch::default();
     for r in 0..x.rows() {
-        let row = qgemv(q, x.row(r));
-        y.row_mut(r).copy_from_slice(&row);
+        qgemv_into(q, x.row(r), y.row_mut(r), &mut scratch);
     }
     y
 }
@@ -102,6 +124,23 @@ mod tests {
         for (a, b) in y.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn dirty_scratch_does_not_leak_between_rows() {
+        let mut rng = Rng::new(11);
+        let w = Matrix::randn(40, 9, 0.5, &mut rng);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let xa: Vec<f32> = (0..40).map(|i| (i as f32 * 0.11).cos()).collect();
+        let xb: Vec<f32> = (0..40).map(|i| (i as f32 * 0.29).sin()).collect();
+        let mut scratch = QgemvScratch::default();
+        let mut ya = vec![f32::NAN; 9]; // outputs must be fully overwritten
+        qgemv_into(&q, &xa, &mut ya, &mut scratch);
+        let mut yb = vec![f32::NAN; 9];
+        qgemv_into(&q, &xb, &mut yb, &mut scratch);
+        assert_eq!(ya, qgemv(&q, &xa));
+        assert_eq!(yb, qgemv(&q, &xb));
     }
 
     #[test]

@@ -4,6 +4,19 @@
 
 use super::scales::GroupScales;
 use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of [`QuantizedLinear::dequantize`] calls — the
+/// regression hook behind the packed-execution guarantee that the
+/// capture/eval hot path never materializes dense f32 weights (see
+/// `rust/tests/no_dequant_hot_path.rs`, which runs as its own process so
+/// the count is not polluted by parallel tests).
+static DEQUANT_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total `dequantize()` calls so far in this process.
+pub fn dequant_calls() -> u64 {
+    DEQUANT_CALLS.load(Ordering::Relaxed)
+}
 
 /// A quantized `m×n` linear layer: `Ŵ = S ⊙ (Q − Z)` (paper §3.2), plus
 /// an optional dense "effective" override for transform-based methods
@@ -24,6 +37,13 @@ pub struct QuantizedLinear {
     /// Dense effective weight for transformed methods; when `Some`, it is
     /// what [`Self::dequantize`] returns.
     pub effective: Option<Matrix>,
+    /// Input-feature (row) permutation when codes/scales live in decode
+    /// order (act-order solvers: OJBKQ, GPTQ): code row `i` multiplies
+    /// activation feature `perm[i]`. Lets the packed execution engine
+    /// (`crate::infer`) run integer kernels on permuted codes via an
+    /// activation gather instead of falling back to the dense
+    /// `effective` weight.
+    pub perm: Option<Vec<u32>>,
 }
 
 impl QuantizedLinear {
@@ -31,7 +51,7 @@ impl QuantizedLinear {
     pub fn new(codes: Vec<u8>, scales: GroupScales, wbit: u8, m: usize, n: usize) -> Self {
         assert_eq!(codes.len(), m * n);
         debug_assert!(codes.iter().all(|&c| (c as u16) < (1 << wbit)));
-        QuantizedLinear { codes, scales, wbit, m, n, effective: None }
+        QuantizedLinear { codes, scales, wbit, m, n, effective: None, perm: None }
     }
 
     /// FP passthrough pseudo-layer (the BF16 table rows): codes are empty
@@ -49,6 +69,7 @@ impl QuantizedLinear {
             m: w.rows(),
             n: w.cols(),
             effective: Some(w.clone()),
+            perm: None,
         }
     }
 
@@ -60,6 +81,7 @@ impl QuantizedLinear {
 
     /// Dequantize to a dense `m×n` f32 matrix.
     pub fn dequantize(&self) -> Matrix {
+        DEQUANT_CALLS.fetch_add(1, Ordering::Relaxed);
         if let Some(eff) = &self.effective {
             return eff.clone();
         }
@@ -115,21 +137,29 @@ pub fn pack_bits(codes: &[u8], wbit: u8) -> Vec<u8> {
 
 /// Inverse of [`pack_bits`]; `n` is the code count.
 pub fn unpack_bits(packed: &[u8], wbit: u8, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_bits_range(packed, wbit, 0, &mut out);
+    out
+}
+
+/// Unpack `out.len()` codes starting at code index `start` of a
+/// [`pack_bits`] stream — the tile-row accessor of the packed execution
+/// engine (`crate::infer`), which unpacks one row of a column tile at a
+/// time into a stack buffer without touching the rest of the stream.
+pub fn unpack_bits_range(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) {
     assert!(wbit >= 1 && wbit <= 8);
     let mask = ((1u16 << wbit) - 1) as u8;
-    let mut out = Vec::with_capacity(n);
-    let mut bitpos = 0usize;
-    for _ in 0..n {
+    let mut bitpos = start * wbit as usize;
+    for slot in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let mut v = packed[byte] >> off;
         if off + wbit as usize > 8 {
             v |= packed[byte + 1] << (8 - off);
         }
-        out.push(v & mask);
+        *slot = v & mask;
         bitpos += wbit as usize;
     }
-    out
 }
 
 #[cfg(test)]
@@ -148,6 +178,21 @@ mod tests {
             assert_eq!(packed.len(), (n * wbit as usize).div_ceil(8));
             let back = unpack_bits(&packed, wbit, n);
             assert_eq!(back, codes, "wbit={wbit}");
+        }
+    }
+
+    #[test]
+    fn unpack_range_matches_full_unpack() {
+        let mut rng = Rng::new(9);
+        for wbit in [2u8, 3, 4, 5, 7] {
+            let n = 301;
+            let codes: Vec<u8> = (0..n).map(|_| (rng.below(1 << wbit)) as u8).collect();
+            let packed = pack_bits(&codes, wbit);
+            for &(start, len) in &[(0usize, 7usize), (13, 32), (250, 51), (300, 1), (64, 0)] {
+                let mut out = vec![0u8; len];
+                unpack_bits_range(&packed, wbit, start, &mut out);
+                assert_eq!(out, &codes[start..start + len], "wbit={wbit} start={start}");
+            }
         }
     }
 

@@ -1,0 +1,58 @@
+//! The packed-execution guarantee: with `packed_exec` on, pipeline
+//! calibration capture and model evaluation never call
+//! `QuantizedLinear::dequantize()` — the hot path runs entirely on
+//! bit-packed integer codes.
+//!
+//! This file intentionally holds a single test: integration-test files
+//! run as separate processes, so the process-global dequantize counter
+//! ([`ojbkq::quant::qtensor::dequant_calls`]) is not polluted by other
+//! tests running in parallel threads.
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::data::SyntheticGrammar;
+use ojbkq::eval::perplexity;
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::quant::qtensor::dequant_calls;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::rng::Rng;
+
+#[test]
+fn packed_pipeline_and_eval_never_dequantize_on_hot_path() {
+    let cfg = ModelConfig {
+        name: "nodq".into(),
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(0xD0);
+    let model = Model::random(cfg, &mut rng);
+    let corpus = SyntheticGrammar::new(32, 0.2, 3).corpus(6_000, &mut rng);
+    // RTN: codes only — no solver-side effective weight, so the one
+    // legitimate dequantize per layer is the layer_stats diagnostic
+    // computed at solve time (off the hot path).
+    let qcfg =
+        QuantConfig { wbit: 4, group_size: 8, packed_exec: true, ..Default::default() };
+    let before = dequant_calls();
+    let (qm, report) =
+        quantize_model(&model, &corpus, Method::Rtn, &qcfg, 3, 24, None).unwrap();
+    let after_pipeline = dequant_calls();
+    assert_eq!(
+        after_pipeline - before,
+        report.layers.len() as u64,
+        "capture/splice must not dequantize (only per-layer solve stats may)"
+    );
+    // Evaluation + raw forwards run straight off the packed codes.
+    let ppl = perplexity(&qm, &corpus, 24, 480);
+    assert!(ppl.is_finite() && ppl > 1.0);
+    let toks: Vec<u16> = vec![1, 2, 3, 4, 5];
+    let _ = qm.forward(&toks);
+    assert_eq!(
+        dequant_calls(),
+        after_pipeline,
+        "eval/forward on the packed engine must never dequantize"
+    );
+}

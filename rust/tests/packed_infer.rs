@@ -1,0 +1,152 @@
+//! Packed-execution parity and memory accounting: the quantized
+//! inference engine (`ojbkq::infer`) must reproduce the dense spliced
+//! model's logits from bit-packed integer codes — across bit-widths,
+//! ragged scale groups, act-order permuted layers, and the dense
+//! `effective` fallback — while resident weight memory shrinks by the
+//! advertised factor and the report's accounting matches the engine's.
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::data::{Corpus, SyntheticGrammar};
+use ojbkq::eval::perplexity;
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::rng::Rng;
+
+fn setup(d_model: usize, d_ff: usize) -> (Model, Corpus) {
+    let cfg = ModelConfig {
+        name: "pk".into(),
+        vocab_size: 48,
+        d_model,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(0xBEEF);
+    let model = Model::random(cfg, &mut rng);
+    let corpus = SyntheticGrammar::new(48, 0.2, 5).corpus(10_000, &mut rng);
+    (model, corpus)
+}
+
+/// Packed forward vs the dense dequantized twin of the *same* codes:
+/// every supported bit-width, with ragged groups (m % gs ≠ 0) and ragged
+/// column tiles (n % COL_TILE ≠ 0), through the act-order (perm) path.
+#[test]
+fn packed_forward_matches_dense_spliced_model() {
+    // d=24, ff=40: 24×24, 24×40 and 40×24 layers — group size 9 leaves
+    // ragged tails on both row counts, and both 24 and 40 are ragged
+    // against the 32-column tiles.
+    let (model, corpus) = setup(24, 40);
+    let toks: Vec<u16> = vec![1, 7, 13, 2, 40, 9, 27, 5];
+    for &wbit in &[2u8, 3, 4] {
+        for &gs in &[8usize, 9, 0] {
+            let cfg = QuantConfig {
+                wbit,
+                group_size: gs,
+                k: 2,
+                ntile: 16,
+                packed_exec: true,
+                ..QuantConfig::paper_defaults(wbit, gs)
+            };
+            // Ojbkq (act_order on by default) exercises the permuted
+            // integer path on every layer.
+            let (qm, _) =
+                quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 24, None).unwrap();
+            for id in qm.linear_ids() {
+                assert!(qm.layer(id).is_packed(), "wbit={wbit} gs={gs} {id} fell back dense");
+            }
+            let dense = qm.to_dense();
+            let rel = qm.forward(&toks).rel_err(&dense.forward(&toks));
+            assert!(rel < 1e-3, "wbit={wbit} gs={gs}: packed vs dense logits rel={rel}");
+        }
+    }
+}
+
+/// RTN (no permutation, pure codes) also matches, and its packed layers
+/// carry no activation gather.
+#[test]
+fn rtn_packed_forward_matches_dense() {
+    let (model, corpus) = setup(24, 40);
+    let toks: Vec<u16> = vec![3, 11, 0, 45, 22, 8];
+    let cfg = QuantConfig { wbit: 3, group_size: 8, packed_exec: true, ..Default::default() };
+    let (qm, _) = quantize_model(&model, &corpus, Method::Rtn, &cfg, 3, 24, None).unwrap();
+    for id in qm.linear_ids() {
+        assert!(qm.layer(id).is_packed());
+    }
+    let rel = qm.forward(&toks).rel_err(&qm.to_dense().forward(&toks));
+    assert!(rel < 1e-3, "rel={rel}");
+}
+
+/// Transform methods (AWQ's folded scaling, QuIP's rotations) must keep
+/// the dense `effective` fallback — and then packed and dense execution
+/// are the same arithmetic, bit for bit.
+#[test]
+fn effective_fallback_layers_stay_dense_and_exact() {
+    let (model, corpus) = setup(16, 24);
+    let toks: Vec<u16> = vec![5, 9, 13, 2, 30];
+    for method in [Method::Awq, Method::Quip] {
+        let cfg = QuantConfig {
+            wbit: 4,
+            group_size: 8,
+            ntile: 16,
+            packed_exec: true,
+            ..Default::default()
+        };
+        let (qm, _) = quantize_model(&model, &corpus, method, &cfg, 3, 24, None).unwrap();
+        for id in qm.linear_ids() {
+            assert!(
+                !qm.layer(id).is_packed(),
+                "{} {id} must use the dense effective fallback",
+                method.label()
+            );
+        }
+        let rel = qm.forward(&toks).rel_err(&qm.to_dense().forward(&toks));
+        assert!(rel < 1e-12, "{}: rel={rel}", method.label());
+    }
+}
+
+/// The report's engine-memory numbers must equal the engine's own
+/// accounting layer by layer, and a realistic 4-bit config must hold
+/// resident weight bytes at ≤ 1/4 of the f32 model.
+#[test]
+fn packed_bytes_accounting_matches_engine() {
+    let (model, corpus) = setup(64, 96);
+    let cfg =
+        QuantConfig { wbit: 4, group_size: 32, packed_exec: true, ..Default::default() };
+    let (qm, report) = quantize_model(&model, &corpus, Method::Rtn, &cfg, 3, 24, None).unwrap();
+    assert_eq!(report.packed_weight_bytes(), qm.packed_weight_bytes());
+    assert_eq!(report.fp_weight_bytes(), qm.fp_weight_bytes());
+    for rec in &report.layers {
+        assert_eq!(rec.resident_bytes, qm.layer(rec.id).bytes(), "{}", rec.id);
+    }
+    // W4 + one f32 scale/correction pair per 32-row group: ≥ 4× below
+    // dense f32 resident memory.
+    assert!(
+        qm.packed_weight_bytes() * 4 <= qm.fp_weight_bytes(),
+        "resident {} vs fp {} (ratio {:.2})",
+        qm.packed_weight_bytes(),
+        qm.fp_weight_bytes(),
+        report.resident_compression()
+    );
+}
+
+/// Dense-exec mode (the legacy f32 splice) produces the same scores the
+/// packed engine does, and the eval harness runs on either — perplexity
+/// is the paper's headline metric, so packed execution must not move it.
+#[test]
+fn eval_scores_match_between_packed_and_dense_exec() {
+    let (model, corpus) = setup(24, 40);
+    let base = QuantConfig { wbit: 4, group_size: 8, k: 2, ntile: 16, ..Default::default() };
+    let packed_cfg = QuantConfig { packed_exec: true, ..base.clone() };
+    let dense_cfg = QuantConfig { packed_exec: false, ..base };
+    let (qm_p, _) =
+        quantize_model(&model, &corpus, Method::Ojbkq, &packed_cfg, 3, 24, None).unwrap();
+    let (qm_d, _) =
+        quantize_model(&model, &corpus, Method::Ojbkq, &dense_cfg, 3, 24, None).unwrap();
+    let ppl_p = perplexity(&qm_p, &corpus, 24, 480);
+    let ppl_d = perplexity(&qm_d, &corpus, 24, 480);
+    let rel = (ppl_p - ppl_d).abs() / ppl_d;
+    assert!(rel < 0.02, "packed ppl {ppl_p} vs dense ppl {ppl_d}");
+    assert!(ppl_p.is_finite() && ppl_p > 1.0);
+}

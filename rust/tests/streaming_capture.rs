@@ -9,7 +9,7 @@
 use ojbkq::config::ModelConfig;
 use ojbkq::coordinator::{CaptureMode, Pipeline};
 use ojbkq::data::SyntheticGrammar;
-use ojbkq::model::{LinearId, LinearKind, Model, TapPoint, TapSet};
+use ojbkq::model::{LanguageModel, LinearId, LinearKind, Model, TapPoint, TapSet};
 use ojbkq::quant::{Method, QuantConfig};
 use ojbkq::rng::Rng;
 
@@ -99,6 +99,10 @@ fn streaming_taps_match_legacy_on_partially_quantized_model() {
 #[test]
 fn pipeline_streaming_matches_reforward() {
     let (model, calib) = setup();
+    // Dense execution on both legs: this test isolates the *capture
+    // strategy* (streaming vs prefix re-forward), and the re-forward path
+    // always captures from the dense spliced mirror. Packed-vs-dense
+    // execution parity is covered by `tests/packed_infer.rs`.
     let cfg = QuantConfig {
         wbit: 4,
         group_size: 8,
@@ -106,6 +110,7 @@ fn pipeline_streaming_matches_reforward() {
         ntile: 16,
         mu: 0.3,
         lambda: 0.2,
+        packed_exec: false,
         ..Default::default()
     };
     let (qm_stream, rep_stream) =
