@@ -1,0 +1,33 @@
+# Build-time artifact production (Python never runs on the request path).
+#
+# `make artifacts` trains the tiny-LM zoo (python/compile/pretrain.py) and
+# lowers the AOT solver kernels to HLO text (python/compile/aot.py) into
+# rust/artifacts/ — the directory the Rust tests and benches read
+# (override with OJBKQ_ARTIFACTS). CI caches this directory keyed on the
+# Python sources so `pjrt_roundtrip` and the trained-model smoke tests
+# run without retraining on every push.
+
+PYTHON    ?= python3
+ARTIFACTS ?= rust/artifacts
+
+.PHONY: artifacts artifacts-quick test bench clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.pretrain --out ../$(ARTIFACTS)
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+
+# Reduced flavor for CI / smoke runs: one model, fewer steps, quick AOT
+# variant subset. Produces the same file formats in the same place.
+artifacts-quick:
+	cd python && $(PYTHON) -m compile.pretrain --out ../$(ARTIFACTS) \
+		--models tiny-0.2M --steps 200
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS) --quick
+
+test:
+	cd rust && cargo test --release -q
+
+bench:
+	cd rust && cargo bench
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

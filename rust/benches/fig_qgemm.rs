@@ -1,12 +1,20 @@
 //! Packed-engine throughput and memory: quantized-GEMM execution vs the
-//! dense f32 splice it replaced.
+//! dense f32 splice it replaced, plus the PR-3 batch-fused paths.
 //!
-//! Two measurements on the fallback (random-init) model:
+//! Four measurements on the fallback (random-init) models:
 //!  * per-layer `Y = X·Ŵ` throughput — [`PackedLinear::matmul`] on
-//!    bit-packed codes vs dense [`matmul`] on the dequantized weight, at
-//!    calibration-sized and serving-sized batches;
+//!    bit-packed codes vs dense [`matmul`] across a batch sweep
+//!    `b ∈ {1, 8, 64, 512}` (serving-row to batched-capture-stack sizes);
+//!  * the unpack kernel microbench — table-driven [`unpack_bits_range`]
+//!    vs the per-code shift reference [`unpack_bits_range_shift`];
+//!  * capture-stage throughput on the 8-block `med-5M` fallback model —
+//!    one block advance of all calibration caches via the batched
+//!    tall-GEMM stage API vs per-sequence stepping (serial loop and the
+//!    PR-2-style `parallel_map` fan-out);
 //!  * whole-model forward latency + resident weight bytes —
 //!    [`QuantizedModel`] vs its dense dequantized twin.
+//!
+//! Machine-readable results land in `BENCH_qgemm.json` (cwd: `rust/`).
 //!
 //! ```sh
 //! cargo bench --bench fig_qgemm             # full
@@ -14,22 +22,38 @@
 //! ```
 
 use ojbkq::bench::{exp, Bencher};
+use ojbkq::config::ModelConfig;
 use ojbkq::coordinator::quantize_model;
-use ojbkq::infer::PackedLinear;
+use ojbkq::infer::{PackedLinear, QuantizedModel};
 use ojbkq::linalg::matmul;
 use ojbkq::model::LanguageModel;
+use ojbkq::parallel::parallel_map;
+use ojbkq::quant::qtensor::{pack_bits, unpack_bits_range, unpack_bits_range_shift};
 use ojbkq::quant::{rtn, Method, QuantConfig};
-use ojbkq::report::Table;
+use ojbkq::report::{json_str, Table};
 use ojbkq::rng::Rng;
-use ojbkq::tensor::Matrix;
+use ojbkq::tensor::{Matrix, RowBatch};
 
 fn main() {
-    layer_kernel_throughput();
-    model_forward_and_memory();
+    let mut json = Vec::new();
+    let t = layer_kernel_throughput();
+    json.push(("layer_sweep".to_string(), t.to_json()));
+    let t = unpack_microbench();
+    json.push(("unpack".to_string(), t.to_json()));
+    let (t, extra) = capture_batched_vs_per_sequence();
+    json.push(("capture".to_string(), t.to_json()));
+    json.extend(extra);
+    let t = model_forward_and_memory();
+    json.push(("model".to_string(), t.to_json()));
+    let fields: Vec<String> =
+        json.into_iter().map(|(k, v)| format!("{}:{}", json_str(&k), v)).collect();
+    let payload = format!("{{{}}}\n", fields.join(","));
+    std::fs::write("BENCH_qgemm.json", &payload).expect("write BENCH_qgemm.json");
+    eprintln!("[bench] wrote BENCH_qgemm.json");
 }
 
-/// Per-layer kernel comparison across batch sizes.
-fn layer_kernel_throughput() {
+/// Per-layer kernel comparison across the batch sweep.
+fn layer_kernel_throughput() -> Table {
     let (m, n) = if exp::quick() { (256usize, 256usize) } else { (512, 512) };
     let mut rng = Rng::new(0x46);
     let w = Matrix::randn(m, n, 0.5, &mut rng);
@@ -42,7 +66,7 @@ fn layer_kernel_throughput() {
         &format!("fig_qgemm — packed vs dense GEMM, {m}×{n} W4 g64"),
         &["batch", "dense p50 (s)", "packed p50 (s)", "dense GFLOP/s", "packed GFLOP/s"],
     );
-    for &batch in &[8usize, 64, 256] {
+    for &batch in &[1usize, 8, 64, 512] {
         let x = Matrix::randn(batch, m, 1.0, &mut rng);
         let flops = 2.0 * batch as f64 * m as f64 * n as f64;
         let sd = Bencher::new(&format!("dense  b={batch}")).iters(iters).run(|| matmul(&x, &dense));
@@ -57,10 +81,118 @@ fn layer_kernel_throughput() {
         ]);
     }
     table.emit(Some(&exp::results_dir()), "fig_qgemm_layer");
+    table
+}
+
+/// Table-driven unpack vs the per-code shift reference, per width.
+fn unpack_microbench() -> Table {
+    let n_codes = if exp::quick() { 1 << 16 } else { 1 << 18 };
+    let iters = if exp::quick() { 10 } else { 30 };
+    let mut rng = Rng::new(0x17);
+    let mut table = Table::new(
+        "fig_qgemm — unpack kernel, codes/s",
+        &["wbit", "shift p50 (s)", "lut p50 (s)", "speedup"],
+    );
+    for &wbit in &[2u8, 3, 4] {
+        let codes: Vec<u8> = (0..n_codes).map(|_| rng.below(1 << wbit) as u8).collect();
+        let packed = pack_bits(&codes, wbit);
+        let mut out = vec![0u8; n_codes];
+        let ss = Bencher::new(&format!("unpack shift w{wbit}"))
+            .iters(iters)
+            .run(|| unpack_bits_range_shift(&packed, wbit, 0, &mut out));
+        let sl = Bencher::new(&format!("unpack lut   w{wbit}"))
+            .iters(iters)
+            .run(|| unpack_bits_range(&packed, wbit, 0, &mut out));
+        table.push_row(&[
+            wbit.to_string(),
+            format!("{:.6}", ss.p50),
+            format!("{:.6}", sl.p50),
+            format!("{:.2}x", ss.p50 / sl.p50.max(1e-12)),
+        ]);
+    }
+    table.emit(Some(&exp::results_dir()), "fig_qgemm_unpack");
+    table
+}
+
+/// Capture-stage throughput on the 8-block fallback model: advancing all
+/// calibration caches one block, batched tall-GEMM vs per-sequence
+/// stepping (both the serial loop and the PR-2 `parallel_map` fan-out,
+/// which nested kernel threads inside sequence threads).
+fn capture_batched_vs_per_sequence() -> (Table, Vec<(String, String)>) {
+    let mc = ModelConfig::named("med-5M");
+    let wb = exp::load_workbench(&mc);
+    let cfg = QuantConfig { wbit: 4, group_size: 64, ..Default::default() };
+    let mut qm = QuantizedModel::from_model(&wb.model);
+    // Only block 0 is advanced below — packing the other blocks would be
+    // pure setup cost.
+    for id in qm.linear_ids().into_iter().filter(|id| id.block == 0) {
+        let q = rtn::quantize(wb.model.linear(id), &cfg);
+        qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+    }
+    let (n_calib, seq) = if exp::quick() { (8usize, 32usize) } else { (16, 64) };
+    let mut rng = Rng::new(0xCA);
+    let calib = wb.corpus.calibration(n_calib, seq, &mut rng);
+    let parts: Vec<Matrix> = calib.iter().map(|s| qm.embed_sequence(s)).collect();
+    let batch = RowBatch::stack(&parts);
+    let iters = if exp::quick() { 5 } else { 10 };
+    let block = 0usize;
+
+    let advance_seq = |h: &Matrix| -> Matrix {
+        let a = qm.attn_in(h, block);
+        let c = qm.attn_ctx(&a, block);
+        let m = qm.post_attn(h, &c, block);
+        let mi = qm.mlp_in(&m, block);
+        let act = qm.mlp_act(&mi, block);
+        qm.post_mlp(&m, &act, block)
+    };
+    let s_serial = Bencher::new("capture per-seq serial").iters(iters).run(|| {
+        parts.iter().map(|h| advance_seq(h)).collect::<Vec<_>>()
+    });
+    let s_fanout = Bencher::new("capture per-seq parallel_map").iters(iters).run(|| {
+        parallel_map(parts.len(), |i| advance_seq(&parts[i]))
+    });
+    let s_batched = Bencher::new("capture batched tall-GEMM").iters(iters).run(|| {
+        let a = qm.attn_in_batch(batch.data(), block);
+        let c = qm.attn_ctx_batch(&a, batch.offsets(), block);
+        let m = qm.post_attn_batch(batch.data(), &c, block);
+        let mi = qm.mlp_in_batch(&m, block);
+        let act = qm.mlp_act_batch(&mi, block);
+        qm.post_mlp_batch(&m, &act, block)
+    });
+    let speedup_serial = s_serial.p50 / s_batched.p50.max(1e-12);
+    let speedup_fanout = s_fanout.p50 / s_batched.p50.max(1e-12);
+    let mut table = Table::new(
+        &format!(
+            "fig_qgemm — capture advance, {} ({} blocks), n_calib={n_calib} seq={seq} W4 g64",
+            mc.name, mc.n_layers
+        ),
+        &["capture path", "block advance p50 (s)", "speedup vs batched"],
+    );
+    table.push_row(&[
+        "per-sequence (serial)".to_string(),
+        format!("{:.5}", s_serial.p50),
+        format!("{speedup_serial:.2}x"),
+    ]);
+    table.push_row(&[
+        "per-sequence (parallel_map)".to_string(),
+        format!("{:.5}", s_fanout.p50),
+        format!("{speedup_fanout:.2}x"),
+    ]);
+    table.push_row(&[
+        "batched tall-GEMM".to_string(),
+        format!("{:.5}", s_batched.p50),
+        "1.00x".to_string(),
+    ]);
+    table.emit(Some(&exp::results_dir()), "fig_qgemm_capture");
+    let extra = vec![
+        ("capture_speedup_vs_serial".to_string(), format!("{speedup_serial:.3}")),
+        ("capture_speedup_vs_parallel_map".to_string(), format!("{speedup_fanout:.3}")),
+    ];
+    (table, extra)
 }
 
 /// Whole-model forward latency + resident weight memory.
-fn model_forward_and_memory() {
+fn model_forward_and_memory() -> Table {
     let mc = &exp::bench_models()[0];
     let wb = exp::load_workbench(mc);
     let cfg = QuantConfig { wbit: 4, group_size: 64, packed_exec: true, ..Default::default() };
@@ -98,4 +230,5 @@ fn model_forward_and_memory() {
         packed_bytes * 4 <= fp_bytes,
         "W4 resident memory must be ≤ 1/4 of f32: {packed_bytes} vs {fp_bytes}"
     );
+    table
 }

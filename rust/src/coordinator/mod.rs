@@ -42,9 +42,20 @@
 //! Summed over a block, the runtime refreshes cost exactly one block
 //! forward, so calibration is **linear in depth**: `2·n_blocks·n_calib`
 //! block advances total (`n_blocks·n_calib` under the QEP skip), tracked
-//! in [`PipelineReport::capture_block_steps`]. Per-sequence steps run in
-//! parallel via [`crate::parallel::parallel_map`]; results are stacked in
-//! sequence order, so the pipeline stays bit-exactly deterministic.
+//! in [`PipelineReport::capture_block_steps`].
+//!
+//! Both caches live **vstacked** in a [`RowBatch`] (one tall matrix +
+//! per-sequence row offsets), and every capture site is **batch-fused**:
+//! each linear stage runs as ONE tall GEMM over the stacked cache
+//! (`attn_in_batch` → `attn_ctx_batch` → … → `post_mlp_batch`), so the
+//! stage's weight matrix is streamed from memory once per *stage* rather
+//! than once per *sequence*, and the captured `X` / `X̃` matrices fall
+//! out of the stage outputs directly — no per-sequence stacking step.
+//! Only the causal softmax core runs per sequence (dynamically scheduled
+//! over the ragged row ranges). The batched stages are bit-identical to
+//! per-sequence stepping (each output row is computed by the same kernel
+//! over the same operands), so the pipeline stays bit-exactly
+//! deterministic — pinned by `tests/batched_capture.rs`.
 //!
 //! [`CaptureMode::Reforward`] retains the legacy O(n_blocks²) prefix
 //! re-forward path over a dense spliced [`Model`] mirror — used by
@@ -65,7 +76,7 @@ use crate::parallel::parallel_map;
 use crate::quant::{quantize_layer, skip_fp_reference, LayerStats, Method, QuantConfig};
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, RowBatch};
 use std::collections::HashMap;
 use std::time::Instant;
 
@@ -155,8 +166,8 @@ const GROUPS: [(&[LinearKind], TapPoint); 4] = [
 
 /// The pipeline: borrows the reference model, owns the progressively
 /// quantized packed-execution model, the calibration set, and the paired
-/// FP / runtime hidden-state caches (one matrix per calibration
-/// sequence).
+/// FP / runtime hidden-state caches — each a [`RowBatch`] vstacking all
+/// calibration sequences so stages run batch-fused.
 pub struct Pipeline<'a> {
     fp_model: &'a Model,
     /// Packed execution engine holding every quantized layer so far
@@ -175,11 +186,12 @@ pub struct Pipeline<'a> {
     /// The QEP-corner capture optimization (see
     /// [`crate::quant::skip_fp_reference`]).
     skip_fp: bool,
-    /// FP hidden states at the entry of the current block (empty when
-    /// `skip_fp`).
-    fp_hidden: Vec<Matrix>,
-    /// Runtime (partially-quantized) hidden states at the same position.
-    rt_hidden: Vec<Matrix>,
+    /// FP hidden states at the entry of the current block, vstacked with
+    /// per-sequence row offsets (`None` when `skip_fp` or before embed).
+    fp_batch: Option<RowBatch>,
+    /// Runtime (partially-quantized) hidden states at the same position,
+    /// same stacked layout.
+    rt_batch: Option<RowBatch>,
     /// Progress callback (layer id, stats) for streaming metrics.
     pub on_layer: Option<Box<dyn FnMut(LinearId, &LayerStats) + 'a>>,
 }
@@ -206,8 +218,8 @@ impl<'a> Pipeline<'a> {
             rt,
             capture_mode: CaptureMode::Streaming,
             skip_fp,
-            fp_hidden: Vec::new(),
-            rt_hidden: Vec::new(),
+            fp_batch: None,
+            rt_batch: None,
             on_layer: None,
         }
     }
@@ -242,17 +254,19 @@ impl<'a> Pipeline<'a> {
         let n_blocks = self.fp_model.blocks.len();
         match self.capture_mode {
             CaptureMode::Streaming => {
-                // Embed every calibration sequence once; the resident
-                // caches then advance exactly once per block.
+                // Embed every calibration sequence once and vstack into
+                // the resident batch caches, which then advance exactly
+                // once per block — each linear stage as one tall GEMM.
                 // Quantization never touches the embedding, so the
                 // runtime cache starts as an exact copy of the FP cache
                 // (which is skipped entirely at the QEP corner).
                 let tc = Instant::now();
                 let model = self.fp_model;
                 let calib = &self.calib;
-                self.rt_hidden = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+                let parts = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+                self.rt_batch = Some(RowBatch::stack(&parts));
                 if !self.skip_fp {
-                    self.fp_hidden = self.rt_hidden.clone();
+                    self.fp_batch = self.rt_batch.clone();
                 }
                 report.capture_secs += tc.elapsed().as_secs_f64();
             }
@@ -270,7 +284,8 @@ impl<'a> Pipeline<'a> {
         Ok((self.runtime, report))
     }
 
-    /// Advance the FP cache one block (in parallel over sequences),
+    /// Advance the FP cache one block as a single batch-fused
+    /// [`Model::block_step_batch`] (one tall GEMM per linear stage),
     /// returning the four stacked reference tap matrices.
     fn step_fp(
         &mut self,
@@ -279,110 +294,88 @@ impl<'a> Pipeline<'a> {
     ) -> HashMap<TapPoint, Matrix> {
         let t0 = Instant::now();
         let model = self.fp_model;
-        let hidden = &self.fp_hidden;
-        let n = self.calib.len();
-        let stepped: Vec<(Matrix, TapSet)> = parallel_map(n, |i| {
-            let mut h = hidden[i].clone();
-            let mut taps = TapSet::request(block, &TapPoint::all());
-            model.block_step(&mut h, block, &mut taps);
-            (h, taps)
-        });
-        let mut new_hidden = Vec::with_capacity(n);
-        let mut parts: HashMap<TapPoint, Vec<Matrix>> = HashMap::new();
-        for (h, mut taps) in stepped {
-            new_hidden.push(h);
-            for p in TapPoint::all() {
-                parts.entry(p).or_default().push(taps.take(block, p).expect("fp tap missing"));
-            }
+        let mut taps = TapSet::request(block, &TapPoint::all());
+        let batch = self.fp_batch.as_mut().expect("fp cache initialized");
+        model.block_step_batch(batch, block, &mut taps);
+        let mut out = HashMap::new();
+        for p in TapPoint::all() {
+            out.insert(p, taps.take(block, p).expect("fp tap missing"));
         }
-        self.fp_hidden = new_hidden;
-        report.capture_block_steps += n as u64;
+        report.capture_block_steps += self.calib.len() as u64;
         report.capture_secs += t0.elapsed().as_secs_f64();
-        parts.into_iter().map(|(p, v)| (p, stack_rows(&v))).collect()
+        out
     }
 
-    /// Quantize one block under streaming capture: a single FP cache
-    /// advance (unless the QEP corner skips it), four intra-block runtime
-    /// refreshes through the packed engine (one per group, each
-    /// recomputing only the stage invalidated by the previous splice),
-    /// and a single runtime cache advance.
+    /// Quantize one block under streaming capture: a single batch-fused
+    /// FP cache advance (unless the QEP corner skips it), four
+    /// intra-block runtime refreshes through the packed engine (one per
+    /// group, each recomputing only the stage invalidated by the previous
+    /// splice — each one tall kernel call over the stacked cache), and a
+    /// single runtime cache advance. The stage outputs *are* the stacked
+    /// `X̃` capture matrices.
     fn run_block_streaming(
         &mut self,
         block: usize,
         n_blocks: usize,
         report: &mut PipelineReport,
     ) -> anyhow::Result<()> {
-        let n = self.calib.len();
         let fp_x: Option<HashMap<TapPoint, Matrix>> =
             if self.skip_fp { None } else { Some(self.step_fp(block, report)) };
 
-        // Group [Q K V]: AttnIn is a norm of the resident runtime state —
+        // Group [Q K V]: AttnIn is a norm of the resident runtime stack —
         // no upstream weights of this block are involved.
         let t0 = Instant::now();
-        let attn_in: Vec<Matrix> = {
-            let engine = &self.runtime;
-            let hidden = &self.rt_hidden;
-            parallel_map(n, |i| engine.attn_in(&hidden[i], block))
-        };
-        let x_rt = stack_rows(&attn_in);
+        let attn_in = self
+            .runtime
+            .attn_in_batch(self.rt_batch.as_ref().expect("rt cache").data(), block);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::AttnIn]);
-        self.quantize_group(report, block, n_blocks, GROUPS[0].0, x_fp, &x_rt, cap)?;
+        let x_fp = fp_x.as_ref().map_or(&attn_in, |m| &m[&TapPoint::AttnIn]);
+        self.quantize_group(report, block, n_blocks, GROUPS[0].0, x_fp, &attn_in, cap)?;
 
-        // Group [O]: re-run attention with the freshly spliced Q/K/V.
+        // Group [O]: tall Q/K/V GEMMs with the freshly spliced weights +
+        // per-sequence attention cores over the batch offsets.
         let t0 = Instant::now();
-        let ctx: Vec<Matrix> = {
-            let engine = &self.runtime;
-            parallel_map(n, |i| engine.attn_ctx(&attn_in[i], block))
-        };
-        let x_rt = stack_rows(&ctx);
+        let ctx = self.runtime.attn_ctx_batch(
+            &attn_in,
+            self.rt_batch.as_ref().expect("rt cache").offsets(),
+            block,
+        );
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::OIn]);
-        self.quantize_group(report, block, n_blocks, GROUPS[1].0, x_fp, &x_rt, cap)?;
+        let x_fp = fp_x.as_ref().map_or(&ctx, |m| &m[&TapPoint::OIn]);
+        self.quantize_group(report, block, n_blocks, GROUPS[1].0, x_fp, &ctx, cap)?;
 
         // Group [Gate Up]: attention residual + MLP norm after the O
         // splice.
         let t0 = Instant::now();
-        let (x_mid, mlp_in): (Vec<Matrix>, Vec<Matrix>) = {
-            let engine = &self.runtime;
-            let hidden = &self.rt_hidden;
-            parallel_map(n, |i| {
-                let mid = engine.post_attn(&hidden[i], &ctx[i], block);
-                let h2 = engine.mlp_in(&mid, block);
-                (mid, h2)
-            })
-            .into_iter()
-            .unzip()
-        };
-        let x_rt = stack_rows(&mlp_in);
+        let x_mid = self.runtime.post_attn_batch(
+            self.rt_batch.as_ref().expect("rt cache").data(),
+            &ctx,
+            block,
+        );
+        let mlp_in = self.runtime.mlp_in_batch(&x_mid, block);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::MlpIn]);
-        self.quantize_group(report, block, n_blocks, GROUPS[2].0, x_fp, &x_rt, cap)?;
+        let x_fp = fp_x.as_ref().map_or(&mlp_in, |m| &m[&TapPoint::MlpIn]);
+        self.quantize_group(report, block, n_blocks, GROUPS[2].0, x_fp, &mlp_in, cap)?;
 
-        // Group [Down]: SwiGLU with the spliced Gate/Up.
+        // Group [Down]: SwiGLU with the spliced Gate/Up — one tall Gate
+        // GEMM + one tall Up GEMM.
         let t0 = Instant::now();
-        let act: Vec<Matrix> = {
-            let engine = &self.runtime;
-            parallel_map(n, |i| engine.mlp_act(&mlp_in[i], block))
-        };
-        let x_rt = stack_rows(&act);
+        let act = self.runtime.mlp_act_batch(&mlp_in, block);
         let cap = t0.elapsed().as_secs_f64();
         report.capture_secs += cap;
-        let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[&TapPoint::DownIn]);
-        self.quantize_group(report, block, n_blocks, GROUPS[3].0, x_fp, &x_rt, cap)?;
+        let x_fp = fp_x.as_ref().map_or(&act, |m| &m[&TapPoint::DownIn]);
+        self.quantize_group(report, block, n_blocks, GROUPS[3].0, x_fp, &act, cap)?;
 
         // Advance the runtime cache through the MLP residual with the
         // spliced Down — completing this cache's single step for the
         // block. Blocks `< block` are never touched again.
         let t0 = Instant::now();
-        self.rt_hidden = {
-            let engine = &self.runtime;
-            parallel_map(n, |i| engine.post_mlp(&x_mid[i], &act[i], block))
-        };
-        report.capture_block_steps += n as u64;
+        let new_data = self.runtime.post_mlp_batch(&x_mid, &act, block);
+        self.rt_batch.as_mut().expect("rt cache").set_data(new_data);
+        report.capture_block_steps += self.calib.len() as u64;
         report.capture_secs += t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -478,13 +471,6 @@ impl<'a> Pipeline<'a> {
         }
         Ok(())
     }
-}
-
-/// Vertically stack per-sequence capture matrices in sequence order
-/// (the same single-allocation concatenation [`TapSet::take`] uses, so
-/// streaming and legacy captures agree bit-for-bit).
-fn stack_rows(parts: &[Matrix]) -> Matrix {
-    Matrix::vstack_all(parts)
 }
 
 /// Convenience wrapper: quantize `model` with `method` using `n_calib`

@@ -10,14 +10,27 @@ pub use reasoning::{reasoning_accuracy, ReasoningTask};
 pub use zeroshot::{zero_shot_accuracy, ZeroShotTask};
 
 use crate::data::Corpus;
-use crate::model::LanguageModel;
+use crate::model::{nll_from_logits, LanguageModel};
 use crate::parallel::parallel_map;
+
+/// Upper bound on stacked token rows per [`LanguageModel::forward_batch`]
+/// chunk inside [`perplexity`]: bounds peak logits residency at roughly
+/// `2 × PPL_BATCH_ROWS × vocab × 4` bytes — the tall LM-head matrix plus
+/// its per-window split copies coexist briefly inside `forward_batch` —
+/// (plus the tall MLP intermediates) however large the eval token budget
+/// is, while keeping each chunk tall enough for the batch-fused GEMM win.
+const PPL_BATCH_ROWS: usize = 16_384;
 
 /// Perplexity of `model` on the corpus' held-out split, over up to
 /// `max_tokens` tokens in windows of `seq_len`:
-/// `exp(Σ NLL / Σ tokens)` — the paper's Table-1 metric. Windows are
-/// scored in parallel (they are independent) and reduced in window order,
-/// so the result is deterministic.
+/// `exp(Σ NLL / Σ tokens)` — the paper's Table-1 metric.
+///
+/// Scoring is **batch-fused**: windows advance as stacked caches through
+/// [`LanguageModel::forward_batch`] (in chunks of at most
+/// [`PPL_BATCH_ROWS`] token rows), so every linear stage and the LM head
+/// run as tall GEMMs — bit-identical to per-window forwards. The NLL
+/// reduction runs in parallel over each chunk's per-window logits and
+/// reduces in window order, so the result is deterministic.
 pub fn perplexity<M: LanguageModel + Sync>(
     model: &M,
     corpus: &Corpus,
@@ -26,12 +39,25 @@ pub fn perplexity<M: LanguageModel + Sync>(
 ) -> f64 {
     let windows = corpus.eval_windows(seq_len, max_tokens);
     assert!(!windows.is_empty(), "no eval windows (corpus too small?)");
-    let per_window = parallel_map(windows.len(), |i| model.sequence_nll(windows[i]));
     let mut nll = 0.0f64;
     let mut count = 0usize;
-    for (n, c) in per_window {
-        nll += n;
-        count += c;
+    let mut start = 0usize;
+    while start < windows.len() {
+        let mut end = start;
+        let mut rows = 0usize;
+        while end < windows.len() && (end == start || rows + windows[end].len() <= PPL_BATCH_ROWS)
+        {
+            rows += windows[end].len();
+            end += 1;
+        }
+        let chunk = &windows[start..end];
+        let logits = model.forward_batch(chunk);
+        let per_window = parallel_map(chunk.len(), |i| nll_from_logits(&logits[i], chunk[i]));
+        for (n, c) in per_window {
+            nll += n;
+            count += c;
+        }
+        start = end;
     }
     (nll / count.max(1) as f64).exp()
 }
@@ -100,6 +126,23 @@ mod tests {
             corrupted > base * 1.1,
             "confidently-wrong model should clearly raise ppl: {corrupted} vs {base}"
         );
+    }
+
+    #[test]
+    fn batched_ppl_matches_per_window_scoring() {
+        // The batch-fused scorer must agree bit-for-bit with independent
+        // per-window `sequence_nll` calls in window order.
+        let (model, corpus) = tiny();
+        let ppl = perplexity(&model, &corpus, 24, 480);
+        let windows = corpus.eval_windows(24, 480);
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        for w in &windows {
+            let (n, c) = model.sequence_nll(w);
+            nll += n;
+            count += c;
+        }
+        assert_eq!(ppl, (nll / count as f64).exp());
     }
 
     #[test]

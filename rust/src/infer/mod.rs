@@ -13,14 +13,18 @@
 //!   explicit [`PackedLinear::bytes`] accounting hook. Transform methods
 //!   (AWQ/QuIP) and FP passthrough keep a dense fallback.
 //! * [`packed::qgemm_packed`] — blocked multi-row kernels that unpack
-//!   each tile row once into a stack buffer and accumulate across the
-//!   whole activation batch, parallelized over output tiles.
+//!   each tile row once (table-driven LUT decode at the deployment
+//!   widths) into a stack buffer and accumulate across the whole
+//!   activation batch, parallelized over a row-block × column-tile grid
+//!   so tall batched-capture stacks use every core.
 //! * [`QuantizedModel`] — the packed twin of [`crate::model::Model`],
 //!   mirroring the block-resident API (`embed_sequence` / `block_step` /
-//!   `lm_head` and the six per-stage pieces) so the pipeline
-//!   coordinator's runtime hidden-state cache advances through integer
-//!   kernels, and the eval harnesses ([`crate::eval`]) score it through
-//!   [`LanguageModel`] at 4–8× lower weight memory.
+//!   `lm_head`, the six per-stage pieces, and the batched stage API
+//!   `*_batch` + `block_step_batch` over a [`crate::tensor::RowBatch`])
+//!   so the pipeline coordinator's runtime hidden-state cache advances
+//!   through integer kernels one tall GEMM per stage, and the eval
+//!   harnesses ([`crate::eval`]) score it through [`LanguageModel`] at
+//!   4–8× lower weight memory.
 //!
 //! Everything outside the seven per-block linears (embeddings, norms,
 //! attention softmax, residuals) is shared arithmetic with the dense
@@ -33,11 +37,12 @@ pub mod packed;
 pub use packed::{PackedLinear, COL_TILE};
 
 use crate::config::ModelConfig;
-use crate::linalg::matmul;
+use crate::linalg::matmul_par;
 use crate::model::{
-    causal_attention, embed_tokens, rmsnorm, silu, LanguageModel, LinearId, LinearKind, Model,
+    causal_attention_batch, embed_tokens, rmsnorm, silu, LanguageModel, LinearId, LinearKind,
+    Model,
 };
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, RowBatch};
 
 /// One transformer block of the packed engine: FP norms + seven
 /// execution-ready linears (indexed in [`LinearKind::all`] order).
@@ -125,12 +130,10 @@ impl QuantizedModel {
     }
 
     /// Stage 2: packed Q/K/V projections + causal attention.
+    /// Single-sequence specialization of
+    /// [`QuantizedModel::attn_ctx_batch`].
     pub fn attn_ctx(&self, attn_in: &Matrix, block_idx: usize) -> Matrix {
-        let block = &self.blocks[block_idx];
-        let q = block.lin(LinearKind::Q).matmul(attn_in);
-        let k = block.lin(LinearKind::K).matmul(attn_in);
-        let v = block.lin(LinearKind::V).matmul(attn_in);
-        causal_attention(&q, &k, &v, self.cfg.n_heads)
+        self.attn_ctx_batch(attn_in, &[0, attn_in.rows()], block_idx)
     }
 
     /// Stage 3: packed output projection + attention residual.
@@ -170,7 +173,62 @@ impl QuantizedModel {
     /// Final RMSNorm + tied LM head.
     pub fn lm_head(&self, hidden: &Matrix) -> Matrix {
         let xf = rmsnorm(hidden, &self.final_norm);
-        matmul(&xf, &self.embedding.transpose())
+        matmul_par(&xf, &self.embedding.transpose())
+    }
+
+    // ----- Batched stage API (mirrors `Model`'s) -----------------------
+    //
+    // One tall integer-kernel call per linear stage over a vstacked
+    // hidden batch; only the causal softmax core runs per sequence. The
+    // packed kernel's row-block × tile grid makes the tall call the
+    // high-arithmetic-intensity path: each code row is unpacked once per
+    // stage instead of once per sequence.
+
+    /// Batched stage 1: RMSNorm of a stacked hidden batch (row-wise).
+    pub fn attn_in_batch(&self, hidden: &Matrix, block_idx: usize) -> Matrix {
+        self.attn_in(hidden, block_idx)
+    }
+
+    /// Batched stage 2: one tall packed Q/K/V GEMM triple + per-sequence
+    /// causal cores over the `offsets` row ranges.
+    pub fn attn_ctx_batch(&self, attn_in: &Matrix, offsets: &[usize], block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let q = block.lin(LinearKind::Q).matmul(attn_in);
+        let k = block.lin(LinearKind::K).matmul(attn_in);
+        let v = block.lin(LinearKind::V).matmul(attn_in);
+        causal_attention_batch(&q, &k, &v, offsets, self.cfg.n_heads)
+    }
+
+    /// Batched stage 3: packed output projection + residual.
+    pub fn post_attn_batch(&self, hidden: &Matrix, ctx: &Matrix, block_idx: usize) -> Matrix {
+        self.post_attn(hidden, ctx, block_idx)
+    }
+
+    /// Batched stage 4: MLP RMSNorm over the stack.
+    pub fn mlp_in_batch(&self, x_mid: &Matrix, block_idx: usize) -> Matrix {
+        self.mlp_in(x_mid, block_idx)
+    }
+
+    /// Batched stage 5: SwiGLU with one tall packed Gate/Up GEMM pair.
+    pub fn mlp_act_batch(&self, mlp_in: &Matrix, block_idx: usize) -> Matrix {
+        self.mlp_act(mlp_in, block_idx)
+    }
+
+    /// Batched stage 6: packed down projection + residual.
+    pub fn post_mlp_batch(&self, x_mid: &Matrix, act: &Matrix, block_idx: usize) -> Matrix {
+        self.post_mlp(x_mid, act, block_idx)
+    }
+
+    /// Advance a whole stacked cache one block through the packed kernels
+    /// — the batch-fused twin of [`QuantizedModel::block_step`],
+    /// bit-identical to stepping each sequence separately.
+    pub fn block_step_batch(&self, batch: &mut RowBatch, block_idx: usize) {
+        let h = self.attn_in_batch(batch.data(), block_idx);
+        let ctx = self.attn_ctx_batch(&h, batch.offsets(), block_idx);
+        let x_mid = self.post_attn_batch(batch.data(), &ctx, block_idx);
+        let h2 = self.mlp_in_batch(&x_mid, block_idx);
+        let act = self.mlp_act_batch(&h2, block_idx);
+        batch.set_data(self.post_mlp_batch(&x_mid, &act, block_idx));
     }
 
     /// Resident weight bytes of the engine (Σ [`PackedLinear::bytes`]
@@ -229,6 +287,16 @@ impl LanguageModel for QuantizedModel {
             self.block_step(&mut x, bi);
         }
         self.lm_head(&x)
+    }
+
+    fn forward_batch(&self, seqs: &[&[u16]]) -> Vec<Matrix> {
+        crate::model::forward_batch_stacked(
+            seqs,
+            |s| self.embed_sequence(s),
+            |batch, bi| self.block_step_batch(batch, bi),
+            self.blocks.len(),
+            |h| self.lm_head(h),
+        )
     }
 }
 
@@ -295,6 +363,25 @@ mod tests {
         let mut x = x0.clone();
         qm.block_step(&mut x, 0);
         assert!(x.rel_err(&manual) < 1e-12);
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_on_packed_model() {
+        let m = tiny();
+        let mut qm = QuantizedModel::from_model(&m);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        // Mix of packed and dense-passthrough layers (only block 0 packed).
+        for &kind in LinearKind::all() {
+            let id = LinearId { block: 0, kind };
+            let q = rtn::quantize(m.linear(id), &cfg);
+            qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+        }
+        let seqs: Vec<Vec<u16>> = vec![vec![3, 1, 4, 1, 5, 9], vec![2], vec![7, 2, 9, 11]];
+        let refs: Vec<&[u16]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let batched = qm.forward_batch(&refs);
+        for (s, got) in seqs.iter().zip(&batched) {
+            assert_eq!(*got, LanguageModel::forward(&qm, s), "seq len {}", s.len());
+        }
     }
 
     #[test]

@@ -11,17 +11,23 @@
 //!
 //! [`qgemm_packed`] is the blocked multi-row kernel behind
 //! [`PackedLinear::matmul`]: per column tile, each packed code row is
-//! unpacked **once** into a stack buffer and accumulated across the whole
-//! activation batch (the row-at-a-time `qgemv` loop re-read every code
-//! per activation row), with large batches parallelized over tiles via
-//! [`crate::parallel`]. Act-order solvers (OJBKQ, GPTQ) keep their codes
+//! unpacked **once per [`ROW_BLOCK`]-row grid cell** — through the
+//! table-driven fast paths of [`unpack_bits_range`] — into a stack
+//! buffer and accumulated across that cell's activation rows (the
+//! row-at-a-time `qgemv` loop re-read every code per activation row;
+//! the grid trades some unpack amortization on tall inputs for
+//! cell-level parallelism). Large calls parallelize over a
+//! [`ROW_BLOCK`] × [`COL_TILE`] grid via [`crate::parallel`], so the tall
+//! stacked batches of the batch-fused capture path use every core, not
+//! one thread per tile. Act-order solvers (OJBKQ, GPTQ) keep their codes
 //! in decode order; the kernel gathers activations through the recorded
-//! row permutation instead of falling back to a dense weight. Genuine
-//! dense transforms (AWQ's folded scaling, QuIP's rotations) and FP
-//! passthrough layers use the [`PackedLinear::Dense`] fallback.
+//! row permutation inside the tile loop (no permuted batch copy) instead
+//! of falling back to a dense weight. Genuine dense transforms (AWQ's
+//! folded scaling, QuIP's rotations) and FP passthrough layers use the
+//! [`PackedLinear::Dense`] fallback.
 
-use crate::linalg::matmul;
-use crate::parallel::parallel_map;
+use crate::linalg::matmul_par;
+use crate::parallel::parallel_map_dynamic;
 use crate::quant::qtensor::{pack_bits, unpack_bits_range};
 use crate::quant::QuantizedLinear;
 use crate::tensor::Matrix;
@@ -30,11 +36,19 @@ use crate::tensor::Matrix;
 /// the per-row accumulator live comfortably in registers / L1.
 pub const COL_TILE: usize = 32;
 
-/// Minimum `batch·m·n` product before [`qgemm_packed`] fans tiles out to
-/// threads: the pipeline already parallelizes over calibration sequences
-/// (whose per-step matrices are small), so the kernel only adds its own
-/// parallelism for genuinely large single calls (eval batches, benches).
-const PARALLEL_FLOPS_MIN: usize = 1 << 21;
+/// Activation rows per parallel grid cell: tall (batched-capture) inputs
+/// are split into row blocks so the kernel parallelizes over
+/// **row blocks × column tiles**, not tiles alone — with a handful of
+/// tiles and a tall stacked batch, tile-only fan-out left most cores
+/// idle.
+pub const ROW_BLOCK: usize = 64;
+
+/// Minimum `batch·m·n` product before [`qgemm_packed`] fans grid cells
+/// out to threads. Re-tuned for the batch-fused capture path: the
+/// coordinator now issues one tall call per stage instead of
+/// parallelizing over per-sequence calls, so the kernel parallelizes
+/// earlier than the PR-2 tile-only threshold.
+const PARALLEL_FLOPS_MIN: usize = 1 << 20;
 
 /// Column-tiled bit-packed codes + scale/correction tables.
 #[derive(Debug, Clone)]
@@ -185,73 +199,106 @@ impl PackedLinear {
         }
     }
 
-    /// `Y = X · Ŵ` for a batch of activation rows.
+    /// `Y = X · Ŵ` for a batch of activation rows. Both legs parallelize
+    /// internally on tall inputs (grid cells for packed codes, row blocks
+    /// for the dense fallback), so batched-capture stacks run one big
+    /// call instead of per-sequence fan-out.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         match self {
             PackedLinear::Packed(t) => qgemm_packed(t, x),
-            PackedLinear::Dense(w) => matmul(x, w),
+            PackedLinear::Dense(w) => matmul_par(x, w),
         }
     }
 }
 
 /// Blocked multi-row quantized GEMM over the tiled bitstream.
+///
+/// Tall (batched-capture) inputs parallelize over a grid of
+/// [`ROW_BLOCK`]-row × [`COL_TILE`]-column cells; each cell's output
+/// depends only on its own activation rows, so the split is bit-exact
+/// with respect to any other blocking. Act-order layers read activations
+/// through the recorded decode-order permutation **inside** the tile
+/// loop — no permuted copy of the (possibly very tall) batch is ever
+/// materialized.
 pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
     assert_eq!(x.cols(), t.m, "activation/layer shape mismatch");
     let b = x.rows();
-    // Gather activations into decode order once per call; every tile then
-    // reads the same permuted view.
-    let gathered;
-    let xp: &Matrix = match &t.perm {
-        Some(p) => {
-            gathered = Matrix::from_fn(b, t.m, |r, i| x.get(r, p[i] as usize));
-            &gathered
-        }
-        None => x,
-    };
-    // Per-group activation sums (the z-correction operand), `b × groups`.
+    // Per-group activation sums (the z-correction operand), `b × groups`,
+    // accumulated group-by-group (no per-element division), gathering
+    // through the decode-order permutation when one is recorded.
     let mut gsum = Matrix::zeros(b, t.n_groups);
     for r in 0..b {
-        let row = xp.row(r);
+        let row = x.row(r);
         let grow = gsum.row_mut(r);
-        for (i, &v) in row.iter().enumerate() {
-            grow[i / t.group_size] += v;
+        match &t.perm {
+            None => {
+                for (gv, chunk) in grow.iter_mut().zip(row.chunks(t.group_size)) {
+                    *gv = chunk.iter().sum::<f32>();
+                }
+            }
+            Some(p) => {
+                for (gv, pchunk) in grow.iter_mut().zip(p.chunks(t.group_size)) {
+                    *gv = pchunk.iter().map(|&pi| row[pi as usize]).sum::<f32>();
+                }
+            }
         }
     }
     let n_tiles = t.tiles.len();
-    let tile_out: Vec<Matrix> = if n_tiles > 1 && b * t.m * t.n >= PARALLEL_FLOPS_MIN {
-        parallel_map(n_tiles, |ti| tile_matmul(t, xp, &gsum, ti))
-    } else {
-        (0..n_tiles).map(|ti| tile_matmul(t, xp, &gsum, ti)).collect()
+    let n_row_blocks = b.div_ceil(ROW_BLOCK).max(1);
+    let cells = n_tiles * n_row_blocks;
+    let cell = |c: usize| {
+        let ti = c % n_tiles;
+        let r0 = (c / n_tiles) * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(b);
+        (ti, r0, tile_matmul(t, x, &gsum, ti, r0, r1))
     };
+    let cell_out: Vec<(usize, usize, Matrix)> =
+        if cells > 1 && b * t.m * t.n >= PARALLEL_FLOPS_MIN {
+            parallel_map_dynamic(cells, cell)
+        } else {
+            (0..cells).map(cell).collect()
+        };
     let mut y = Matrix::zeros(b, t.n);
-    for (ti, block) in tile_out.iter().enumerate() {
-        y.set_block(0, ti * COL_TILE, block);
+    for (ti, r0, block) in &cell_out {
+        y.set_block(*r0, ti * COL_TILE, block);
     }
     y
 }
 
-/// One output tile: unpack each code row once, accumulate across the
-/// whole batch, then apply the per-group scale/correction.
-fn tile_matmul(t: &PackedTiles, xp: &Matrix, gsum: &Matrix, ti: usize) -> Matrix {
+/// One grid cell: unpack each code row of the tile once, accumulate it
+/// across the cell's activation rows, then apply the per-group
+/// scale/correction.
+fn tile_matmul(
+    t: &PackedTiles,
+    x: &Matrix,
+    gsum: &Matrix,
+    ti: usize,
+    r0: usize,
+    r1: usize,
+) -> Matrix {
     let c0 = ti * COL_TILE;
     let w = COL_TILE.min(t.n - c0);
-    let b = xp.rows();
+    let bl = r1 - r0;
     let packed = &t.tiles[ti];
-    let mut out = Matrix::zeros(b, w);
-    let mut acc = vec![0.0f32; b * w];
+    let perm = t.perm.as_deref();
+    let mut out = Matrix::zeros(bl, w);
+    let mut acc = vec![0.0f32; bl * w];
     let mut row_codes = [0u8; COL_TILE];
     let mut codes_f = [0.0f32; COL_TILE];
     for g in 0..t.n_groups {
         acc.fill(0.0);
-        let r0 = g * t.group_size;
-        let r1 = (r0 + t.group_size).min(t.m);
-        for i in r0..r1 {
+        let i0 = g * t.group_size;
+        let i1 = (i0 + t.group_size).min(t.m);
+        for i in i0..i1 {
             unpack_bits_range(packed, t.wbit, i * w, &mut row_codes[..w]);
             for (cf, &c) in codes_f[..w].iter_mut().zip(&row_codes[..w]) {
                 *cf = c as f32;
             }
-            for r in 0..b {
-                let xv = xp.get(r, i);
+            // Decode-order gather fused into the loop: code row `i`
+            // multiplies activation feature `perm[i]`.
+            let xi = perm.map_or(i, |p| p[i] as usize);
+            for r in 0..bl {
+                let xv = x.get(r0 + r, xi);
                 if xv == 0.0 {
                     continue;
                 }
@@ -261,8 +308,8 @@ fn tile_matmul(t: &PackedTiles, xp: &Matrix, gsum: &Matrix, ti: usize) -> Matrix
                 }
             }
         }
-        for r in 0..b {
-            let gsv = gsum.get(r, g);
+        for r in 0..bl {
+            let gsv = gsum.get(r0 + r, g);
             let orow = out.row_mut(r);
             let arow = &acc[r * w..r * w + w];
             for (jj, o) in orow.iter_mut().enumerate() {
@@ -276,6 +323,7 @@ fn tile_matmul(t: &PackedTiles, xp: &Matrix, gsum: &Matrix, ti: usize) -> Matrix
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matmul;
     use crate::quant::{gptq, rtn, QuantConfig};
     use crate::rng::Rng;
 
@@ -369,6 +417,38 @@ mod tests {
             fp,
             fp as f64 / p.bytes() as f64
         );
+    }
+
+    #[test]
+    fn tall_batch_grid_matches_per_sequence_chunks() {
+        // The row-block × tile grid (and its parallel leg) must be
+        // bit-exact against per-chunk calls: a tall stacked batch equals
+        // the vstack of its parts — including act-order layers, whose
+        // decode-order gather is fused into the tile loop.
+        let mut rng = Rng::new(0x7A11);
+        let w = Matrix::randn(48, 40, 0.5, &mut rng);
+        let xcal = Matrix::randn(16, 48, 1.0, &mut rng);
+        let cfg_rtn = QuantConfig { wbit: 3, group_size: 16, ..Default::default() };
+        let cfg_act =
+            QuantConfig { wbit: 4, group_size: 8, act_order: true, ..Default::default() };
+        let layers = [
+            PackedLinear::from_quantized(&rtn::quantize(&w, &cfg_rtn), true),
+            PackedLinear::from_quantized(&gptq::quantize(&w, &xcal, &cfg_act).unwrap(), true),
+        ];
+        // Ragged parts crossing ROW_BLOCK, tall enough in total to take
+        // the parallel grid leg (b·m·n ≥ PARALLEL_FLOPS_MIN).
+        let counts = [64usize, 1, 199, 83, 256];
+        let parts: Vec<Matrix> =
+            counts.iter().map(|&c| Matrix::randn(c, 48, 1.0, &mut rng)).collect();
+        let tall = Matrix::vstack_all(&parts);
+        assert!(tall.rows() * 48 * 40 >= PARALLEL_FLOPS_MIN);
+        for p in &layers {
+            assert!(p.is_packed());
+            let batched = p.matmul(&tall);
+            let stacked =
+                Matrix::vstack_all(&parts.iter().map(|x| p.matmul(x)).collect::<Vec<_>>());
+            assert_eq!(batched, stacked, "grid blocking must be bit-exact");
+        }
     }
 
     #[test]

@@ -90,6 +90,36 @@ pub fn gemm(alpha: f32, a: &Matrix, b: &Matrix, beta: f32, c: &mut Matrix) {
     }
 }
 
+/// Minimum `2·m·k·n` FLOPs before [`matmul_par`] fans row blocks out to
+/// threads; below this the spawn + assembly overhead beats the win.
+const PAR_FLOPS_MIN: usize = 1 << 22;
+
+/// `C = A · B`, parallelized over contiguous row blocks of `A` when the
+/// product is large enough — the tall-GEMM entry of the batched capture
+/// path, where `A` is a vstack of per-sequence hidden caches.
+///
+/// **Bit-identical** to [`matmul`]: every output row is produced by the
+/// same blocked micro-kernel over the same operands in the same order;
+/// the row split only changes which thread runs it. Batched captures
+/// therefore agree exactly with per-sequence stepping.
+pub fn matmul_par(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let nt = crate::parallel::num_threads();
+    if nt <= 1 || m < 2 || 2usize.saturating_mul(m * k).saturating_mul(n) < PAR_FLOPS_MIN {
+        return matmul(a, b);
+    }
+    let blocks = crate::parallel::parallel_for_chunks(m, |r| {
+        let sub = a.block(r.start, 0, r.len(), k);
+        (r.start, matmul(&sub, b))
+    });
+    let mut c = Matrix::zeros(m, n);
+    for (r0, blk) in blocks {
+        c.set_block(r0, 0, &blk);
+    }
+    c
+}
+
 /// `C = Aᵀ · B` for `A: p×m`, `B: p×n` → `C: m×n`, without materializing
 /// the transpose. Both operands are walked row-by-row (unit stride).
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {

@@ -12,7 +12,7 @@ mod orthogonal;
 mod trsm;
 
 pub use cholesky::{cholesky_upper, cholesky_upper_jittered, CholeskyError};
-pub use gemm::{gemm, gemm_tn, gemv, matmul, syrk_upper};
+pub use gemm::{gemm, gemm_tn, gemv, matmul, matmul_par, syrk_upper};
 pub use orthogonal::{random_orthogonal, signed_permutation};
 pub use trsm::{solve_lower_t, solve_upper_mat, trsv_lower_t, trsv_upper};
 
@@ -46,6 +46,18 @@ mod tests {
             let c = matmul(&a, &b);
             let r = matmul_naive(&a, &b);
             assert!(c.rel_err(&r) < 1e-5, "({m},{k},{n}) rel={}", c.rel_err(&r));
+        }
+    }
+
+    #[test]
+    fn matmul_par_bit_identical_to_serial() {
+        let mut rng = Rng::new(7);
+        // Small (below the parallel threshold) and tall (above it): both
+        // must agree with the serial kernel exactly, not approximately.
+        for &(m, k, n) in &[(5usize, 9usize, 4usize), (300, 64, 128)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_eq!(matmul_par(&a, &b), matmul(&a, &b), "({m},{k},{n})");
         }
     }
 

@@ -28,9 +28,10 @@ mod io;
 pub use io::{load_model, save_model};
 
 use crate::config::ModelConfig;
-use crate::linalg::matmul;
+use crate::linalg::matmul_par;
+use crate::parallel::parallel_map_dynamic;
 use crate::rng::Rng;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, RowBatch};
 use std::collections::HashMap;
 
 /// Which linear inside a block.
@@ -314,19 +315,16 @@ impl Model {
     }
 
     /// Stage 2: Q/K/V projections + causal attention over `attn_in` — the
-    /// `OIn` tap (concatenated head outputs, input of O).
+    /// `OIn` tap (concatenated head outputs, input of O). Single-sequence
+    /// specialization of [`Model::attn_ctx_batch`].
     pub fn attn_ctx(&self, attn_in: &Matrix, block_idx: usize) -> Matrix {
-        let block = &self.blocks[block_idx];
-        let q = matmul(attn_in, &block.wq);
-        let k = matmul(attn_in, &block.wk);
-        let v = matmul(attn_in, &block.wv);
-        causal_attention(&q, &k, &v, self.cfg.n_heads)
+        self.attn_ctx_batch(attn_in, &[0, attn_in.rows()], block_idx)
     }
 
     /// Stage 3: output projection + attention residual:
     /// `x_mid = hidden + ctx · Wo`.
     pub fn post_attn(&self, hidden: &Matrix, ctx: &Matrix, block_idx: usize) -> Matrix {
-        hidden.add(&matmul(ctx, &self.blocks[block_idx].wo))
+        hidden.add(&matmul_par(ctx, &self.blocks[block_idx].wo))
     }
 
     /// Stage 4: post-mlp-RMSNorm of `x_mid` — the `MlpIn` tap (input of
@@ -339,21 +337,87 @@ impl Model {
     /// the `DownIn` tap (input of Down).
     pub fn mlp_act(&self, mlp_in: &Matrix, block_idx: usize) -> Matrix {
         let block = &self.blocks[block_idx];
-        let g = matmul(mlp_in, &block.wgate);
-        let u = matmul(mlp_in, &block.wup);
+        let g = matmul_par(mlp_in, &block.wgate);
+        let u = matmul_par(mlp_in, &block.wup);
         Matrix::from_fn(mlp_in.rows(), self.cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j))
     }
 
     /// Stage 6: down projection + MLP residual — the next block's resident
     /// hidden state: `x' = x_mid + act · Wdown`.
     pub fn post_mlp(&self, x_mid: &Matrix, act: &Matrix, block_idx: usize) -> Matrix {
-        x_mid.add(&matmul(act, &self.blocks[block_idx].wdown))
+        x_mid.add(&matmul_par(act, &self.blocks[block_idx].wdown))
     }
 
     /// Final RMSNorm + tied LM head: `logits = norm(hidden) · Eᵀ`.
     pub fn lm_head(&self, hidden: &Matrix) -> Matrix {
         let xf = rmsnorm(hidden, &self.final_norm);
-        matmul(&xf, &self.embedding.transpose())
+        matmul_par(&xf, &self.embedding.transpose())
+    }
+
+    // ----- Batched stage API -------------------------------------------
+    //
+    // Every stage except the causal-attention core is row-wise or a GEMM,
+    // so a vstack of per-sequence hidden caches can flow through the
+    // block as ONE tall call per linear stage (`X·Wq|k|v`, `ctx·Wo`,
+    // `X·Wgate|up`, `act·Wdown`) — the same weight matrix is streamed
+    // from memory once per *stage*, not once per *sequence*. The
+    // attention softmax core alone is causal per sequence; it consumes
+    // the batched Q/K/V projections through the [`RowBatch`] offsets.
+    // All batched stages are bit-identical to per-sequence stepping
+    // (see `matmul_par`), which the batched-capture parity tests pin.
+
+    /// Batched stage 1: RMSNorm of a stacked hidden batch (row-wise, so
+    /// the stacked call *is* the per-sequence call).
+    pub fn attn_in_batch(&self, hidden: &Matrix, block_idx: usize) -> Matrix {
+        self.attn_in(hidden, block_idx)
+    }
+
+    /// Batched stage 2: ONE tall Q/K/V GEMM triple over the stacked
+    /// `attn_in`, then the per-sequence causal softmax cores over the
+    /// `offsets` row ranges.
+    pub fn attn_ctx_batch(&self, attn_in: &Matrix, offsets: &[usize], block_idx: usize) -> Matrix {
+        let block = &self.blocks[block_idx];
+        let q = matmul_par(attn_in, &block.wq);
+        let k = matmul_par(attn_in, &block.wk);
+        let v = matmul_par(attn_in, &block.wv);
+        causal_attention_batch(&q, &k, &v, offsets, self.cfg.n_heads)
+    }
+
+    /// Batched stage 3: output projection + residual over the stack.
+    pub fn post_attn_batch(&self, hidden: &Matrix, ctx: &Matrix, block_idx: usize) -> Matrix {
+        self.post_attn(hidden, ctx, block_idx)
+    }
+
+    /// Batched stage 4: MLP RMSNorm over the stack.
+    pub fn mlp_in_batch(&self, x_mid: &Matrix, block_idx: usize) -> Matrix {
+        self.mlp_in(x_mid, block_idx)
+    }
+
+    /// Batched stage 5: SwiGLU with one tall Gate GEMM + one tall Up GEMM.
+    pub fn mlp_act_batch(&self, mlp_in: &Matrix, block_idx: usize) -> Matrix {
+        self.mlp_act(mlp_in, block_idx)
+    }
+
+    /// Batched stage 6: down projection + residual over the stack.
+    pub fn post_mlp_batch(&self, x_mid: &Matrix, act: &Matrix, block_idx: usize) -> Matrix {
+        self.post_mlp(x_mid, act, block_idx)
+    }
+
+    /// Advance a whole stacked cache one block — the batch-fused twin of
+    /// [`Model::block_step`]: one tall GEMM per linear stage, attention
+    /// cores per sequence, taps recorded once as the stacked matrices
+    /// (identical to vstacking per-sequence taps in sequence order).
+    pub fn block_step_batch(&self, batch: &mut RowBatch, block_idx: usize, taps: &mut TapSet) {
+        let h = self.attn_in_batch(batch.data(), block_idx);
+        taps.record(block_idx, TapPoint::AttnIn, &h);
+        let ctx = self.attn_ctx_batch(&h, batch.offsets(), block_idx);
+        taps.record(block_idx, TapPoint::OIn, &ctx);
+        let x_mid = self.post_attn_batch(batch.data(), &ctx, block_idx);
+        let h2 = self.mlp_in_batch(&x_mid, block_idx);
+        taps.record(block_idx, TapPoint::MlpIn, &h2);
+        let act = self.mlp_act_batch(&h2, block_idx);
+        taps.record(block_idx, TapPoint::DownIn, &act);
+        batch.set_data(self.post_mlp_batch(&x_mid, &act, block_idx));
     }
 }
 
@@ -393,19 +457,23 @@ pub trait LanguageModel {
     /// Logits for one token sequence (`seq × vocab`).
     fn forward(&self, tokens: &[u16]) -> Matrix;
 
+    /// Logits for a batch of token sequences — semantically
+    /// `seqs.iter().map(forward)`, which this default performs. The dense
+    /// and packed models override it with the **batch-fused path**: all
+    /// sequences advance as one stacked cache, so every non-attention
+    /// linear stage (and the LM head) runs as a single tall GEMM,
+    /// bit-identically to the per-sequence loop.
+    fn forward_batch(&self, seqs: &[&[u16]]) -> Vec<Matrix> {
+        seqs.iter().map(|s| self.forward(s)).collect()
+    }
+
     /// Sum of token negative log-likelihoods for positions `1..seq`
     /// (predicting token t from prefix `..t`), plus the token count.
     fn sequence_nll(&self, tokens: &[u16]) -> (f64, usize) {
         if tokens.len() < 2 {
             return (0.0, 0);
         }
-        let logits = self.forward(tokens);
-        let mut nll = 0.0f64;
-        for t in 0..tokens.len() - 1 {
-            let ls = crate::util::log_softmax(logits.row(t));
-            nll -= ls[tokens[t + 1] as usize] as f64;
-        }
-        (nll, tokens.len() - 1)
+        nll_from_logits(&self.forward(tokens), tokens)
     }
 
     /// Greedy continuation of `prompt` by `n` tokens.
@@ -434,6 +502,58 @@ impl LanguageModel for Model {
     fn forward(&self, tokens: &[u16]) -> Matrix {
         Model::forward(self, tokens)
     }
+
+    fn forward_batch(&self, seqs: &[&[u16]]) -> Vec<Matrix> {
+        let mut taps = TapSet::default();
+        forward_batch_stacked(
+            seqs,
+            |s| self.embed_sequence(s),
+            |batch, bi| self.block_step_batch(batch, bi, &mut taps),
+            self.blocks.len(),
+            |h| self.lm_head(h),
+        )
+    }
+}
+
+/// Shared driver behind the batch-fused [`LanguageModel::forward_batch`]
+/// overrides of the dense [`Model`] and the packed
+/// [`crate::infer::QuantizedModel`]: embed every sequence, vstack into a
+/// [`RowBatch`], advance the whole stack block by block (`step`), then
+/// project the LM head as one tall GEMM and split per sequence. Keeping
+/// the two engines on one driver keeps their batching contracts from
+/// drifting apart.
+pub fn forward_batch_stacked(
+    seqs: &[&[u16]],
+    embed: impl Fn(&[u16]) -> Matrix,
+    mut step: impl FnMut(&mut RowBatch, usize),
+    n_blocks: usize,
+    lm_head: impl Fn(&Matrix) -> Matrix,
+) -> Vec<Matrix> {
+    if seqs.is_empty() {
+        return Vec::new();
+    }
+    let parts: Vec<Matrix> = seqs.iter().map(|s| embed(s)).collect();
+    let mut batch = RowBatch::stack(&parts);
+    for bi in 0..n_blocks {
+        step(&mut batch, bi);
+    }
+    let counts: Vec<usize> = (0..batch.n_seqs()).map(|i| batch.seq_rows(i)).collect();
+    lm_head(batch.data()).split_rows(&counts)
+}
+
+/// Sum of token NLLs for positions `1..seq` given the sequence's logits —
+/// shared by [`LanguageModel::sequence_nll`] and the batched perplexity
+/// harness (which obtains logits via [`LanguageModel::forward_batch`]).
+pub fn nll_from_logits(logits: &Matrix, tokens: &[u16]) -> (f64, usize) {
+    if tokens.len() < 2 {
+        return (0.0, 0);
+    }
+    let mut nll = 0.0f64;
+    for t in 0..tokens.len() - 1 {
+        let ls = crate::util::log_softmax(logits.row(t));
+        nll -= ls[tokens[t + 1] as usize] as f64;
+    }
+    (nll, tokens.len() - 1)
 }
 
 /// RMSNorm with learned gain (eps = 1e-5, matching pretrain.py).
@@ -463,7 +583,52 @@ pub fn silu(v: f32) -> f32 {
 /// Multi-head causal self-attention on a single sequence.
 /// `q,k,v: seq×d`; returns the concatenated head outputs (`seq×d`).
 pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
-    let (seq, d) = q.shape();
+    attention_core(q, k, v, 0, q.rows(), n_heads)
+}
+
+/// Causal attention over a **stack of sequences**: `q,k,v` are tall
+/// batched projections (one GEMM over the vstacked caches) and
+/// `offsets` are the cumulative row offsets of the per-sequence groups
+/// ([`RowBatch::offsets`]). The softmax core runs per sequence (the
+/// causal mask never crosses a sequence boundary), dynamically scheduled
+/// across threads because calibration sequences can be ragged. Results
+/// are stacked in sequence order — bit-identical to running
+/// [`causal_attention`] per sequence.
+pub fn causal_attention_batch(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    offsets: &[usize],
+    n_heads: usize,
+) -> Matrix {
+    assert_eq!(q.shape(), k.shape());
+    assert_eq!(q.shape(), v.shape());
+    assert!(
+        offsets.len() >= 2 && offsets[0] == 0 && *offsets.last().unwrap() == q.rows(),
+        "offsets must cover the stacked rows"
+    );
+    let n_seqs = offsets.len() - 1;
+    if n_seqs == 1 {
+        return attention_core(q, k, v, 0, q.rows(), n_heads);
+    }
+    let parts = parallel_map_dynamic(n_seqs, |s| {
+        attention_core(q, k, v, offsets[s], offsets[s + 1], n_heads)
+    });
+    Matrix::vstack_all(&parts)
+}
+
+/// The softmax core on rows `[r0, r1)` of (possibly stacked) `q,k,v`,
+/// without copying the slice out.
+fn attention_core(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    r0: usize,
+    r1: usize,
+    n_heads: usize,
+) -> Matrix {
+    let d = q.cols();
+    let seq = r1 - r0;
     assert_eq!(d % n_heads, 0);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f64).sqrt();
@@ -472,10 +637,10 @@ pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> M
         let c0 = h * hd;
         for t in 0..seq {
             // scores over positions 0..=t
-            let qt = &q.row(t)[c0..c0 + hd];
+            let qt = &q.row(r0 + t)[c0..c0 + hd];
             let mut scores = Vec::with_capacity(t + 1);
             for u in 0..=t {
-                let ku = &k.row(u)[c0..c0 + hd];
+                let ku = &k.row(r0 + u)[c0..c0 + hd];
                 let dot: f64 =
                     qt.iter().zip(ku).map(|(&a, &b)| a as f64 * b as f64).sum();
                 scores.push((dot * scale) as f32);
@@ -484,7 +649,7 @@ pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> M
             let dst_full = out.row_mut(t);
             for (u, &l) in ls.iter().enumerate() {
                 let w = (l as f64).exp() as f32;
-                let vu = &v.row(u)[c0..c0 + hd];
+                let vu = &v.row(r0 + u)[c0..c0 + hd];
                 for (x, &vv) in dst_full[c0..c0 + hd].iter_mut().zip(vu) {
                     *x += w * vv;
                 }
@@ -622,6 +787,72 @@ mod tests {
         let mut x = x0.clone();
         m.block_step(&mut x, 0, &mut TapSet::default());
         assert!(x.rel_err(&manual) < 1e-12);
+    }
+
+    #[test]
+    fn block_step_batch_matches_per_sequence_steps() {
+        // Ragged sequence lengths; the stacked advance (one tall GEMM per
+        // stage) must equal per-sequence stepping exactly, taps included.
+        let mut rng = Rng::new(31);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let seqs: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5], vec![9], vec![7, 8, 6, 2]];
+        let parts: Vec<Matrix> = seqs.iter().map(|s| m.embed_sequence(s)).collect();
+        let mut batch = RowBatch::stack(&parts);
+        for bi in 0..m.blocks.len() {
+            let mut batch_taps = TapSet::request(bi, &TapPoint::all());
+            m.block_step_batch(&mut batch, bi, &mut batch_taps);
+            // Per-sequence reference on independent caches.
+            let mut seq_taps = TapSet::request(bi, &TapPoint::all());
+            let mut stepped = Vec::new();
+            for s in &seqs {
+                let mut h = m.embed_sequence(s);
+                for b in 0..bi {
+                    m.block_step(&mut h, b, &mut TapSet::default());
+                }
+                m.block_step(&mut h, bi, &mut seq_taps);
+                stepped.push(h);
+            }
+            assert_eq!(*batch.data(), Matrix::vstack_all(&stepped), "block {bi} hidden");
+            for p in TapPoint::all() {
+                let a = batch_taps.take(bi, p).unwrap();
+                let b = seq_taps.take(bi, p).unwrap();
+                assert_eq!(a, b, "block {bi} {p:?} tap");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_forward() {
+        let mut rng = Rng::new(32);
+        let m = Model::random(tiny_cfg(), &mut rng);
+        let seqs: Vec<Vec<u16>> = vec![vec![3, 1, 4, 1, 5], vec![2, 7], vec![11; 8]];
+        let refs: Vec<&[u16]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let batched = LanguageModel::forward_batch(&m, &refs);
+        assert_eq!(batched.len(), 3);
+        for (s, got) in seqs.iter().zip(&batched) {
+            assert_eq!(*got, m.forward(s), "seq len {}", s.len());
+        }
+    }
+
+    #[test]
+    fn causal_attention_batch_matches_per_sequence() {
+        let mut rng = Rng::new(33);
+        let counts = [4usize, 1, 7, 3];
+        let total: usize = counts.iter().sum();
+        let q = Matrix::randn(total, 8, 1.0, &mut rng);
+        let k = Matrix::randn(total, 8, 1.0, &mut rng);
+        let v = Matrix::randn(total, 8, 1.0, &mut rng);
+        let offsets = [0usize, 4, 5, 12, 15];
+        let batched = causal_attention_batch(&q, &k, &v, &offsets, 2);
+        let mut r0 = 0usize;
+        for &c in &counts {
+            let qs = q.block(r0, 0, c, 8);
+            let ks = k.block(r0, 0, c, 8);
+            let vs = v.block(r0, 0, c, 8);
+            let single = causal_attention(&qs, &ks, &vs, 2);
+            assert_eq!(batched.block(r0, 0, c, 8), single, "seq at row {r0}");
+            r0 += c;
+        }
     }
 
     #[test]

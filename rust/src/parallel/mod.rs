@@ -76,6 +76,53 @@ where
     chunks.into_iter().flatten().collect()
 }
 
+/// Parallel map over indices `0..n` with **dynamic scheduling**: workers
+/// pull the next index from a shared atomic counter, so uneven item costs
+/// (ragged calibration sequences in the batched attention core, ragged
+/// row-block × column-tile cells in the packed GEMM grid) don't leave
+/// threads idle the way [`parallel_map`]'s static contiguous ranges do.
+/// Results are returned in index order; determinism is unaffected because
+/// each item is computed independently.
+pub fn parallel_map_dynamic<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let nt = num_threads().min(n);
+    if nt <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut buckets: Vec<Vec<(usize, T)>> = Vec::with_capacity(nt);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let f = &f;
+            let next = &next;
+            handles.push(scope.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            buckets.push(h.join().expect("parallel worker panicked"));
+        }
+    });
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in buckets.into_iter().flatten() {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|o| o.expect("dynamic worker skipped an index")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +169,19 @@ mod tests {
     fn zero_n_is_fine() {
         let out: Vec<usize> = parallel_map(0, |i| i);
         assert!(out.is_empty());
+        let out: Vec<usize> = parallel_map_dynamic(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn dynamic_map_matches_serial_and_runs_everything_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map_dynamic(257, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i * 3
+        });
+        let expect: Vec<usize> = (0..257).map(|i| i * 3).collect();
+        assert_eq!(out, expect);
+        assert_eq!(counter.load(Ordering::Relaxed), 257);
     }
 }

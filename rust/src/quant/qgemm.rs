@@ -33,17 +33,27 @@ pub fn qgemv_into(q: &QuantizedLinear, x: &[f32], y: &mut [f32], scratch: &mut Q
     assert_eq!(x.len(), q.m);
     assert_eq!(y.len(), q.n);
     if let Some(eff) = &q.effective {
-        y.copy_from_slice(&crate::linalg::gemv(&eff.transpose(), x));
+        // `y = xᵀ·W` accumulated row by row — the old fallback
+        // re-materialized `eff.transpose()` (a full m×n copy) on every
+        // activation row just to call gemv on it.
+        y.fill(0.0);
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            for (yv, &wv) in y.iter_mut().zip(eff.row(i)) {
+                *yv += xv * wv;
+            }
+        }
         return;
     }
     let gs = q.scales.group_size;
     let n_groups = q.scales.n_groups();
-    // Per-group activation sums (the z-correction term).
-    scratch.gsum.resize(n_groups, 0.0);
-    scratch.gsum.fill(0.0);
-    for (i, &xv) in x.iter().enumerate() {
-        scratch.gsum[i / gs] += xv;
-    }
+    // Per-group activation sums (the z-correction term), accumulated
+    // group-by-group over slices — no per-element `i / gs` division.
+    scratch.gsum.clear();
+    scratch.gsum.extend(x.chunks(gs).map(|c| c.iter().sum::<f32>()));
+    debug_assert_eq!(scratch.gsum.len(), n_groups);
     scratch.acc.resize(q.n, 0.0);
     let acc = &mut scratch.acc; // per-group code-dot accumulator
     y.fill(0.0);
@@ -124,6 +134,20 @@ mod tests {
         for (a, b) in y.iter().zip(&expect) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn effective_fallback_matches_dense_matmul_batched() {
+        // The transpose-free fallback must still equal `X · W` exactly
+        // for a whole batch (and leave no scratch residue between rows).
+        let mut rng = Rng::new(21);
+        let w = Matrix::randn(24, 10, 0.7, &mut rng);
+        let mut q = rtn::quantize(&w, &QuantConfig::default());
+        q.effective = Some(w.clone());
+        let x = Matrix::randn(6, 24, 1.0, &mut rng);
+        let expect = matmul(&x, &w);
+        let got = qgemm(&q, &x);
+        assert!(got.rel_err(&expect) < 1e-6, "rel={}", got.rel_err(&expect));
     }
 
     #[test]

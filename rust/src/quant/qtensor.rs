@@ -146,7 +146,27 @@ pub fn unpack_bits(packed: &[u8], wbit: u8, n: usize) -> Vec<u8> {
 /// [`pack_bits`] stream — the tile-row accessor of the packed execution
 /// engine (`crate::infer`), which unpacks one row of a column tile at a
 /// time into a stack buffer without touching the rest of the stream.
+///
+/// The deployment widths take **table-driven fast paths**: one byte load
+/// decodes two W4 codes or four W2 codes through a 256-entry LUT, and W3
+/// decodes eight codes per aligned 3-byte group with in-register shifts.
+/// Other widths (and the unaligned head/tail of every call) fall back to
+/// the per-code shift loop ([`unpack_bits_range_shift`], kept public as
+/// the equivalence reference).
 pub fn unpack_bits_range(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) {
+    match wbit {
+        2 => unpack_range_w2(packed, start, out),
+        3 => unpack_range_w3(packed, start, out),
+        4 => unpack_range_w4(packed, start, out),
+        _ => unpack_bits_range_shift(packed, wbit, start, out),
+    }
+}
+
+/// Reference per-code shift unpack (the pre-LUT kernel). Handles every
+/// width `1..=8` and any alignment; the fast paths above must match it
+/// bit for bit (see the `lut_unpack_matches_shift_unpack` test and the
+/// `fig_qgemm` unpack microbench).
+pub fn unpack_bits_range_shift(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) {
     assert!(wbit >= 1 && wbit <= 8);
     let mask = ((1u16 << wbit) - 1) as u8;
     let mut bitpos = start * wbit as usize;
@@ -160,6 +180,83 @@ pub fn unpack_bits_range(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) 
         *slot = v & mask;
         bitpos += wbit as usize;
     }
+}
+
+/// Byte → two W4 codes (low nibble first, matching the little-endian
+/// stream order of [`pack_bits`]).
+static LUT_W4: [[u8; 2]; 256] = build_lut_w4();
+/// Byte → four W2 codes.
+static LUT_W2: [[u8; 4]; 256] = build_lut_w2();
+
+const fn build_lut_w4() -> [[u8; 2]; 256] {
+    let mut t = [[0u8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [(b & 0x0F) as u8, (b >> 4) as u8];
+        b += 1;
+    }
+    t
+}
+
+const fn build_lut_w2() -> [[u8; 4]; 256] {
+    let mut t = [[0u8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [(b & 3) as u8, ((b >> 2) & 3) as u8, ((b >> 4) & 3) as u8, (b >> 6) as u8];
+        b += 1;
+    }
+    t
+}
+
+fn unpack_range_w4(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    let lead = ((2 - start % 2) % 2).min(n);
+    unpack_bits_range_shift(packed, 4, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) / 2;
+    for chunk in out[lead..].chunks_exact_mut(2) {
+        let t = &LUT_W4[packed[byte] as usize];
+        chunk[0] = t[0];
+        chunk[1] = t[1];
+        byte += 1;
+        o += 2;
+    }
+    unpack_bits_range_shift(packed, 4, start + o, &mut out[o..]);
+}
+
+fn unpack_range_w2(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    let lead = ((4 - start % 4) % 4).min(n);
+    unpack_bits_range_shift(packed, 2, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) / 4;
+    for chunk in out[lead..].chunks_exact_mut(4) {
+        chunk.copy_from_slice(&LUT_W2[packed[byte] as usize]);
+        byte += 1;
+        o += 4;
+    }
+    unpack_bits_range_shift(packed, 2, start + o, &mut out[o..]);
+}
+
+fn unpack_range_w3(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    // Eight W3 codes occupy exactly three bytes; align to that period,
+    // then decode whole groups from one u32-assembled register.
+    let lead = ((8 - start % 8) % 8).min(n);
+    unpack_bits_range_shift(packed, 3, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) * 3 / 8;
+    for chunk in out[lead..].chunks_exact_mut(8) {
+        let w = packed[byte] as u32
+            | ((packed[byte + 1] as u32) << 8)
+            | ((packed[byte + 2] as u32) << 16);
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = ((w >> (3 * k)) & 7) as u8;
+        }
+        byte += 3;
+        o += 8;
+    }
+    unpack_bits_range_shift(packed, 3, start + o, &mut out[o..]);
 }
 
 #[cfg(test)]
@@ -192,6 +289,36 @@ mod tests {
                 let mut out = vec![0u8; len];
                 unpack_bits_range(&packed, wbit, start, &mut out);
                 assert_eq!(out, &codes[start..start + len], "wbit={wbit} start={start}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_unpack_matches_shift_unpack() {
+        // Deployment widths, exhaustively over byte patterns: a stream
+        // containing every code value adjacency, decoded at every start
+        // offset and several lengths, must agree with the shift reference
+        // exactly.
+        for &wbit in &[2u8, 3, 4] {
+            let per_code = 1usize << wbit;
+            // All pairs (a, b) of code values, flattened — covers every
+            // packed byte pattern each width can produce.
+            let codes: Vec<u8> = (0..per_code)
+                .flat_map(|a| (0..per_code).flat_map(move |b| [a as u8, b as u8]))
+                .collect();
+            let packed = pack_bits(&codes, wbit);
+            for start in 0..codes.len().min(24) {
+                for len in [0usize, 1, 2, 7, 8, 9, 31, codes.len() - start] {
+                    if start + len > codes.len() {
+                        continue;
+                    }
+                    let mut fast = vec![0xAAu8; len];
+                    let mut slow = vec![0x55u8; len];
+                    unpack_bits_range(&packed, wbit, start, &mut fast);
+                    unpack_bits_range_shift(&packed, wbit, start, &mut slow);
+                    assert_eq!(fast, slow, "wbit={wbit} start={start} len={len}");
+                    assert_eq!(fast, &codes[start..start + len], "wbit={wbit} vs source");
+                }
             }
         }
     }

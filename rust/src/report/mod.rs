@@ -73,6 +73,23 @@ impl Table {
         out
     }
 
+    /// Render as a JSON object `{title, headers, rows}` (hand-rolled — no
+    /// serde offline). Used by benches that record machine-readable
+    /// results (e.g. `BENCH_qgemm.json`).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        let _ = write!(out, "\"title\":{},", json_str(&self.title));
+        let list = |cells: &[String]| {
+            let inner: Vec<String> = cells.iter().map(|c| json_str(c)).collect();
+            format!("[{}]", inner.join(","))
+        };
+        let _ = write!(out, "\"headers\":{},", list(&self.headers));
+        let rows: Vec<String> = self.rows.iter().map(|r| list(r)).collect();
+        let _ = write!(out, "\"rows\":[{}]", rows.join(","));
+        out.push('}');
+        out
+    }
+
     /// Print markdown to stdout and also write `<dir>/<stem>.md` + `.csv`
     /// when `dir` is Some. Bench harnesses call this with
     /// `results/` so every paper table lands on disk.
@@ -84,6 +101,27 @@ impl Table {
             let _ = std::fs::write(d.join(format!("{stem}.csv")), self.to_csv());
         }
     }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Annotate the minimum (bold) and second-minimum (underline) of a series
@@ -147,6 +185,17 @@ mod tests {
         let mut t = Table::new("", &["a"]);
         t.push_row(&["x,y"]);
         assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut t = Table::new("T\"1\"", &["a", "b"]);
+        t.push_row(&["1", "x\ny"]);
+        let j = t.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"title\":\"T\\\"1\\\"\""));
+        assert!(j.contains("\"headers\":[\"a\",\"b\"]"));
+        assert!(j.contains("\"rows\":[[\"1\",\"x\\ny\"]]"));
     }
 
     #[test]

@@ -317,6 +317,22 @@ impl Matrix {
         Matrix { rows: total, cols, data }
     }
 
+    /// Inverse of [`Matrix::vstack_all`]: split into consecutive row
+    /// groups of the given sizes (`counts` must sum to `rows`). The
+    /// batched capture paths use this to hand a tall GEMM result back to
+    /// per-sequence consumers (the attention core, the eval harnesses).
+    pub fn split_rows(&self, counts: &[usize]) -> Vec<Matrix> {
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, self.rows, "split_rows counts must cover all rows");
+        let mut out = Vec::with_capacity(counts.len());
+        let mut r0 = 0usize;
+        for &h in counts {
+            out.push(self.block(r0, 0, h, self.cols));
+            r0 += h;
+        }
+        out
+    }
+
     /// Gather rows by index (activation subsampling, act-order permutes).
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(idx.len(), self.cols);
@@ -344,6 +360,69 @@ impl Matrix {
     pub fn permute_rows(&self, perm: &[usize]) -> Matrix {
         assert_eq!(perm.len(), self.rows);
         self.gather_rows(perm)
+    }
+}
+
+/// An owning vertical stack of per-sequence row groups: one contiguous
+/// `Σ rows_i × cols` matrix plus the row offsets of each group.
+///
+/// This is the hidden-state cache layout of the **batched capture path**:
+/// the pipeline coordinator keeps one `RowBatch` per cache (FP and
+/// runtime) instead of a `Vec<Matrix>`, so every non-attention linear
+/// stage runs as a single tall GEMM over [`RowBatch::data`] while the
+/// causal-attention core still sees per-sequence row ranges through
+/// [`RowBatch::offsets`]. It is also the handoff unit the pipeline-
+/// sharding roadmap item will ship between block workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBatch {
+    data: Matrix,
+    /// `n_seqs + 1` cumulative row offsets; sequence `i` owns rows
+    /// `offsets[i]..offsets[i+1]` of `data`.
+    offsets: Vec<usize>,
+}
+
+impl RowBatch {
+    /// Stack per-sequence matrices (in order) into one batch.
+    pub fn stack(parts: &[Matrix]) -> RowBatch {
+        let mut offsets = Vec::with_capacity(parts.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for p in parts {
+            total += p.rows();
+            offsets.push(total);
+        }
+        RowBatch { data: Matrix::vstack_all(parts), offsets }
+    }
+
+    /// The stacked `Σ rows_i × cols` matrix.
+    #[inline]
+    pub fn data(&self) -> &Matrix {
+        &self.data
+    }
+
+    /// Cumulative row offsets (`n_seqs + 1` entries, starting at 0).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Number of sequences in the batch.
+    #[inline]
+    pub fn n_seqs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Row count of sequence `i`.
+    #[inline]
+    pub fn seq_rows(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Replace the stacked data with a same-height matrix (a stage
+    /// advance: row offsets are invariant across every block stage).
+    pub fn set_data(&mut self, data: Matrix) {
+        assert_eq!(data.rows(), self.data.rows(), "RowBatch stage must preserve row count");
+        self.data = data;
     }
 }
 
@@ -449,6 +528,47 @@ mod tests {
         let folded = m.vstack(&m).vstack(&m);
         assert_eq!(Matrix::vstack_all(&parts), folded);
         assert_eq!(Matrix::vstack_all(&[m.clone()]), m);
+    }
+
+    #[test]
+    fn split_rows_inverts_vstack_all() {
+        let parts = vec![
+            Matrix::from_fn(2, 3, |i, j| (i + j) as f32),
+            Matrix::from_fn(1, 3, |_, j| j as f32 * 7.0),
+            Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 - 5.0),
+        ];
+        let stacked = Matrix::vstack_all(&parts);
+        let back = stacked.split_rows(&[2, 1, 4]);
+        assert_eq!(back, parts);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_rows_bad_counts_panics() {
+        let m = sample();
+        let _ = m.split_rows(&[1, 1]);
+    }
+
+    #[test]
+    fn row_batch_roundtrip_and_offsets() {
+        let parts = vec![
+            Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32),
+            Matrix::from_fn(1, 2, |_, j| 10.0 + j as f32),
+            Matrix::from_fn(2, 2, |i, j| -((i + j) as f32)),
+        ];
+        let batch = RowBatch::stack(&parts);
+        assert_eq!(batch.n_seqs(), 3);
+        assert_eq!(batch.offsets(), &[0, 3, 4, 6]);
+        assert_eq!(batch.seq_rows(1), 1);
+        assert_eq!(*batch.data(), Matrix::vstack_all(&parts));
+        assert_eq!(batch.data().split_rows(&[3, 1, 2]), parts);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_batch_set_data_height_mismatch_panics() {
+        let mut batch = RowBatch::stack(&[sample()]);
+        batch.set_data(Matrix::zeros(1, 4));
     }
 
     #[test]

@@ -1,0 +1,226 @@
+//! Parity of the batch-fused capture path with per-sequence stepping.
+//!
+//! PR 3 rewrote the capture loops to vstack all calibration sequences
+//! into one `RowBatch` and run every non-attention linear stage as a
+//! single tall GEMM. These tests pin the contract that made that safe:
+//! the batched stages are **bit-identical** to stepping each sequence
+//! independently — across ragged sequence lengths, act-order (decode-
+//! order permuted) layers, dense effective-fallback layers, and both the
+//! packed and dense execution legs — and the end-to-end pipeline still
+//! matches the legacy prefix re-forward capture.
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::{CaptureMode, Pipeline};
+use ojbkq::data::SyntheticGrammar;
+use ojbkq::infer::{PackedLinear, QuantizedModel};
+use ojbkq::model::{LanguageModel, LinearId, LinearKind, Model, TapPoint, TapSet};
+use ojbkq::quant::{gptq, rtn, Method, QuantConfig};
+use ojbkq::rng::Rng;
+use ojbkq::tensor::{Matrix, RowBatch};
+
+fn setup() -> (Model, Vec<Vec<u16>>) {
+    let cfg = ModelConfig {
+        name: "batch".into(),
+        vocab_size: 48,
+        d_model: 24,
+        n_layers: 3,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(0xBA7C);
+    let model = Model::random(cfg, &mut rng);
+    // Deliberately ragged sequence lengths (the batched path must not
+    // assume equal-length calibration windows).
+    let corpus = SyntheticGrammar::new(48, 0.2, 7).corpus(8_000, &mut rng);
+    let calib: Vec<Vec<u16>> = [20usize, 7, 1, 13]
+        .iter()
+        .map(|&len| corpus.calibration(1, len, &mut rng).remove(0))
+        .collect();
+    (model, calib)
+}
+
+/// A runtime engine exercising every layer flavor the kernel supports:
+/// packed RTN at several widths, a packed act-order (perm) layer, a dense
+/// effective fallback, and untouched FP passthrough layers.
+fn mixed_engine(model: &Model, packed_exec: bool) -> QuantizedModel {
+    let mut qm = QuantizedModel::from_model(model);
+    let mut rng = Rng::new(0x317);
+    for (i, &kind) in LinearKind::all().iter().enumerate() {
+        let id = LinearId { block: 0, kind };
+        let w = model.linear(id);
+        let lin = match i % 3 {
+            0 => {
+                let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+                PackedLinear::from_quantized(&rtn::quantize(w, &cfg), packed_exec)
+            }
+            1 => {
+                let cfg = QuantConfig {
+                    wbit: 3,
+                    group_size: 12,
+                    act_order: true,
+                    ..Default::default()
+                };
+                let x = Matrix::randn(16, w.rows(), 1.0, &mut rng);
+                PackedLinear::from_quantized(&gptq::quantize(w, &x, &cfg).unwrap(), packed_exec)
+            }
+            _ => {
+                // AWQ/QuIP-style: a transform folded into a dense
+                // effective weight (no perm) — must take the dense leg.
+                let mut q = rtn::quantize(
+                    w,
+                    &QuantConfig { wbit: 2, group_size: 8, ..Default::default() },
+                );
+                q.effective = Some(w.map(|v| (v * 16.0).round() / 16.0));
+                PackedLinear::from_quantized(&q, packed_exec)
+            }
+        };
+        qm.set_layer(id, lin);
+    }
+    qm
+}
+
+#[test]
+fn batched_stages_match_per_sequence_stepping_both_legs() {
+    let (model, calib) = setup();
+    for packed_exec in [true, false] {
+        let qm = mixed_engine(&model, packed_exec);
+        let parts: Vec<Matrix> = calib.iter().map(|s| qm.embed_sequence(s)).collect();
+        let mut batch = RowBatch::stack(&parts);
+        let mut per_seq: Vec<Matrix> = parts.clone();
+        for bi in 0..model.blocks.len() {
+            // Batched: one tall call per stage, mirroring the pipeline's
+            // capture sites.
+            let attn_in = qm.attn_in_batch(batch.data(), bi);
+            let ctx = qm.attn_ctx_batch(&attn_in, batch.offsets(), bi);
+            let x_mid = qm.post_attn_batch(batch.data(), &ctx, bi);
+            let mlp_in = qm.mlp_in_batch(&x_mid, bi);
+            let act = qm.mlp_act_batch(&mlp_in, bi);
+            // Per-sequence reference for each captured stage output.
+            let mut s_attn_in = Vec::new();
+            let mut s_ctx = Vec::new();
+            let mut s_mlp_in = Vec::new();
+            let mut s_act = Vec::new();
+            for h in &per_seq {
+                let a = qm.attn_in(h, bi);
+                let c = qm.attn_ctx(&a, bi);
+                let m = qm.post_attn(h, &c, bi);
+                let mi = qm.mlp_in(&m, bi);
+                s_act.push(qm.mlp_act(&mi, bi));
+                s_attn_in.push(a);
+                s_ctx.push(c);
+                s_mlp_in.push(mi);
+            }
+            let leg = if packed_exec { "packed" } else { "dense" };
+            assert_eq!(attn_in, Matrix::vstack_all(&s_attn_in), "{leg} b{bi} AttnIn");
+            assert_eq!(ctx, Matrix::vstack_all(&s_ctx), "{leg} b{bi} OIn");
+            assert_eq!(mlp_in, Matrix::vstack_all(&s_mlp_in), "{leg} b{bi} MlpIn");
+            assert_eq!(act, Matrix::vstack_all(&s_act), "{leg} b{bi} DownIn");
+            // Advance both representations.
+            batch.set_data(qm.post_mlp_batch(&x_mid, &act, bi));
+            for h in per_seq.iter_mut() {
+                qm.block_step(h, bi);
+            }
+            assert_eq!(*batch.data(), Matrix::vstack_all(&per_seq), "{leg} b{bi} hidden");
+        }
+    }
+}
+
+#[test]
+fn fp_block_step_batch_matches_per_sequence_taps() {
+    let (model, calib) = setup();
+    let parts: Vec<Matrix> = calib.iter().map(|s| model.embed_sequence(s)).collect();
+    let mut batch = RowBatch::stack(&parts);
+    let mut per_seq = parts.clone();
+    for bi in 0..model.blocks.len() {
+        let mut batch_taps = TapSet::request(bi, &TapPoint::all());
+        model.block_step_batch(&mut batch, bi, &mut batch_taps);
+        let mut seq_taps = TapSet::request(bi, &TapPoint::all());
+        for h in per_seq.iter_mut() {
+            model.block_step(h, bi, &mut seq_taps);
+        }
+        for p in TapPoint::all() {
+            let a = batch_taps.take(bi, p).unwrap();
+            let b = seq_taps.take(bi, p).unwrap();
+            assert_eq!(a, b, "block {bi} {p:?}");
+        }
+        assert_eq!(*batch.data(), Matrix::vstack_all(&per_seq), "block {bi} hidden");
+    }
+}
+
+#[test]
+fn forward_batch_matches_forward_ragged_mixed_layers() {
+    let (model, calib) = setup();
+    let refs: Vec<&[u16]> = calib.iter().map(|s| s.as_slice()).collect();
+    for packed_exec in [true, false] {
+        let qm = mixed_engine(&model, packed_exec);
+        let batched = qm.forward_batch(&refs);
+        for (s, got) in calib.iter().zip(&batched) {
+            assert_eq!(*got, LanguageModel::forward(&qm, s), "len {}", s.len());
+        }
+    }
+    // Dense FP model too (the fp-cache leg of the pipeline).
+    let batched = model.forward_batch(&refs);
+    for (s, got) in calib.iter().zip(&batched) {
+        assert_eq!(*got, Model::forward(&model, s), "fp len {}", s.len());
+    }
+}
+
+/// End-to-end: the batch-fused streaming pipeline must still produce the
+/// same model as the legacy per-sequence prefix re-forward capture (dense
+/// execution on both legs isolates the capture strategy, as in
+/// `streaming_capture.rs`), on a ragged calibration set.
+#[test]
+fn batched_pipeline_matches_reforward_on_ragged_calib() {
+    let (model, calib) = setup();
+    let cfg = QuantConfig {
+        wbit: 4,
+        group_size: 8,
+        k: 2,
+        ntile: 16,
+        mu: 0.3,
+        lambda: 0.2,
+        packed_exec: false,
+        ..Default::default()
+    };
+    let (qm_batched, rep_batched) =
+        Pipeline::new(&model, calib.clone(), Method::Ojbkq, cfg.clone(), None).run().unwrap();
+    let (qm_legacy, rep_legacy) = Pipeline::new(&model, calib, Method::Ojbkq, cfg, None)
+        .with_capture_mode(CaptureMode::Reforward)
+        .run()
+        .unwrap();
+    let toks: Vec<u16> = vec![1, 7, 13, 2, 40];
+    assert!(
+        qm_batched.forward(&toks).rel_err(&qm_legacy.forward(&toks)) < 1e-9,
+        "batch-fused and re-forward pipelines must produce equivalent models"
+    );
+    for (a, b) in rep_batched.layers.iter().zip(rep_legacy.layers.iter()) {
+        assert_eq!(a.id, b.id);
+        let denom = b.stats.rt_err.abs().max(1e-12);
+        assert!(
+            (a.stats.rt_err - b.stats.rt_err).abs() / denom < 1e-6,
+            "{}: rt_err {} vs {}",
+            a.id,
+            a.stats.rt_err,
+            b.stats.rt_err
+        );
+    }
+    assert!(rep_batched.capture_block_steps < rep_legacy.capture_block_steps);
+}
+
+/// The packed-execution leg of the batch-fused pipeline stays
+/// deterministic and finite on ragged calibration sets.
+#[test]
+fn batched_packed_pipeline_deterministic_on_ragged_calib() {
+    let (model, calib) = setup();
+    let cfg = QuantConfig { wbit: 4, group_size: 8, k: 2, ntile: 16, ..Default::default() };
+    let (qa, ra) =
+        Pipeline::new(&model, calib.clone(), Method::Ojbkq, cfg.clone(), None).run().unwrap();
+    let (qb, rb) = Pipeline::new(&model, calib, Method::Ojbkq, cfg, None).run().unwrap();
+    let toks: Vec<u16> = vec![2, 4, 6, 8, 10];
+    assert!(qa.forward(&toks).rel_err(&qb.forward(&toks)) < 1e-12);
+    assert!(qa.forward(&toks).all_finite());
+    for (a, b) in ra.layers.iter().zip(rb.layers.iter()) {
+        assert_eq!(a.stats.rt_err, b.stats.rt_err, "{}", a.id);
+    }
+}
