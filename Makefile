@@ -10,7 +10,13 @@
 PYTHON    ?= python3
 ARTIFACTS ?= rust/artifacts
 
-.PHONY: artifacts artifacts-quick test bench clean-artifacts
+.PHONY: artifacts artifacts-quick golden-fixture test bench clean-artifacts
+
+# Regenerate the committed OJBQ1 golden fixture + logits snapshot
+# (rust/tests/fixtures/) — only needed on a deliberate format bump; the
+# fixture test compares bytes, so commit the result.
+golden-fixture:
+	$(PYTHON) python/tools/make_golden_ojbq1.py
 
 artifacts:
 	cd python && $(PYTHON) -m compile.pretrain --out ../$(ARTIFACTS)

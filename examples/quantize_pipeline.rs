@@ -7,14 +7,23 @@
 //!
 //! ```sh
 //! cargo run --release --example quantize_pipeline -- \
-//!     [--model small-0.8M] [--wbit 4] [--group 128] [--methods rtn,gptq,ours]
+//!     [--model small-0.8M] [--wbit 4] [--group 128] [--methods rtn,gptq,ours] \
+//!     [--save DIR]
 //! ```
+//!
+//! With `--save DIR`, every method's quantized model is also written as a
+//! native packed OJBQ1 checkpoint (`ojbkq::infer::save_quantized`),
+//! reloaded, and checked bit-identical against the in-memory engine — the
+//! deployment handoff in one example; the table gains an `artifact`
+//! column with each checkpoint's size relative to the dense f32 export.
 
 use ojbkq::cli::Args;
 use ojbkq::coordinator::{quantize_model, Workbench};
 use ojbkq::eval::perplexity_pair;
+use ojbkq::infer::{load_quantized, save_quantized};
+use ojbkq::model::LanguageModel;
 use ojbkq::quant::{Method, QuantConfig};
-use ojbkq::report::Table;
+use ojbkq::report::{fmt_bytes, Table};
 use ojbkq::util::fmt_secs;
 use std::path::PathBuf;
 
@@ -53,6 +62,10 @@ fn main() -> anyhow::Result<()> {
     let (fp_in, fp_sh) =
         perplexity_pair(&wb.model, &wb.corpus, &wb.shifted, wb.model.cfg.max_seq, ppl_tokens);
 
+    let save_dir = args.get("save").map(PathBuf::from);
+    if let Some(d) = &save_dir {
+        std::fs::create_dir_all(d)?;
+    }
     let mut table = Table::new(
         &format!("End-to-end: {name} W{wbit}A16 g{group}"),
         &[
@@ -62,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             "Δppl",
             "compress",
             "resident",
+            "artifact",
             "quant time",
             "capture",
         ],
@@ -75,11 +89,37 @@ fn main() -> anyhow::Result<()> {
         "1.00x".into(),
         "-".into(),
         "-".into(),
+        "-".into(),
     ]);
+    let probe: Vec<u16> = wb.corpus.train()[..8.min(wb.corpus.train().len())].to_vec();
     for method in methods {
         let cfg = QuantConfig::paper_defaults(wbit, group);
-        let (qm, report) =
+        let (qm, mut report) =
             quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, None)?;
+        if let Some(d) = &save_dir {
+            // Ship the packed codes, reload them, and insist the loaded
+            // engine is bit-identical to the in-memory one.
+            let path = d.join(format!(
+                "ckpt_{name}_w{wbit}_g{group}_{}.ojbq1",
+                method.label().to_ascii_lowercase()
+            ));
+            let info = save_quantized(&qm, &path)?;
+            report.artifact_bytes = Some(info.file_bytes);
+            let back = load_quantized(&path, &name)?;
+            anyhow::ensure!(
+                back.forward(&probe) == qm.forward(&probe),
+                "reloaded OJBQ1 checkpoint diverged from the in-memory engine"
+            );
+        }
+        // The column reads the report field the save recorded.
+        let artifact = match report.artifact_bytes {
+            None => "-".to_string(),
+            Some(b) => format!(
+                "{} ({:.0}%)",
+                fmt_bytes(b),
+                100.0 * b as f64 / qm.dense_export_bytes() as f64
+            ),
+        };
         let (pin, psh) =
             perplexity_pair(&qm, &wb.corpus, &wb.shifted, wb.model.cfg.max_seq, ppl_tokens);
         table.push_row(&[
@@ -89,6 +129,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:+.3}", pin - fp_in),
             format!("{:.2}x", report.compression_ratio()),
             format!("{:.2}x", report.resident_compression()),
+            artifact,
             fmt_secs(report.total_secs),
             fmt_secs(report.capture_secs),
         ]);

@@ -1,0 +1,211 @@
+"""Generate the committed OJBQ1 golden fixture + logits snapshot.
+
+Writes ``rust/tests/fixtures/golden_tiny.ojbq1`` — a tiny hand-specified
+packed checkpoint exercising every record form (dense embedding/norms, a
+dense-fallback linear, packed linears at wbit 2/3/4, ragged scale groups,
+and a decode-order perm) — plus ``golden_tiny_logits.bin``, the f32
+logits of the pinned token sequence computed by this *independent*
+float64 reimplementation of the forward pass.
+
+``rust/tests/packed_checkpoint.rs::golden_fixture_pins_byte_layout_and_decode``
+loads the fixture, re-saves it (must be byte-identical: pins field order,
+framing, endianness), and compares forward logits against the snapshot
+(pins the decode path). Regenerate only on a deliberate format bump:
+
+    python3 python/tools/make_golden_ojbq1.py
+
+The byte layout mirrors rust/src/infer/io.rs; every numeric value is an
+exact binary fraction so the f32 file content is bit-deterministic.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT_DIR = os.path.join(HERE, "..", "..", "rust", "tests", "fixtures")
+
+# Config: vocab=8 d_model=4 n_layers=1 n_heads=2 d_ff=6 max_seq=8.
+VOCAB, D, LAYERS, HEADS, FF, MAX_SEQ = 8, 4, 1, 2, 6, 8
+TOKENS = [1, 3, 0, 2, 5, 4]  # pinned snapshot sequence
+
+
+def f32s(a) -> bytes:
+    return np.asarray(a, dtype="<f4").tobytes()
+
+
+def pack_bits(codes, wbit: int) -> bytes:
+    """Little-endian bitstream, mirroring quant::qtensor::pack_bits."""
+    out = bytearray((len(codes) * wbit + 7) // 8)
+    bit = 0
+    for c in codes:
+        assert 0 <= c < (1 << wbit)
+        byte, off = bit // 8, bit % 8
+        out[byte] |= (c << off) & 0xFF
+        if off + wbit > 8:
+            out[byte + 1] |= c >> (8 - off)
+        bit += wbit
+    return bytes(out)
+
+
+class PackedLayer:
+    """One packed linear: codes in decode order + tables + optional perm."""
+
+    def __init__(self, m, n, wbit, gs, codes, scales, zeros, perm=None):
+        self.m, self.n, self.wbit, self.gs = m, n, wbit, gs
+        self.n_groups = -(-m // gs)
+        self.codes = np.asarray(codes, dtype=np.int64).reshape(m, n)
+        self.scales = np.asarray(scales, dtype=np.float64).reshape(self.n_groups, n)
+        zeros = np.asarray(zeros, dtype=np.float64).reshape(self.n_groups, n)
+        self.corr = self.scales * zeros  # s·z — exact for our binary fractions
+        self.perm = None if perm is None else list(perm)
+        assert self.codes.max() < (1 << wbit)
+
+    def dense(self) -> np.ndarray:
+        """Runtime weight in original feature order (PackedTiles::to_dense)."""
+        w = np.zeros((self.m, self.n))
+        for i in range(self.m):
+            g = i // self.gs
+            row = self.scales[g] * self.codes[i] - self.corr[g]
+            w[self.perm[i] if self.perm else i] = row
+        return w
+
+    def record(self, name: str) -> bytes:
+        head = f"{name}\npacked\n{self.m} {self.n} {self.wbit} {self.gs} "
+        head += f"{self.n_groups} {1 if self.perm else 0}\n"
+        out = head.encode()
+        out += f32s(self.scales) + f32s(self.corr)
+        if self.perm:
+            out += b"".join(struct.pack("<I", p) for p in self.perm)
+        # Single column tile (n < COL_TILE=32): row-major m×n codes.
+        out += pack_bits(list(self.codes.reshape(-1)), self.wbit)
+        return out
+
+
+def dense_record(name: str, rows: int, cols: int, data) -> bytes:
+    return f"{name}\ndense\n{rows} {cols}\n".encode() + f32s(data)
+
+
+# ----- the golden model (every value an exact binary fraction) ---------
+
+EMB = np.array([[((t * 4 + j) % 7 - 3) * 0.125 for j in range(D)] for t in range(VOCAB)])
+ATTN_NORM = np.array([1.0, 0.875, 1.125, 1.0])
+MLP_NORM = np.array([0.75, 1.0, 1.25, 1.0])
+FINAL_NORM = np.array([1.0, 1.0, 0.875, 1.125])
+WO = np.array([[((i * 3 + j * 5) % 9 - 4) * 0.0625 for j in range(D)] for i in range(D)])
+
+
+def qkv(c: int) -> PackedLayer:
+    codes = [[(i * 5 + j * 3 + c) % 8 for j in range(D)] for i in range(D)]
+    scales = [[0.0625 * (1 + (g + j + c) % 3) for j in range(D)] for g in range(2)]
+    zeros = [[(g * 2 + j + c) % 8 for j in range(D)] for g in range(2)]
+    perm = [2, 0, 3, 1] if c == 0 else None  # decode order on wq only
+    return PackedLayer(D, D, 3, 3, codes, scales, zeros, perm)
+
+
+def gate_up(c: int) -> PackedLayer:
+    codes = [[(i + j * 2 + c) % 4 for j in range(FF)] for i in range(D)]
+    scales = [[0.125 * (1 + (g + j + c) % 2) for j in range(FF)] for g in range(2)]
+    zeros = [[(g + j + c) % 4 for j in range(FF)] for g in range(2)]
+    return PackedLayer(D, FF, 2, 2, codes, scales, zeros)
+
+
+def down() -> PackedLayer:
+    codes = [[(i * 7 + j * 5) % 16 for j in range(D)] for i in range(FF)]
+    scales = [[0.03125 * (1 + (g + j) % 4) for j in range(D)] for g in range(2)]
+    zeros = [[(g * 3 + j) % 16 for j in range(D)] for g in range(2)]
+    return PackedLayer(FF, D, 4, 4, codes, scales, zeros)  # ragged: 4+2 rows
+
+
+WQ, WK, WV = qkv(0), qkv(1), qkv(2)
+WGATE, WUP = gate_up(0), gate_up(1)
+WDOWN = down()
+
+
+# ----- float64 forward (mirrors rust/src/model + infer) ----------------
+
+def rmsnorm(x, gain):
+    ms = np.mean(x * x, axis=1, keepdims=True)
+    return x / np.sqrt(ms + 1e-5) * gain
+
+
+def log_softmax(v):
+    m = np.max(v)
+    return v - m - np.log(np.sum(np.exp(v - m)))
+
+
+def silu(v):
+    return v / (1.0 + np.exp(-v))
+
+
+def embed(tokens):
+    x = EMB[np.array(tokens)].copy()
+    for t in range(len(tokens)):
+        for i in range(D // 2):
+            freq = np.exp(-(2.0 * i / D) * np.log(10_000.0))
+            angle = t * freq
+            x[t, 2 * i] += 0.02 * np.sin(angle)
+            x[t, 2 * i + 1] += 0.02 * np.cos(angle)
+    return x
+
+
+def attention(q, k, v):
+    seq, hd = q.shape[0], D // HEADS
+    out = np.zeros((seq, D))
+    scale = 1.0 / np.sqrt(hd)
+    for h in range(HEADS):
+        c0 = h * hd
+        for t in range(seq):
+            scores = np.array(
+                [np.dot(q[t, c0 : c0 + hd], k[u, c0 : c0 + hd]) * scale for u in range(t + 1)]
+            )
+            w = np.exp(log_softmax(scores))
+            out[t, c0 : c0 + hd] = w @ v[: t + 1, c0 : c0 + hd]
+    return out
+
+
+def forward(tokens):
+    x = embed(tokens)
+    h = rmsnorm(x, ATTN_NORM)
+    ctx = attention(h @ WQ.dense(), h @ WK.dense(), h @ WV.dense())
+    x_mid = x + ctx @ WO
+    h2 = rmsnorm(x_mid, MLP_NORM)
+    act = silu(h2 @ WGATE.dense()) * (h2 @ WUP.dense())
+    x = x_mid + act @ WDOWN.dense()
+    return rmsnorm(x, FINAL_NORM) @ EMB.T
+
+
+# ----- emit ------------------------------------------------------------
+
+def checkpoint_bytes() -> bytes:
+    out = b"OJBQ1\n1\n"
+    out += f"{VOCAB} {D} {LAYERS} {HEADS} {FF} {MAX_SEQ}\n".encode()
+    out += dense_record("embedding", VOCAB, D, EMB)
+    out += dense_record("b0.attn_norm", 1, D, ATTN_NORM)
+    out += dense_record("b0.mlp_norm", 1, D, MLP_NORM)
+    out += WQ.record("b0.wq") + WK.record("b0.wk") + WV.record("b0.wv")
+    out += dense_record("b0.wo", D, D, WO)
+    out += WGATE.record("b0.wgate") + WUP.record("b0.wup")
+    out += WDOWN.record("b0.wdown")
+    out += dense_record("final_norm", 1, D, FINAL_NORM)
+    out += b"end\n"
+    return out
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    ckpt = checkpoint_bytes()
+    with open(os.path.join(OUT_DIR, "golden_tiny.ojbq1"), "wb") as f:
+        f.write(ckpt)
+    logits = forward(TOKENS)
+    with open(os.path.join(OUT_DIR, "golden_tiny_logits.bin"), "wb") as f:
+        f.write(f32s(logits))
+    print(f"golden_tiny.ojbq1: {len(ckpt)} bytes; logits {logits.shape}")
+    print(f"logit range [{logits.min():.4f}, {logits.max():.4f}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -87,15 +87,20 @@ pub fn ppl_tokens() -> usize {
 /// One-line timing decomposition of a pipeline run: total wall clock,
 /// activation-capture share, solver share, and the number of
 /// transformer-block advances the captures cost (linear in depth under
-/// streaming capture).
+/// streaming capture) — plus the OJBQ1 artifact size when the run wrote
+/// one (`PipelineReport::artifact_bytes`).
 pub fn timing_summary(report: &PipelineReport) -> String {
-    format!(
+    let mut out = format!(
         "total {} (capture {} / solve {}; {} block-steps)",
         fmt_secs(report.total_secs),
         fmt_secs(report.capture_secs),
         fmt_secs(report.solver_secs()),
         report.capture_block_steps
-    )
+    );
+    if let Some(b) = report.artifact_bytes {
+        out.push_str(&format!("; artifact {}", crate::report::fmt_bytes(b)));
+    }
+    out
 }
 
 #[cfg(test)]

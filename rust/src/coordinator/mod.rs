@@ -110,6 +110,14 @@ pub struct PipelineReport {
     /// [`CaptureMode::Reforward`].
     pub capture_block_steps: u64,
     pub method: String,
+    /// On-disk size of the OJBQ1 checkpoint written for this run
+    /// (`quantize --out`), filled in by the caller after
+    /// [`crate::infer::save_quantized`]; `None` when nothing was written.
+    /// The checkpoint's weight payload equals
+    /// [`PipelineReport::packed_weight_bytes`] by construction
+    /// (`bytes()`-consistent accounting, pinned by
+    /// `rust/tests/packed_checkpoint.rs`).
+    pub artifact_bytes: Option<u64>,
 }
 
 impl PipelineReport {

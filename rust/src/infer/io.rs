@@ -1,0 +1,415 @@
+//! Packed checkpoint (de)serialization — the native **OJBQ1** format.
+//!
+//! OJBQ1 ships a [`QuantizedModel`] exactly as the execution engine
+//! holds it: per-layer bit-packed code streams, group scale and `s·z`
+//! correction tables, decode-order permutations, and dense fallbacks —
+//! never densifying the packed layers (the pre-PR-4 path serialized
+//! through `to_dense()` + OJBW1, throwing away the 4-8× resident
+//! compression at the disk boundary). It mirrors the OJBW1 layout of
+//! `rust/src/model/io.rs` (text header + named records) but adds a
+//! format-version line and an explicit per-layer kind tag:
+//!
+//! ```text
+//! OJBQ1\n
+//! 1\n                                          (format version)
+//! vocab d_model n_layers n_heads d_ff max_seq\n
+//! <records, canonical order:>
+//!   embedding                  dense  (vocab × d_model)
+//!   per block i:
+//!     b{i}.attn_norm           dense  (1 × d_model)
+//!     b{i}.mlp_norm            dense  (1 × d_model)
+//!     b{i}.{wq wk wv wo wgate wup wdown}   dense | packed
+//!   final_norm                 dense  (1 × d_model)
+//! end\n
+//! ```
+//!
+//! A **dense** record (FP passthrough layers, AWQ/QuIP fallbacks, norms,
+//! embedding) is `name\n`, `dense\n`, `rows cols\n`, then `rows·cols`
+//! little-endian f32 bytes. A **packed** record serializes
+//! [`PackedTiles`] field for field:
+//!
+//! ```text
+//! name\n
+//! packed\n
+//! m n wbit group_size n_groups perm_flag\n
+//! <scales: n_groups·n f32 LE>             group scale table s
+//! <corr:   n_groups·n f32 LE>             correction table s·z
+//! <perm:   m u32 LE>                      iff perm_flag == 1
+//! <tiles:  ⌈n/COL_TILE⌉ streams>          tile t: ⌈m·width(t)·wbit/8⌉ B
+//! ```
+//!
+//! The packed payload is byte-for-byte what [`PackedLinear::bytes`]
+//! accounts for, so the on-disk tensor section equals the engine's
+//! resident weight memory ([`CheckpointInfo::weight_bytes`]).
+//!
+//! Reader hardening (see `rust/tests/packed_checkpoint.rs`): records are
+//! read in canonical order with dimensions pinned by the config header,
+//! so field-order or layout drift fails loudly instead of loading
+//! garbage; every allocation is capped against the remaining file length
+//! (a hostile header cannot provoke an OOM-sized allocation); all size
+//! arithmetic is overflow-checked; packed metadata passes
+//! [`PackedTiles::from_parts`] validation before any kernel sees it; and
+//! the `end` terminator makes silent truncation detectable. Every
+//! failure is an `Err`, never a panic.
+
+use crate::infer::packed::PackedTiles;
+use crate::infer::{PackedLinear, QuantizedBlock, QuantizedModel, COL_TILE};
+use crate::model::io::{config_header_line, parse_config_header, parse_usize_fields};
+use crate::model::LinearKind;
+use crate::tensor::Matrix;
+use crate::util::{bytes_to_f32s, f32s_to_bytes};
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "OJBQ1";
+const VERSION: u32 = 1;
+
+/// Size accounting returned by [`save_quantized`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointInfo {
+    /// Total bytes of the written file (header + records + framing).
+    pub file_bytes: u64,
+    /// Bytes of the per-linear tensor payloads alone — by construction
+    /// equal to [`QuantizedModel::packed_weight_bytes`] of the saved
+    /// model, i.e. the engine's resident weight memory.
+    pub weight_bytes: usize,
+}
+
+/// Expected `(m, n)` of a block linear under `cfg` — what pins every
+/// record's dimensions during both save (debug) and load (hard `Err`).
+fn linear_dims(cfg: &crate::config::ModelConfig, kind: LinearKind) -> (usize, usize) {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    match kind {
+        LinearKind::Q | LinearKind::K | LinearKind::V | LinearKind::O => (d, d),
+        LinearKind::Gate | LinearKind::Up => (d, ff),
+        LinearKind::Down => (ff, d),
+    }
+}
+
+// ----- writer ---------------------------------------------------------
+
+/// Save a packed model as an OJBQ1 checkpoint — streaming, straight from
+/// the integer codes (no intermediate densify). Returns the written size
+/// plus the `bytes()`-consistent weight-payload accounting.
+pub fn save_quantized(qm: &QuantizedModel, path: &Path) -> anyhow::Result<CheckpointInfo> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating checkpoint {path:?}: {e}"))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "{MAGIC}")?;
+    writeln!(w, "{VERSION}")?;
+    writeln!(w, "{}", config_header_line(&qm.cfg))?;
+    let mut weight_bytes = 0usize;
+    let emb = &qm.embedding;
+    write_dense(&mut w, "embedding", emb.rows(), emb.cols(), emb.as_slice())?;
+    for (i, b) in qm.blocks.iter().enumerate() {
+        write_dense(&mut w, &format!("b{i}.attn_norm"), 1, b.attn_norm.len(), &b.attn_norm)?;
+        write_dense(&mut w, &format!("b{i}.mlp_norm"), 1, b.mlp_norm.len(), &b.mlp_norm)?;
+        for (&kind, lin) in LinearKind::all().iter().zip(b.linears()) {
+            let name = format!("b{i}.{}", kind.name());
+            debug_assert_eq!(lin.shape(), linear_dims(&qm.cfg, kind), "layer {name}");
+            weight_bytes += lin.bytes();
+            match lin {
+                PackedLinear::Dense(mat) => {
+                    write_dense(&mut w, &name, mat.rows(), mat.cols(), mat.as_slice())?;
+                }
+                PackedLinear::Packed(t) => write_packed(&mut w, &name, t)?,
+            }
+        }
+    }
+    write_dense(&mut w, "final_norm", 1, qm.final_norm.len(), &qm.final_norm)?;
+    writeln!(w, "end")?;
+    w.flush()?;
+    drop(w);
+    let file_bytes = std::fs::metadata(path)?.len();
+    debug_assert_eq!(weight_bytes, qm.packed_weight_bytes(), "bytes() accounting drift");
+    Ok(CheckpointInfo { file_bytes, weight_bytes })
+}
+
+fn write_dense(
+    w: &mut impl Write,
+    name: &str,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> anyhow::Result<()> {
+    writeln!(w, "{name}")?;
+    writeln!(w, "dense")?;
+    crate::model::io::write_f32_payload(w, rows, cols, data)
+}
+
+fn write_packed(w: &mut impl Write, name: &str, t: &PackedTiles) -> anyhow::Result<()> {
+    let (m, n) = t.shape();
+    writeln!(w, "{name}")?;
+    writeln!(w, "packed")?;
+    writeln!(
+        w,
+        "{m} {n} {} {} {} {}",
+        t.wbit(),
+        t.group_size(),
+        t.scales().rows(),
+        usize::from(t.perm().is_some())
+    )?;
+    w.write_all(&f32s_to_bytes(t.scales().as_slice()))?;
+    w.write_all(&f32s_to_bytes(t.corr().as_slice()))?;
+    if let Some(p) = t.perm() {
+        let mut buf = Vec::with_capacity(p.len() * 4);
+        for &v in p {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    for tile in t.tiles() {
+        w.write_all(tile)?;
+    }
+    Ok(())
+}
+
+// ----- reader ---------------------------------------------------------
+
+/// A `BufRead` wrapper that refuses to allocate past the bytes actually
+/// present in the file — the hostile-header OOM guard.
+struct Reader<R: BufRead> {
+    r: R,
+    remaining: u64,
+}
+
+impl<R: BufRead> Reader<R> {
+    /// Next text line, trimmed; `Err` at end of file (truncation).
+    fn line(&mut self) -> anyhow::Result<String> {
+        let mut s = String::new();
+        let n = self.r.read_line(&mut s)?;
+        anyhow::ensure!(n > 0, "unexpected end of file (truncated checkpoint)");
+        self.remaining = self.remaining.saturating_sub(n as u64);
+        Ok(s.trim_end_matches(['\n', '\r']).to_string())
+    }
+
+    /// Exactly `len` payload bytes, capped against the remaining file.
+    fn bytes(&mut self, len: usize, what: &str) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(
+            len as u64 <= self.remaining,
+            "{what}: {len} bytes declared but at most {} remain in file",
+            self.remaining
+        );
+        let mut buf = vec![0u8; len];
+        self.r
+            .read_exact(&mut buf)
+            .map_err(|e| anyhow::anyhow!("{what}: truncated payload: {e}"))?;
+        self.remaining -= len as u64;
+        Ok(buf)
+    }
+
+    /// Exactly `count` little-endian f32 values.
+    fn f32s(&mut self, count: usize, what: &str) -> anyhow::Result<Vec<f32>> {
+        bytes_to_f32s(&self.bytes(mul(count, 4, what)?, what)?)
+    }
+}
+
+/// Overflow-checked size arithmetic (hostile headers again).
+fn mul(a: usize, b: usize, what: &str) -> anyhow::Result<usize> {
+    a.checked_mul(b).ok_or_else(|| anyhow::anyhow!("{what}: size arithmetic overflow"))
+}
+
+/// Load an OJBQ1 checkpoint straight into the packed execution engine.
+/// `name` labels the returned config (the header carries dimensions
+/// only, matching OJBW1).
+pub fn load_quantized(path: &Path, name: &str) -> anyhow::Result<QuantizedModel> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening checkpoint {path:?}: {e}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = Reader { r: std::io::BufReader::new(f), remaining: file_len };
+    let magic = r.line()?;
+    anyhow::ensure!(magic == MAGIC, "bad magic {magic:?} in {path:?} (expected {MAGIC})");
+    let vline = r.line()?;
+    let version: u32 = vline
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad version line {vline:?}: {e}"))?;
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported {MAGIC} version {version} (this reader supports {VERSION})"
+    );
+    let cfg = parse_config_header(&r.line()?, name)?;
+    // Each block's records need far more than one byte each; this guard
+    // bounds the block loop (and its Vec growth) by the actual file.
+    anyhow::ensure!(
+        cfg.n_layers as u64 <= file_len,
+        "declared {} blocks cannot fit in a {file_len}-byte file",
+        cfg.n_layers
+    );
+    let embedding = read_dense(&mut r, "embedding", cfg.vocab_size, cfg.d_model)?;
+    let mut blocks = Vec::new();
+    for i in 0..cfg.n_layers {
+        let attn_norm = read_dense(&mut r, &format!("b{i}.attn_norm"), 1, cfg.d_model)?;
+        let mlp_norm = read_dense(&mut r, &format!("b{i}.mlp_norm"), 1, cfg.d_model)?;
+        let mut linears = Vec::with_capacity(LinearKind::all().len());
+        for &kind in LinearKind::all() {
+            let (m, n) = linear_dims(&cfg, kind);
+            linears.push(read_linear(&mut r, &format!("b{i}.{}", kind.name()), m, n)?);
+        }
+        blocks.push(QuantizedBlock::new(attn_norm.into_vec(), mlp_norm.into_vec(), linears));
+    }
+    let final_norm = read_dense(&mut r, "final_norm", 1, cfg.d_model)?.into_vec();
+    let endline = r.line()?;
+    anyhow::ensure!(endline == "end", "missing end marker (truncated checkpoint?)");
+    anyhow::ensure!(
+        r.remaining == 0,
+        "{} trailing bytes after end marker (corrupt or concatenated checkpoint)",
+        r.remaining
+    );
+    Ok(QuantizedModel { cfg, embedding, blocks, final_norm })
+}
+
+/// Record name line — canonical order is part of the format.
+fn expect_name<R: BufRead>(r: &mut Reader<R>, name: &str) -> anyhow::Result<()> {
+    let got = r.line()?;
+    anyhow::ensure!(
+        got == name,
+        "expected tensor {name:?}, found {got:?} (layout drift or corruption)"
+    );
+    Ok(())
+}
+
+/// `rows cols\n` + payload, with the shape pinned by the caller.
+fn read_f32_payload<R: BufRead>(
+    r: &mut Reader<R>,
+    what: &str,
+    rows: usize,
+    cols: usize,
+) -> anyhow::Result<Matrix> {
+    let shape = parse_usize_fields(&r.line()?, 2, "shape")?;
+    anyhow::ensure!(
+        shape[0] == rows && shape[1] == cols,
+        "{what}: shape {}x{} does not match the config-implied {rows}x{cols}",
+        shape[0],
+        shape[1]
+    );
+    let count = mul(rows, cols, what)?;
+    Ok(Matrix::from_vec(rows, cols, r.f32s(count, what)?))
+}
+
+/// A tensor that must be a dense record (norms, embedding).
+fn read_dense<R: BufRead>(
+    r: &mut Reader<R>,
+    name: &str,
+    rows: usize,
+    cols: usize,
+) -> anyhow::Result<Matrix> {
+    expect_name(r, name)?;
+    let kind = r.line()?;
+    anyhow::ensure!(kind == "dense", "tensor {name}: expected a dense record, got tag {kind:?}");
+    read_f32_payload(r, name, rows, cols)
+}
+
+/// A block linear: kind-tagged, dense fallback or packed tiles.
+fn read_linear<R: BufRead>(
+    r: &mut Reader<R>,
+    name: &str,
+    m: usize,
+    n: usize,
+) -> anyhow::Result<PackedLinear> {
+    expect_name(r, name)?;
+    let kind = r.line()?;
+    match kind.as_str() {
+        "dense" => Ok(PackedLinear::dense(read_f32_payload(r, name, m, n)?)),
+        "packed" => read_packed_payload(r, name, m, n),
+        other => anyhow::bail!("layer {name}: unknown kind tag {other:?}"),
+    }
+}
+
+fn read_packed_payload<R: BufRead>(
+    r: &mut Reader<R>,
+    name: &str,
+    em: usize,
+    en: usize,
+) -> anyhow::Result<PackedLinear> {
+    let meta = parse_usize_fields(&r.line()?, 6, "packed meta")?;
+    let (m, n, wbit, gs) = (meta[0], meta[1], meta[2], meta[3]);
+    let (n_groups, perm_flag) = (meta[4], meta[5]);
+    anyhow::ensure!(
+        m == em && n == en,
+        "{name}: packed dims {m}x{n} do not match the config-implied {em}x{en}"
+    );
+    anyhow::ensure!((1..=8).contains(&wbit), "{name}: unsupported wbit {wbit}");
+    anyhow::ensure!((1..=m).contains(&gs), "{name}: group_size {gs} out of range for m={m}");
+    anyhow::ensure!(
+        n_groups == m.div_ceil(gs),
+        "{name}: n_groups {n_groups} inconsistent with m={m} group_size={gs}"
+    );
+    anyhow::ensure!(perm_flag <= 1, "{name}: bad perm flag {perm_flag}");
+    let table = mul(n_groups, n, name)?;
+    let scales = Matrix::from_vec(n_groups, n, r.f32s(table, name)?);
+    let corr = Matrix::from_vec(n_groups, n, r.f32s(table, name)?);
+    let perm: Option<Vec<u32>> = if perm_flag == 1 {
+        let raw = r.bytes(mul(m, 4, name)?, name)?;
+        Some(raw.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    } else {
+        None
+    };
+    let n_tiles = n.div_ceil(COL_TILE);
+    let mut tiles = Vec::with_capacity(n_tiles);
+    for t in 0..n_tiles {
+        let wd = COL_TILE.min(n - t * COL_TILE);
+        // ⌈m·wd·wbit/8⌉ — `quant::qtensor::packed_len`, overflow-checked.
+        let bits = mul(mul(m, wd, name)?, wbit, name)?;
+        tiles.push(r.bytes(bits.div_ceil(8), name)?);
+    }
+    let tiles = PackedTiles::from_parts(m, n, wbit as u8, gs, tiles, scales, corr, perm)
+        .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
+    Ok(PackedLinear::packed(tiles))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::Model;
+    use crate::quant::{rtn, QuantConfig};
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ojbkq_test_infer_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip_mixed_layers() {
+        let cfg = ModelConfig {
+            name: "rt".into(),
+            vocab_size: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            max_seq: 8,
+        };
+        let mut rng = Rng::new(0xB0);
+        let model = Model::random(cfg, &mut rng);
+        let mut qm = QuantizedModel::from_model(&model);
+        let qcfg = QuantConfig { wbit: 4, group_size: 4, ..Default::default() };
+        // Pack block 0 only: block 1 stays an FP-passthrough dense record.
+        for &kind in LinearKind::all() {
+            let id = crate::model::LinearId { block: 0, kind };
+            let q = rtn::quantize(model.linear(id), &qcfg);
+            qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+        }
+        let path = tmp("mixed.ojbq1");
+        let info = save_quantized(&qm, &path).unwrap();
+        assert_eq!(info.weight_bytes, qm.packed_weight_bytes());
+        assert!(info.file_bytes > info.weight_bytes as u64);
+        let back = load_quantized(&path, "rt").unwrap();
+        assert_eq!(back.packed_weight_bytes(), qm.packed_weight_bytes());
+        for id in qm.linear_ids() {
+            assert_eq!(back.layer(id).is_packed(), qm.layer(id).is_packed(), "{id}");
+            assert_eq!(back.layer(id).to_dense(), qm.layer(id).to_dense(), "{id}");
+        }
+        let toks: Vec<u16> = vec![3, 7, 1, 0, 5];
+        use crate::model::LanguageModel;
+        assert_eq!(back.forward(&toks), qm.forward(&toks));
+    }
+
+    #[test]
+    fn load_missing_file_is_err() {
+        assert!(load_quantized(Path::new("/nonexistent/q.ojbq1"), "x").is_err());
+    }
+}

@@ -25,6 +25,10 @@
 //!   through integer kernels one tall GEMM per stage, and the eval
 //!   harnesses ([`crate::eval`]) score it through [`LanguageModel`] at
 //!   4–8× lower weight memory.
+//! * [`io`] — the native **OJBQ1** checkpoint format: [`save_quantized`]
+//!   / [`load_quantized`] serialize the engine straight from the packed
+//!   codes (no densify), so the on-disk artifact keeps the same 4–8×
+//!   compression and `quantize --out` → `eval` round-trips bit for bit.
 //!
 //! Everything outside the seven per-block linears (embeddings, norms,
 //! attention softmax, residuals) is shared arithmetic with the dense
@@ -32,8 +36,10 @@
 //! `Model::forward` bit for bit until layers are re-pointed at packed
 //! codes via [`QuantizedModel::set_layer`].
 
+pub mod io;
 pub mod packed;
 
+pub use io::{load_quantized, save_quantized, CheckpointInfo};
 pub use packed::{PackedLinear, COL_TILE};
 
 use crate::config::ModelConfig;
@@ -54,6 +60,23 @@ pub struct QuantizedBlock {
 }
 
 impl QuantizedBlock {
+    /// Assemble a block from deserialized parts (the OJBQ1 checkpoint
+    /// loader, [`crate::infer::io`]). `linears` must hold one layer per
+    /// [`LinearKind::all`] slot, in that order.
+    pub fn new(
+        attn_norm: Vec<f32>,
+        mlp_norm: Vec<f32>,
+        linears: Vec<PackedLinear>,
+    ) -> QuantizedBlock {
+        assert_eq!(linears.len(), LinearKind::all().len(), "one linear per kind");
+        QuantizedBlock { attn_norm, mlp_norm, linears }
+    }
+
+    /// All seven linears in [`LinearKind::all`] order.
+    pub fn linears(&self) -> &[PackedLinear] {
+        &self.linears
+    }
+
     fn lin(&self, kind: LinearKind) -> &PackedLinear {
         &self.linears[kind.index()]
     }
@@ -237,6 +260,16 @@ impl QuantizedModel {
         self.blocks.iter().flat_map(|b| b.linears.iter().map(|l| l.bytes())).sum()
     }
 
+    /// f32 payload bytes of the whole dense export (linears + embedding
+    /// + norms) — what a dense OJBW1 save of [`QuantizedModel::to_dense`]
+    /// writes, the denominator of the artifact-size comparison shown by
+    /// the CLI and pinned by the ≤40%-of-dense checkpoint regression.
+    pub fn dense_export_bytes(&self) -> usize {
+        let norms: usize =
+            self.blocks.iter().map(|b| b.attn_norm.len() + b.mlp_norm.len()).sum();
+        self.fp_weight_bytes() + (self.embedding.len() + norms + self.final_norm.len()) * 4
+    }
+
     /// f32 bytes of the same linears in dense form.
     pub fn fp_weight_bytes(&self) -> usize {
         self.blocks
@@ -251,7 +284,8 @@ impl QuantizedModel {
     }
 
     /// Export as a dense [`Model`] (dequantizes every packed layer) —
-    /// serialization and parity-test support, not an execution path.
+    /// cross-check (`--dense-out`) and parity-test support, not an
+    /// execution path; native serialization is [`save_quantized`].
     pub fn to_dense(&self) -> Model {
         Model {
             cfg: self.cfg.clone(),

@@ -98,6 +98,100 @@ impl PackedTiles {
         }
     }
 
+    /// Reassemble tiles from deserialized parts (the OJBQ1 checkpoint
+    /// loader, `crate::infer::io`), validating every structural invariant
+    /// the kernels rely on — group layout, tile count and per-tile
+    /// bitstream length, table shapes, and (when present) that `perm` is
+    /// a genuine permutation of `0..m`. A hostile or corrupted checkpoint
+    /// therefore fails here with `Err`, never as an index panic inside
+    /// [`qgemm_packed`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        m: usize,
+        n: usize,
+        wbit: u8,
+        group_size: usize,
+        tiles: Vec<Vec<u8>>,
+        scales: Matrix,
+        corr: Matrix,
+        perm: Option<Vec<u32>>,
+    ) -> anyhow::Result<PackedTiles> {
+        anyhow::ensure!(m >= 1 && n >= 1, "empty packed layer {m}x{n}");
+        anyhow::ensure!((1..=8).contains(&wbit), "unsupported wbit {wbit}");
+        anyhow::ensure!(
+            (1..=m).contains(&group_size),
+            "group_size {group_size} out of range for m={m}"
+        );
+        let n_groups = m.div_ceil(group_size);
+        anyhow::ensure!(
+            scales.shape() == (n_groups, n),
+            "scale table shape {:?} != ({n_groups}, {n})",
+            scales.shape()
+        );
+        anyhow::ensure!(
+            corr.shape() == (n_groups, n),
+            "correction table shape {:?} != ({n_groups}, {n})",
+            corr.shape()
+        );
+        let n_tiles = n.div_ceil(COL_TILE);
+        anyhow::ensure!(tiles.len() == n_tiles, "{} tiles, expected {n_tiles}", tiles.len());
+        for (t, tile) in tiles.iter().enumerate() {
+            let w = COL_TILE.min(n - t * COL_TILE);
+            let want = crate::quant::qtensor::packed_len(m * w, wbit);
+            anyhow::ensure!(
+                tile.len() == want,
+                "tile {t} holds {} bytes, expected {want}",
+                tile.len()
+            );
+        }
+        if let Some(p) = &perm {
+            anyhow::ensure!(p.len() == m, "perm length {} != m={m}", p.len());
+            let mut seen = vec![false; m];
+            for &pi in p {
+                let i = pi as usize;
+                anyhow::ensure!(i < m, "perm entry {pi} out of range for m={m}");
+                anyhow::ensure!(!seen[i], "perm entry {pi} duplicated");
+                seen[i] = true;
+            }
+        }
+        Ok(PackedTiles { m, n, wbit, group_size, n_groups, tiles, scales, corr, perm })
+    }
+
+    /// `(m, n)` = (input features, output features).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// Code bit width.
+    pub fn wbit(&self) -> u8 {
+        self.wbit
+    }
+
+    /// Rows per scale group (the last group may be short).
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// Per-tile bit-packed code streams, in column-tile order.
+    pub fn tiles(&self) -> &[Vec<u8>] {
+        &self.tiles
+    }
+
+    /// Group scale table `s`, `n_groups × n`.
+    pub fn scales(&self) -> &Matrix {
+        &self.scales
+    }
+
+    /// Precomputed correction table `s·z`, `n_groups × n`.
+    pub fn corr(&self) -> &Matrix {
+        &self.corr
+    }
+
+    /// Decode-order row permutation, when the solver recorded one.
+    pub fn perm(&self) -> Option<&[u32]> {
+        self.perm.as_deref()
+    }
+
     /// Resident bytes of the packed representation (codes + f32 tables +
     /// permutation) — what the execution engine actually holds in memory.
     fn bytes(&self) -> usize {
@@ -167,6 +261,19 @@ impl PackedLinear {
     /// Wrap a dense weight (FP passthrough).
     pub fn dense(w: Matrix) -> PackedLinear {
         PackedLinear::Dense(w)
+    }
+
+    /// Wrap already-validated tiles (checkpoint deserialization).
+    pub fn packed(tiles: PackedTiles) -> PackedLinear {
+        PackedLinear::Packed(tiles)
+    }
+
+    /// Borrow the tiled representation of a packed layer.
+    pub fn as_packed(&self) -> Option<&PackedTiles> {
+        match self {
+            PackedLinear::Packed(t) => Some(t),
+            PackedLinear::Dense(_) => None,
+        }
     }
 
     /// `(m, n)` = (input features, output features).
@@ -449,6 +556,38 @@ mod tests {
                 Matrix::vstack_all(&parts.iter().map(|x| p.matmul(x)).collect::<Vec<_>>());
             assert_eq!(batched, stacked, "grid blocking must be bit-exact");
         }
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_rejects_corruption() {
+        let (w, x) = rand_layer(20, 40, 77);
+        let cfg = QuantConfig { wbit: 3, group_size: 8, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let p = PackedLinear::from_quantized(&q, true);
+        let t = p.as_packed().unwrap();
+        let rebuild = |wbit: u8, gs: usize, tiles: Vec<Vec<u8>>, perm: Option<Vec<u32>>| {
+            let (s, c) = (t.scales().clone(), t.corr().clone());
+            PackedTiles::from_parts(20, 40, wbit, gs, tiles, s, c, perm)
+        };
+        // Faithful reassembly executes bit-identically.
+        let back = rebuild(3, 8, t.tiles().to_vec(), None).unwrap();
+        assert_eq!(qgemm_packed(&back, &x), p.matmul(&x));
+        // Every broken invariant is an Err, not a panic.
+        assert!(rebuild(0, 8, t.tiles().to_vec(), None).is_err(), "wbit 0");
+        assert!(rebuild(9, 8, t.tiles().to_vec(), None).is_err(), "wbit 9");
+        assert!(rebuild(3, 0, t.tiles().to_vec(), None).is_err(), "group_size 0");
+        assert!(rebuild(3, 21, t.tiles().to_vec(), None).is_err(), "group_size > m");
+        assert!(rebuild(3, 16, t.tiles().to_vec(), None).is_err(), "wrong n_groups");
+        assert!(rebuild(3, 8, t.tiles()[..1].to_vec(), None).is_err(), "missing tile");
+        let mut short = t.tiles().to_vec();
+        short[1].pop();
+        assert!(rebuild(3, 8, short, None).is_err(), "short tile stream");
+        assert!(rebuild(3, 8, t.tiles().to_vec(), Some(vec![0; 20])).is_err(), "dup perm");
+        let mut oob: Vec<u32> = (0..20).collect();
+        oob[3] = 99;
+        assert!(rebuild(3, 8, t.tiles().to_vec(), Some(oob)).is_err(), "oob perm");
+        let ok_perm: Vec<u32> = (0..20).rev().collect();
+        assert!(rebuild(3, 8, t.tiles().to_vec(), Some(ok_perm)).is_ok());
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! ojbkq info      [--artifacts DIR]
 //! ojbkq quantize  --model NAME [--method ours] [--wbit 4] [--group 128]
 //!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
-//!                 [--calib 32] [--seq 128] [--out PATH] [--dense-exec]
-//! ojbkq eval      --model NAME [--method ours] [--ppl-tokens 8192]
-//!                 [--zeroshot] [--reasoning] (quantize + evaluate)
+//!                 [--calib 32] [--seq 128] [--out CKPT.ojbq1]
+//!                 [--dense-out PATH] [--dense-exec]
+//! ojbkq eval      --model NAME [--method ours] [--from CKPT.ojbq1]
+//!                 [--ppl-tokens 8192] [--zeroshot] [--reasoning]
+//!                 (quantize + evaluate, or evaluate a saved checkpoint)
 //! ojbkq methods   (list available solvers)
 //! ```
 //!
@@ -15,17 +17,26 @@
 //! run straight from bit-packed integer codes. `--dense-exec` restores
 //! the legacy dense f32 splice (also: `OJBKQ_DENSE_EXEC=1`).
 //!
+//! `quantize --out` writes the **native packed OJBQ1 checkpoint**
+//! (`ojbkq::infer::save_quantized`) — integer codes, scale/correction
+//! tables and decode perms exactly as the engine holds them, 4-8× below
+//! the dense f32 export. `eval --from` loads such a checkpoint straight
+//! into the packed engine and scores it, bit-identically to the run that
+//! wrote it. `--dense-out` keeps the legacy dequantized OJBW1 export for
+//! cross-checks.
+//!
 //! Model NAME refers to the zoo presets (see `config::ModelConfig::zoo`)
 //! whose trained weights live in `artifacts/` after `make artifacts`.
 
 use ojbkq::cli::Args;
 use ojbkq::coordinator::{quantize_model, Workbench};
 use ojbkq::eval;
+use ojbkq::infer::{load_quantized, save_quantized, QuantizedModel};
 use ojbkq::quant::{Backend, Method, QuantConfig};
-use ojbkq::report::Table;
+use ojbkq::report::{artifact_summary, Table};
 use ojbkq::runtime::SolverRuntime;
 use ojbkq::util::fmt_secs;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::parse();
@@ -37,7 +48,10 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: ojbkq <info|methods|quantize|eval> [--options]\n\
-                 see `rust/src/main.rs` docs or README.md"
+                 quantize --model NAME [--out CKPT.ojbq1] writes the native packed\n\
+                 OJBQ1 checkpoint (--dense-out PATH keeps the dequantized OJBW1\n\
+                 export for cross-checks); eval [--from CKPT.ojbq1] scores a saved\n\
+                 checkpoint directly. see `rust/src/main.rs` docs or README.md"
             );
             2
         }
@@ -114,31 +128,48 @@ fn cmd_info(args: &Args) -> i32 {
     0
 }
 
-fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
-    let name = args.get_str("model", "small-0.8M");
-    let method = match Method::parse(&args.get_str("method", "ours")) {
-        Some(m) => m,
-        None => {
-            eprintln!("unknown method; see `ojbkq methods`");
-            return 2;
-        }
-    };
-    let cfg = quant_config(args);
-    let dir = artifacts_dir(args);
-    let wb = Workbench::load(&dir, &name);
-    if !wb.trained {
-        eprintln!("[warn] no trained artifacts for {name}; using random-init fallback");
-    }
+/// Load an OJBQ1 checkpoint for `eval --from`, sanity-checking it
+/// against the reference model's architecture.
+fn load_checkpoint(ckpt: &str, name: &str, wb: &Workbench) -> anyhow::Result<QuantizedModel> {
+    let qm = load_quantized(Path::new(ckpt), name)?;
+    let (qc, mc) = (&qm.cfg, &wb.model.cfg);
+    anyhow::ensure!(
+        qc.vocab_size == mc.vocab_size
+            && qc.d_model == mc.d_model
+            && qc.n_layers == mc.n_layers
+            && qc.n_heads == mc.n_heads
+            && qc.d_ff == mc.d_ff
+            && qc.max_seq == mc.max_seq,
+        "checkpoint architecture does not match model {name}"
+    );
+    println!(
+        "loaded OJBQ1 checkpoint {ckpt}: {} resident weight bytes ({:.2}x below dense f32)",
+        qm.packed_weight_bytes(),
+        qm.fp_weight_bytes() as f64 / qm.packed_weight_bytes().max(1) as f64
+    );
+    Ok(qm)
+}
+
+/// Run the quantization pipeline and any requested artifact writes.
+/// `Err` carries the process exit code.
+fn run_quantize(
+    args: &Args,
+    name: &str,
+    method: Method,
+    cfg: &QuantConfig,
+    dir: &Path,
+    wb: &Workbench,
+) -> Result<QuantizedModel, i32> {
     let rt_holder;
     let rt = if cfg.backend == Backend::Pjrt {
-        match SolverRuntime::new(&dir) {
+        match SolverRuntime::new(dir) {
             Ok(r) => {
                 rt_holder = r;
                 Some(&rt_holder)
             }
             Err(e) => {
                 eprintln!("error: pjrt backend requested but runtime failed: {e}");
-                return 1;
+                return Err(1);
             }
         }
     } else {
@@ -155,12 +186,12 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
         cfg.mu,
         cfg.lambda
     );
-    let (qmodel, report) =
-        match quantize_model(&wb.model, &wb.corpus, method, &cfg, n_calib, seq, rt) {
+    let (qmodel, mut report) =
+        match quantize_model(&wb.model, &wb.corpus, method, cfg, n_calib, seq, rt) {
             Ok(x) => x,
             Err(e) => {
                 eprintln!("quantization failed: {e}");
-                return 1;
+                return Err(1);
             }
         };
     println!(
@@ -183,23 +214,81 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
         );
     }
     if let Some(out) = args.get("out") {
-        if let Err(e) = ojbkq::model::save_model(&qmodel.to_dense(), std::path::Path::new(out)) {
-            eprintln!("saving {out}: {e}");
-            return 1;
+        // Native packed checkpoint — straight from the integer codes, no
+        // densify (the pre-OJBQ1 path exported `to_dense()` here and gave
+        // the compression back at the disk boundary).
+        match save_quantized(&qmodel, Path::new(out)) {
+            Ok(info) => {
+                report.artifact_bytes = Some(info.file_bytes);
+                println!(
+                    "wrote packed OJBQ1 checkpoint {}",
+                    artifact_summary(out, info.file_bytes, qmodel.dense_export_bytes() as u64)
+                );
+            }
+            Err(e) => {
+                eprintln!("saving {out}: {e}");
+                return Err(1);
+            }
         }
-        println!("wrote dequantized model to {out}");
     }
+    if let Some(out) = args.get("dense-out") {
+        if let Err(e) = ojbkq::model::save_model(&qmodel.to_dense(), Path::new(out)) {
+            eprintln!("saving {out}: {e}");
+            return Err(1);
+        }
+        println!("wrote dequantized OJBW1 cross-check model to {out}");
+    }
+    // One-line recap through the shared report formatter — includes the
+    // artifact size recorded above when `--out` wrote a checkpoint.
+    println!("[report] {}", ojbkq::bench::exp::timing_summary(&report));
+    Ok(qmodel)
+}
+
+fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
+    let name = args.get_str("model", "small-0.8M");
+    let method = match Method::parse(&args.get_str("method", "ours")) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown method; see `ojbkq methods`");
+            return 2;
+        }
+    };
+    let cfg = quant_config(args);
+    let dir = artifacts_dir(args);
+    let wb = Workbench::load(&dir, &name);
+    if !wb.trained {
+        eprintln!("[warn] no trained artifacts for {name}; using random-init fallback");
+    }
+    let from = if and_eval { args.get("from") } else { None };
+    let qmodel = if let Some(ckpt) = from {
+        // Score a previously written OJBQ1 checkpoint: no re-quantization,
+        // the packed codes load straight into the execution engine —
+        // bit-identical to the run that wrote them.
+        match load_checkpoint(ckpt, &name, &wb) {
+            Ok(qm) => qm,
+            Err(e) => {
+                eprintln!("loading checkpoint {ckpt}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        match run_quantize(args, &name, method, &cfg, &dir, &wb) {
+            Ok(qm) => qm,
+            Err(code) => return code,
+        }
+    };
     if and_eval {
+        // The OJBQ1 header carries no method field, so a loaded
+        // checkpoint's column says what it is instead of misattributing
+        // the numbers to whatever --method defaulted to.
+        let label = if from.is_some() { "checkpoint" } else { method.label() };
         let ppl_tokens = args.get_usize("ppl-tokens", 8_192);
         let seq_len = wb.model.cfg.max_seq;
         let (c4, wt2) =
             eval::perplexity_pair(&qmodel, &wb.corpus, &wb.shifted, seq_len, ppl_tokens);
         let (fc4, fwt2) =
             eval::perplexity_pair(&wb.model, &wb.corpus, &wb.shifted, seq_len, ppl_tokens);
-        let mut t = Table::new(
-            &format!("{name} — {}", method.label()),
-            &["metric", "FP32", method.label()],
-        );
+        let mut t = Table::new(&format!("{name} — {label}"), &["metric", "FP32", label]);
         t.push_row(&["ppl (in-domain)".to_string(), format!("{fc4:.3}"), format!("{c4:.3}")]);
         t.push_row(&["ppl (shifted)".to_string(), format!("{fwt2:.3}"), format!("{wt2:.3}")]);
         if args.get_flag("zeroshot") {

@@ -21,26 +21,90 @@ use std::path::Path;
 
 const MAGIC: &str = "OJBW1";
 
+/// Render the config header line shared by OJBW1 and the packed OJBQ1
+/// checkpoint format (`crate::infer::io`):
+/// `vocab d_model n_layers n_heads d_ff max_seq`.
+pub(crate) fn config_header_line(c: &ModelConfig) -> String {
+    format!(
+        "{} {} {} {} {} {}",
+        c.vocab_size, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq
+    )
+}
+
+/// Parse `n` whitespace-separated `usize` fields from a header line,
+/// rejecting malformed or overlong input with a labeled error.
+pub(crate) fn parse_usize_fields(line: &str, n: usize, what: &str) -> anyhow::Result<Vec<usize>> {
+    let fields: Vec<usize> = line
+        .split_whitespace()
+        .map(|t| t.parse())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad {what} line {line:?}: {e}"))?;
+    anyhow::ensure!(
+        fields.len() == n,
+        "bad {what} line {line:?} ({} fields, expected {n})",
+        fields.len()
+    );
+    Ok(fields)
+}
+
+/// Parse and structurally validate the shared config header line. The
+/// checks reject dimensions no forward pass could execute (zero sizes, a
+/// head count that does not divide `d_model`) so downstream readers can
+/// size allocations off the config without asserting later.
+pub(crate) fn parse_config_header(line: &str, name: &str) -> anyhow::Result<ModelConfig> {
+    let dims = parse_usize_fields(line, 6, "config")?;
+    let cfg = ModelConfig {
+        name: name.to_string(),
+        vocab_size: dims[0],
+        d_model: dims[1],
+        n_layers: dims[2],
+        n_heads: dims[3],
+        d_ff: dims[4],
+        max_seq: dims[5],
+    };
+    anyhow::ensure!(
+        cfg.vocab_size >= 1 && cfg.d_model >= 1 && cfg.d_ff >= 1 && cfg.max_seq >= 1,
+        "degenerate config {line:?}"
+    );
+    anyhow::ensure!(
+        cfg.n_heads >= 1 && cfg.d_model % cfg.n_heads == 0,
+        "n_heads {} does not divide d_model {}",
+        cfg.n_heads,
+        cfg.d_model
+    );
+    Ok(cfg)
+}
+
+/// Write one f32 tensor payload — the framing shared by OJBW1 records
+/// and the dense records of OJBQ1 (`crate::infer::io`): `rows cols\n`
+/// followed by `rows·cols` little-endian f32 bytes. Callers write their
+/// own name/tag lines first.
+pub(crate) fn write_f32_payload(
+    w: &mut impl Write,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) -> anyhow::Result<()> {
+    debug_assert_eq!(data.len(), rows * cols, "tensor payload shape");
+    writeln!(w, "{rows} {cols}")?;
+    w.write_all(&f32s_to_bytes(data))?;
+    Ok(())
+}
+
 /// Save a model in OJBW1 format.
 pub fn save_model(model: &Model, path: &Path) -> anyhow::Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = std::io::BufWriter::new(f);
     writeln!(w, "{MAGIC}")?;
+    writeln!(w, "{}", config_header_line(&model.cfg))?;
     let c = &model.cfg;
-    writeln!(
-        w,
-        "{} {} {} {} {} {}",
-        c.vocab_size, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.max_seq
-    )?;
     let mut write_tensor = |name: &str,
                             rows: usize,
                             cols: usize,
                             data: &[f32]|
      -> anyhow::Result<()> {
         writeln!(w, "{name}")?;
-        writeln!(w, "{rows} {cols}")?;
-        w.write_all(&f32s_to_bytes(data))?;
-        Ok(())
+        write_f32_payload(&mut w, rows, cols, data)
     };
     write_tensor("embedding", c.vocab_size, c.d_model, model.embedding.as_slice())?;
     for (i, b) in model.blocks.iter().enumerate() {
@@ -62,24 +126,14 @@ pub fn save_model(model: &Model, path: &Path) -> anyhow::Result<()> {
 pub fn load_model(path: &Path, name: &str) -> anyhow::Result<Model> {
     let f = std::fs::File::open(path)
         .map_err(|e| anyhow::anyhow!("opening model {path:?}: {e} (run `make artifacts`)"))?;
+    let file_len = f.metadata()?.len();
     let mut r = std::io::BufReader::new(f);
     let mut line = String::new();
     r.read_line(&mut line)?;
     anyhow::ensure!(line.trim() == MAGIC, "bad magic {line:?} in {path:?}");
     line.clear();
     r.read_line(&mut line)?;
-    let dims: Vec<usize> =
-        line.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
-    anyhow::ensure!(dims.len() == 6, "bad config line {line:?}");
-    let cfg = ModelConfig {
-        name: name.to_string(),
-        vocab_size: dims[0],
-        d_model: dims[1],
-        n_layers: dims[2],
-        n_heads: dims[3],
-        d_ff: dims[4],
-        max_seq: dims[5],
-    };
+    let cfg = parse_config_header(&line, name)?;
     let mut tensors: HashMap<String, Matrix> = HashMap::new();
     loop {
         line.clear();
@@ -92,11 +146,20 @@ pub fn load_model(path: &Path, name: &str) -> anyhow::Result<Model> {
         }
         line.clear();
         r.read_line(&mut line)?;
-        let shape: Vec<usize> =
-            line.split_whitespace().map(|t| t.parse()).collect::<Result<_, _>>()?;
-        anyhow::ensure!(shape.len() == 2, "bad shape line {line:?} for {tname}");
+        let shape = parse_usize_fields(&line, 2, "shape")?;
         let (rows, cols) = (shape[0], shape[1]);
-        let mut buf = vec![0u8; rows * cols * 4];
+        // Same hostile-header hardening as the OJBQ1 loader: refuse to
+        // allocate more than the file could possibly hold, with the size
+        // arithmetic overflow-checked.
+        let byte_len = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4))
+            .ok_or_else(|| anyhow::anyhow!("{tname}: tensor size overflow"))?;
+        anyhow::ensure!(
+            byte_len as u64 <= file_len,
+            "{tname}: {byte_len} bytes declared in a {file_len}-byte file"
+        );
+        let mut buf = vec![0u8; byte_len];
         r.read_exact(&mut buf)?;
         tensors.insert(tname, Matrix::from_vec(rows, cols, bytes_to_f32s(&buf)?));
     }
@@ -161,5 +224,16 @@ mod tests {
     fn load_missing_file_errors_with_hint() {
         let err = load_model(Path::new("/nonexistent/m.bin"), "x").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn hostile_tensor_shape_cannot_allocate_past_file() {
+        // A shape line declaring terabytes in a tiny file must Err before
+        // allocating (same hardening as the OJBQ1 loader).
+        let dir = std::env::temp_dir().join("ojbkq_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hostile.bin");
+        std::fs::write(&path, b"OJBW1\n16 8 1 2 12 8\nembedding\n4000000000 1024\n").unwrap();
+        assert!(load_model(&path, "x").is_err());
     }
 }

@@ -23,7 +23,7 @@
 //! → `mlp_act` → `post_mlp`) so a single stage can be recomputed after a
 //! weight splice without touching anything upstream.
 
-mod io;
+pub(crate) mod io;
 
 pub use io::{load_model, save_model};
 

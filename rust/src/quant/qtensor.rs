@@ -116,11 +116,19 @@ impl QuantizedLinear {
     }
 }
 
+/// Byte length of a [`pack_bits`] stream holding `n_codes` codes at
+/// `wbit` bits each — the shared size formula between the packer, the
+/// packed execution engine, and the OJBQ1 checkpoint reader/writer
+/// (`crate::infer::io`), whose allocation caps and record framing must
+/// agree with the packer bit for bit.
+pub fn packed_len(n_codes: usize, wbit: u8) -> usize {
+    (n_codes * wbit as usize).div_ceil(8)
+}
+
 /// Pack `codes` (values < 2^wbit) into a little-endian bitstream.
 pub fn pack_bits(codes: &[u8], wbit: u8) -> Vec<u8> {
     assert!(wbit >= 1 && wbit <= 8);
-    let total_bits = codes.len() * wbit as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut out = vec![0u8; packed_len(codes.len(), wbit)];
     let mut bitpos = 0usize;
     for &c in codes {
         debug_assert!((c as u16) < (1u16 << wbit));

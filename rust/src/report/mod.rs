@@ -103,6 +103,36 @@ impl Table {
     }
 }
 
+/// Human-readable byte size (decimal SI: B / KB / MB / GB).
+pub fn fmt_bytes(n: u64) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.2}GB", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2}MB", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.1}KB", f / 1e3)
+    } else {
+        format!("{n}B")
+    }
+}
+
+/// One-line summary for a written checkpoint artifact: its size plus its
+/// share of the dense f32 footprint it replaces — the number the
+/// ≤40%-of-dense regression pins (`rust/tests/packed_checkpoint.rs`).
+/// Used by the `ojbkq quantize --out` path and the pipeline example.
+pub fn artifact_summary(label: &str, file_bytes: u64, dense_bytes: u64) -> String {
+    if dense_bytes == 0 {
+        return format!("{label}: {}", fmt_bytes(file_bytes));
+    }
+    format!(
+        "{label}: {} ({:.1}% of the {} dense f32 footprint)",
+        fmt_bytes(file_bytes),
+        100.0 * file_bytes as f64 / dense_bytes as f64,
+        fmt_bytes(dense_bytes)
+    )
+}
+
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
 pub fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
@@ -208,6 +238,23 @@ mod tests {
     fn best_marking_max() {
         let m = mark_best_max(&[3.0, 1.0, 2.0], 0);
         assert_eq!(m, vec!["**3**", "1", "_2_"]);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1_500), "1.5KB");
+        assert_eq!(fmt_bytes(2_500_000), "2.50MB");
+        assert_eq!(fmt_bytes(3_000_000_000), "3.00GB");
+    }
+
+    #[test]
+    fn artifact_summary_shapes() {
+        let s = artifact_summary("ckpt.ojbq1", 1_000_000, 4_000_000);
+        assert!(s.contains("ckpt.ojbq1: 1.00MB"));
+        assert!(s.contains("25.0% of the 4.00MB dense"));
+        // Zero denominator stays printable (FP passthrough runs).
+        assert_eq!(artifact_summary("x", 512, 0), "x: 512B");
     }
 
     #[test]

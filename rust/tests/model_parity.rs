@@ -5,7 +5,10 @@
 //!
 //! Skips when artifacts are missing (`make artifacts`).
 
-use ojbkq::model::load_model;
+use ojbkq::coordinator::quantize_model;
+use ojbkq::infer::{load_quantized, save_quantized};
+use ojbkq::model::{load_model, save_model};
+use ojbkq::quant::{Method, QuantConfig};
 use ojbkq::util::bytes_to_f32s;
 use std::io::{BufRead, Read};
 use std::path::PathBuf;
@@ -80,4 +83,58 @@ fn rust_forward_matches_jax_fixture() {
     if checked == 0 {
         eprintln!("SKIP: no model/fixture artifacts found in {dir:?}; run `make artifacts`");
     }
+}
+
+/// The two on-disk forms of one quantized run must agree: evaluating the
+/// packed OJBQ1 checkpoint is bit-identical to the in-memory engine that
+/// wrote it, and the dense OJBW1 cross-check export (`--dense-out`)
+/// scores the same model up to integer-kernel vs dense-GEMM accumulation
+/// order. Also pins the artifact-size win on real trained weights.
+///
+/// Skips when artifacts are missing (`make artifacts`).
+#[test]
+fn dense_ojbw1_vs_packed_ojbq1_eval_parity() {
+    let dir = artifacts_dir();
+    let name = "tiny-0.2M";
+    let model_path = dir.join(format!("model_{name}.bin"));
+    let corpus_path = dir.join(format!("corpus_{name}.bin"));
+    if !model_path.exists() || !corpus_path.exists() {
+        eprintln!("SKIP: no trained artifacts for {name} in {dir:?}; run `make artifacts`");
+        return;
+    }
+    let model = load_model(&model_path, name).expect("load model");
+    let corpus = ojbkq::data::load_corpus(&corpus_path).expect("load corpus");
+    let mut cfg = QuantConfig::paper_defaults(3, 128);
+    cfg.packed_exec = true;
+    let (qm, _) = quantize_model(&model, &corpus, Method::Rtn, &cfg, 2, 32, None).unwrap();
+    let tmp = std::env::temp_dir().join("ojbkq_model_parity");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let q_path = tmp.join(format!("parity_{name}.ojbq1"));
+    let d_path = tmp.join(format!("parity_{name}.ojbw1"));
+    let info = save_quantized(&qm, &q_path).unwrap();
+    save_model(&qm.to_dense(), &d_path).unwrap();
+    let dense_len = std::fs::metadata(&d_path).unwrap().len();
+    assert!(
+        info.file_bytes * 100 <= dense_len * 40,
+        "trained-artifact OJBQ1 {} vs dense {} bytes",
+        info.file_bytes,
+        dense_len
+    );
+    let packed = load_quantized(&q_path, name).expect("load OJBQ1");
+    let dense = load_model(&d_path, name).expect("load OJBW1");
+    let seq_len = model.cfg.max_seq.min(64);
+    let ppl_mem = ojbkq::eval::perplexity(&qm, &corpus, seq_len, 1_024);
+    let ppl_packed = ojbkq::eval::perplexity(&packed, &corpus, seq_len, 1_024);
+    assert_eq!(
+        ppl_mem.to_bits(),
+        ppl_packed.to_bits(),
+        "OJBQ1 reload must score bit-identically ({ppl_mem} vs {ppl_packed})"
+    );
+    let ppl_dense = ojbkq::eval::perplexity(&dense, &corpus, seq_len, 1_024);
+    let rel = (ppl_packed - ppl_dense).abs() / ppl_dense;
+    assert!(
+        rel < 5e-3,
+        "packed OJBQ1 ppl {ppl_packed} vs dense OJBW1 ppl {ppl_dense} (rel {rel})"
+    );
+    eprintln!("parity ok: {name} OJBQ1 {}B vs OJBW1 {dense_len}B", info.file_bytes);
 }
