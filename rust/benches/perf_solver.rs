@@ -1,20 +1,29 @@
 //! **§Perf** — whole-stack solver profiling (DESIGN.md E8): GEMM
 //! substrate throughput, per-stage layer-solve breakdown, PPI block-size
-//! sweep, native-vs-PJRT decode throughput, and column scaling. Drives
-//! the before/after iteration log in EXPERIMENTS.md §Perf.
+//! sweep, native-vs-PJRT decode throughput, the end-to-end layer-solve
+//! thread sweep, and the shared-factor group leverage. Drives the
+//! before/after iteration log in EXPERIMENTS.md §Perf.
+//!
+//! Machine-readable results land in `BENCH_solver.json` (cwd: `rust/`) —
+//! the solver-throughput trajectory the BENCH_* series tracks across
+//! PRs, including the multi-threaded vs single-threaded end-to-end
+//! OJBKQ layer solve.
 
 use ojbkq::bench::exp;
 use ojbkq::bench::{gflops, Bencher};
 use ojbkq::linalg::{cholesky_upper_jittered, matmul, syrk_upper};
 use ojbkq::quant::klein::alpha_for;
 use ojbkq::quant::ppi::{decode_tile, PpiInput};
-use ojbkq::quant::{jta, QuantConfig};
-use ojbkq::report::Table;
+use ojbkq::quant::{
+    jta, quantize_layer, quantize_layer_shared, FactoredSystem, Method, QuantConfig,
+};
+use ojbkq::report::{json_str, Table};
 use ojbkq::rng::Rng;
 use ojbkq::runtime::SolverRuntime;
 use ojbkq::tensor::Matrix;
 
 fn main() {
+    let mut json: Vec<(String, String)> = Vec::new();
     let mut rng = Rng::new(0x9E2F);
 
     // --- 1. GEMM substrate roofline.
@@ -41,6 +50,7 @@ fn main() {
         ]);
     }
     t_gemm.emit(Some(&exp::results_dir()), "perf_gemm");
+    json.push(("gemm".to_string(), t_gemm.to_json()));
 
     // --- 2. Layer-solve stage breakdown (m=256, n=256, p=1024, K=5).
     let (m, n, p, k) = if exp::quick() { (128, 128, 512, 5) } else { (256, 256, 1024, 5) };
@@ -98,6 +108,7 @@ fn main() {
         t_stage.push_row(&[name.to_string(), format!("{:.2}", st.p50 * 1e3)]);
     }
     t_stage.emit(Some(&exp::results_dir()), "perf_stages");
+    json.push(("stages".to_string(), t_stage.to_json()));
 
     // --- 3. PPI block-size sweep (the Appendix-A B parameter).
     let mut t_block = Table::new("Perf — PPI block size sweep", &["B", "p50 ms"]);
@@ -117,6 +128,7 @@ fn main() {
         t_block.push_row(&[b.to_string(), format!("{:.2}", st.p50 * 1e3)]);
     }
     t_block.emit(Some(&exp::results_dir()), "perf_block_sweep");
+    json.push(("block_sweep".to_string(), t_block.to_json()));
 
     // --- 4. Native vs PJRT decode.
     if let Ok(rt) = SolverRuntime::new(&exp::artifacts_dir()) {
@@ -129,6 +141,94 @@ fn main() {
             });
             t_backend.push_row(&["pjrt".to_string(), format!("{:.2}", st.p50 * 1e3)]);
             t_backend.emit(Some(&exp::results_dir()), "perf_backend");
+            json.push(("backend".to_string(), t_backend.to_json()));
         }
     }
+
+    // --- 5. End-to-end layer solve: OJBKQ_THREADS sweep. The whole
+    // Algorithm-1 path (gram, act-order, Cholesky, RHS, triangular
+    // solves, tile-parallel Random-K decode) under pinned thread counts;
+    // the multi-threaded row is the headline solver-throughput number of
+    // BENCH_solver.json. Codes are bit-identical across rows by
+    // construction (pinned by tests/solver_parallel.rs).
+    let cfg_e2e = QuantConfig { k, ..QuantConfig::paper_defaults(4, 128) };
+    let e2e_iters = if exp::quick() { 3 } else { 5 };
+    let mut t_e2e = Table::new(
+        &format!("Perf — end-to-end OJBKQ layer solve (m={m} n={n} p={p} K={k})"),
+        &["threads", "p50 ms", "speedup vs 1"],
+    );
+    let solve_once = |cfg: &QuantConfig| {
+        let mut lrng = Rng::new(0x50);
+        ojbkq::quant::ojbkq::quantize(&w, &x, &x, cfg, &mut lrng, None).unwrap()
+    };
+    ojbkq::parallel::set_thread_override(1);
+    let st_serial = Bencher::new("ojbkq solve T=1")
+        .warmup(1)
+        .iters(e2e_iters)
+        .run(|| solve_once(&cfg_e2e));
+    // Clear the pin: the parallel row (and everything after) runs at the
+    // operator's OJBKQ_THREADS / available-parallelism default.
+    ojbkq::parallel::set_thread_override(0);
+    let nt = ojbkq::parallel::num_threads();
+    let st_par = Bencher::new(&format!("ojbkq solve T={nt}"))
+        .warmup(1)
+        .iters(e2e_iters)
+        .run(|| solve_once(&cfg_e2e));
+    t_e2e.push_row(&["1".to_string(), format!("{:.2}", st_serial.p50 * 1e3), "1.00".into()]);
+    t_e2e.push_row(&[
+        nt.to_string(),
+        format!("{:.2}", st_par.p50 * 1e3),
+        format!("{:.2}", st_serial.p50 / st_par.p50.max(1e-9)),
+    ]);
+    t_e2e.emit(Some(&exp::results_dir()), "perf_solver_e2e");
+    json.push(("solver_e2e".to_string(), t_e2e.to_json()));
+
+    // --- 6. Shared-factor leverage: a synthetic Q/K/V group (three
+    // layers on one tap) solved with per-layer factorization vs one
+    // FactoredSystem built once — the coordinator's group path.
+    let w_group: Vec<Matrix> =
+        (0..3).map(|i| Matrix::randn(m, n, 0.5, &mut Rng::new(0x60 + i))).collect();
+    let mut t_shared = Table::new(
+        &format!("Perf — shared-factor QKV group (3 layers, m={m} n={n} p={p})"),
+        &["mode", "p50 ms", "speedup"],
+    );
+    let st_solo = Bencher::new("per-layer factorization").warmup(1).iters(e2e_iters).run(|| {
+        for (uid, wg) in w_group.iter().enumerate() {
+            quantize_layer(Method::Ojbkq, wg, &x, &x, &cfg_e2e, uid as u64, None).unwrap();
+        }
+    });
+    let st_shared = Bencher::new("shared FactoredSystem").warmup(1).iters(e2e_iters).run(|| {
+        let sys = FactoredSystem::for_method(Method::Ojbkq, &x, &cfg_e2e).unwrap();
+        for (uid, wg) in w_group.iter().enumerate() {
+            quantize_layer_shared(
+                Method::Ojbkq,
+                wg,
+                &x,
+                &x,
+                &cfg_e2e,
+                uid as u64,
+                None,
+                sys.as_ref(),
+            )
+            .unwrap();
+        }
+    });
+    t_shared.push_row(&[
+        "per-layer".to_string(),
+        format!("{:.2}", st_solo.p50 * 1e3),
+        "1.00".into(),
+    ]);
+    t_shared.push_row(&[
+        "shared".to_string(),
+        format!("{:.2}", st_shared.p50 * 1e3),
+        format!("{:.2}", st_solo.p50 / st_shared.p50.max(1e-9)),
+    ]);
+    t_shared.emit(Some(&exp::results_dir()), "perf_shared_factor");
+    json.push(("shared_factor".to_string(), t_shared.to_json()));
+
+    let fields: Vec<String> =
+        json.into_iter().map(|(key, v)| format!("{}:{}", json_str(&key), v)).collect();
+    let payload = format!("{{{}}}\n", fields.join(","));
+    std::fs::write("BENCH_solver.json", &payload).expect("write BENCH_solver.json");
+    eprintln!("[bench] wrote BENCH_solver.json");
 }

@@ -73,7 +73,9 @@ use crate::data::Corpus;
 use crate::infer::{PackedLinear, QuantizedModel};
 use crate::model::{LinearId, LinearKind, Model, TapPoint, TapSet};
 use crate::parallel::parallel_map;
-use crate::quant::{quantize_layer, skip_fp_reference, LayerStats, Method, QuantConfig};
+use crate::quant::{
+    quantize_layer_shared, skip_fp_reference, FactoredSystem, LayerStats, Method, QuantConfig,
+};
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
 use crate::tensor::{Matrix, RowBatch};
@@ -430,6 +432,13 @@ impl<'a> Pipeline<'a> {
     /// Quantize every linear of one group against `(x_fp, x_rt)` and
     /// splice the packed execution form into the running engine (plus the
     /// dense mirror when re-forward capture needs one).
+    ///
+    /// The group is where factor sharing happens: every layer of the
+    /// group consumes the same runtime taps, so the weight-independent
+    /// factorization (Gram/Hessian, act-order permutation, Cholesky) is
+    /// built ONCE here ([`FactoredSystem::for_method`]) and threaded
+    /// through [`quantize_layer_shared`] — 3× less syrk+Cholesky work for
+    /// Q/K/V, 2× for Gate/Up, bit-identical output either way.
     #[allow(clippy::too_many_arguments)]
     fn quantize_group(
         &mut self,
@@ -442,25 +451,35 @@ impl<'a> Pipeline<'a> {
         capture_secs: f64,
     ) -> anyhow::Result<()> {
         let per_layer_capture = capture_secs / kinds.len() as f64;
+        // Per-layer μ schedule (paper Limitations / future work): resolve
+        // the depth-interpolated μ once per group (it varies only with
+        // block depth) so every solver sees a plain fixed-μ config.
+        let mut layer_cfg = self.cfg.clone();
+        if let crate::quant::MuSchedule::DepthLinear { start, end } = self.cfg.mu_schedule {
+            let frac = if n_blocks > 1 { block as f64 / (n_blocks - 1) as f64 } else { 0.0 };
+            layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
+        }
+        let t_factor = Instant::now();
+        let shared = FactoredSystem::for_method(self.method, x_rt, &layer_cfg)?;
+        // The shared factor build is solver work; attribute it evenly so
+        // `PipelineReport::solver_secs` still accounts for all of it.
+        let per_layer_factor = t_factor.elapsed().as_secs_f64() / kinds.len() as f64;
         for &kind in kinds {
             let id = LinearId { block, kind };
             let w = self.fp_model.linear(id).clone();
             let layer_uid = (block * 8 + kind.index()) as u64;
-            // Per-layer μ schedule (paper Limitations / future work):
-            // resolve the depth-interpolated μ here so every solver sees
-            // a plain fixed-μ config.
-            let mut layer_cfg = self.cfg.clone();
-            if let crate::quant::MuSchedule::DepthLinear { start, end } = self.cfg.mu_schedule {
-                let frac = if n_blocks > 1 {
-                    block as f64 / (n_blocks - 1) as f64
-                } else {
-                    0.0
-                };
-                layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
-            }
-            let (q, mut stats) =
-                quantize_layer(self.method, &w, x_fp, x_rt, &layer_cfg, layer_uid, self.rt)?;
+            let (q, mut stats) = quantize_layer_shared(
+                self.method,
+                &w,
+                x_fp,
+                x_rt,
+                &layer_cfg,
+                layer_uid,
+                self.rt,
+                shared.as_ref(),
+            )?;
             stats.capture_secs = per_layer_capture;
+            stats.solve_secs += per_layer_factor;
             if let Some(cb) = self.on_layer.as_mut() {
                 cb(id, &stats);
             }

@@ -120,19 +120,25 @@ pub fn matmul_par(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `C = Aᵀ · B` for `A: p×m`, `B: p×n` → `C: m×n`, without materializing
-/// the transpose. Both operands are walked row-by-row (unit stride).
-pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    let (p, m) = a.shape();
-    let (pb, n) = b.shape();
-    assert_eq!(p, pb, "gemm_tn leading dim");
-    let mut c = Matrix::zeros(m, n);
-    let a_s = a.as_slice();
-    let b_s = b.as_slice();
-    let c_s = c.as_mut_slice();
-    // Rank-4 accumulation: four sample rows per pass over C (see
-    // syrk_upper for the rationale). C fits L2 for our m,n (≤ ~1k); the
-    // inner loop is contiguous over n.
+/// Rows `[i0, i1)` of `C = Aᵀ · B` (`A: p×m`, `B: p×n`), accumulated
+/// into the caller's zero-initialized `(i1−i0)×n` row-major buffer. This
+/// is the whole serial kernel restricted to an output-row range: each
+/// output element is accumulated by the exact same sequence of rank-4
+/// FMAs regardless of the range split, which is what makes
+/// [`gemm_tn`]'s parallel fan-out bit-identical to its serial form.
+fn gemm_tn_rows(
+    a_s: &[f32],
+    b_s: &[f32],
+    p: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    buf: &mut [f32],
+) {
+    debug_assert_eq!(buf.len(), (i1 - i0) * n);
+    // Rank-4 accumulation: four sample rows per pass over C. C fits L2
+    // for our m,n (≤ ~1k); the inner loop is contiguous over n.
     let mut r = 0usize;
     while r + 4 <= p {
         let a0r = &a_s[r * m..(r + 1) * m];
@@ -143,12 +149,12 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
         let b1 = &b_s[(r + 1) * n..(r + 2) * n];
         let b2 = &b_s[(r + 2) * n..(r + 3) * n];
         let b3 = &b_s[(r + 3) * n..(r + 4) * n];
-        for i in 0..m {
+        for i in i0..i1 {
             let (a0, a1, a2, a3) = (a0r[i], a1r[i], a2r[i], a3r[i]);
             if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
                 continue;
             }
-            let c_row = &mut c_s[i * n..i * n + n];
+            let c_row = &mut buf[(i - i0) * n..(i - i0) * n + n];
             for j in 0..n {
                 c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
             }
@@ -158,27 +164,57 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
     for rr in r..p {
         let a_row = &a_s[rr * m..(rr + 1) * m];
         let b_row = &b_s[rr * n..(rr + 1) * n];
-        for i in 0..m {
+        for i in i0..i1 {
             let av = a_row[i];
             if av == 0.0 {
                 continue;
             }
-            let c_row = &mut c_s[i * n..i * n + n];
+            let c_row = &mut buf[(i - i0) * n..(i - i0) * n + n];
             for (cv, &bv) in c_row.iter_mut().zip(b_row) {
                 *cv += av * bv;
             }
         }
     }
+}
+
+/// `C = Aᵀ · B` for `A: p×m`, `B: p×n` → `C: m×n`, without materializing
+/// the transpose. Both operands are walked row-by-row (unit stride).
+/// Large products fan output-row ranges out to threads (the RHS GEMM
+/// `X̃ᵀY*` of every layer solve); each output row is produced by the same
+/// kernel over the same operands in the same order, so the result is
+/// **bit-identical** at any thread count.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (p, m) = a.shape();
+    let (pb, n) = b.shape();
+    assert_eq!(p, pb, "gemm_tn leading dim");
+    let mut c = Matrix::zeros(m, n);
+    let a_s = a.as_slice();
+    let c_s = c.as_mut_slice();
+    let nt = crate::parallel::num_threads();
+    if nt <= 1 || m < 2 || 2usize.saturating_mul(p * m).saturating_mul(n) < PAR_FLOPS_MIN {
+        gemm_tn_rows(a_s, b.as_slice(), p, m, n, 0, m, c_s);
+        return c;
+    }
+    let b_s = b.as_slice();
+    let chunks = crate::parallel::parallel_for_chunks(m, |range| {
+        let mut buf = vec![0.0f32; range.len() * n];
+        gemm_tn_rows(a_s, b_s, p, m, n, range.start, range.end, &mut buf);
+        (range.start, buf)
+    });
+    for (i0, buf) in chunks {
+        c_s[i0 * n..i0 * n + buf.len()].copy_from_slice(&buf);
+    }
     c
 }
 
-/// Symmetric Gram matrix `G = AᵀA + ridge·I` for `A: p×m` → `G: m×m`.
-/// Computes the upper triangle then mirrors — half the FLOPs of `gemm_tn`.
-pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
-    let (p, m) = a.shape();
-    let mut g = Matrix::zeros(m, m);
-    let a_s = a.as_slice();
-    let g_s = g.as_mut_slice();
+/// Rows `[i0, i1)` of the upper triangle of `AᵀA` (`A: p×m`),
+/// accumulated into the caller's zero-initialized `(i1−i0)×m` row-major
+/// buffer (entries left of the diagonal stay zero). Restricting the
+/// serial kernel to an output-row range keeps every element's FMA
+/// sequence unchanged, so [`syrk_upper`]'s row-parallel fan-out is
+/// bit-identical to serial.
+fn syrk_rows(a_s: &[f32], p: usize, m: usize, i0: usize, i1: usize, buf: &mut [f32]) {
+    debug_assert_eq!(buf.len(), (i1 - i0) * m);
     // Rank-4 updates: four sample rows per pass over G's upper triangle,
     // so each G row is loaded/stored once per 4 FMAs (§Perf iteration 4).
     let mut r = 0usize;
@@ -187,12 +223,12 @@ pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
         let row1 = &a_s[(r + 1) * m..(r + 2) * m];
         let row2 = &a_s[(r + 2) * m..(r + 3) * m];
         let row3 = &a_s[(r + 3) * m..(r + 4) * m];
-        for i in 0..m {
+        for i in i0..i1 {
             let (a0, a1, a2, a3) = (row0[i], row1[i], row2[i], row3[i]);
             if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
                 continue;
             }
-            let g_row = &mut g_s[i * m + i..i * m + m];
+            let g_row = &mut buf[(i - i0) * m + i..(i - i0) * m + m];
             let (b0, b1, b2, b3) = (&row0[i..], &row1[i..], &row2[i..], &row3[i..]);
             for j in 0..g_row.len() {
                 g_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
@@ -202,15 +238,65 @@ pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
     }
     for rr in r..p {
         let row = &a_s[rr * m..(rr + 1) * m];
-        for i in 0..m {
+        for i in i0..i1 {
             let av = row[i];
             if av == 0.0 {
                 continue;
             }
-            let g_row = &mut g_s[i * m + i..i * m + m];
+            let g_row = &mut buf[(i - i0) * m + i..(i - i0) * m + m];
             for (gv, &bv) in g_row.iter_mut().zip(&row[i..]) {
                 *gv += av * bv;
             }
+        }
+    }
+}
+
+/// Split `[0, m)` into up to `parts` contiguous row ranges of
+/// near-equal *upper-triangle area* (row `i` of the triangle costs
+/// `m − i`): boundary `k` sits at `m·(1 − √(1 − k/parts))`. An even row
+/// split would hand the first chunk ~2× its fair share of FLOPs.
+fn triangular_split(m: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    for k in 1..parts {
+        let frac = k as f64 / parts as f64;
+        let r = (m as f64 * (1.0 - (1.0 - frac).sqrt())).round() as usize;
+        bounds.push(r.clamp(*bounds.last().unwrap(), m));
+    }
+    bounds.push(m);
+    let mut out = Vec::with_capacity(parts);
+    for w in bounds.windows(2) {
+        if w[1] > w[0] {
+            out.push(w[0]..w[1]);
+        }
+    }
+    out
+}
+
+/// Symmetric Gram matrix `G = AᵀA + ridge·I` for `A: p×m` → `G: m×m`.
+/// Computes the upper triangle then mirrors — half the FLOPs of
+/// `gemm_tn`. Large Grams (every layer solve's `X̃ᵀX̃`) fan output-row
+/// ranges out to threads ([`triangular_split`] balances the ragged
+/// per-row costs); the split leaves each element's accumulation order
+/// untouched, so the result is **bit-identical** at any thread count.
+pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
+    let (p, m) = a.shape();
+    let mut g = Matrix::zeros(m, m);
+    let a_s = a.as_slice();
+    let g_s = g.as_mut_slice();
+    let nt = crate::parallel::num_threads();
+    if nt <= 1 || m < 2 || p.saturating_mul(m).saturating_mul(m) < PAR_FLOPS_MIN {
+        syrk_rows(a_s, p, m, 0, m, g_s);
+    } else {
+        let ranges = triangular_split(m, nt);
+        let chunks = crate::parallel::parallel_for_ranges(ranges, |range| {
+            let mut buf = vec![0.0f32; range.len() * m];
+            syrk_rows(a_s, p, m, range.start, range.end, &mut buf);
+            (range.start, buf)
+        });
+        for (i0, buf) in chunks {
+            g_s[i0 * m..i0 * m + buf.len()].copy_from_slice(&buf);
         }
     }
     // Mirror the strictly-upper part and add the ridge.
@@ -221,6 +307,35 @@ pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
         }
     }
     g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangular_split_covers_contiguously_and_balances_area() {
+        for &(m, parts) in &[(0usize, 4usize), (1, 4), (7, 3), (100, 7), (256, 8)] {
+            let rs = triangular_split(m, parts);
+            let mut expect = 0;
+            for r in &rs {
+                assert_eq!(r.start, expect, "m={m} parts={parts}");
+                assert!(r.end > r.start);
+                expect = r.end;
+            }
+            assert_eq!(expect, m, "m={m} parts={parts}");
+            // Triangle areas within ~2x of each other for real splits
+            // (an even row split would be ~parts× apart at the extremes).
+            if m >= 100 && rs.len() == parts {
+                let area =
+                    |r: &std::ops::Range<usize>| (r.start..r.end).map(|i| m - i).sum::<usize>();
+                let areas: Vec<usize> = rs.iter().map(area).collect();
+                let min = *areas.iter().min().unwrap();
+                let max = *areas.iter().max().unwrap();
+                assert!(max / min.max(1) <= 2, "m={m} parts={parts} areas={areas:?}");
+            }
+        }
+    }
 }
 
 /// `y = A · x`.

@@ -47,12 +47,55 @@ pub fn trsv_upper(r: &Matrix, b: &[f32]) -> Vec<f32> {
     v
 }
 
+/// Minimum `n²·nrhs` work before the multi-RHS solves fan RHS-column
+/// blocks out to threads; below this the spawn + block copy overhead
+/// beats the win.
+const PAR_SOLVE_MIN: usize = 1 << 21;
+
+/// True when a multi-RHS triangular solve should run column-parallel.
+fn par_solve(n: usize, nrhs: usize) -> bool {
+    nrhs >= 2
+        && crate::parallel::num_threads() > 1
+        && n.saturating_mul(n).saturating_mul(nrhs) >= PAR_SOLVE_MIN
+}
+
+/// Fan a multi-RHS solve out over contiguous RHS-column blocks. Each
+/// column's substitution recurrence touches only that column, so the
+/// block split is **bit-identical** to the serial sweep — the same
+/// per-element operations run in the same order, only on another thread.
+fn solve_cols_par(
+    r: &Matrix,
+    b: &Matrix,
+    serial: impl Fn(&Matrix, &Matrix) -> Matrix + Sync,
+) -> Matrix {
+    let n = r.rows();
+    let nrhs = b.cols();
+    let blocks = crate::parallel::parallel_for_chunks(nrhs, |range| {
+        let sub = b.block(0, range.start, n, range.len());
+        (range.start, serial(r, &sub))
+    });
+    let mut out = Matrix::zeros(n, nrhs);
+    for (c0, blk) in blocks {
+        out.set_block(0, c0, &blk);
+    }
+    out
+}
+
 /// Multiple-RHS `Rᵀ U = B` (B: n×nrhs), column-blocked so the inner loop
-/// runs contiguously across RHS columns.
+/// runs contiguously across RHS columns. Large systems run RHS-column-
+/// parallel ([`solve_cols_par`] — bit-identical to serial).
 pub fn solve_lower_t(r: &Matrix, b: &Matrix) -> Matrix {
     let n = r.rows();
     assert_eq!(r.cols(), n);
     assert_eq!(b.rows(), n);
+    if par_solve(n, b.cols()) {
+        return solve_cols_par(r, b, solve_lower_t_serial);
+    }
+    solve_lower_t_serial(r, b)
+}
+
+fn solve_lower_t_serial(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows();
     let nrhs = b.cols();
     let mut u = b.clone();
     for i in 0..n {
@@ -77,11 +120,20 @@ pub fn solve_lower_t(r: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// Multiple-RHS `R V = B` (B: n×nrhs), backward substitution with
-/// row-contiguous updates.
+/// row-contiguous updates. Large systems run RHS-column-parallel
+/// ([`solve_cols_par`] — bit-identical to serial).
 pub fn solve_upper_mat(r: &Matrix, b: &Matrix) -> Matrix {
     let n = r.rows();
     assert_eq!(r.cols(), n);
     assert_eq!(b.rows(), n);
+    if par_solve(n, b.cols()) {
+        return solve_cols_par(r, b, solve_upper_mat_serial);
+    }
+    solve_upper_mat_serial(r, b)
+}
+
+fn solve_upper_mat_serial(r: &Matrix, b: &Matrix) -> Matrix {
+    let n = r.rows();
     let nrhs = b.cols();
     let mut v = b.clone();
     for i in (0..n).rev() {

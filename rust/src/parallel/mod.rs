@@ -1,17 +1,70 @@
 //! Data-parallel execution substrate (no rayon offline).
 //!
-//! The coordinator parallelizes layer quantization across *weight columns*
-//! (the paper's outer level of parallelism) and, inside the native solver,
-//! across the K Klein paths (the inner level). Both reduce to the
-//! [`parallel_for_chunks`] primitive below, built on `std::thread::scope`.
+//! Everything fans out through the [`parallel_for_chunks`] /
+//! [`parallel_map`] / [`parallel_map_dynamic`] primitives below, built on
+//! `std::thread::scope`. The worker count comes from [`num_threads`]
+//! (`OJBKQ_THREADS` override). Current consumers, outer to inner:
+//!
+//! * **Layer solve — column tiles** (`quant::ojbkq`): the Random-K
+//!   Babai/Klein decode runs one `parallel_map` task per column tile.
+//!   Tiles are independent by construction (each forks its own RNG
+//!   sub-stream keyed by tile index), so codes are bit-identical at any
+//!   thread count — pinned by `tests/solver_parallel.rs`.
+//! * **Normal-equation substrate** (`linalg`): `syrk_upper` / `gemm_tn`
+//!   split output-row ranges and the multi-RHS triangular solves
+//!   (`solve_lower_t` / `solve_upper_mat`) split RHS-column blocks, each
+//!   leaving per-element arithmetic order untouched (bit-identical).
+//! * **Batched capture / eval** (`model`, `infer`, `eval`): tall-GEMM
+//!   row blocks (`matmul_par`), the packed kernel's row-block × tile
+//!   grid, and the ragged per-sequence attention cores
+//!   ([`parallel_map_dynamic`]).
 //!
 //! Threads are spawned per call — on the target machine layer solves run
 //! for milliseconds-to-seconds, so spawn cost (~10 µs) is noise, and the
-//! scoped design means zero `unsafe` and no channel plumbing.
+//! scoped design means zero `unsafe` and no channel plumbing. Nested
+//! fan-out is suppressed rather than compounded: [`num_threads`] reports
+//! 1 on worker threads, so a tile worker's inner GEMM runs serially
+//! instead of spawning `num_threads²` threads — outermost parallelism
+//! wins, and since every primitive is bit-identical at any thread count
+//! the suppression never changes results.
 
-/// Number of worker threads to use: `OJBKQ_THREADS` env override, else
-/// available parallelism, else 1.
+thread_local! {
+    /// True on threads spawned by this module's primitives. [`num_threads`]
+    /// reports 1 on such threads, so *nested* fan-out (a tile-decode
+    /// worker calling the row-parallel GEMM, say) runs serially instead
+    /// of spawning `num_threads²` CPU-bound threads — outermost
+    /// parallelism wins, and every primitive is bit-identical at any
+    /// thread count so the suppression never changes results.
+    static IN_PARALLEL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Process-wide programmatic thread-count override; 0 = unset. Takes
+/// precedence over the `OJBKQ_THREADS` environment variable. Exists so
+/// tests and benches can flip thread counts mid-process without calling
+/// `std::env::set_var`, whose glibc `setenv` races concurrent
+/// `env::var` reads (e.g. [`num_threads`] on another test thread).
+static THREAD_OVERRIDE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Pin the worker thread count for this process (`0` clears the pin,
+/// restoring the `OJBKQ_THREADS` / available-parallelism default).
+/// Every parallel primitive here is bit-identical at any thread count,
+/// so flipping this never changes results — only scheduling.
+pub fn set_thread_override(n: usize) {
+    THREAD_OVERRIDE.store(n, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Number of worker threads to use: [`set_thread_override`] pin, else
+/// `OJBKQ_THREADS` env override, else available parallelism, else 1.
+/// Always 1 on threads that are themselves parallel workers (see
+/// [`IN_PARALLEL_WORKER`]).
 pub fn num_threads() -> usize {
+    if IN_PARALLEL_WORKER.with(|c| c.get()) {
+        return 1;
+    }
+    let pinned = THREAD_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed);
+    if pinned > 0 {
+        return pinned;
+    }
     if let Ok(s) = std::env::var("OJBKQ_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
             return n.max(1);
@@ -47,7 +100,18 @@ where
     T: Send,
     F: Fn(std::ops::Range<usize>) -> T + Sync,
 {
-    let ranges = split_ranges(n, num_threads());
+    parallel_for_ranges(split_ranges(n, num_threads()), body)
+}
+
+/// Run `body` over an explicit, caller-chosen set of ranges — one task
+/// per range, all spawned at once. Used when equal-size ranges would be
+/// unbalanced (e.g. `syrk_upper`'s triangular row costs). Results are
+/// returned in range order.
+pub fn parallel_for_ranges<T, F>(ranges: Vec<std::ops::Range<usize>>, body: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
     if ranges.len() <= 1 {
         return ranges.into_iter().map(&body).collect();
     }
@@ -56,7 +120,10 @@ where
         let mut handles = Vec::with_capacity(ranges.len());
         for r in ranges.iter().cloned() {
             let body = &body;
-            handles.push(scope.spawn(move || body(r)));
+            handles.push(scope.spawn(move || {
+                IN_PARALLEL_WORKER.with(|c| c.set(true));
+                body(r)
+            }));
         }
         for (slot, h) in out.iter_mut().zip(handles) {
             *slot = Some(h.join().expect("parallel worker panicked"));
@@ -101,6 +168,7 @@ where
             let f = &f;
             let next = &next;
             handles.push(scope.spawn(move || {
+                IN_PARALLEL_WORKER.with(|c| c.set(true));
                 let mut local = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -171,6 +239,16 @@ mod tests {
         assert!(out.is_empty());
         let out: Vec<usize> = parallel_map_dynamic(0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn nested_fanout_is_suppressed() {
+        // On a worker thread, num_threads() must report 1 so nested
+        // primitives run serially instead of oversubscribing cores.
+        let inner = parallel_for_ranges(vec![0..1, 1..2], |_| num_threads());
+        assert_eq!(inner, vec![1, 1]);
+        // The calling thread is unaffected afterwards.
+        assert!(num_threads() >= 1);
     }
 
     #[test]

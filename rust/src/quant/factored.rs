@@ -1,0 +1,313 @@
+//! Shared per-tap-point factorization — the **factor-sharing half of the
+//! parallel layer-solve engine**.
+//!
+//! The expensive, weight-independent part of every normal-equation solve
+//! is a function of the runtime activations `X̃` and the config alone:
+//! the (ridged) Gram `G = X̃ᵀX̃ + λ²I` (or GPTQ's damped Hessian), the
+//! act-order permutation derived from its diagonal, and the jittered
+//! Cholesky factor `R`. Layers that consume the same tap share all of it
+//! exactly — Q/K/V read the same `attn_in` taps and Gate/Up the same
+//! `mlp_in` taps — so the coordinator builds ONE [`FactoredSystem`] per
+//! tap group ([`FactoredSystem::for_method`] in
+//! `coordinator::quantize_group`) and threads it through
+//! [`crate::quant::quantize_layer_shared`] into the OJBKQ and GPTQ
+//! solvers, eliminating 3× redundant syrk+Cholesky work for the QKV
+//! group and 2× for Gate/Up. Only the per-layer RHS `B = X̃ᵀY* + λ²W`
+//! ([`super::jta::build_rhs`]), scales and decode remain per layer.
+//!
+//! Sharing is **bit-exact** by construction: a solver handed a
+//! `FactoredSystem` performs the same arithmetic it would have performed
+//! rebuilding the factor itself (pinned by `tests/solver_parallel.rs`).
+
+use super::jta;
+use super::{Method, QuantConfig};
+use crate::linalg::cholesky_upper_jittered;
+use crate::tensor::Matrix;
+
+/// Which solver family a [`FactoredSystem`] was built for. The two
+/// families ridge and order the Gram differently (λ²_abs + ascending
+/// diagonal for the Babai/Klein decode vs 1% dampening + descending
+/// diagonal for the GPTQ sweep), so a factor is only valid for the
+/// family that built it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FactorKind {
+    /// OJBKQ family (Ours / Ours(N) / Ours(R) / QEP): `G = X̃ᵀX̃ + λ²I`,
+    /// act-order sorts by ASCENDING Gram diagonal (Babai decides the last
+    /// row first).
+    Ojbkq,
+    /// GPTQ baseline: `H = X̃ᵀX̃ + 0.01·mean(diag)·I`, act-order sorts by
+    /// DESCENDING Hessian diagonal, and the sweep consumes the Cholesky
+    /// factor of `H⁻¹`.
+    Gptq,
+}
+
+/// The weight-independent factorization of one tap point's normal
+/// equations, shared across every layer of a tap group.
+#[derive(Debug, Clone)]
+pub struct FactoredSystem {
+    /// Solver family this factor serves.
+    pub kind: FactorKind,
+    /// Decode/act order (identity when `act_order` is off).
+    pub perm: Vec<usize>,
+    /// Whether `perm` is a real permutation (i.e. `cfg.act_order`); when
+    /// false the solvers skip every gather/scatter.
+    pub permuted: bool,
+    /// The upper-triangular factor the family's solver consumes — the
+    /// ONLY matrix a group keeps resident. OJBKQ: Cholesky factor of
+    /// the permuted ridged Gram. GPTQ: the Cholesky factor `U` of
+    /// `H⁻¹ = UᵀU`, whose rows carry the sweep's error-compensation
+    /// coefficients (the intermediate `chol(H)` is dropped after use).
+    pub r: Matrix,
+    /// The ridge actually added to the diagonal: `λ²_abs` (OJBKQ) or the
+    /// 1% mean-diagonal dampening (GPTQ). OJBKQ's RHS needs it.
+    pub lambda_sq: f64,
+    /// Mean of the pre-ridge Gram diagonal (diagnostics / λ resolution).
+    pub diag_mean: f64,
+}
+
+impl FactoredSystem {
+    /// Build the shared factor for the OJBKQ solver family. `cfg` must be
+    /// the *solver* config (variant mapping already applied — use
+    /// [`FactoredSystem::for_method`] from generic callers).
+    pub fn for_ojbkq(x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<FactoredSystem> {
+        let m = x_rt.cols();
+        let (gram, lambda_sq, diag_mean) = jta::build_gram(x_rt, cfg);
+        // Decode ordering: Babai decides row m−1 first (uncompensated), so
+        // sort rows by ASCENDING Gram diagonal — the highest-curvature
+        // feature is decided first, exactly GPTQ's act_order under the
+        // Babai/GPTQ order reversal (Chen et al. 2025).
+        let perm: Vec<usize> = if cfg.act_order {
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| {
+                gram.get(a, a)
+                    .partial_cmp(&gram.get(b, b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx
+        } else {
+            (0..m).collect()
+        };
+        let gram_p = if cfg.act_order { permute_sym(&gram, &perm) } else { gram };
+        let (r, _jitter) = cholesky_upper_jittered(&gram_p, 1e-6)
+            .map_err(|e| anyhow::anyhow!("gram cholesky failed: {e}"))?;
+        Ok(FactoredSystem {
+            kind: FactorKind::Ojbkq,
+            perm,
+            permuted: cfg.act_order,
+            r,
+            lambda_sq,
+            diag_mean,
+        })
+    }
+
+    /// Build the shared factor for the GPTQ baseline: damped Hessian,
+    /// descending act-order, and the Cholesky factor of `H⁻¹` the
+    /// compensation sweep reads its coefficients from.
+    pub fn for_gptq(x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<FactoredSystem> {
+        let m = x_rt.cols();
+        // Hessian with the standard 1% mean-diagonal dampening.
+        let gram = crate::linalg::syrk_upper(x_rt, 0.0);
+        let diag_mean: f64 =
+            (0..m).map(|i| gram.get(i, i) as f64).sum::<f64>() / m.max(1) as f64;
+        let damp = (0.01 * diag_mean) as f32;
+        let mut h = gram;
+        for i in 0..m {
+            h.add_at(i, i, damp);
+        }
+        // Activation ordering: quantize high-curvature features first.
+        let perm: Vec<usize> = if cfg.act_order {
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| {
+                h.get(b, b).partial_cmp(&h.get(a, a)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx
+        } else {
+            (0..m).collect()
+        };
+        let h_p = if cfg.act_order { permute_sym(&h, &perm) } else { h };
+        let (r_h, _jit) = cholesky_upper_jittered(&h_p, 1e-6)
+            .map_err(|e| anyhow::anyhow!("gptq hessian cholesky: {e}"))?;
+        // H⁻¹ = R⁻¹R⁻ᵀ via two multi-RHS triangular solves against the
+        // identity (never a Gaussian-elimination inverse), then factored.
+        // `r_h` itself is dead after this; only `U = chol(H⁻¹)` is kept.
+        let hinv = {
+            let z = crate::linalg::solve_lower_t(&r_h, &Matrix::eye(m)); // Rᵀ Z = I
+            crate::linalg::solve_upper_mat(&r_h, &z) // R Hinv = Z
+        };
+        let (uinv, _jit2) = cholesky_upper_jittered(&hinv, 1e-8)
+            .map_err(|e| anyhow::anyhow!("gptq H^-1 cholesky: {e}"))?;
+        Ok(FactoredSystem {
+            kind: FactorKind::Gptq,
+            perm,
+            permuted: cfg.act_order,
+            r: uinv,
+            lambda_sq: damp as f64,
+            diag_mean,
+        })
+    }
+
+    /// Build the shared factor appropriate for `method` (with the same
+    /// per-method variant mapping [`crate::quant::quantize_layer`]
+    /// applies), or `None` for methods with no shareable factorization
+    /// (RTN/AWQ have none; QuIP rotates its activations per layer).
+    pub fn for_method(
+        method: Method,
+        x_rt: &Matrix,
+        cfg: &QuantConfig,
+    ) -> anyhow::Result<Option<FactoredSystem>> {
+        let scfg = super::solver_cfg(method, cfg);
+        Ok(match method {
+            Method::Gptq => Some(Self::for_gptq(x_rt, &scfg)?),
+            Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
+                Some(Self::for_ojbkq(x_rt, &scfg)?)
+            }
+            Method::Fp | Method::Rtn | Method::Awq | Method::Quip => None,
+        })
+    }
+
+    /// Feature dimension `m` the factor was built for.
+    pub fn dim(&self) -> usize {
+        self.r.rows()
+    }
+
+    /// Guard: a solver must only consume a factor of its own family and
+    /// dimension, built under the same ordering/ridge configuration it
+    /// is decoding with (a mismatched factor would silently quantize
+    /// under the factor's permutation and λ, not the cfg's).
+    pub fn check(&self, kind: FactorKind, m: usize, cfg: &QuantConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.kind == kind,
+            "FactoredSystem family mismatch: built for {:?}, used by {:?}",
+            self.kind,
+            kind
+        );
+        anyhow::ensure!(
+            self.dim() == m,
+            "FactoredSystem dim mismatch: built for m={}, layer has m={m}",
+            self.dim()
+        );
+        anyhow::ensure!(
+            self.permuted == cfg.act_order,
+            "FactoredSystem act_order mismatch: built with {}, cfg wants {}",
+            self.permuted,
+            cfg.act_order
+        );
+        if kind == FactorKind::Ojbkq {
+            // The ridge is a pure function of (λ, mode, diag_mean); a
+            // factor built under another λ resolves to a different value.
+            let expect = jta::lambda_sq_abs(cfg, self.diag_mean);
+            anyhow::ensure!(
+                expect == self.lambda_sq,
+                "FactoredSystem λ mismatch: factor ridge {} vs cfg-resolved {expect}",
+                self.lambda_sq
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Symmetric permutation `H[perm, perm]` as two gather passes — a
+/// contiguous row gather (one `memcpy` per row) followed by a row-wise
+/// column gather (contiguous writes) — instead of the old per-element
+/// `Matrix::from_fn` double-indexed walk.
+pub fn permute_sym(h: &Matrix, perm: &[usize]) -> Matrix {
+    let m = h.rows();
+    assert_eq!(perm.len(), m);
+    let rows = h.gather_rows(perm);
+    let mut out = Matrix::zeros(m, m);
+    for i in 0..m {
+        let src = rows.row(i);
+        let dst = out.row_mut(i);
+        for (d, &p) in dst.iter_mut().zip(perm) {
+            *d = src[p];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn permute_sym_matches_from_fn() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let h = crate::linalg::syrk_upper(&a, 0.1);
+        let mut perm: Vec<usize> = (0..12).collect();
+        rng.shuffle(&mut perm);
+        let fast = permute_sym(&h, &perm);
+        let reference = Matrix::from_fn(12, 12, |i, j| h.get(perm[i], perm[j]));
+        assert_eq!(fast.as_slice(), reference.as_slice());
+    }
+
+    #[test]
+    fn ojbkq_factor_matches_inline_build() {
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(64, 24, 1.0, &mut rng);
+        for act_order in [false, true] {
+            let cfg = QuantConfig { act_order, lambda: 0.3, ..Default::default() };
+            let sys = FactoredSystem::for_ojbkq(&x, &cfg).unwrap();
+            assert_eq!(sys.kind, FactorKind::Ojbkq);
+            assert_eq!(sys.dim(), 24);
+            assert_eq!(sys.permuted, act_order);
+            // Reference: the pre-refactor inline build.
+            let (gram, lambda_sq, _) = crate::quant::jta::build_gram(&x, &cfg);
+            assert_eq!(sys.lambda_sq, lambda_sq);
+            let perm: Vec<usize> = if act_order {
+                let mut idx: Vec<usize> = (0..24).collect();
+                idx.sort_by(|&a, &b| {
+                    gram.get(a, a).partial_cmp(&gram.get(b, b)).unwrap()
+                });
+                idx
+            } else {
+                (0..24).collect()
+            };
+            assert_eq!(sys.perm, perm);
+            let gram_p = Matrix::from_fn(24, 24, |i, j| gram.get(perm[i], perm[j]));
+            let (r, _) = crate::linalg::cholesky_upper_jittered(&gram_p, 1e-6).unwrap();
+            assert_eq!(sys.r.as_slice(), r.as_slice());
+        }
+    }
+
+    #[test]
+    fn factor_guards_fire_on_every_mismatch_axis() {
+        let mut rng = Rng::new(9);
+        let x = Matrix::randn(40, 16, 1.0, &mut rng);
+        let cfg = QuantConfig::default();
+        let sys = FactoredSystem::for_ojbkq(&x, &cfg).unwrap();
+        assert!(sys.check(FactorKind::Ojbkq, 16, &cfg).is_ok());
+        assert!(sys.check(FactorKind::Gptq, 16, &cfg).is_err(), "family");
+        assert!(sys.check(FactorKind::Ojbkq, 17, &cfg).is_err(), "dim");
+        let flipped = QuantConfig { act_order: !cfg.act_order, ..cfg.clone() };
+        assert!(sys.check(FactorKind::Ojbkq, 16, &flipped).is_err(), "act_order");
+        let other_lambda = QuantConfig { lambda: cfg.lambda + 0.1, ..cfg.clone() };
+        assert!(sys.check(FactorKind::Ojbkq, 16, &other_lambda).is_err(), "lambda");
+        let sys = FactoredSystem::for_gptq(&x, &cfg).unwrap();
+        assert_eq!(sys.kind, FactorKind::Gptq);
+        assert_eq!(sys.dim(), 16);
+        assert!(sys.check(FactorKind::Gptq, 16, &cfg).is_ok());
+    }
+
+    #[test]
+    fn for_method_covers_the_factorizing_solvers() {
+        let mut rng = Rng::new(11);
+        let x = Matrix::randn(32, 12, 1.0, &mut rng);
+        let cfg = QuantConfig::default();
+        for (method, expect) in [
+            (Method::Ojbkq, Some(FactorKind::Ojbkq)),
+            (Method::BabaiNaive, Some(FactorKind::Ojbkq)),
+            (Method::KleinRandomK, Some(FactorKind::Ojbkq)),
+            (Method::Qep, Some(FactorKind::Ojbkq)),
+            (Method::Gptq, Some(FactorKind::Gptq)),
+            (Method::Rtn, None),
+            (Method::Awq, None),
+            (Method::Quip, None),
+            (Method::Fp, None),
+        ] {
+            let got = FactoredSystem::for_method(method, &x, &cfg).unwrap();
+            assert_eq!(got.map(|s| s.kind), expect, "{method:?}");
+        }
+    }
+}

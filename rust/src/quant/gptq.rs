@@ -15,63 +15,57 @@
 //! result. Group scales are computed on the *original* weights
 //! (static-groups style) so grouping and ordering compose correctly.
 
+use super::factored::{FactorKind, FactoredSystem};
 use super::scales::{self};
 use super::{QuantConfig, QuantizedLinear};
-use crate::linalg::{cholesky_upper_jittered, syrk_upper};
 use crate::tensor::{invert_perm, Matrix};
 
 /// GPTQ-quantize a layer against runtime activations `x_rt` (`p×m`).
 pub fn quantize(w: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<QuantizedLinear> {
+    quantize_with(w, x_rt, cfg, None)
+}
+
+/// [`quantize`] with an optional shared per-tap-point factorization: the
+/// damped Hessian, act-order permutation, and the Cholesky factor of
+/// `H⁻¹` the sweep reads its compensation coefficients from are all
+/// weight-independent, so the coordinator builds them once per Q/K/V /
+/// Gate/Up group ([`FactoredSystem::for_gptq`]) and every layer of the
+/// group reuses them — bit-identical to rebuilding per layer.
+pub fn quantize_with(
+    w: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    shared: Option<&FactoredSystem>,
+) -> anyhow::Result<QuantizedLinear> {
     let (m, n) = w.shape();
     assert_eq!(x_rt.cols(), m);
-    // Hessian with the standard 1% mean-diagonal dampening.
-    let gram = syrk_upper(x_rt, 0.0);
-    let mean_diag: f64 = (0..m).map(|i| gram.get(i, i) as f64).sum::<f64>() / m.max(1) as f64;
-    let damp = (0.01 * mean_diag) as f32;
-    let mut h = gram;
-    for i in 0..m {
-        h.add_at(i, i, damp);
-    }
-
-    // Activation ordering: quantize high-curvature features first.
-    let perm: Vec<usize> = if cfg.act_order {
-        let mut idx: Vec<usize> = (0..m).collect();
-        idx.sort_by(|&a, &b| {
-            h.get(b, b).partial_cmp(&h.get(a, a)).unwrap_or(std::cmp::Ordering::Equal)
-        });
-        idx
-    } else {
-        (0..m).collect()
+    let owned_sys;
+    let sys: &FactoredSystem = match shared {
+        Some(s) => {
+            s.check(FactorKind::Gptq, m, cfg)?;
+            s
+        }
+        None => {
+            owned_sys = FactoredSystem::for_gptq(x_rt, cfg)?;
+            &owned_sys
+        }
     };
-    let h_p = permute_sym(&h, &perm);
-    let w_p = w.permute_rows(&perm);
-
-    // Cholesky of the permuted Hessian.
-    let (r, _jit) = cholesky_upper_jittered(&h_p, 1e-6)
-        .map_err(|e| anyhow::anyhow!("gptq hessian cholesky: {e}"))?;
-
+    let perm = &sys.perm;
     // The classic GPTQ recursion (Frantar et al., reference impl):
     //   U = upper Cholesky factor of H⁻¹  (H⁻¹ = UᵀU),
     //   err_i = (w_i − q̂_i) / U[i,i],   w_j -= U[i,j]·err_i  (j > i).
     // Row i of U encodes the Schur-complement compensation coefficients
     // H_sub⁻¹[0,:]/H_sub⁻¹[0,0] for the remaining submatrix, so one factor
-    // serves the whole sweep. We build H⁻¹ = R⁻¹R⁻ᵀ by two multi-RHS
-    // triangular solves against the identity (never a Gaussian-elimination
-    // inverse) and factor it.
-    let hinv = {
-        let z = crate::linalg::solve_lower_t(&r, &Matrix::eye(m)); // Rᵀ Z = I
-        crate::linalg::solve_upper_mat(&r, &z) // R Hinv = Z
-    };
-    let (uinv, _jit2) = cholesky_upper_jittered(&hinv, 1e-8)
-        .map_err(|e| anyhow::anyhow!("gptq H^-1 cholesky: {e}"))?;
+    // serves the whole sweep. For the Gptq kind, `sys.r` IS that U.
+    let uinv = &sys.r;
 
     // Static group scales from the (permuted) original weights. Note: with
     // act_order, group boundaries follow the PERMUTED order, matching the
     // `static_groups=False` default of the reference implementation.
-    let sc = scales::compute(&w_p, cfg);
+    let mut work = if sys.permuted { w.permute_rows(perm) } else { w.clone() };
+    let sc = scales::compute(&work, cfg);
     let qmax = cfg.box_max() as f32;
 
-    let mut work = w_p.clone();
     let mut codes_p = vec![0u8; m * n];
     for i in 0..m {
         let g = sc.group_of(i);
@@ -110,19 +104,13 @@ pub fn quantize(w: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<
     // order and neither field is needed (and the packed kernel skips the
     // activation gather entirely).
     let mut q = QuantizedLinear::new(codes_p, sc, cfg.wbit, m, n);
-    if cfg.act_order {
-        let inv = invert_perm(&perm);
+    if sys.permuted {
+        let inv = invert_perm(perm);
         let w_hat = q.dequantize().permute_rows(&inv);
         q.effective = Some(w_hat);
         q.perm = Some(perm.iter().map(|&p| p as u32).collect());
     }
     Ok(q)
-}
-
-/// Symmetric permutation `H[perm, perm]`.
-fn permute_sym(h: &Matrix, perm: &[usize]) -> Matrix {
-    let m = h.rows();
-    Matrix::from_fn(m, m, |i, j| h.get(perm[i], perm[j]))
 }
 
 #[cfg(test)]

@@ -47,10 +47,15 @@ pub struct JtaSystem {
     pub lambda_sq: f64,
 }
 
-/// Build `G` and `B` for a layer (Eq. 8's normal equations).
-pub fn build_system(w: &Matrix, x_fp: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> JtaSystem {
-    let m = w.rows();
-    assert_eq!(x_rt.cols(), m);
+/// Build the ridged Gram `G = X̃ᵀX̃ + λ²_abs·I` alone — the part of the
+/// system that depends only on the runtime activations and `(λ, mode)`,
+/// NOT on the weight. Layers sharing a tap point (Q/K/V on `attn_in`,
+/// Gate/Up on `mlp_in`) therefore share this matrix, its act-order
+/// permutation and its Cholesky factor — see
+/// [`crate::quant::FactoredSystem`]. Returns `(gram, lambda_sq,
+/// diag_mean)` where `diag_mean` is the pre-ridge mean Gram diagonal.
+pub fn build_gram(x_rt: &Matrix, cfg: &QuantConfig) -> (Matrix, f64, f64) {
+    let m = x_rt.cols();
     let gram0 = syrk_upper(x_rt, 0.0);
     let diag_mean: f64 =
         (0..m).map(|i| gram0.get(i, i) as f64).sum::<f64>() / m.max(1) as f64;
@@ -59,6 +64,20 @@ pub fn build_system(w: &Matrix, x_fp: &Matrix, x_rt: &Matrix, cfg: &QuantConfig)
     for i in 0..m {
         gram.add_at(i, i, lambda_sq as f32);
     }
+    (gram, lambda_sq, diag_mean)
+}
+
+/// Build the per-layer RHS `B = X̃ᵀ·Y*(μ) + λ²_abs·W` (Eq. 8). `lambda_sq`
+/// must be the absolute λ² resolved by [`build_gram`] for the same
+/// `x_rt`/`cfg` so the two halves of the normal equations agree.
+pub fn build_rhs(
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    lambda_sq: f64,
+    cfg: &QuantConfig,
+) -> Matrix {
+    assert_eq!(x_rt.cols(), w.rows());
     // Y*(μ): avoid forming both outputs when μ is at a boundary.
     let mu = cfg.mu as f32;
     let y_star = if mu == 0.0 {
@@ -72,6 +91,14 @@ pub fn build_system(w: &Matrix, x_fp: &Matrix, x_rt: &Matrix, cfg: &QuantConfig)
     };
     let mut rhs = gemm_tn(x_rt, &y_star);
     rhs.axpy(lambda_sq as f32, w);
+    rhs
+}
+
+/// Build `G` and `B` for a layer (Eq. 8's normal equations).
+pub fn build_system(w: &Matrix, x_fp: &Matrix, x_rt: &Matrix, cfg: &QuantConfig) -> JtaSystem {
+    assert_eq!(x_rt.cols(), w.rows());
+    let (gram, lambda_sq, _) = build_gram(x_rt, cfg);
+    let rhs = build_rhs(w, x_fp, x_rt, lambda_sq, cfg);
     JtaSystem { gram, rhs, lambda_sq }
 }
 

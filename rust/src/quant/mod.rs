@@ -21,6 +21,7 @@
 
 pub mod awq;
 pub mod babai;
+pub mod factored;
 pub mod gptq;
 pub mod jta;
 pub mod klein;
@@ -33,6 +34,7 @@ pub mod rtn;
 pub mod scales;
 pub mod sphere;
 
+pub use factored::{FactorKind, FactoredSystem};
 pub use qtensor::QuantizedLinear;
 pub use scales::GroupScales;
 
@@ -294,25 +296,55 @@ pub fn quantize_layer(
     layer_id: u64,
     rt: Option<&crate::runtime::SolverRuntime>,
 ) -> anyhow::Result<(QuantizedLinear, LayerStats)> {
+    quantize_layer_shared(method, w, x_fp, x_rt, cfg, layer_id, rt, None)
+}
+
+/// Resolve the per-method config variant the solver actually sees
+/// ([`ojbkq::variant_naive`] / [`ojbkq::variant_random_k`] /
+/// [`ojbkq::variant_qep`] for the OJBKQ family, identity otherwise).
+/// [`FactoredSystem::for_method`] applies the same mapping so shared
+/// factors are built under exactly the config the solver decodes with.
+pub fn solver_cfg(method: Method, cfg: &QuantConfig) -> QuantConfig {
+    match method {
+        Method::BabaiNaive => ojbkq::variant_naive(cfg),
+        Method::KleinRandomK => ojbkq::variant_random_k(cfg),
+        Method::Qep => ojbkq::variant_qep(cfg),
+        _ => cfg.clone(),
+    }
+}
+
+/// [`quantize_layer`] with an optional shared per-tap-point
+/// factorization ([`FactoredSystem`]): layers of one tap group (Q/K/V,
+/// Gate/Up) see identical runtime activations, so the coordinator builds
+/// the Gram/act-order/Cholesky factor once and passes it to every layer
+/// of the group. `shared = None` rebuilds the factor per layer —
+/// bit-identical output either way (pinned by
+/// `tests/solver_parallel.rs`). Methods without a shareable factor
+/// ignore the argument.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_layer_shared(
+    method: Method,
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    layer_id: u64,
+    rt: Option<&crate::runtime::SolverRuntime>,
+    shared: Option<&FactoredSystem>,
+) -> anyhow::Result<(QuantizedLinear, LayerStats)> {
     assert_eq!(x_fp.cols(), w.rows(), "activation/weight shape mismatch");
     assert_eq!(x_rt.cols(), w.rows(), "runtime activation/weight shape mismatch");
     let mut rng = Rng::new(cfg.seed).fork(layer_id);
     let t0 = std::time::Instant::now();
+    let scfg = solver_cfg(method, cfg);
     let q = match method {
         Method::Fp => QuantizedLinear::identity(w),
-        Method::Rtn => rtn::quantize(w, cfg),
-        Method::Gptq => gptq::quantize(w, x_rt, cfg)?,
-        Method::Awq => awq::quantize(w, x_rt, cfg),
-        Method::Quip => quip::quantize(w, x_rt, cfg, &mut rng)?,
-        Method::BabaiNaive => {
-            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_naive(cfg), &mut rng, rt)?
-        }
-        Method::KleinRandomK => {
-            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_random_k(cfg), &mut rng, rt)?
-        }
-        Method::Ojbkq => ojbkq::quantize(w, x_fp, x_rt, cfg, &mut rng, rt)?,
-        Method::Qep => {
-            ojbkq::quantize(w, x_fp, x_rt, &ojbkq::variant_qep(cfg), &mut rng, rt)?
+        Method::Rtn => rtn::quantize(w, &scfg),
+        Method::Gptq => gptq::quantize_with(w, x_rt, &scfg, shared)?,
+        Method::Awq => awq::quantize(w, x_rt, &scfg),
+        Method::Quip => quip::quantize(w, x_rt, &scfg, &mut rng)?,
+        Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
+            ojbkq::quantize_with(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?
         }
     };
     let solve_secs = t0.elapsed().as_secs_f64();

@@ -14,11 +14,12 @@
 //! * **Ours(R)** — [`variant_random_k`]: K>0, μ=1, λ=0.
 //! * **Ours** — the given `(K, μ, λ)` (paper defaults per bit-width).
 
+use super::factored::{FactorKind, FactoredSystem};
 use super::klein::alpha_for;
 use super::ppi::{decode_tile, PpiInput};
-use super::scales::{self};
+use super::scales::{self, GroupScales};
 use super::{jta, Backend, QuantConfig, QuantizedLinear};
-use crate::linalg::cholesky_upper_jittered;
+use crate::parallel::parallel_map;
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
 use crate::tensor::Matrix;
@@ -45,8 +46,8 @@ pub fn variant_qep(cfg: &QuantConfig) -> QuantConfig {
 
 /// Quantize one layer with OJBKQ. `rng` must already be forked per layer;
 /// column tiles fork sub-streams so results are independent of tile
-/// iteration order. `rt` supplies the PJRT backend when
-/// `cfg.backend == Backend::Pjrt`.
+/// iteration order AND of which thread decodes them. `rt` supplies the
+/// PJRT backend when `cfg.backend == Backend::Pjrt`.
 pub fn quantize(
     w: &Matrix,
     x_fp: &Matrix,
@@ -55,109 +56,130 @@ pub fn quantize(
     rng: &mut Rng,
     rt: Option<&SolverRuntime>,
 ) -> anyhow::Result<QuantizedLinear> {
+    quantize_with(w, x_fp, x_rt, cfg, rng, rt, None)
+}
+
+/// [`quantize`] with an optional shared per-tap-point factorization:
+/// when the coordinator hands in a [`FactoredSystem`] (built once for the
+/// whole Q/K/V or Gate/Up group), the Gram, act-order permutation and
+/// Cholesky factor are reused and only the per-layer RHS, scales and
+/// decode run here — bit-identical to rebuilding the factor in place.
+pub fn quantize_with(
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+    rt: Option<&SolverRuntime>,
+    shared: Option<&FactoredSystem>,
+) -> anyhow::Result<QuantizedLinear> {
     let (m, n) = w.shape();
-    // 2–3. JTA system + Cholesky (Algorithm 1 line 2).
-    let sys = jta::build_system(w, x_fp, x_rt, cfg);
-    // Decode ordering: Babai decides row m−1 first (uncompensated), so we
-    // sort rows by ASCENDING Gram diagonal — the highest-curvature
-    // feature is decided first, exactly GPTQ's act_order under the
-    // Babai/GPTQ order reversal (Chen et al. 2025). The paper lists
-    // weight permutation as future work; we enable it behind the same
-    // `act_order` flag as the GPTQ baseline for a like-for-like
-    // comparison (ablate with act_order=false). Scales are computed on
-    // the permuted weight (group boundaries follow decode order, exactly
-    // like the GPTQ reference's default) and the dequantized effective
-    // weight is un-permuted at the end.
-    let perm: Vec<usize> = if cfg.act_order {
-        let mut idx: Vec<usize> = (0..m).collect();
-        idx.sort_by(|&a, &b| {
-            sys.gram
-                .get(a, a)
-                .partial_cmp(&sys.gram.get(b, b))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        idx
-    } else {
-        (0..m).collect()
-    };
-    let permuted = cfg.act_order;
-    let gram_p = if permuted {
-        Matrix::from_fn(m, m, |i, j| sys.gram.get(perm[i], perm[j]))
-    } else {
-        sys.gram.clone()
-    };
-    let rhs_p = if permuted { sys.rhs.permute_rows(&perm) } else { sys.rhs.clone() };
-    let w_p = if permuted { w.permute_rows(&perm) } else { w.clone() };
-    // 1. Scales/zeros (Algorithm 1 line 1) — in decode order.
-    let sc = scales::compute(&w_p, cfg);
-    let (r, _jitter) = cholesky_upper_jittered(&gram_p, 1e-6)
-        .map_err(|e| anyhow::anyhow!("gram cholesky failed: {e}"))?;
-    // 4. Real-valued solution and its code-space center (lines 3–4).
-    let w_real = jta::solve_real(&r, &rhs_p);
-    let mut qbar = Matrix::zeros(m, n);
-    for i in 0..m {
-        let g = sc.group_of(i);
-        for j in 0..n {
-            let s = sc.scales.get(g, j);
-            let z = sc.zeros.get(g, j);
-            qbar.set(i, j, w_real.get(i, j) / s + z);
+    // 2–3. JTA system + Cholesky (Algorithm 1 line 2) — shared across the
+    // tap group when the coordinator built the factor, rebuilt here for
+    // standalone calls. The decode ordering (ASCENDING Gram diagonal —
+    // Babai decides row m−1 first, so this is exactly GPTQ's act_order
+    // under the Babai/GPTQ order reversal, Chen et al. 2025) lives in
+    // the factor too: scales are computed on the permuted weight (group
+    // boundaries follow decode order, like the GPTQ reference's default)
+    // and the dequantized effective weight is un-permuted at the end.
+    let owned_sys;
+    let sys: &FactoredSystem = match shared {
+        Some(s) => {
+            s.check(FactorKind::Ojbkq, m, cfg)?;
+            s
         }
-    }
-    // 5. Tiled Random-K decode.
+        None => {
+            owned_sys = FactoredSystem::for_ojbkq(x_rt, cfg)?;
+            &owned_sys
+        }
+    };
+    let rhs = jta::build_rhs(w, x_fp, x_rt, sys.lambda_sq, cfg);
+    let permuted = sys.permuted;
+    let perm = &sys.perm;
+    let r = &sys.r;
+    // Borrow the unpermuted operands directly in the identity case — no
+    // whole-matrix clones on the non-act-order path.
+    let rhs_p_store;
+    let rhs_p: &Matrix = if permuted {
+        rhs_p_store = rhs.permute_rows(perm);
+        &rhs_p_store
+    } else {
+        &rhs
+    };
+    let w_p_store;
+    let w_p: &Matrix = if permuted {
+        w_p_store = w.permute_rows(perm);
+        &w_p_store
+    } else {
+        w
+    };
+    // 1. Scales/zeros (Algorithm 1 line 1) — in decode order.
+    let sc = scales::compute(w_p, cfg);
+    // 4. Real-valued solution (line 3). Its code-space image Q̄ (line 4)
+    // is formed per tile inside the decode workers from `w_real` slices —
+    // the full m×n Q̄ is never materialized.
+    let w_real = jta::solve_real(r, rhs_p);
+    // The R diagonal drives the per-column Klein temperature α; extract
+    // it once per layer instead of `r.get(i,i)` per (tile, column, row).
+    let r_diag: Vec<f32> = (0..m).map(|i| r.get(i, i)).collect();
+    // 5. Tiled Random-K decode — tiles are independent by construction
+    // (each forks its own RNG sub-stream keyed by tile index), so the
+    // native backend fans them out with `parallel_map` and the codes are
+    // bit-identical at any `OJBKQ_THREADS`.
     let qmax = cfg.box_max() as f32;
-    let ntile = cfg.ntile.max(1).min(n);
-    let mut codes = vec![0u8; m * n];
-    let mut tile_idx = 0u64;
-    let mut c0 = 0usize;
-    while c0 < n {
+    let ntile = cfg.ntile.max(1).min(n.max(1));
+    let n_tiles = n.div_ceil(ntile);
+    let rng_ref: &Rng = rng;
+    let decode_inputs = |t: usize| {
+        let c0 = t * ntile;
         let width = ntile.min(n - c0);
         let s_tile = sc.scale_tile(c0, width);
-        let qbar_tile = qbar.block(0, c0, m, width);
-        // Per-column Klein temperature from the lattice geometry.
-        let alpha: Vec<f32> = (0..width)
-            .map(|j| {
-                if cfg.k == 0 {
-                    return 1.0;
-                }
-                let min_rbar_sq = (0..m)
-                    .map(|i| {
-                        let v = r.get(i, i) as f64 * s_tile.get(i, j) as f64;
-                        v * v
-                    })
-                    .fold(f64::INFINITY, f64::min);
-                alpha_for(cfg.k, m, min_rbar_sq) as f32
-            })
-            .collect();
-        let mut trng = rng.fork(tile_idx);
+        let qbar_tile = qbar_tile(&w_real, &sc, c0, width);
+        let alpha = tile_alpha(cfg.k, &r_diag, &s_tile);
+        let mut trng = rng_ref.fork(t as u64);
         let uniforms = trng.uniform_vec_f32((cfg.k + 1) * m * width);
-        let q_tile = match cfg.backend {
-            Backend::Native => {
-                let out = decode_tile(&PpiInput {
-                    r: &r,
-                    s: &s_tile,
-                    qbar: &qbar_tile,
-                    qmax,
-                    k: cfg.k,
-                    block: cfg.block,
-                    alpha: &alpha,
-                    uniforms: &uniforms,
-                });
-                out.q
+        (s_tile, qbar_tile, alpha, uniforms)
+    };
+    let tiles: Vec<Matrix> = match cfg.backend {
+        Backend::Native => parallel_map(n_tiles, |t| {
+            let (s_tile, qbar_tile, alpha, uniforms) = decode_inputs(t);
+            decode_tile(&PpiInput {
+                r,
+                s: &s_tile,
+                qbar: &qbar_tile,
+                qmax,
+                k: cfg.k,
+                block: cfg.block,
+                alpha: &alpha,
+                uniforms: &uniforms,
+            })
+            .q
+        }),
+        Backend::Pjrt => {
+            // The PJRT runtime owns a single device stream; keep the tile
+            // loop serial and let the artifact parallelize internally.
+            let rt = rt.ok_or_else(|| {
+                anyhow::anyhow!("PJRT backend requested but no SolverRuntime provided")
+            })?;
+            let mut out = Vec::with_capacity(n_tiles);
+            for t in 0..n_tiles {
+                let (s_tile, qbar_tile, alpha, uniforms) = decode_inputs(t);
+                out.push(rt.decode_tile(r, &s_tile, &qbar_tile, qmax, cfg.k, &alpha, &uniforms)?);
             }
-            Backend::Pjrt => {
-                let rt = rt.ok_or_else(|| {
-                    anyhow::anyhow!("PJRT backend requested but no SolverRuntime provided")
-                })?;
-                rt.decode_tile(&r, &s_tile, &qbar_tile, qmax, cfg.k, &alpha, &uniforms)?
-            }
-        };
+            out
+        }
+    };
+    let mut codes = vec![0u8; m * n];
+    for (t, q_tile) in tiles.iter().enumerate() {
+        let c0 = t * ntile;
+        let width = q_tile.cols();
         for i in 0..m {
-            for j in 0..width {
-                codes[i * n + c0 + j] = q_tile.get(i, j) as u8;
+            let row = q_tile.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                codes[i * n + c0 + j] = v as u8;
             }
         }
-        c0 += width;
-        tile_idx += 1;
+        debug_assert_eq!(width, ntile.min(n - c0));
     }
     let mut q = QuantizedLinear::new(codes, sc, cfg.wbit, m, n);
     if permuted {
@@ -165,12 +187,51 @@ pub fn quantize(
         // the original feature order via the effective matrix, and record
         // the row permutation so the packed execution engine can keep the
         // integer codes and gather activations instead.
-        let inv = crate::tensor::invert_perm(&perm);
+        let inv = crate::tensor::invert_perm(perm);
         let w_hat = q.dequantize().permute_rows(&inv);
         q.effective = Some(w_hat);
         q.perm = Some(perm.iter().map(|&p| p as u32).collect());
     }
     Ok(q)
+}
+
+/// The code-space center `Q̄ = Ŵ_real ⊘ S + Z` restricted to columns
+/// `[c0, c0+width)` — built straight from `w_real` slices so the decode
+/// never materializes the full `m×n` Q̄.
+fn qbar_tile(w_real: &Matrix, sc: &GroupScales, c0: usize, width: usize) -> Matrix {
+    let m = w_real.rows();
+    let mut out = Matrix::zeros(m, width);
+    for i in 0..m {
+        let g = sc.group_of(i);
+        let src = &w_real.row(i)[c0..c0 + width];
+        let s_row = &sc.scales.row(g)[c0..c0 + width];
+        let z_row = &sc.zeros.row(g)[c0..c0 + width];
+        let dst = out.row_mut(i);
+        for j in 0..width {
+            dst[j] = src[j] / s_row[j] + z_row[j];
+        }
+    }
+    out
+}
+
+/// Per-column Klein temperature α for one tile, from the hoisted `R`
+/// diagonal (`min_j r̄² = min_i (R[i,i]·S[i,j])²` feeds Klein's ρ).
+fn tile_alpha(k: usize, r_diag: &[f32], s_tile: &Matrix) -> Vec<f32> {
+    let (m, width) = s_tile.shape();
+    (0..width)
+        .map(|j| {
+            if k == 0 {
+                return 1.0;
+            }
+            let min_rbar_sq = (0..m)
+                .map(|i| {
+                    let v = r_diag[i] as f64 * s_tile.get(i, j) as f64;
+                    v * v
+                })
+                .fold(f64::INFINITY, f64::min);
+            alpha_for(k, m, min_rbar_sq) as f32
+        })
+        .collect()
 }
 
 #[cfg(test)]

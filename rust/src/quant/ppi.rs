@@ -17,7 +17,7 @@
 
 use super::klein::sample_code;
 use super::rtn::round_code;
-use crate::linalg::gemm;
+use crate::linalg::{gemm, matmul_par};
 use crate::tensor::Matrix;
 
 /// Input to one tile decode.
@@ -73,10 +73,13 @@ pub fn decode_tile(inp: &PpiInput) -> PpiOutput {
     let (q_wide, e_wide) = decode_paths_fused(inp, paths);
 
     // Residuals for every path in one wide GEMM: RE = R · E_wide, then
-    // column sums of squares.
+    // column sums of squares. Routed through the row-parallel GEMM —
+    // bit-identical to the serial kernel. When this decode already runs
+    // on a tile-parallel worker, `parallel::num_threads()` reports 1
+    // there and the call stays serial (no nested fan-out); standalone
+    // decodes (single-tile layers, benches) get the row parallelism.
     let wide = paths * ntile;
-    let mut re = Matrix::zeros(m, wide);
-    gemm(1.0, inp.r, &e_wide, 0.0, &mut re);
+    let re = matmul_par(inp.r, &e_wide);
     let mut path_resids = Matrix::zeros(paths, ntile);
     let mut acc = vec![0.0f64; wide];
     for i in 0..m {
@@ -113,6 +116,12 @@ pub fn decode_tile(inp: &PpiInput) -> PpiOutput {
 
 /// Fused blocked back-substitution over all paths at once. Buffers are
 /// `(m × paths·ntile)`; returns the wide `(Q, E)` pair.
+///
+/// The `adj` look-ahead panel and the per-row `local` accumulator are
+/// allocated once and reused across blocks/rows (they used to be
+/// re-allocated per block and per row respectively) — this routine runs
+/// once per column tile per layer, inside the tile-parallel decode, so
+/// the allocator would otherwise sit on the hot path of every worker.
 fn decode_paths_fused(inp: &PpiInput, paths: usize) -> (Matrix, Matrix) {
     let m = inp.r.rows();
     let ntile = inp.qbar.cols();
@@ -120,13 +129,22 @@ fn decode_paths_fused(inp: &PpiInput, paths: usize) -> (Matrix, Matrix) {
     let b = inp.block.max(1);
     let mut q = Matrix::zeros(m, wide);
     let mut e = Matrix::zeros(m, wide);
+    // Reused scratch: the loop walks rows high→low, so the first block
+    // processed (rows [m−B, m)) has no look-ahead and reads the freshly
+    // zeroed `adj`; every later block overwrites it fully via the beta=0
+    // GEMM. Only the last-processed block (rows [0, m mod B) when B ∤ m)
+    // can have a different height, costing at most one extra allocation.
+    let mut adj = Matrix::zeros(b.min(m), wide);
+    let mut local = vec![0.0f32; wide];
     let mut j_hi = m;
     while j_hi > 0 {
         let j_lo = j_hi.saturating_sub(b);
         let blk = j_hi - j_lo;
         // 1. Global vectorized look-ahead for ALL paths in one GEMM:
         //    ADJ = R[J, F] · E[F, :]  (B × paths·ntile).
-        let mut adj = Matrix::zeros(blk, wide);
+        if blk != adj.rows() {
+            adj = Matrix::zeros(blk, wide);
+        }
         if j_hi < m {
             let r_panel = inp.r.block(j_lo, j_hi, blk, m - j_hi);
             let e_panel = e.block(j_hi, 0, m - j_hi, wide);
@@ -135,7 +153,7 @@ fn decode_paths_fused(inp: &PpiInput, paths: usize) -> (Matrix, Matrix) {
         // 2. Local sequential sweep inside the block.
         for i in (j_lo..j_hi).rev() {
             let rii = inp.r.get(i, i);
-            let mut local = vec![0.0f32; wide];
+            local.fill(0.0);
             for l in i + 1..j_hi {
                 let ril = inp.r.get(i, l);
                 if ril == 0.0 {
@@ -146,7 +164,7 @@ fn decode_paths_fused(inp: &PpiInput, paths: usize) -> (Matrix, Matrix) {
                     *acc += ril * ev;
                 }
             }
-            let adj_row: Vec<f32> = adj.row(i - j_lo).to_vec();
+            let adj_row = adj.row(i - j_lo);
             let qbar_row = inp.qbar.row(i);
             let s_row = inp.s.row(i);
             let q_row = q.row_mut(i);

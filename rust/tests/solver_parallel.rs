@@ -1,0 +1,230 @@
+//! Parity suite for the parallel shared-factor layer-solve engine.
+//!
+//! The engine's contract is that neither axis of restructuring changes a
+//! single bit of solver output:
+//!
+//! * **parallel vs serial** — the tile-parallel Random-K decode
+//!   (`OJBKQ_THREADS ∈ {1, 4}`) and the parallel linalg substrate
+//!   (row-parallel `syrk_upper`/`gemm_tn`, RHS-column-parallel
+//!   triangular solves) must produce bit-identical results at any
+//!   thread count, across a `ntile` sweep;
+//! * **shared vs per-layer factorization** — a `FactoredSystem` built
+//!   once per tap group must yield exactly the codes the solver produces
+//!   when it rebuilds the factor itself, with and without `act_order`,
+//!   for both the OJBKQ family and the GPTQ baseline.
+//!
+//! The thread count is process-global, so every test that flips it goes
+//! through [`with_threads`], which uses the programmatic
+//! [`ojbkq::parallel::set_thread_override`] pin (NOT `env::set_var`,
+//! whose glibc `setenv` races concurrent `env::var` reads from other
+//! test threads) and is serialized by a file-wide mutex.
+
+use ojbkq::coordinator::quantize_model;
+use ojbkq::data::SyntheticGrammar;
+use ojbkq::linalg::{cholesky_upper, gemm_tn, solve_lower_t, solve_upper_mat, syrk_upper};
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::parallel::set_thread_override;
+use ojbkq::quant::{
+    gptq, ojbkq as ojbkq_solver, quantize_layer, quantize_layer_shared, FactoredSystem, Method,
+    QuantConfig,
+};
+use ojbkq::rng::Rng;
+use ojbkq::tensor::Matrix;
+use std::sync::Mutex;
+
+static PIN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the worker thread count pinned to `n`, clearing the pin
+/// afterwards. Serialized across tests in this binary.
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = PIN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_thread_override(n);
+    let out = f();
+    set_thread_override(0);
+    out
+}
+
+fn layer(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(m, n, 0.5, &mut rng);
+    let x_fp = Matrix::randn(p, m, 1.0, &mut rng);
+    let noise = Matrix::randn(p, m, 0.05, &mut rng);
+    let x_rt = x_fp.add(&noise);
+    (w, x_fp, x_rt)
+}
+
+#[test]
+fn decode_bit_identical_across_thread_counts_and_ntiles() {
+    let (w, x_fp, x_rt) = layer(48, 40, 96, 0xD1);
+    for act_order in [false, true] {
+        for &ntile in &[5usize, 16, 40, 64] {
+            let cfg = QuantConfig {
+                wbit: 3,
+                group_size: 16,
+                k: 5,
+                ntile,
+                mu: 0.5,
+                lambda: 0.3,
+                act_order,
+                ..Default::default()
+            };
+            let solve = |threads: usize| {
+                with_threads(threads, || {
+                    let mut rng = Rng::new(7);
+                    ojbkq_solver::quantize(&w, &x_fp, &x_rt, &cfg, &mut rng, None).unwrap()
+                })
+            };
+            let serial = solve(1);
+            let parallel = solve(4);
+            assert_eq!(
+                serial.codes, parallel.codes,
+                "codes diverged: act_order={act_order} ntile={ntile}"
+            );
+            assert_eq!(
+                serial.dequantize().as_slice(),
+                parallel.dequantize().as_slice(),
+                "effective weight diverged: act_order={act_order} ntile={ntile}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shared_factor_matches_per_layer_ojbkq() {
+    let (w, x_fp, x_rt) = layer(32, 28, 64, 0xD2);
+    for act_order in [false, true] {
+        for method in [Method::Ojbkq, Method::BabaiNaive, Method::KleinRandomK, Method::Qep] {
+            let cfg = QuantConfig {
+                wbit: 4,
+                group_size: 8,
+                k: 3,
+                ntile: 12,
+                mu: 0.4,
+                lambda: 0.25,
+                act_order,
+                ..Default::default()
+            };
+            let shared = FactoredSystem::for_method(method, &x_rt, &cfg)
+                .unwrap()
+                .expect("ojbkq-family methods factorize");
+            let (q_shared, _) = quantize_layer_shared(
+                method,
+                &w,
+                &x_fp,
+                &x_rt,
+                &cfg,
+                11,
+                None,
+                Some(&shared),
+            )
+            .unwrap();
+            let (q_solo, _) = quantize_layer(method, &w, &x_fp, &x_rt, &cfg, 11, None).unwrap();
+            assert_eq!(
+                q_shared.codes, q_solo.codes,
+                "{method:?} act_order={act_order}: shared factor changed codes"
+            );
+            assert_eq!(
+                q_shared.dequantize().as_slice(),
+                q_solo.dequantize().as_slice(),
+                "{method:?} act_order={act_order}: shared factor changed weights"
+            );
+            assert_eq!(q_shared.perm, q_solo.perm);
+        }
+    }
+}
+
+#[test]
+fn shared_factor_matches_per_layer_gptq() {
+    let (w, _x_fp, x_rt) = layer(40, 24, 80, 0xD3);
+    for act_order in [false, true] {
+        let cfg = QuantConfig { wbit: 3, group_size: 8, act_order, ..Default::default() };
+        let shared = FactoredSystem::for_method(Method::Gptq, &x_rt, &cfg)
+            .unwrap()
+            .expect("gptq factorizes");
+        let q_shared = gptq::quantize_with(&w, &x_rt, &cfg, Some(&shared)).unwrap();
+        let q_solo = gptq::quantize(&w, &x_rt, &cfg).unwrap();
+        assert_eq!(q_shared.codes, q_solo.codes, "act_order={act_order}");
+        assert_eq!(
+            q_shared.dequantize().as_slice(),
+            q_solo.dequantize().as_slice(),
+            "act_order={act_order}"
+        );
+        assert_eq!(q_shared.perm, q_solo.perm);
+    }
+}
+
+#[test]
+fn mismatched_shared_factor_is_rejected() {
+    let (w, x_fp, x_rt) = layer(24, 16, 48, 0xD4);
+    let cfg = QuantConfig::default();
+    // Family mismatch: a GPTQ factor handed to the OJBKQ solver.
+    let gptq_sys = FactoredSystem::for_method(Method::Gptq, &x_rt, &cfg).unwrap().unwrap();
+    let mut rng = Rng::new(1);
+    assert!(ojbkq_solver::quantize_with(&w, &x_fp, &x_rt, &cfg, &mut rng, None, Some(&gptq_sys))
+        .is_err());
+    // Dimension mismatch: factor built for another layer width.
+    let (_, _, x_other) = layer(20, 16, 48, 0xD5);
+    let wrong_dim = FactoredSystem::for_method(Method::Gptq, &x_other, &cfg).unwrap().unwrap();
+    assert!(gptq::quantize_with(&w, &x_rt, &cfg, Some(&wrong_dim)).is_err());
+}
+
+#[test]
+fn linalg_substrate_bit_identical_across_threads() {
+    let mut rng = Rng::new(0xD6);
+    // Large enough to cross every parallel threshold: syrk needs
+    // p·m² ≥ 2²² (512·96² ≈ 4.7M), gemm_tn 2·p·m·n ≥ 2²² (≈ 25M), and
+    // the triangular solves n²·nrhs ≥ 2²¹ (96²·256 ≈ 2.4M) — so the
+    // T=4 leg genuinely exercises solve_cols_par, not the serial path.
+    let x = Matrix::randn(512, 96, 1.0, &mut rng);
+    let b = Matrix::randn(512, 256, 1.0, &mut rng);
+    let rhs = Matrix::randn(96, 256, 1.0, &mut rng);
+    let run = |threads: usize| {
+        with_threads(threads, || {
+            let g = syrk_upper(&x, 0.5);
+            let c = gemm_tn(&x, &b);
+            let r = cholesky_upper(&g).unwrap();
+            let u = solve_lower_t(&r, &rhs);
+            let v = solve_upper_mat(&r, &u);
+            (g, c, u, v)
+        })
+    };
+    let (g1, c1, u1, v1) = run(1);
+    let (g4, c4, u4, v4) = run(4);
+    assert_eq!(g1.as_slice(), g4.as_slice(), "syrk_upper");
+    assert_eq!(c1.as_slice(), c4.as_slice(), "gemm_tn");
+    assert_eq!(u1.as_slice(), u4.as_slice(), "solve_lower_t");
+    assert_eq!(v1.as_slice(), v4.as_slice(), "solve_upper_mat");
+}
+
+#[test]
+fn pipeline_bit_identical_across_thread_counts() {
+    // End-to-end: the full pipeline (captures through the packed engine,
+    // shared group factors, parallel tile decode) must produce the same
+    // quantized model at any thread count.
+    let cfg_model = ojbkq::config::ModelConfig {
+        name: "t".into(),
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(3);
+    let model = Model::random(cfg_model, &mut rng);
+    let corpus = SyntheticGrammar::new(32, 0.2, 5).corpus(6_000, &mut rng);
+    let cfg = QuantConfig { wbit: 4, group_size: 8, k: 3, ntile: 8, ..Default::default() };
+    let run = |threads: usize| {
+        with_threads(threads, || {
+            let (qm, _) = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 16, None)
+                .unwrap();
+            qm
+        })
+    };
+    let qm1 = run(1);
+    let qm4 = run(4);
+    let toks: Vec<u16> = vec![2, 4, 6, 8, 1];
+    let y1 = qm1.forward(&toks);
+    let y4 = qm4.forward(&toks);
+    assert_eq!(y1.as_slice(), y4.as_slice(), "pipeline output diverged across threads");
+}
