@@ -1,12 +1,18 @@
 //! Packed-engine throughput and memory: quantized-GEMM execution vs the
 //! dense f32 splice it replaced, plus the PR-3 batch-fused paths.
 //!
-//! Four measurements on the fallback (random-init) models:
+//! Five measurements on the fallback (random-init) models:
 //!  * per-layer `Y = X·Ŵ` throughput — [`PackedLinear::matmul`] on
 //!    bit-packed codes vs dense [`matmul`] across a batch sweep
 //!    `b ∈ {1, 8, 64, 512}` (serving-row to batched-capture-stack sizes);
-//!  * the unpack kernel microbench — table-driven [`unpack_bits_range`]
-//!    vs the per-code shift reference [`unpack_bits_range_shift`];
+//!  * the integer-core vs f32-reference kernel sweep —
+//!    [`qgemm_packed_with`] under both [`PackedCore`]s across
+//!    W2/W3/W4 × the same batch sweep, pinning the PR-6 speedup
+//!    (headline scalar: `int_core_speedup_w4`);
+//!  * the unpack kernel microbench — u64 bit-sliced
+//!    [`unpack_bits_range`] vs the PR-3 table-driven
+//!    [`unpack_bits_range_lut`] vs the per-code shift reference
+//!    [`unpack_bits_range_shift`];
 //!  * capture-stage throughput on the 8-block `med-5M` fallback model —
 //!    one block advance of all calibration caches via the batched
 //!    tall-GEMM stage API vs per-sequence stepping (serial loop and the
@@ -24,11 +30,13 @@
 use ojbkq::bench::{exp, Bencher};
 use ojbkq::config::ModelConfig;
 use ojbkq::coordinator::quantize_model;
-use ojbkq::infer::{PackedLinear, QuantizedModel};
+use ojbkq::infer::{qgemm_packed_with, PackedCore, PackedLinear, QuantizedModel};
 use ojbkq::linalg::matmul;
 use ojbkq::model::LanguageModel;
 use ojbkq::parallel::parallel_map;
-use ojbkq::quant::qtensor::{pack_bits, unpack_bits_range, unpack_bits_range_shift};
+use ojbkq::quant::qtensor::{
+    pack_bits, unpack_bits_range, unpack_bits_range_lut, unpack_bits_range_shift,
+};
 use ojbkq::quant::{rtn, Method, QuantConfig};
 use ojbkq::report::{json_str, Table};
 use ojbkq::rng::Rng;
@@ -38,6 +46,9 @@ fn main() {
     let mut json = Vec::new();
     let t = layer_kernel_throughput();
     json.push(("layer_sweep".to_string(), t.to_json()));
+    let (t, extra) = core_sweep();
+    json.push(("core_sweep".to_string(), t.to_json()));
+    json.extend(extra);
     let t = unpack_microbench();
     json.push(("unpack".to_string(), t.to_json()));
     let (t, extra) = capture_batched_vs_per_sequence();
@@ -84,30 +95,85 @@ fn layer_kernel_throughput() -> Table {
     table
 }
 
-/// Table-driven unpack vs the per-code shift reference, per width.
+/// Integer core vs f32 reference core on the same packed layers:
+/// W2/W3/W4 × the serving-to-capture batch sweep. The headline scalar
+/// `int_core_speedup_w4` (f32 p50 / int p50 at W4, worst batch) is what
+/// the PR-6 acceptance pins at ≥ 1.5×.
+fn core_sweep() -> (Table, Vec<(String, String)>) {
+    let (m, n) = if exp::quick() { (256usize, 256usize) } else { (512, 512) };
+    let iters = if exp::quick() { 5 } else { 20 };
+    let mut rng = Rng::new(0x1C); // distinct stream from layer_kernel_throughput
+    let w = Matrix::randn(m, n, 0.5, &mut rng);
+    let mut table = Table::new(
+        &format!("fig_qgemm — integer core vs f32 reference, {m}×{n} g64"),
+        &["wbit", "batch", "f32 p50 (s)", "int p50 (s)", "int speedup", "int GFLOP/s"],
+    );
+    let mut extra = Vec::new();
+    for &wbit in &[2u8, 3, 4] {
+        let cfg = QuantConfig { wbit, group_size: 64, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let packed = PackedLinear::from_quantized(&q, true);
+        let t = packed.as_packed().expect("packed layer");
+        let mut worst = f64::INFINITY;
+        for &batch in &[1usize, 8, 64, 512] {
+            let x = Matrix::randn(batch, m, 1.0, &mut rng);
+            let flops = 2.0 * batch as f64 * m as f64 * n as f64;
+            let sf = Bencher::new(&format!("core f32 w{wbit} b={batch}"))
+                .iters(iters)
+                .run(|| qgemm_packed_with(t, &x, PackedCore::F32));
+            let si = Bencher::new(&format!("core int w{wbit} b={batch}"))
+                .iters(iters)
+                .run(|| qgemm_packed_with(t, &x, PackedCore::Int));
+            let speedup = sf.p50 / si.p50.max(1e-12);
+            worst = worst.min(speedup);
+            table.push_row(&[
+                wbit.to_string(),
+                batch.to_string(),
+                format!("{:.5}", sf.p50),
+                format!("{:.5}", si.p50),
+                format!("{speedup:.2}x"),
+                format!("{:.2}", ojbkq::bench::gflops(flops, &si)),
+            ]);
+        }
+        extra.push((format!("int_core_speedup_w{wbit}"), format!("{worst:.3}")));
+    }
+    table.emit(Some(&exp::results_dir()), "fig_qgemm_core");
+    (table, extra)
+}
+
+/// The u64 bit-sliced unpack vs the PR-3 LUT path vs the per-code shift
+/// reference, per width.
 fn unpack_microbench() -> Table {
     let n_codes = if exp::quick() { 1 << 16 } else { 1 << 18 };
     let iters = if exp::quick() { 10 } else { 30 };
     let mut rng = Rng::new(0x17);
     let mut table = Table::new(
         "fig_qgemm — unpack kernel, codes/s",
-        &["wbit", "shift p50 (s)", "lut p50 (s)", "speedup"],
+        &["wbit", "shift p50 (s)", "lut p50 (s)", "u64 p50 (s)", "u64 vs shift", "u64 vs lut"],
     );
     for &wbit in &[2u8, 3, 4] {
         let codes: Vec<u8> = (0..n_codes).map(|_| rng.below(1 << wbit) as u8).collect();
-        let packed = pack_bits(&codes, wbit);
+        // Word-aligned stream, as the packed engine holds it — the u64
+        // path covers every code instead of falling back near the tail.
+        let mut packed = pack_bits(&codes, wbit);
+        packed.resize(packed.len().div_ceil(8) * 8, 0);
         let mut out = vec![0u8; n_codes];
         let ss = Bencher::new(&format!("unpack shift w{wbit}"))
             .iters(iters)
             .run(|| unpack_bits_range_shift(&packed, wbit, 0, &mut out));
         let sl = Bencher::new(&format!("unpack lut   w{wbit}"))
             .iters(iters)
+            .run(|| unpack_bits_range_lut(&packed, wbit, 0, &mut out));
+        let su = Bencher::new(&format!("unpack u64   w{wbit}"))
+            .iters(iters)
             .run(|| unpack_bits_range(&packed, wbit, 0, &mut out));
         table.push_row(&[
             wbit.to_string(),
             format!("{:.6}", ss.p50),
             format!("{:.6}", sl.p50),
-            format!("{:.2}x", ss.p50 / sl.p50.max(1e-12)),
+            format!("{:.6}", su.p50),
+            format!("{:.2}x", ss.p50 / su.p50.max(1e-12)),
+            format!("{:.2}x", sl.p50 / su.p50.max(1e-12)),
         ]);
     }
     table.emit(Some(&exp::results_dir()), "fig_qgemm_unpack");

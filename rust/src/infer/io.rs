@@ -38,9 +38,14 @@
 //! <tiles:  ⌈n/COL_TILE⌉ streams>          tile t: ⌈m·width(t)·wbit/8⌉ B
 //! ```
 //!
-//! The packed payload is byte-for-byte what [`PackedLinear::bytes`]
-//! accounts for, so the on-disk tensor section equals the engine's
-//! resident weight memory ([`CheckpointInfo::weight_bytes`]).
+//! Tile streams serialize at their **logical** length
+//! ([`PackedTiles::tile_payload`], `⌈m·width·wbit/8⌉` bytes) — the
+//! resident streams additionally carry ≤7 zero pad bytes each for
+//! word-aligned u64 unpack, a kernel-layout detail that never hits
+//! disk, so the on-disk format is byte-stable across kernel-layout
+//! changes (the golden fixture pins this).
+//! [`CheckpointInfo::weight_bytes`] reports the engine's resident
+//! weight memory ([`PackedLinear::bytes`], which counts the pad).
 //!
 //! Reader hardening (see `rust/tests/packed_checkpoint.rs`): records are
 //! read in canonical order with dimensions pinned by the config header,
@@ -69,9 +74,10 @@ const VERSION: u32 = 1;
 pub struct CheckpointInfo {
     /// Total bytes of the written file (header + records + framing).
     pub file_bytes: u64,
-    /// Bytes of the per-linear tensor payloads alone — by construction
-    /// equal to [`QuantizedModel::packed_weight_bytes`] of the saved
-    /// model, i.e. the engine's resident weight memory.
+    /// Resident weight bytes of the saved model's layers — by
+    /// construction equal to [`QuantizedModel::packed_weight_bytes`].
+    /// (The on-disk tensor section is marginally smaller: tile streams
+    /// serialize without their word-alignment pad.)
     pub weight_bytes: usize,
 }
 
@@ -158,8 +164,11 @@ fn write_packed(w: &mut impl Write, name: &str, t: &PackedTiles) -> anyhow::Resu
         }
         w.write_all(&buf)?;
     }
-    for tile in t.tiles() {
-        w.write_all(tile)?;
+    // Serialize the logical bitstreams: the resident word-alignment pad
+    // is a kernel-layout detail and never hits disk, so the OJBQ1 tensor
+    // section is byte-identical to the pre-padding format.
+    for ti in 0..t.tiles().len() {
+        w.write_all(t.tile_payload(ti))?;
     }
     Ok(())
 }

@@ -40,7 +40,10 @@ pub mod io;
 pub mod packed;
 
 pub use io::{load_quantized, save_quantized, CheckpointInfo};
-pub use packed::{PackedLinear, COL_TILE};
+pub use packed::{
+    packed_core, qgemm_packed, qgemm_packed_with, qgemv_packed, qgemv_packed_with,
+    set_packed_core_override, PackedCore, PackedLinear, COL_TILE,
+};
 
 use crate::config::ModelConfig;
 use crate::linalg::matmul_par;

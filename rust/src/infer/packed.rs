@@ -3,34 +3,54 @@
 //! [`PackedLinear`] is the deployment form of a solved
 //! [`QuantizedLinear`]: integer codes bit-packed (via
 //! [`crate::quant::qtensor::pack_bits`]) into **column tiles** of
-//! [`COL_TILE`] outputs, alongside the per-group scale table and a
-//! precomputed `s·z` correction table. The conversion happens once, after
-//! the solver; from then on every matmul runs straight off the bitstream:
+//! [`COL_TILE`] outputs — each tile stream word-aligned (padded to a
+//! multiple of 8 bytes) so the u64 bit-sliced unpack of
+//! [`unpack_bits_range`] never straddles the buffer end — alongside the
+//! per-group scale table and a precomputed `s·z` correction table. The
+//! conversion happens once, after the solver; from then on every matmul
+//! runs straight off the bitstream:
 //!
 //! `y_j = Σ_g s_{g,j} · (Σ_{i∈g} x_i·q_{ij}) − (s·z)_{g,j} · Σ_{i∈g} x_i`
 //!
-//! [`qgemm_packed`] is the blocked multi-row kernel behind
-//! [`PackedLinear::matmul`]: per column tile, each packed code row is
-//! unpacked **once per [`ROW_BLOCK`]-row grid cell** — through the
-//! table-driven fast paths of [`unpack_bits_range`] — into a stack
-//! buffer and accumulated across that cell's activation rows (the
-//! row-at-a-time `qgemv` loop re-read every code per activation row;
-//! the grid trades some unpack amortization on tall inputs for
-//! cell-level parallelism). Large calls parallelize over a
-//! [`ROW_BLOCK`] × [`COL_TILE`] grid via [`crate::parallel`], so the tall
-//! stacked batches of the batch-fused capture path use every core, not
-//! one thread per tile. Act-order solvers (OJBKQ, GPTQ) keep their codes
-//! in decode order; the kernel gathers activations through the recorded
-//! row permutation inside the tile loop (no permuted batch copy) instead
-//! of falling back to a dense weight. Genuine dense transforms (AWQ's
-//! folded scaling, QuIP's rotations) and FP passthrough layers use the
-//! [`PackedLinear::Dense`] fallback.
+//! [`qgemm_packed`] evaluates this through one of two cores (see
+//! DESIGN.md §Integer-core packed GEMM):
+//!
+//! * **Integer core** (default, [`PackedCore::Int`]): activations are
+//!   quantized once per `(row, group)` onto a fixed-point grid
+//!   (`x̂ᵢ = round(xᵢ/a)`, `a = max|x|/A` with amplitude `A ≤ 32767`
+//!   budgeted so `code·group_size·A < 2³¹`), the inner loop is a pure
+//!   `i32 += i16·i16` multiply-accumulate over raw codes, and the f32
+//!   scale/correction is applied **once per group boundary**:
+//!   `y_j += a·(s_{g,j}·acc_j − (s·z)_{g,j}·Σx̂)`. Integer accumulation
+//!   is exact, so results are bit-identical under any blocking or
+//!   thread count by construction.
+//! * **f32 reference core** ([`PackedCore::F32`], `OJBKQ_F32_CORE=1` or
+//!   [`set_packed_core_override`]): the PR-2/3 kernel — per-code
+//!   `u8→f32` convert (hoisted into a per-panel pass) and f32 FMA —
+//!   kept bit-identical to its historical output as the parity
+//!   reference, mirroring the dense-exec escape hatch.
+//!
+//! Both cores run **cache-blocked microkernels** over a
+//! [`ROW_BLOCK`] × [`COL_TILE`] grid: per grid cell, code rows are
+//! unpacked once per [`PANEL_ROWS`]-row panel (u64 word loads, many
+//! codes per shift) into a stack buffer sized for L1, and the integer
+//! core walks a **contiguous** activation panel (the decode-order
+//! permutation of act-order solvers is resolved once in the
+//! quantization prologue — no column-strided `x.get` and no per-element
+//! zero test inside the MAC loop). Tall (batched-capture) inputs
+//! parallelize over grid cells via [`crate::parallel`]; the per-row
+//! activation prologue (group sums / fixed-point quantization)
+//! parallelizes over row chunks on the same threshold. Single-row calls
+//! take the register-resident [`qgemv_packed`] path. Genuine dense
+//! transforms (AWQ's folded scaling, QuIP's rotations) and FP
+//! passthrough layers use the [`PackedLinear::Dense`] fallback.
 
 use crate::linalg::matmul_par;
-use crate::parallel::parallel_map_dynamic;
-use crate::quant::qtensor::{pack_bits, unpack_bits_range};
+use crate::parallel::{parallel_for_chunks, parallel_map_dynamic};
+use crate::quant::qtensor::{pack_bits, packed_len, unpack_bits_range};
 use crate::quant::QuantizedLinear;
 use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Output columns per packed tile — sized so one unpacked code row plus
 /// the per-row accumulator live comfortably in registers / L1.
@@ -43,12 +63,83 @@ pub const COL_TILE: usize = 32;
 /// idle.
 pub const ROW_BLOCK: usize = 64;
 
+/// Code rows unpacked per microkernel panel: a `PANEL_ROWS × COL_TILE`
+/// i16 code panel (4 KiB) plus one activation slice stay L1-resident
+/// while every activation row of the grid cell streams across it, so
+/// each code is unpacked once per cell regardless of group size.
+pub const PANEL_ROWS: usize = 64;
+
 /// Minimum `batch·m·n` product before [`qgemm_packed`] fans grid cells
-/// out to threads. Re-tuned for the batch-fused capture path: the
-/// coordinator now issues one tall call per stage instead of
-/// parallelizing over per-sequence calls, so the kernel parallelizes
-/// earlier than the PR-2 tile-only threshold.
+/// (and the per-row activation prologue) out to threads. Re-tuned for
+/// the batch-fused capture path: the coordinator issues one tall call
+/// per stage instead of parallelizing over per-sequence calls, so the
+/// kernel parallelizes earlier than the PR-2 tile-only threshold.
 const PARALLEL_FLOPS_MIN: usize = 1 << 20;
+
+/// Hard cap on the fixed-point activation amplitude: `i16` storage.
+const ACT_AMP_MAX: u64 = i16::MAX as u64;
+
+// ----- core selection -------------------------------------------------
+
+/// Which arithmetic core the packed kernels run — see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackedCore {
+    /// Integer core (default): i32 group accumulation of raw codes
+    /// against fixed-point activations, f32 touched once per group.
+    Int,
+    /// f32 reference core: the PR-2/3 per-code dequantize-and-FMA
+    /// kernel, kept bit-identical as the parity baseline
+    /// (`OJBKQ_F32_CORE=1` / `--f32-core`).
+    F32,
+}
+
+/// Process-wide core override: 0 = unset (env decides), 1 = Int,
+/// 2 = F32. Mirrors `parallel::set_thread_override` — a race-free
+/// runtime toggle for tests and the CLI, taking precedence over the
+/// `OJBKQ_F32_CORE` environment default.
+static CORE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force (or un-force, with `None`) the packed-kernel core for this
+/// process, overriding `OJBKQ_F32_CORE`.
+pub fn set_packed_core_override(core: Option<PackedCore>) {
+    let v = match core {
+        None => 0,
+        Some(PackedCore::Int) => 1,
+        Some(PackedCore::F32) => 2,
+    };
+    CORE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The core [`qgemm_packed`] / [`qgemv_packed`] dispatch to: the
+/// override if set, else the `OJBKQ_F32_CORE` environment default
+/// (read once), else the integer core.
+pub fn packed_core() -> PackedCore {
+    match CORE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => PackedCore::Int,
+        2 => PackedCore::F32,
+        _ => {
+            static ENV_F32: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+            let f32_core = *ENV_F32.get_or_init(|| {
+                matches!(
+                    std::env::var("OJBKQ_F32_CORE").as_deref(),
+                    Ok("1") | Ok("true") | Ok("yes")
+                )
+            });
+            if f32_core {
+                PackedCore::F32
+            } else {
+                PackedCore::Int
+            }
+        }
+    }
+}
+
+/// Pad a bitstream to a multiple of 8 bytes (zero fill) so u64 word
+/// loads starting at any in-range byte stay inside the allocation.
+fn pad_word_aligned(mut stream: Vec<u8>) -> Vec<u8> {
+    stream.resize(stream.len().div_ceil(8) * 8, 0);
+    stream
+}
 
 /// Column-tiled bit-packed codes + scale/correction tables.
 #[derive(Debug, Clone)]
@@ -60,6 +151,9 @@ pub struct PackedTiles {
     n_groups: usize,
     /// One little-endian bitstream per column tile; tile `t` holds the
     /// `m × width(t)` codes of columns `[t·COL_TILE, …)`, row-major.
+    /// Streams are word-aligned: padded with zero bytes to a multiple
+    /// of 8 so the u64 bit-sliced unpack never reads past the end. The
+    /// serialized form is the unpadded prefix ([`PackedTiles::tile_payload`]).
     tiles: Vec<Vec<u8>>,
     /// Group scales `s`, `n_groups × n`.
     scales: Matrix,
@@ -83,7 +177,7 @@ impl PackedTiles {
             for i in 0..m {
                 tile_codes.extend_from_slice(&q.codes[i * n + c0..i * n + c0 + w]);
             }
-            tiles.push(pack_bits(&tile_codes, q.wbit));
+            tiles.push(pad_word_aligned(pack_bits(&tile_codes, q.wbit)));
         }
         PackedTiles {
             m,
@@ -104,7 +198,8 @@ impl PackedTiles {
     /// bitstream length, table shapes, and (when present) that `perm` is
     /// a genuine permutation of `0..m`. A hostile or corrupted checkpoint
     /// therefore fails here with `Err`, never as an index panic inside
-    /// [`qgemm_packed`].
+    /// [`qgemm_packed`]. Tiles are accepted at the serialized (logical)
+    /// length or already word-aligned, and stored word-aligned.
     #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         m: usize,
@@ -137,13 +232,14 @@ impl PackedTiles {
         anyhow::ensure!(tiles.len() == n_tiles, "{} tiles, expected {n_tiles}", tiles.len());
         for (t, tile) in tiles.iter().enumerate() {
             let w = COL_TILE.min(n - t * COL_TILE);
-            let want = crate::quant::qtensor::packed_len(m * w, wbit);
+            let want = packed_len(m * w, wbit);
             anyhow::ensure!(
-                tile.len() == want,
+                tile.len() == want || tile.len() == want.div_ceil(8) * 8,
                 "tile {t} holds {} bytes, expected {want}",
                 tile.len()
             );
         }
+        let tiles = tiles.into_iter().map(pad_word_aligned).collect();
         if let Some(p) = &perm {
             anyhow::ensure!(p.len() == m, "perm length {} != m={m}", p.len());
             let mut seen = vec![false; m];
@@ -172,9 +268,20 @@ impl PackedTiles {
         self.group_size
     }
 
-    /// Per-tile bit-packed code streams, in column-tile order.
+    /// Per-tile bit-packed code streams, in column-tile order —
+    /// word-aligned resident form (see [`PackedTiles::tile_payload`] for
+    /// the serialized prefix).
     pub fn tiles(&self) -> &[Vec<u8>] {
         &self.tiles
+    }
+
+    /// The logical (unpadded) bitstream of tile `t` — exactly
+    /// `packed_len` bytes, what the OJBQ1 checkpoint serializes. The
+    /// word-alignment pad is a resident-layout detail and never hits
+    /// disk, keeping the on-disk format byte-stable.
+    pub fn tile_payload(&self, t: usize) -> &[u8] {
+        let w = COL_TILE.min(self.n - t * COL_TILE);
+        &self.tiles[t][..packed_len(self.m * w, self.wbit)]
     }
 
     /// Group scale table `s`, `n_groups × n`.
@@ -192,8 +299,10 @@ impl PackedTiles {
         self.perm.as_deref()
     }
 
-    /// Resident bytes of the packed representation (codes + f32 tables +
-    /// permutation) — what the execution engine actually holds in memory.
+    /// Resident bytes of the packed representation (word-aligned code
+    /// streams + f32 tables + permutation) — what the execution engine
+    /// actually holds in memory, including the ≤7 alignment pad bytes
+    /// per tile stream.
     fn bytes(&self) -> usize {
         let codes: usize = self.tiles.iter().map(|t| t.len()).sum();
         let tables = (self.scales.len() + self.corr.len()) * 4;
@@ -309,7 +418,8 @@ impl PackedLinear {
     /// `Y = X · Ŵ` for a batch of activation rows. Both legs parallelize
     /// internally on tall inputs (grid cells for packed codes, row blocks
     /// for the dense fallback), so batched-capture stacks run one big
-    /// call instead of per-sequence fan-out.
+    /// call instead of per-sequence fan-out. Single activation rows take
+    /// the [`qgemv_packed`] register path.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         match self {
             PackedLinear::Packed(t) => qgemm_packed(t, x),
@@ -318,25 +428,285 @@ impl PackedLinear {
     }
 }
 
-/// Blocked multi-row quantized GEMM over the tiled bitstream.
-///
-/// Tall (batched-capture) inputs parallelize over a grid of
-/// [`ROW_BLOCK`]-row × [`COL_TILE`]-column cells; each cell's output
-/// depends only on its own activation rows, so the split is bit-exact
-/// with respect to any other blocking. Act-order layers read activations
-/// through the recorded decode-order permutation **inside** the tile
-/// loop — no permuted copy of the (possibly very tall) batch is ever
-/// materialized.
-pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
-    assert_eq!(x.cols(), t.m, "activation/layer shape mismatch");
-    let b = x.rows();
-    // Per-group activation sums (the z-correction operand), `b × groups`,
-    // accumulated group-by-group (no per-element division), gathering
-    // through the decode-order permutation when one is recorded.
-    let mut gsum = Matrix::zeros(b, t.n_groups);
-    for r in 0..b {
+// ----- integer core ---------------------------------------------------
+
+/// Fixed-point activation panel, built once per [`qgemm_packed`] call by
+/// the quantization prologue and shared (read-only) by every grid cell.
+/// Rows are stored in **decode order** — the act-order permutation is
+/// resolved here, once, so the microkernel walks contiguous memory.
+struct IntActPanel {
+    /// `b × m` quantized activations `x̂ = round(x/a)`, row-major,
+    /// decode order.
+    xq: Vec<i16>,
+    /// `b × n_groups` dequantization scales `a = max|x|/A` (0 for
+    /// all-zero groups).
+    ascale: Vec<f32>,
+    /// `b × n_groups` integer group sums `Σ_{i∈g} x̂ᵢ` — the exact
+    /// z-correction operand.
+    gisum: Vec<i32>,
+}
+
+/// Fixed-point amplitude `A` for a layer: as large as i16 storage
+/// allows, shrunk when huge groups × wide codes would overflow the i32
+/// accumulator — `A·(2^wbit−1)·group_size < 2³¹` guarantees
+/// `Σ_{i∈g} x̂ᵢ·q_{ij}` fits with the sign bit to spare.
+fn act_amp(t: &PackedTiles) -> f32 {
+    let maxcode = ((1u32 << t.wbit) - 1) as u64;
+    let gs = t.group_size.clamp(1, t.m) as u64;
+    ((i32::MAX as u64) / (maxcode * gs)).clamp(1, ACT_AMP_MAX) as f32
+}
+
+/// Quantize activation rows `[r0, r1)` of `x` onto the fixed-point grid,
+/// filling the panel slices for those rows.
+#[allow(clippy::too_many_arguments)]
+fn quantize_act_rows(
+    t: &PackedTiles,
+    x: &Matrix,
+    amp: f32,
+    r0: usize,
+    r1: usize,
+    xq: &mut [i16],
+    ascale: &mut [f32],
+    gisum: &mut [i32],
+) {
+    let (m, gsz, n_groups) = (t.m, t.group_size, t.n_groups);
+    let perm = t.perm.as_deref();
+    for r in r0..r1 {
         let row = x.row(r);
-        let grow = gsum.row_mut(r);
+        let qrow = &mut xq[(r - r0) * m..(r - r0 + 1) * m];
+        let arow = &mut ascale[(r - r0) * n_groups..(r - r0 + 1) * n_groups];
+        let grow = &mut gisum[(r - r0) * n_groups..(r - r0 + 1) * n_groups];
+        for g in 0..n_groups {
+            let i0 = g * gsz;
+            let i1 = (i0 + gsz).min(m);
+            let mut amax = 0.0f32;
+            match perm {
+                None => {
+                    for &v in &row[i0..i1] {
+                        amax = amax.max(v.abs());
+                    }
+                }
+                Some(p) => {
+                    for &pi in &p[i0..i1] {
+                        amax = amax.max(row[pi as usize].abs());
+                    }
+                }
+            }
+            if amax == 0.0 || !amax.is_finite() {
+                // All-zero (or degenerate) group: a = 0 makes the whole
+                // contribution exactly 0, matching the f32 core.
+                arow[g] = 0.0;
+                grow[g] = 0;
+                for slot in &mut qrow[i0..i1] {
+                    *slot = 0;
+                }
+                continue;
+            }
+            let inv = amp / amax;
+            arow[g] = amax / amp;
+            let mut sum = 0i32;
+            match perm {
+                None => {
+                    for (slot, &v) in qrow[i0..i1].iter_mut().zip(&row[i0..i1]) {
+                        let q = (v * inv).round() as i32;
+                        sum += q;
+                        *slot = q as i16;
+                    }
+                }
+                Some(p) => {
+                    for (slot, &pi) in qrow[i0..i1].iter_mut().zip(&p[i0..i1]) {
+                        let q = (row[pi as usize] * inv).round() as i32;
+                        sum += q;
+                        *slot = q as i16;
+                    }
+                }
+            }
+            grow[g] = sum;
+        }
+    }
+}
+
+/// Build the fixed-point panel for all `b` activation rows — the
+/// prologue of the integer core. Row chunks fan out to threads on the
+/// same size threshold as the main grid (tall batched-capture inputs
+/// used to pay this serially while only the grid was parallel).
+fn build_int_panel(t: &PackedTiles, x: &Matrix, parallel: bool) -> IntActPanel {
+    let b = x.rows();
+    let (m, n_groups) = (t.m, t.n_groups);
+    let amp = act_amp(t);
+    if parallel && b > 1 {
+        let chunks: Vec<(Vec<i16>, Vec<f32>, Vec<i32>)> = parallel_for_chunks(b, |range| {
+            let rows = range.len();
+            let mut xq = vec![0i16; rows * m];
+            let mut ascale = vec![0f32; rows * n_groups];
+            let mut gisum = vec![0i32; rows * n_groups];
+            quantize_act_rows(t, x, amp, range.start, range.end, &mut xq, &mut ascale, &mut gisum);
+            (xq, ascale, gisum)
+        });
+        let mut xq = Vec::with_capacity(b * m);
+        let mut ascale = Vec::with_capacity(b * n_groups);
+        let mut gisum = Vec::with_capacity(b * n_groups);
+        for (cx, ca, cg) in chunks {
+            xq.extend_from_slice(&cx);
+            ascale.extend_from_slice(&ca);
+            gisum.extend_from_slice(&cg);
+        }
+        IntActPanel { xq, ascale, gisum }
+    } else {
+        let mut xq = vec![0i16; b * m];
+        let mut ascale = vec![0f32; b * n_groups];
+        let mut gisum = vec![0i32; b * n_groups];
+        quantize_act_rows(t, x, amp, 0, b, &mut xq, &mut ascale, &mut gisum);
+        IntActPanel { xq, ascale, gisum }
+    }
+}
+
+/// Register-tiled MAC for a full-width tile: `acc_j += Σ_k x̂_k·q_{k,j}`
+/// with the 32-lane i32 accumulator living in registers across the whole
+/// code panel, spilled into the cell accumulator once per panel.
+#[inline]
+fn mac_panel_full(arow: &mut [i32], xrow: &[i16], cpanel: &[i16]) {
+    let mut acc = [0i32; COL_TILE];
+    for (k, &q) in xrow.iter().enumerate() {
+        if q == 0 {
+            continue; // exact in integers: skipping adds nothing
+        }
+        let q = q as i32;
+        let crow = &cpanel[k * COL_TILE..(k + 1) * COL_TILE];
+        for (a, &c) in acc.iter_mut().zip(crow) {
+            *a += q * c as i32;
+        }
+    }
+    for (a, v) in arow.iter_mut().zip(acc) {
+        *a += v;
+    }
+}
+
+/// Ragged-width MAC (the last column tile when `n % COL_TILE ≠ 0`).
+#[inline]
+fn mac_panel(arow: &mut [i32], xrow: &[i16], cpanel: &[i16], w: usize) {
+    for (k, &q) in xrow.iter().enumerate() {
+        if q == 0 {
+            continue;
+        }
+        let q = q as i32;
+        let crow = &cpanel[k * w..k * w + w];
+        for (a, &c) in arow.iter_mut().zip(crow) {
+            *a += q * c as i32;
+        }
+    }
+}
+
+/// One integer-core grid cell: per group, unpack the tile's code rows
+/// into [`PANEL_ROWS`]-row i16 panels (u64 bit-sliced, once per cell),
+/// stream every activation row of the cell across the panel in pure i32
+/// MAC, and touch f32 exactly once per (row, group) at the boundary:
+/// `out_j += a·(s_j·acc_j − (s·z)_j·Σx̂)`.
+fn tile_matmul_int(
+    t: &PackedTiles,
+    act: &IntActPanel,
+    ti: usize,
+    r0: usize,
+    r1: usize,
+) -> Matrix {
+    let c0 = ti * COL_TILE;
+    let w = COL_TILE.min(t.n - c0);
+    let bl = r1 - r0;
+    let m = t.m;
+    let n_groups = t.n_groups;
+    let packed = &t.tiles[ti];
+    let mut out = Matrix::zeros(bl, w);
+    let mut row_codes = [0u8; COL_TILE];
+    let mut cpanel = [0i16; PANEL_ROWS * COL_TILE];
+    let mut iacc = vec![0i32; bl * w];
+    for g in 0..n_groups {
+        let i0 = g * t.group_size;
+        let i1 = (i0 + t.group_size).min(m);
+        iacc.fill(0);
+        let mut cs = i0;
+        while cs < i1 {
+            let cl = (i1 - cs).min(PANEL_ROWS);
+            for k in 0..cl {
+                unpack_bits_range(packed, t.wbit, (cs + k) * w, &mut row_codes[..w]);
+                let prow = &mut cpanel[k * w..k * w + w];
+                for (p, &c) in prow.iter_mut().zip(&row_codes[..w]) {
+                    *p = c as i16;
+                }
+            }
+            let panel = &cpanel[..cl * w];
+            for r in 0..bl {
+                let xrow = &act.xq[(r0 + r) * m + cs..][..cl];
+                let arow = &mut iacc[r * w..r * w + w];
+                if w == COL_TILE {
+                    mac_panel_full(arow, xrow, panel);
+                } else {
+                    mac_panel(arow, xrow, panel, w);
+                }
+            }
+            cs += cl;
+        }
+        let srow = &t.scales.row(g)[c0..c0 + w];
+        let crow = &t.corr.row(g)[c0..c0 + w];
+        for r in 0..bl {
+            let a = act.ascale[(r0 + r) * n_groups + g];
+            let gsv = act.gisum[(r0 + r) * n_groups + g] as f32;
+            let arow = &iacc[r * w..r * w + w];
+            let orow = &mut out.row_mut(r)[..w];
+            for j in 0..w {
+                orow[j] += a * (srow[j] * arow[j] as f32 - crow[j] * gsv);
+            }
+        }
+    }
+    out
+}
+
+/// Single-row integer tile kernel: the group accumulator never leaves
+/// registers (no cell accumulator buffer, no panel staging) — unpack
+/// cost dominates at `b = 1`, so each code row is decoded straight into
+/// the MAC. Bit-identical to [`tile_matmul_int`] with `bl = 1`: i32
+/// accumulation is exact and the boundary arithmetic is the same
+/// expression in the same order.
+fn tile_gemv_int(t: &PackedTiles, act: &IntActPanel, ti: usize) -> Vec<f32> {
+    let c0 = ti * COL_TILE;
+    let w = COL_TILE.min(t.n - c0);
+    let packed = &t.tiles[ti];
+    let mut out = vec![0.0f32; w];
+    let mut row_codes = [0u8; COL_TILE];
+    for g in 0..t.n_groups {
+        let i0 = g * t.group_size;
+        let i1 = (i0 + t.group_size).min(t.m);
+        let mut acc = [0i32; COL_TILE];
+        for i in i0..i1 {
+            let q = act.xq[i] as i32;
+            if q == 0 {
+                continue; // skip the unpack too — exact in integers
+            }
+            unpack_bits_range(packed, t.wbit, i * w, &mut row_codes[..w]);
+            for (a, &c) in acc[..w].iter_mut().zip(&row_codes[..w]) {
+                *a += q * c as i32;
+            }
+        }
+        let a = act.ascale[g];
+        let gsv = act.gisum[g] as f32;
+        let srow = &t.scales.row(g)[c0..c0 + w];
+        let crow = &t.corr.row(g)[c0..c0 + w];
+        for j in 0..w {
+            out[j] += a * (srow[j] * acc[j] as f32 - crow[j] * gsv);
+        }
+    }
+    out
+}
+
+// ----- f32 reference core ---------------------------------------------
+
+/// Per-group activation sums (the z-correction operand of the f32
+/// core), `b × groups`, accumulated group-by-group, gathering through
+/// the decode-order permutation when one is recorded. Row chunks fan
+/// out to threads on the main-grid threshold.
+fn build_gsum_f32(t: &PackedTiles, x: &Matrix, parallel: bool) -> Matrix {
+    let b = x.rows();
+    let fill = |r: usize, grow: &mut [f32]| {
+        let row = x.row(r);
         match &t.perm {
             None => {
                 for (gv, chunk) in grow.iter_mut().zip(row.chunks(t.group_size)) {
@@ -349,33 +719,37 @@ pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
                 }
             }
         }
-    }
-    let n_tiles = t.tiles.len();
-    let n_row_blocks = b.div_ceil(ROW_BLOCK).max(1);
-    let cells = n_tiles * n_row_blocks;
-    let cell = |c: usize| {
-        let ti = c % n_tiles;
-        let r0 = (c / n_tiles) * ROW_BLOCK;
-        let r1 = (r0 + ROW_BLOCK).min(b);
-        (ti, r0, tile_matmul(t, x, &gsum, ti, r0, r1))
     };
-    let cell_out: Vec<(usize, usize, Matrix)> =
-        if cells > 1 && b * t.m * t.n >= PARALLEL_FLOPS_MIN {
-            parallel_map_dynamic(cells, cell)
-        } else {
-            (0..cells).map(cell).collect()
-        };
-    let mut y = Matrix::zeros(b, t.n);
-    for (ti, r0, block) in &cell_out {
-        y.set_block(*r0, ti * COL_TILE, block);
+    let ng = t.n_groups;
+    if parallel && b > 1 {
+        let chunks: Vec<Vec<f32>> = parallel_for_chunks(b, |range| {
+            let mut buf = vec![0.0f32; range.len() * ng];
+            for (k, r) in range.clone().enumerate() {
+                fill(r, &mut buf[k * ng..(k + 1) * ng]);
+            }
+            buf
+        });
+        let mut flat = Vec::with_capacity(b * ng);
+        for c in chunks {
+            flat.extend_from_slice(&c);
+        }
+        return Matrix::from_vec(b, ng, flat);
     }
-    y
+    let mut gsum = Matrix::zeros(b, ng);
+    for r in 0..b {
+        fill(r, gsum.row_mut(r));
+    }
+    gsum
 }
 
-/// One grid cell: unpack each code row of the tile once, accumulate it
-/// across the cell's activation rows, then apply the per-group
-/// scale/correction.
-fn tile_matmul(
+/// One f32-reference grid cell: the historical kernel, bit-identical to
+/// its PR-3 output — per (row, column) the accumulator sees the same
+/// `xᵢ·qᵢⱼ` additions in the same `i` order. The only restructure is
+/// that the per-code `u8→f32` convert is hoisted into a per-panel
+/// unpack-and-widen pass instead of re-running inside the row loop
+/// (associativity untouched: chunking an outer loop does not regroup
+/// any accumulator's additions).
+fn tile_matmul_f32(
     t: &PackedTiles,
     x: &Matrix,
     gsum: &Matrix,
@@ -391,29 +765,36 @@ fn tile_matmul(
     let mut out = Matrix::zeros(bl, w);
     let mut acc = vec![0.0f32; bl * w];
     let mut row_codes = [0u8; COL_TILE];
-    let mut codes_f = [0.0f32; COL_TILE];
+    let mut cpanel = [0.0f32; PANEL_ROWS * COL_TILE];
     for g in 0..t.n_groups {
         acc.fill(0.0);
         let i0 = g * t.group_size;
         let i1 = (i0 + t.group_size).min(t.m);
-        for i in i0..i1 {
-            unpack_bits_range(packed, t.wbit, i * w, &mut row_codes[..w]);
-            for (cf, &c) in codes_f[..w].iter_mut().zip(&row_codes[..w]) {
-                *cf = c as f32;
-            }
-            // Decode-order gather fused into the loop: code row `i`
-            // multiplies activation feature `perm[i]`.
-            let xi = perm.map_or(i, |p| p[i] as usize);
-            for r in 0..bl {
-                let xv = x.get(r0 + r, xi);
-                if xv == 0.0 {
-                    continue;
-                }
-                let arow = &mut acc[r * w..r * w + w];
-                for (a, &cf) in arow.iter_mut().zip(&codes_f[..w]) {
-                    *a += xv * cf;
+        let mut cs = i0;
+        while cs < i1 {
+            let cl = (i1 - cs).min(PANEL_ROWS);
+            for k in 0..cl {
+                unpack_bits_range(packed, t.wbit, (cs + k) * w, &mut row_codes[..w]);
+                let prow = &mut cpanel[k * w..k * w + w];
+                for (p, &c) in prow.iter_mut().zip(&row_codes[..w]) {
+                    *p = c as f32;
                 }
             }
+            for k in 0..cl {
+                let i = cs + k;
+                // Decode-order gather fused into the loop: code row `i`
+                // multiplies activation feature `perm[i]`.
+                let xi = perm.map_or(i, |p| p[i] as usize);
+                let crow = &cpanel[k * w..k * w + w];
+                for r in 0..bl {
+                    let xv = x.get(r0 + r, xi);
+                    let arow = &mut acc[r * w..r * w + w];
+                    for (a, &cf) in arow.iter_mut().zip(crow) {
+                        *a += xv * cf;
+                    }
+                }
+            }
+            cs += cl;
         }
         for r in 0..bl {
             let gsv = gsum.get(r0 + r, g);
@@ -425,6 +806,113 @@ fn tile_matmul(
         }
     }
     out
+}
+
+// ----- kernel entry points --------------------------------------------
+
+/// Blocked multi-row quantized GEMM over the tiled bitstream,
+/// dispatching to the active [`PackedCore`] (integer by default; the
+/// f32 reference behind `OJBKQ_F32_CORE=1` / [`set_packed_core_override`]).
+///
+/// Tall (batched-capture) inputs parallelize over a grid of
+/// [`ROW_BLOCK`]-row × [`COL_TILE`]-column cells; each cell's output
+/// depends only on its own activation rows, so the split is bit-exact
+/// with respect to any other blocking — exactly so on the integer core
+/// (i32 accumulation), and by fixed per-accumulator addition order on
+/// the f32 core. Act-order layers read activations through the recorded
+/// decode-order permutation (resolved once in the integer prologue, or
+/// fused into the tile loop on the f32 core) — no permuted copy of the
+/// (possibly very tall) batch is ever materialized. Single-row inputs
+/// take [`qgemv_packed`].
+pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
+    qgemm_packed_with(t, x, packed_core())
+}
+
+/// [`qgemm_packed`] with an explicit core — the parity-test and bench
+/// entry point.
+pub fn qgemm_packed_with(t: &PackedTiles, x: &Matrix, core: PackedCore) -> Matrix {
+    assert_eq!(x.cols(), t.m, "activation/layer shape mismatch");
+    if x.rows() == 1 && core == PackedCore::Int {
+        return qgemv_int(t, x);
+    }
+    let b = x.rows();
+    let n_tiles = t.tiles.len();
+    let n_row_blocks = b.div_ceil(ROW_BLOCK).max(1);
+    let cells = n_tiles * n_row_blocks;
+    let parallel = cells > 1 && b * t.m * t.n >= PARALLEL_FLOPS_MIN;
+    let cell_out: Vec<(usize, usize, Matrix)> = match core {
+        PackedCore::Int => {
+            let act = build_int_panel(t, x, parallel);
+            let cell = |c: usize| {
+                let ti = c % n_tiles;
+                let r0 = (c / n_tiles) * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(b);
+                (ti, r0, tile_matmul_int(t, &act, ti, r0, r1))
+            };
+            if parallel {
+                parallel_map_dynamic(cells, cell)
+            } else {
+                (0..cells).map(cell).collect()
+            }
+        }
+        PackedCore::F32 => {
+            let gsum = build_gsum_f32(t, x, parallel);
+            let cell = |c: usize| {
+                let ti = c % n_tiles;
+                let r0 = (c / n_tiles) * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(b);
+                (ti, r0, tile_matmul_f32(t, x, &gsum, ti, r0, r1))
+            };
+            if parallel {
+                parallel_map_dynamic(cells, cell)
+            } else {
+                (0..cells).map(cell).collect()
+            }
+        }
+    };
+    let mut y = Matrix::zeros(b, t.n);
+    for (ti, r0, block) in &cell_out {
+        y.set_block(*r0, ti * COL_TILE, block);
+    }
+    y
+}
+
+/// Single-row packed GEMV — the `m = 1` decode path, where unpack cost
+/// dominates and the group accumulator fits in registers. Dispatches to
+/// the active core: the integer core runs the dedicated
+/// [`tile_gemv_int`] register kernel (bit-identical to the blocked
+/// grid); the f32 reference core shares the grid kernel at `bl = 1`, so
+/// each core produces exactly one set of numerics regardless of entry
+/// point.
+pub fn qgemv_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
+    qgemv_packed_with(t, x, packed_core())
+}
+
+/// [`qgemv_packed`] with an explicit core — the parity-test and bench
+/// entry point.
+pub fn qgemv_packed_with(t: &PackedTiles, x: &Matrix, core: PackedCore) -> Matrix {
+    assert_eq!(x.rows(), 1, "qgemv_packed is the single-row kernel");
+    qgemm_packed_with(t, x, core)
+}
+
+/// Integer-core single-row path behind [`qgemv_packed`] /
+/// [`qgemm_packed`] dispatch.
+fn qgemv_int(t: &PackedTiles, x: &Matrix) -> Matrix {
+    let act = build_int_panel(t, x, false);
+    let n_tiles = t.tiles.len();
+    let parallel = n_tiles > 1 && t.m * t.n >= PARALLEL_FLOPS_MIN;
+    let run = |ti: usize| tile_gemv_int(t, &act, ti);
+    let tiles_out: Vec<Vec<f32>> = if parallel {
+        parallel_map_dynamic(n_tiles, run)
+    } else {
+        (0..n_tiles).map(run).collect()
+    };
+    let mut y = Matrix::zeros(1, t.n);
+    let yrow = y.row_mut(0);
+    for (ti, tv) in tiles_out.iter().enumerate() {
+        yrow[ti * COL_TILE..ti * COL_TILE + tv.len()].copy_from_slice(tv);
+    }
+    y
 }
 
 #[cfg(test)]
@@ -444,7 +932,7 @@ mod tests {
     #[test]
     fn packed_matmul_matches_dequantized_gemm() {
         // Ragged groups (m % gs ≠ 0) and ragged tiles (n % COL_TILE ≠ 0)
-        // across every supported low bit-width.
+        // across every supported low bit-width — on both cores.
         for &wbit in &[2u8, 3, 4] {
             for &(m, n, gs) in &[(48usize, 40usize, 16usize), (33, 37, 12), (20, 5, 0)] {
                 let (w, x) = rand_layer(m, n, wbit as u64 * 100 + m as u64);
@@ -453,12 +941,14 @@ mod tests {
                 let p = PackedLinear::from_quantized(&q, true);
                 assert!(p.is_packed());
                 let dense = matmul(&x, &q.dequantize());
-                let packed = p.matmul(&x);
-                assert!(
-                    packed.rel_err(&dense) < 1e-4,
-                    "wbit={wbit} m={m} n={n} gs={gs}: rel={}",
-                    packed.rel_err(&dense)
-                );
+                for core in [PackedCore::Int, PackedCore::F32] {
+                    let packed = qgemm_packed_with(p.as_packed().unwrap(), &x, core);
+                    assert!(
+                        packed.rel_err(&dense) < 1e-4,
+                        "{core:?} wbit={wbit} m={m} n={n} gs={gs}: rel={}",
+                        packed.rel_err(&dense)
+                    );
+                }
             }
         }
     }
@@ -472,8 +962,10 @@ mod tests {
         let p = PackedLinear::from_quantized(&q, true);
         assert!(p.is_packed(), "perm layers must run on the integer kernel");
         let dense = matmul(&x, &q.dequantize()); // effective, original order
-        let packed = p.matmul(&x);
-        assert!(packed.rel_err(&dense) < 1e-4, "rel={}", packed.rel_err(&dense));
+        for core in [PackedCore::Int, PackedCore::F32] {
+            let packed = qgemm_packed_with(p.as_packed().unwrap(), &x, core);
+            assert!(packed.rel_err(&dense) < 1e-4, "{core:?} rel={}", packed.rel_err(&dense));
+        }
         // And the dense reconstruction agrees with the solver's effective.
         assert!(p.to_dense().rel_err(&q.dequantize()) < 1e-5);
     }
@@ -527,11 +1019,33 @@ mod tests {
     }
 
     #[test]
+    fn tile_streams_are_word_aligned_and_payload_is_logical() {
+        let (w, x) = rand_layer(33, 37, 21);
+        let cfg = QuantConfig { wbit: 3, group_size: 12, ..Default::default() };
+        let q = rtn::quantize(&w, &cfg);
+        let p = PackedLinear::from_quantized(&q, true);
+        let t = p.as_packed().unwrap();
+        for (ti, stream) in t.tiles().iter().enumerate() {
+            assert_eq!(stream.len() % 8, 0, "tile {ti} not word-aligned");
+            let wd = COL_TILE.min(37 - ti * COL_TILE);
+            let logical = packed_len(33 * wd, 3);
+            assert_eq!(t.tile_payload(ti).len(), logical, "tile {ti} payload");
+            assert_eq!(&stream[..logical], t.tile_payload(ti));
+            assert!(stream[logical..].iter().all(|&b| b == 0), "pad must be zero");
+        }
+        // Padding is invisible to the kernels.
+        let y = p.matmul(&x);
+        assert_eq!(y, qgemm_packed_with(t, &x, packed_core()));
+    }
+
+    #[test]
     fn tall_batch_grid_matches_per_sequence_chunks() {
         // The row-block × tile grid (and its parallel leg) must be
         // bit-exact against per-chunk calls: a tall stacked batch equals
         // the vstack of its parts — including act-order layers, whose
-        // decode-order gather is fused into the tile loop.
+        // decode-order gather is resolved in the prologue, and including
+        // the single-row qgemv path (the 1-row part below) — on both
+        // cores.
         let mut rng = Rng::new(0x7A11);
         let w = Matrix::randn(48, 40, 0.5, &mut rng);
         let xcal = Matrix::randn(16, 48, 1.0, &mut rng);
@@ -551,10 +1065,14 @@ mod tests {
         assert!(tall.rows() * 48 * 40 >= PARALLEL_FLOPS_MIN);
         for p in &layers {
             assert!(p.is_packed());
-            let batched = p.matmul(&tall);
-            let stacked =
-                Matrix::vstack_all(&parts.iter().map(|x| p.matmul(x)).collect::<Vec<_>>());
-            assert_eq!(batched, stacked, "grid blocking must be bit-exact");
+            let t = p.as_packed().unwrap();
+            for core in [PackedCore::Int, PackedCore::F32] {
+                let batched = qgemm_packed_with(t, &tall, core);
+                let stacked = Matrix::vstack_all(
+                    &parts.iter().map(|x| qgemm_packed_with(t, x, core)).collect::<Vec<_>>(),
+                );
+                assert_eq!(batched, stacked, "{core:?} grid blocking must be bit-exact");
+            }
         }
     }
 
@@ -569,8 +1087,14 @@ mod tests {
             let (s, c) = (t.scales().clone(), t.corr().clone());
             PackedTiles::from_parts(20, 40, wbit, gs, tiles, s, c, perm)
         };
-        // Faithful reassembly executes bit-identically.
+        // Faithful reassembly executes bit-identically — from the
+        // resident (word-aligned) streams or the serialized (logical)
+        // payloads alike.
         let back = rebuild(3, 8, t.tiles().to_vec(), None).unwrap();
+        assert_eq!(qgemm_packed(&back, &x), p.matmul(&x));
+        let logical: Vec<Vec<u8>> =
+            (0..t.tiles().len()).map(|ti| t.tile_payload(ti).to_vec()).collect();
+        let back = rebuild(3, 8, logical, None).unwrap();
         assert_eq!(qgemm_packed(&back, &x), p.matmul(&x));
         // Every broken invariant is an Err, not a panic.
         assert!(rebuild(0, 8, t.tiles().to_vec(), None).is_err(), "wbit 0");
@@ -580,7 +1104,7 @@ mod tests {
         assert!(rebuild(3, 16, t.tiles().to_vec(), None).is_err(), "wrong n_groups");
         assert!(rebuild(3, 8, t.tiles()[..1].to_vec(), None).is_err(), "missing tile");
         let mut short = t.tiles().to_vec();
-        short[1].pop();
+        short[1].truncate(t.tile_payload(1).len() - 1);
         assert!(rebuild(3, 8, short, None).is_err(), "short tile stream");
         assert!(rebuild(3, 8, t.tiles().to_vec(), Some(vec![0; 20])).is_err(), "dup perm");
         let mut oob: Vec<u32> = (0..20).collect();
@@ -595,7 +1119,47 @@ mod tests {
         let (w, _) = rand_layer(24, 6, 5);
         let cfg = QuantConfig { wbit: 3, group_size: 8, ..Default::default() };
         let p = PackedLinear::from_quantized(&rtn::quantize(&w, &cfg), true);
-        let y = p.matmul(&Matrix::zeros(3, 24));
-        assert!(y.as_slice().iter().all(|&v| v == 0.0));
+        let t = p.as_packed().unwrap();
+        for core in [PackedCore::Int, PackedCore::F32] {
+            let y = qgemm_packed_with(t, &Matrix::zeros(3, 24), core);
+            assert!(y.as_slice().iter().all(|&v| v == 0.0), "{core:?}");
+        }
+    }
+
+    #[test]
+    fn gemv_entry_matches_gemm_row() {
+        // qgemv_packed ≡ qgemm_packed on a 1-row input, per core, and
+        // both match the corresponding row of a taller batch.
+        let (w, x) = rand_layer(48, 40, 0xE1);
+        let cfg = QuantConfig { wbit: 4, group_size: 16, ..Default::default() };
+        let p = PackedLinear::from_quantized(&rtn::quantize(&w, &cfg), true);
+        let t = p.as_packed().unwrap();
+        let row0 = x.block(0, 0, 1, 48);
+        for core in [PackedCore::Int, PackedCore::F32] {
+            let via_gemv = qgemv_packed_with(t, &row0, core);
+            let via_gemm = qgemm_packed_with(t, &row0, core);
+            assert_eq!(via_gemv, via_gemm, "{core:?}");
+            let tall = qgemm_packed_with(t, &x, core);
+            assert_eq!(via_gemv.row(0), &tall.row(0)[..], "{core:?} vs batch row");
+        }
+    }
+
+    #[test]
+    fn act_amp_respects_overflow_budget() {
+        // i16-bounded for deployment shapes, shrunk for huge groups ×
+        // wide codes so `amp·maxcode·group_size` stays below 2³¹.
+        let (w, _) = rand_layer(256, 8, 1);
+        let q = rtn::quantize(&w, &QuantConfig { wbit: 4, group_size: 128, ..Default::default() });
+        let p = PackedLinear::from_quantized(&q, true);
+        let amp = act_amp(p.as_packed().unwrap());
+        assert_eq!(amp, i16::MAX as f32);
+        // Synthetic worst case: whole-column group at W8.
+        let q = rtn::quantize(&w, &QuantConfig { wbit: 8, group_size: 0, ..Default::default() });
+        let p = PackedLinear::from_quantized(&q, true);
+        let t = p.as_packed().unwrap();
+        let amp = act_amp(t) as u64;
+        let maxcode = (1u64 << t.wbit()) - 1;
+        assert!(amp * maxcode * t.group_size() as u64 <= i32::MAX as u64);
+        assert!(amp >= 1);
     }
 }

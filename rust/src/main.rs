@@ -5,7 +5,7 @@
 //! ojbkq quantize  --model NAME [--method ours] [--wbit 4] [--group 128]
 //!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
 //!                 [--calib 32] [--seq 128] [--out CKPT.ojbq1]
-//!                 [--dense-out PATH] [--dense-exec]
+//!                 [--dense-out PATH] [--dense-exec] [--f32-core]
 //! ojbkq eval      --model NAME [--method ours] [--from CKPT.ojbq1]
 //!                 [--ppl-tokens 8192] [--zeroshot] [--reasoning]
 //!                 (quantize + evaluate, or evaluate a saved checkpoint)
@@ -15,7 +15,13 @@
 //! Quantized execution is on by default: the pipeline returns a packed
 //! [`ojbkq::infer::QuantizedModel`] whose calibration captures and evals
 //! run straight from bit-packed integer codes. `--dense-exec` restores
-//! the legacy dense f32 splice (also: `OJBKQ_DENSE_EXEC=1`).
+//! the legacy dense f32 splice (also: `OJBKQ_DENSE_EXEC=1`). Packed
+//! layers execute on the **integer core** by default — i32 group
+//! accumulation over fixed-point activations, f32 touched once per
+//! group boundary; `--f32-core` (also: `OJBKQ_F32_CORE=1`) pins the
+//! per-code dequantize-and-FMA f32 reference kernel instead, the parity
+//! baseline for the integer core (see DESIGN.md §Integer-core packed
+//! GEMM).
 //!
 //! `quantize --out` writes the **native packed OJBQ1 checkpoint**
 //! (`ojbkq::infer::save_quantized`) — integer codes, scale/correction
@@ -40,6 +46,11 @@ use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::parse();
+    if args.get_flag("f32-core") {
+        // Process-global kernel toggle: pin the f32 reference core for
+        // every packed matmul this run (capture, eval, checkpoint serving).
+        ojbkq::infer::set_packed_core_override(Some(ojbkq::infer::PackedCore::F32));
+    }
     let code = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("methods") => cmd_methods(),

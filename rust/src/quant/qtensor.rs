@@ -155,19 +155,100 @@ pub fn unpack_bits(packed: &[u8], wbit: u8, n: usize) -> Vec<u8> {
 /// engine (`crate::infer`), which unpacks one row of a column tile at a
 /// time into a stack buffer without touching the rest of the stream.
 ///
-/// The deployment widths take **table-driven fast paths**: one byte load
-/// decodes two W4 codes or four W2 codes through a 256-entry LUT, and W3
-/// decodes eight codes per aligned 3-byte group with in-register shifts.
-/// Other widths (and the unaligned head/tail of every call) fall back to
-/// the per-code shift loop ([`unpack_bits_range_shift`], kept public as
-/// the equivalence reference).
+/// The deployment widths take **u64 bit-sliced fast paths**: one 8-byte
+/// little-endian word load yields 16 W4 codes, 32 W2 codes, or (from its
+/// low 48 bits) 16 W3 codes, each extracted with an in-register
+/// shift+mask — replacing the byte-at-a-time 256-entry LUT walk
+/// ([`unpack_bits_range_lut`], kept public as a secondary equivalence
+/// reference). Other widths, the unaligned head, and the stream tail
+/// where a full word load would run past the buffer fall back to the
+/// per-code shift loop ([`unpack_bits_range_shift`]). Streams produced
+/// by the packed engine are word-aligned (padded to a multiple of 8
+/// bytes, `crate::infer::packed::PackedTiles`), so on the hot path the
+/// word loop covers effectively every code.
 pub fn unpack_bits_range(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) {
+    match wbit {
+        2 => unpack_range_w2_u64(packed, start, out),
+        3 => unpack_range_w3_u64(packed, start, out),
+        4 => unpack_range_w4_u64(packed, start, out),
+        _ => unpack_bits_range_shift(packed, wbit, start, out),
+    }
+}
+
+/// Table-driven unpack (the PR-3 fast path): one byte load decodes two
+/// W4 codes or four W2 codes through a 256-entry LUT, and W3 decodes
+/// eight codes per aligned 3-byte group from a u32. Superseded by the
+/// u64 bit-sliced paths of [`unpack_bits_range`]; kept public as a
+/// second equivalence reference (the three-way u64/LUT/shift agreement
+/// tests) and a bench baseline (`fig_qgemm`).
+pub fn unpack_bits_range_lut(packed: &[u8], wbit: u8, start: usize, out: &mut [u8]) {
     match wbit {
         2 => unpack_range_w2(packed, start, out),
         3 => unpack_range_w3(packed, start, out),
         4 => unpack_range_w4(packed, start, out),
         _ => unpack_bits_range_shift(packed, wbit, start, out),
     }
+}
+
+/// Load 8 little-endian bytes at `byte` as a u64 word.
+#[inline]
+fn load_word(packed: &[u8], byte: usize) -> u64 {
+    u64::from_le_bytes(packed[byte..byte + 8].try_into().unwrap())
+}
+
+fn unpack_range_w4_u64(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    // Byte-align: W4 codes come two per byte.
+    let lead = ((2 - start % 2) % 2).min(n);
+    unpack_bits_range_shift(packed, 4, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) / 2;
+    while n - o >= 16 && byte + 8 <= packed.len() {
+        let w = load_word(packed, byte);
+        for (k, slot) in out[o..o + 16].iter_mut().enumerate() {
+            *slot = ((w >> (4 * k)) & 0xF) as u8;
+        }
+        byte += 8;
+        o += 16;
+    }
+    unpack_bits_range_shift(packed, 4, start + o, &mut out[o..]);
+}
+
+fn unpack_range_w2_u64(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    // Byte-align: W2 codes come four per byte.
+    let lead = ((4 - start % 4) % 4).min(n);
+    unpack_bits_range_shift(packed, 2, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) / 4;
+    while n - o >= 32 && byte + 8 <= packed.len() {
+        let w = load_word(packed, byte);
+        for (k, slot) in out[o..o + 32].iter_mut().enumerate() {
+            *slot = ((w >> (2 * k)) & 0x3) as u8;
+        }
+        byte += 8;
+        o += 32;
+    }
+    unpack_bits_range_shift(packed, 2, start + o, &mut out[o..]);
+}
+
+fn unpack_range_w3_u64(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    // Align to the 8-code / 3-byte period, then pull 16 codes from the
+    // low 48 bits of each word load, advancing 6 bytes per iteration.
+    let lead = ((8 - start % 8) % 8).min(n);
+    unpack_bits_range_shift(packed, 3, start, &mut out[..lead]);
+    let mut o = lead;
+    let mut byte = (start + lead) * 3 / 8;
+    while n - o >= 16 && byte + 8 <= packed.len() {
+        let w = load_word(packed, byte);
+        for (k, slot) in out[o..o + 16].iter_mut().enumerate() {
+            *slot = ((w >> (3 * k)) & 0x7) as u8;
+        }
+        byte += 6;
+        o += 16;
+    }
+    unpack_bits_range_shift(packed, 3, start + o, &mut out[o..]);
 }
 
 /// Reference per-code shift unpack (the pre-LUT kernel). Handles every
@@ -302,11 +383,12 @@ mod tests {
     }
 
     #[test]
-    fn lut_unpack_matches_shift_unpack() {
+    fn u64_and_lut_unpack_match_shift_unpack() {
         // Deployment widths, exhaustively over byte patterns: a stream
         // containing every code value adjacency, decoded at every start
-        // offset and several lengths, must agree with the shift reference
-        // exactly.
+        // offset and several lengths, must agree across all three
+        // kernels — the u64 bit-sliced dispatch, the 256-entry LUT walk,
+        // and the per-code shift reference — exactly.
         for &wbit in &[2u8, 3, 4] {
             let per_code = 1usize << wbit;
             // All pairs (a, b) of code values, flattened — covers every
@@ -315,16 +397,20 @@ mod tests {
                 .flat_map(|a| (0..per_code).flat_map(move |b| [a as u8, b as u8]))
                 .collect();
             let packed = pack_bits(&codes, wbit);
-            for start in 0..codes.len().min(24) {
-                for len in [0usize, 1, 2, 7, 8, 9, 31, codes.len() - start] {
+            for start in 0..codes.len().min(40) {
+                for len in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 31, 32, 33, codes.len() - start]
+                {
                     if start + len > codes.len() {
                         continue;
                     }
                     let mut fast = vec![0xAAu8; len];
+                    let mut lut = vec![0xBBu8; len];
                     let mut slow = vec![0x55u8; len];
                     unpack_bits_range(&packed, wbit, start, &mut fast);
+                    unpack_bits_range_lut(&packed, wbit, start, &mut lut);
                     unpack_bits_range_shift(&packed, wbit, start, &mut slow);
-                    assert_eq!(fast, slow, "wbit={wbit} start={start} len={len}");
+                    assert_eq!(fast, slow, "u64 wbit={wbit} start={start} len={len}");
+                    assert_eq!(lut, slow, "lut wbit={wbit} start={start} len={len}");
                     assert_eq!(fast, &codes[start..start + len], "wbit={wbit} vs source");
                 }
             }

@@ -150,3 +150,170 @@ fn eval_scores_match_between_packed_and_dense_exec() {
     assert!(rel < 0.02, "packed ppl {ppl_p} vs dense ppl {ppl_d}");
     assert!(ppl_p.is_finite() && ppl_p > 1.0);
 }
+
+// ----- integer-core vs f32-reference parity (PR 6) ---------------------
+
+use ojbkq::infer::{qgemm_packed_with, qgemv_packed_with, PackedCore, PackedLinear};
+use ojbkq::quant::qtensor::{
+    pack_bits, unpack_bits_range, unpack_bits_range_lut, unpack_bits_range_shift,
+};
+use ojbkq::quant::{gptq, rtn};
+use ojbkq::tensor::Matrix;
+
+/// Relative parity bound between the integer core and the f32
+/// reference: the integer core quantizes activations onto a per-group
+/// fixed-point grid of amplitude ≤ 32767, so its results differ from
+/// the f32 kernel by O(group_max/2·amp) per activation — measured
+/// ≈ 2-4·10⁻⁵ Frobenius-relative on gaussian layers, bounded here with
+/// headroom (see DESIGN.md §Integer-core packed GEMM).
+const CORE_PARITY_REL: f64 = 1e-4;
+
+/// Kernel-level parity across every deployment width, ragged group and
+/// tile shapes, the act-order (perm) path, the m=1 gemv entry, and a
+/// tall batch that takes the parallel grid.
+#[test]
+fn int_core_matches_f32_core_across_widths_and_shapes() {
+    let mut rng = Rng::new(0xC0DE);
+    for &wbit in &[2u8, 3, 4] {
+        for &(m, n, gs) in &[(48usize, 40usize, 16usize), (33, 37, 12), (64, 96, 0)] {
+            let w = Matrix::randn(m, n, 0.5, &mut rng);
+            let cfg = QuantConfig { wbit, group_size: gs, ..Default::default() };
+            let q = rtn::quantize(&w, &cfg);
+            let p = PackedLinear::from_quantized(&q, true);
+            let t = p.as_packed().unwrap();
+            for &b in &[1usize, 8, 600] {
+                let x = Matrix::randn(b, m, 1.0, &mut rng);
+                let yi = qgemm_packed_with(t, &x, PackedCore::Int);
+                let yf = qgemm_packed_with(t, &x, PackedCore::F32);
+                let rel = yi.rel_err(&yf);
+                assert!(
+                    rel < CORE_PARITY_REL,
+                    "wbit={wbit} m={m} n={n} gs={gs} b={b}: int vs f32 rel={rel}"
+                );
+                if b == 1 {
+                    assert_eq!(
+                        qgemv_packed_with(t, &x, PackedCore::Int),
+                        yi,
+                        "gemv entry must be bit-identical to the gemm path"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The act-order decode-permutation path holds the same parity: the
+/// integer prologue resolves the gather once, the f32 core gathers
+/// inside the tile loop — same math, same bound.
+#[test]
+fn int_core_matches_f32_core_act_order() {
+    let mut rng = Rng::new(0xAC7);
+    let w = Matrix::randn(40, 24, 0.5, &mut rng);
+    let xcal = Matrix::randn(16, 40, 1.0, &mut rng);
+    let cfg = QuantConfig { wbit: 4, group_size: 8, act_order: true, ..Default::default() };
+    let q = gptq::quantize(&w, &xcal, &cfg).unwrap();
+    assert!(q.perm.is_some());
+    let p = PackedLinear::from_quantized(&q, true);
+    let t = p.as_packed().unwrap();
+    for &b in &[1usize, 7, 130] {
+        let x = Matrix::randn(b, 40, 1.0, &mut rng);
+        let rel =
+            qgemm_packed_with(t, &x, PackedCore::Int).rel_err(&qgemm_packed_with(t, &x, PackedCore::F32));
+        assert!(rel < CORE_PARITY_REL, "b={b}: rel={rel}");
+    }
+}
+
+/// Both cores are bit-stable across thread counts: the integer core by
+/// exact i32 accumulation, the f32 core by fixed per-accumulator
+/// addition order. A tall batch (above the parallel threshold) must
+/// reproduce the single-thread result exactly at any pin.
+#[test]
+fn cores_are_bit_stable_across_thread_counts() {
+    let mut rng = Rng::new(0x7C0);
+    let w = Matrix::randn(48, 40, 0.5, &mut rng);
+    let cfg = QuantConfig { wbit: 4, group_size: 16, ..Default::default() };
+    let p = PackedLinear::from_quantized(&rtn::quantize(&w, &cfg), true);
+    let t = p.as_packed().unwrap();
+    let x = Matrix::randn(600, 48, 1.0, &mut rng); // 600·48·40 ≥ 2^20
+    for core in [PackedCore::Int, PackedCore::F32] {
+        ojbkq::parallel::set_thread_override(1);
+        let base = qgemm_packed_with(t, &x, core);
+        for threads in [2usize, 3, 5, 8] {
+            ojbkq::parallel::set_thread_override(threads);
+            assert_eq!(
+                qgemm_packed_with(t, &x, core),
+                base,
+                "{core:?} not bit-stable at {threads} threads"
+            );
+        }
+        ojbkq::parallel::set_thread_override(0);
+    }
+}
+
+/// Model-level parity: the same packed model forwards the same tokens
+/// under both cores (flipped via the process-global override, as the
+/// CLI's `--f32-core` does) to logits within the spliced-model
+/// tolerance the rest of this suite uses.
+#[test]
+fn model_forward_parity_between_cores() {
+    let (model, corpus) = setup(24, 40);
+    let toks: Vec<u16> = vec![4, 19, 7, 33, 2, 41, 11];
+    let cfg = QuantConfig {
+        wbit: 3,
+        group_size: 9,
+        k: 2,
+        ntile: 16,
+        packed_exec: true,
+        ..QuantConfig::paper_defaults(3, 9)
+    };
+    let (qm, _) = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 24, None).unwrap();
+    ojbkq::infer::set_packed_core_override(Some(PackedCore::Int));
+    let li = qm.forward(&toks);
+    ojbkq::infer::set_packed_core_override(Some(PackedCore::F32));
+    let lf = qm.forward(&toks);
+    ojbkq::infer::set_packed_core_override(None);
+    let rel = li.rel_err(&lf);
+    assert!(rel < 1e-3, "int vs f32 logits rel={rel}");
+}
+
+/// Exhaustive three-way unpack equivalence at the deployment widths:
+/// the u64 bit-sliced fast path, the PR-3 LUT path, and the per-code
+/// shift reference must agree code-for-code — over streams laid out
+/// from every byte pattern, at every alignment class, on logical and
+/// word-padded stream lengths alike.
+#[test]
+fn u64_lut_and_shift_unpack_agree() {
+    let mut scratch_a = [0u8; 97];
+    let mut scratch_b = [0u8; 97];
+    let mut scratch_c = [0u8; 97];
+    for &wbit in &[2u8, 3, 4] {
+        let maxc = 1u16 << wbit;
+        // Codes cycling through every value and every adjacent pair, long
+        // enough for several u64 words plus ragged head and tail.
+        let codes: Vec<u8> =
+            (0..97u16).map(|i| ((i * 7 + i * i) % maxc) as u8).collect();
+        let logical = pack_bits(&codes, wbit);
+        let mut padded = logical.clone();
+        padded.resize(logical.len().div_ceil(8) * 8, 0);
+        for stream in [&logical, &padded] {
+            for start in 0..codes.len() {
+                for &len in &[0usize, 1, 7, 15, 16, 17, 31, 32, 33, codes.len() - start] {
+                    if len > codes.len() - start {
+                        continue;
+                    }
+                    let (a, b, c) = (
+                        &mut scratch_a[..len],
+                        &mut scratch_b[..len],
+                        &mut scratch_c[..len],
+                    );
+                    unpack_bits_range(stream, wbit, start, a);
+                    unpack_bits_range_lut(stream, wbit, start, b);
+                    unpack_bits_range_shift(stream, wbit, start, c);
+                    assert_eq!(a, c, "u64 vs shift: wbit={wbit} start={start} len={len}");
+                    assert_eq!(b, c, "lut vs shift: wbit={wbit} start={start} len={len}");
+                    assert_eq!(&codes[start..start + len], c, "shift vs packer");
+                }
+            }
+        }
+    }
+}
