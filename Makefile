@@ -10,7 +10,7 @@
 PYTHON    ?= python3
 ARTIFACTS ?= rust/artifacts
 
-.PHONY: artifacts artifacts-quick golden-fixture test bench clean-artifacts
+.PHONY: artifacts artifacts-quick golden-fixture test bench trajectory clean-artifacts
 
 # Regenerate the committed OJBQ1 golden fixture + logits snapshot
 # (rust/tests/fixtures/) — only needed on a deliberate format bump; the
@@ -23,11 +23,25 @@ artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
 
 # Reduced flavor for CI / smoke runs: one model, fewer steps, quick AOT
-# variant subset. Produces the same file formats in the same place.
+# variant subset. Produces the same file formats in the same place, then
+# emits the perf-trajectory record against the freshly trained model.
 artifacts-quick:
 	cd python && $(PYTHON) -m compile.pretrain --out ../$(ARTIFACTS) \
 		--models tiny-0.2M --steps 200
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS) --quick
+	$(MAKE) trajectory
+
+# Perf-trajectory artifacts: quick-scale packed-GEMM + solver benches
+# (BENCH_qgemm.json / BENCH_solver.json, written to rust/) plus a traced
+# tiny-model quantize whose trace.json must pass the schema checker —
+# the files the CI artifact job uploads on every push so perf and quant
+# quality are comparable across commits.
+trajectory:
+	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_qgemm
+	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench perf_solver
+	cd rust && cargo run --release -- quantize --model tiny-0.2M \
+		--calib 4 --seq 64 --trace-out trace.json --trace
+	cd rust && cargo run --release -- check-trace trace.json
 
 test:
 	cd rust && cargo test --release -q

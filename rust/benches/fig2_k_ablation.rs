@@ -18,7 +18,7 @@ fn main() {
 
     let mut table = Table::new(
         &format!("Figure 2 — K ablation on {} (4-bit g128)", mc.name),
-        &["K", "ppl in-domain", "ppl shifted", "quant secs"],
+        &["K", "ppl in-domain", "ppl shifted", "quant secs", "klein samples", "impr %"],
     );
     let mut series = Vec::new();
     for &k in &ks {
@@ -26,21 +26,35 @@ fn main() {
         // matching Algorithm 4 (K candidates + Babai point).
         let cfg = QuantConfig { k, ..QuantConfig::paper_defaults(4, 128) };
         let t0 = std::time::Instant::now();
-        let (qm, _) =
+        let (qm, report) =
             quantize_model(&wb.model, &wb.corpus, Method::KleinRandomK, &cfg, n_calib, seq, None)
                 .expect("quantize");
         let secs = t0.elapsed().as_secs_f64();
+        // Solver decode stats aggregated over every quantized linear:
+        // how many Klein paths were sampled, and on what fraction of
+        // columns a sampled path beat the greedy Babai point — the
+        // mechanism behind the ppl-vs-K curve this figure plots.
+        let samples: u64 = report.layers.iter().map(|l| l.klein_samples).sum();
+        let improved: u64 = report.layers.iter().map(|l| l.klein_improved).sum();
+        let cols: u64 = report.layers.iter().map(|l| l.cols).sum();
+        let impr = 100.0 * improved as f64 / cols.max(1) as f64;
         let (pin, psh) = perplexity_pair(&qm, &wb.corpus, &wb.shifted, mc.max_seq, ppl_tokens);
         table.push_row(&[
             k.to_string(),
             format!("{pin:.3}"),
             format!("{psh:.3}"),
             format!("{secs:.2}"),
+            samples.to_string(),
+            format!("{impr:.1}"),
         ]);
-        eprintln!("[fig2] K={k}: ppl {pin:.3}/{psh:.3} ({secs:.1}s)");
+        eprintln!(
+            "[fig2] K={k}: ppl {pin:.3}/{psh:.3} ({secs:.1}s, {samples} samples, \
+             {impr:.1}% cols improved)"
+        );
         series.push(pin);
     }
     table.emit(Some(&exp::results_dir()), "fig2_k_ablation");
+    exp::emit_bench_trace("fig2_k_ablation");
     // Shape note: K=5 should capture most of the K=50 improvement.
     if series.len() >= 2 {
         eprintln!(

@@ -61,6 +61,7 @@ fn main() {
     let payload = format!("{{{}}}\n", fields.join(","));
     std::fs::write("BENCH_qgemm.json", &payload).expect("write BENCH_qgemm.json");
     eprintln!("[bench] wrote BENCH_qgemm.json");
+    exp::emit_bench_trace("fig_qgemm");
 }
 
 /// Per-layer kernel comparison across the batch sweep.

@@ -231,4 +231,5 @@ fn main() {
     let payload = format!("{{{}}}\n", fields.join(","));
     std::fs::write("BENCH_solver.json", &payload).expect("write BENCH_solver.json");
     eprintln!("[bench] wrote BENCH_solver.json");
+    exp::emit_bench_trace("perf_solver");
 }

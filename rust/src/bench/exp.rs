@@ -84,6 +84,30 @@ pub fn ppl_tokens() -> usize {
     }
 }
 
+/// Drain the observability registry into a `trace.json` next to the
+/// bench tables, when tracing is on (`OJBKQ_TRACE=1`). `label` names the
+/// bench (becomes the `bench` config key); no-op when tracing is
+/// disabled so benches pay nothing by default. Each bench calls this
+/// once at the end of its run, giving the perf-trajectory artifacts a
+/// span/counter manifest alongside the raw timing tables.
+pub fn emit_bench_trace(label: &str) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let config = vec![
+        ("bench".to_string(), label.to_string()),
+        ("quick".to_string(), quick().to_string()),
+    ];
+    let trace = crate::report::RunTrace::capture(config);
+    let dir = results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("TRACE_{label}.json"));
+    match trace.write(&path) {
+        Ok(()) => println!("[bench] wrote trace manifest to {}", path.display()),
+        Err(e) => eprintln!("[bench] writing trace {}: {e}", path.display()),
+    }
+}
+
 /// One-line timing decomposition of a pipeline run: total wall clock,
 /// activation-capture share, solver share, and the number of
 /// transformer-block advances the captures cost (linear in depth under

@@ -152,6 +152,85 @@ impl PipelineReport {
     pub fn solver_secs(&self) -> f64 {
         self.layers.iter().map(|l| l.stats.solve_secs).sum()
     }
+
+    /// Per-layer residual table — the Fig.-1-style quality breakdown
+    /// that replaces the old single-scalar summary: runtime/JTA errors,
+    /// relative error, decode residual, Klein improvement rate, clip
+    /// rate, and code occupancy for every quantized linear.
+    pub fn layer_table(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            "Per-layer quantization quality",
+            &[
+                "layer",
+                "rt err",
+                "jta err",
+                "rel err",
+                "decode resid",
+                "klein impr %",
+                "clip %",
+                "occupancy",
+                "solve s",
+            ],
+        );
+        for l in &self.layers {
+            let s = &l.stats;
+            let rel = if s.out_norm > 0.0 { s.rt_err / s.out_norm } else { 0.0 };
+            t.push_row(&[
+                l.id.to_string(),
+                format!("{:.4}", s.rt_err),
+                format!("{:.4}", s.jta_err),
+                format!("{:.5}", rel),
+                format!("{:.4}", s.decode_resid),
+                format!("{:.1}", 100.0 * s.klein_improvement_rate()),
+                format!("{:.2}", 100.0 * s.clip_rate),
+                format!("{:.3}", s.occupancy),
+                format!("{:.3}", s.solve_secs),
+            ]);
+        }
+        t
+    }
+
+    /// Per-layer metric records for `trace.json`
+    /// ([`crate::report::RunTrace::layers`]); keys come from
+    /// [`crate::obs::LAYER_METRIC_NAMES`].
+    pub fn trace_layers(&self) -> Vec<crate::report::LayerTraceRow> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let s = &l.stats;
+                crate::report::LayerTraceRow {
+                    id: l.id.to_string(),
+                    metrics: vec![
+                        ("rt_err".into(), s.rt_err),
+                        ("jta_err".into(), s.jta_err),
+                        ("out_norm".into(), s.out_norm),
+                        ("decode_resid".into(), s.decode_resid),
+                        ("greedy_resid".into(), s.greedy_resid),
+                        ("cols".into(), s.cols as f64),
+                        ("klein_samples".into(), s.klein_samples as f64),
+                        ("klein_improved".into(), s.klein_improved as f64),
+                        ("clip_rate".into(), s.clip_rate),
+                        ("occupancy".into(), s.occupancy),
+                        ("solve_secs".into(), s.solve_secs),
+                        ("capture_secs".into(), s.capture_secs),
+                        ("packed_bytes".into(), l.packed_bytes as f64),
+                        ("fp_bytes".into(), l.fp_bytes as f64),
+                    ],
+                }
+            })
+            .collect()
+    }
+}
+
+/// Span name for a tap-point group (member of
+/// [`crate::obs::SPAN_NAMES`]).
+fn tap_span(p: TapPoint) -> &'static str {
+    match p {
+        TapPoint::AttnIn => "attn_in",
+        TapPoint::OIn => "o_in",
+        TapPoint::MlpIn => "mlp_in",
+        TapPoint::DownIn => "down_in",
+    }
 }
 
 /// How the pipeline obtains calibration activations.
@@ -254,6 +333,7 @@ impl<'a> Pipeline<'a> {
     /// Execute the pipeline; returns the packed quantized model and the
     /// report.
     pub fn run(mut self) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
+        let _pipeline_span = crate::obs::span("pipeline");
         let t0 = Instant::now();
         let mut report =
             PipelineReport { method: self.method.label().to_string(), ..Default::default() };
@@ -270,15 +350,18 @@ impl<'a> Pipeline<'a> {
                 // Quantization never touches the embedding, so the
                 // runtime cache starts as an exact copy of the FP cache
                 // (which is skipped entirely at the QEP corner).
-                let tc = Instant::now();
                 let model = self.fp_model;
                 let calib = &self.calib;
-                let parts = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
-                self.rt_batch = Some(RowBatch::stack(&parts));
-                if !self.skip_fp {
-                    self.fp_batch = self.rt_batch.clone();
-                }
-                report.capture_secs += tc.elapsed().as_secs_f64();
+                let skip_fp = self.skip_fp;
+                let ((rt_batch, fp_batch), secs) = crate::obs::timed("embed", || {
+                    let parts = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+                    let rt = RowBatch::stack(&parts);
+                    let fp = if skip_fp { None } else { Some(rt.clone()) };
+                    (rt, fp)
+                });
+                self.rt_batch = Some(rt_batch);
+                self.fp_batch = fp_batch;
+                report.capture_secs += secs;
             }
             CaptureMode::Reforward => {
                 self.dense_runtime = Some(self.fp_model.clone());
@@ -302,17 +385,21 @@ impl<'a> Pipeline<'a> {
         block: usize,
         report: &mut PipelineReport,
     ) -> HashMap<TapPoint, Matrix> {
-        let t0 = Instant::now();
         let model = self.fp_model;
-        let mut taps = TapSet::request(block, &TapPoint::all());
-        let batch = self.fp_batch.as_mut().expect("fp cache initialized");
-        model.block_step_batch(batch, block, &mut taps);
-        let mut out = HashMap::new();
-        for p in TapPoint::all() {
-            out.insert(p, taps.take(block, p).expect("fp tap missing"));
-        }
+        let fp_batch = &mut self.fp_batch;
+        let (out, secs) = crate::obs::timed("fp_step", || {
+            let mut taps = TapSet::request(block, &TapPoint::all());
+            let batch = fp_batch.as_mut().expect("fp cache initialized");
+            model.block_step_batch(batch, block, &mut taps);
+            let mut out = HashMap::new();
+            for p in TapPoint::all() {
+                out.insert(p, taps.take(block, p).expect("fp tap missing"));
+            }
+            out
+        });
         report.capture_block_steps += self.calib.len() as u64;
-        report.capture_secs += t0.elapsed().as_secs_f64();
+        crate::obs::counter_add("capture.block_steps", self.calib.len() as u64);
+        report.capture_secs += secs;
         out
     }
 
@@ -334,59 +421,65 @@ impl<'a> Pipeline<'a> {
 
         // Group [Q K V]: AttnIn is a norm of the resident runtime stack —
         // no upstream weights of this block are involved.
-        let t0 = Instant::now();
-        let attn_in = self
-            .runtime
-            .attn_in_batch(self.rt_batch.as_ref().expect("rt cache").data(), block);
-        let cap = t0.elapsed().as_secs_f64();
+        let g = crate::obs::span(tap_span(TapPoint::AttnIn));
+        let (attn_in, cap) = crate::obs::timed("capture", || {
+            self.runtime.attn_in_batch(self.rt_batch.as_ref().expect("rt cache").data(), block)
+        });
         report.capture_secs += cap;
         let x_fp = fp_x.as_ref().map_or(&attn_in, |m| &m[&TapPoint::AttnIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[0].0, x_fp, &attn_in, cap)?;
+        drop(g);
 
         // Group [O]: tall Q/K/V GEMMs with the freshly spliced weights +
         // per-sequence attention cores over the batch offsets.
-        let t0 = Instant::now();
-        let ctx = self.runtime.attn_ctx_batch(
-            &attn_in,
-            self.rt_batch.as_ref().expect("rt cache").offsets(),
-            block,
-        );
-        let cap = t0.elapsed().as_secs_f64();
+        let g = crate::obs::span(tap_span(TapPoint::OIn));
+        let (ctx, cap) = crate::obs::timed("capture", || {
+            self.runtime.attn_ctx_batch(
+                &attn_in,
+                self.rt_batch.as_ref().expect("rt cache").offsets(),
+                block,
+            )
+        });
         report.capture_secs += cap;
         let x_fp = fp_x.as_ref().map_or(&ctx, |m| &m[&TapPoint::OIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[1].0, x_fp, &ctx, cap)?;
+        drop(g);
 
         // Group [Gate Up]: attention residual + MLP norm after the O
         // splice.
-        let t0 = Instant::now();
-        let x_mid = self.runtime.post_attn_batch(
-            self.rt_batch.as_ref().expect("rt cache").data(),
-            &ctx,
-            block,
-        );
-        let mlp_in = self.runtime.mlp_in_batch(&x_mid, block);
-        let cap = t0.elapsed().as_secs_f64();
+        let g = crate::obs::span(tap_span(TapPoint::MlpIn));
+        let ((x_mid, mlp_in), cap) = crate::obs::timed("capture", || {
+            let x_mid = self.runtime.post_attn_batch(
+                self.rt_batch.as_ref().expect("rt cache").data(),
+                &ctx,
+                block,
+            );
+            let mlp_in = self.runtime.mlp_in_batch(&x_mid, block);
+            (x_mid, mlp_in)
+        });
         report.capture_secs += cap;
         let x_fp = fp_x.as_ref().map_or(&mlp_in, |m| &m[&TapPoint::MlpIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[2].0, x_fp, &mlp_in, cap)?;
+        drop(g);
 
         // Group [Down]: SwiGLU with the spliced Gate/Up — one tall Gate
         // GEMM + one tall Up GEMM.
-        let t0 = Instant::now();
-        let act = self.runtime.mlp_act_batch(&mlp_in, block);
-        let cap = t0.elapsed().as_secs_f64();
+        let g = crate::obs::span(tap_span(TapPoint::DownIn));
+        let (act, cap) = crate::obs::timed("capture", || self.runtime.mlp_act_batch(&mlp_in, block));
         report.capture_secs += cap;
         let x_fp = fp_x.as_ref().map_or(&act, |m| &m[&TapPoint::DownIn]);
         self.quantize_group(report, block, n_blocks, GROUPS[3].0, x_fp, &act, cap)?;
+        drop(g);
 
         // Advance the runtime cache through the MLP residual with the
         // spliced Down — completing this cache's single step for the
         // block. Blocks `< block` are never touched again.
-        let t0 = Instant::now();
-        let new_data = self.runtime.post_mlp_batch(&x_mid, &act, block);
+        let (new_data, secs) =
+            crate::obs::timed("advance", || self.runtime.post_mlp_batch(&x_mid, &act, block));
         self.rt_batch.as_mut().expect("rt cache").set_data(new_data);
         report.capture_block_steps += self.calib.len() as u64;
-        report.capture_secs += t0.elapsed().as_secs_f64();
+        crate::obs::counter_add("capture.block_steps", self.calib.len() as u64);
+        report.capture_secs += secs;
         Ok(())
     }
 
@@ -402,10 +495,14 @@ impl<'a> Pipeline<'a> {
         let fp_x: Option<HashMap<TapPoint, Matrix>> = if self.skip_fp {
             None
         } else {
-            let t0 = Instant::now();
-            let mut fp_taps = Self::capture(self.fp_model, &self.calib, block, &TapPoint::all());
+            let fp_model = self.fp_model;
+            let calib = &self.calib;
+            let (mut fp_taps, secs) = crate::obs::timed("fp_step", || {
+                Self::capture(fp_model, calib, block, &TapPoint::all())
+            });
             report.capture_block_steps += n * (block as u64 + 1);
-            report.capture_secs += t0.elapsed().as_secs_f64();
+            crate::obs::counter_add("capture.block_steps", n * (block as u64 + 1));
+            report.capture_secs += secs;
             let mut m: HashMap<TapPoint, Matrix> = HashMap::new();
             for p in TapPoint::all() {
                 m.insert(p, fp_taps.take(block, p).expect("fp tap missing"));
@@ -413,15 +510,15 @@ impl<'a> Pipeline<'a> {
             Some(m)
         };
         for (kinds, point) in GROUPS.iter() {
+            let _g = crate::obs::span(tap_span(*point));
             // Runtime capture reflects all quantization done so far.
-            let t0 = Instant::now();
-            let x_rt = {
+            let (x_rt, cap) = crate::obs::timed("capture", || {
                 let dense = self.dense_runtime.as_ref().expect("reforward dense mirror");
                 let mut rt_taps = Self::capture(dense, &self.calib, block, &[*point]);
                 rt_taps.take(block, *point).expect("rt tap missing")
-            };
+            });
             report.capture_block_steps += n * (block as u64 + 1);
-            let cap = t0.elapsed().as_secs_f64();
+            crate::obs::counter_add("capture.block_steps", n * (block as u64 + 1));
             report.capture_secs += cap;
             let x_fp = fp_x.as_ref().map_or(&x_rt, |m| &m[point]);
             self.quantize_group(report, block, n_blocks, kinds, x_fp, &x_rt, cap)?;
@@ -459,11 +556,13 @@ impl<'a> Pipeline<'a> {
             let frac = if n_blocks > 1 { block as f64 / (n_blocks - 1) as f64 } else { 0.0 };
             layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
         }
-        let t_factor = Instant::now();
-        let shared = FactoredSystem::for_method(self.method, x_rt, &layer_cfg)?;
+        let method = self.method;
+        let (shared, factor_secs) =
+            crate::obs::timed("factor", || FactoredSystem::for_method(method, x_rt, &layer_cfg));
+        let shared = shared?;
         // The shared factor build is solver work; attribute it evenly so
         // `PipelineReport::solver_secs` still accounts for all of it.
-        let per_layer_factor = t_factor.elapsed().as_secs_f64() / kinds.len() as f64;
+        let per_layer_factor = factor_secs / kinds.len() as f64;
         for &kind in kinds {
             let id = LinearId { block, kind };
             let w = self.fp_model.linear(id).clone();
@@ -483,7 +582,7 @@ impl<'a> Pipeline<'a> {
             if let Some(cb) = self.on_layer.as_mut() {
                 cb(id, &stats);
             }
-            let lin = PackedLinear::from_quantized(&q, self.cfg.packed_exec);
+            let lin = crate::span!("pack", PackedLinear::from_quantized(&q, self.cfg.packed_exec));
             report.layers.push(LayerRecord {
                 id,
                 packed_bytes: q.packed_bytes(),
@@ -731,6 +830,28 @@ mod tests {
         let quadratic_rt_only: u64 =
             (0..n_blocks).map(|b| 4 * n_calib as u64 * (b + 1)).sum();
         assert_eq!(rep3.capture_block_steps, quadratic_rt_only);
+    }
+
+    #[test]
+    fn layer_table_and_trace_layers_cover_every_linear() {
+        let (model, corpus) = setup();
+        let cfg = QuantConfig { wbit: 3, group_size: 8, k: 3, ntile: 16, ..Default::default() };
+        let (_, report) =
+            quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 16, None).unwrap();
+        let table = report.layer_table();
+        assert_eq!(table.rows.len(), report.layers.len());
+        assert_eq!(table.rows.len(), 14);
+        // Every layer record carries the decode diagnostics (native
+        // OJBKQ decodes every column of every linear).
+        for l in &report.layers {
+            assert_eq!(l.stats.cols as usize, model.linear(l.id).cols());
+            assert!(l.stats.occupancy > 0.0 && l.stats.occupancy <= 1.0);
+            assert!((0.0..=1.0).contains(&l.stats.clip_rate));
+        }
+        // The per-layer records slot into a schema-valid trace.
+        let mut tr = crate::report::RunTrace::capture(vec![("method".into(), "ours".into())]);
+        tr.layers = report.trace_layers();
+        crate::report::validate_trace(&tr.to_json()).unwrap();
     }
 
     #[test]

@@ -37,6 +37,8 @@ pub fn perplexity<M: LanguageModel + Sync>(
     seq_len: usize,
     max_tokens: usize,
 ) -> f64 {
+    let _span = crate::obs::span("eval");
+    let t0 = std::time::Instant::now();
     let windows = corpus.eval_windows(seq_len, max_tokens);
     assert!(!windows.is_empty(), "no eval windows (corpus too small?)");
     let mut nll = 0.0f64;
@@ -58,6 +60,14 @@ pub fn perplexity<M: LanguageModel + Sync>(
             count += c;
         }
         start = end;
+    }
+    if crate::obs::enabled() {
+        crate::obs::counter_add("eval.windows", windows.len() as u64);
+        crate::obs::counter_add("eval.tokens", count as u64);
+        let secs = t0.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            crate::obs::gauge_set("eval.windows_per_sec", windows.len() as f64 / secs);
+        }
     }
     (nll / count.max(1) as f64).exp()
 }

@@ -423,7 +423,10 @@ impl PackedLinear {
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         match self {
             PackedLinear::Packed(t) => qgemm_packed(t, x),
-            PackedLinear::Dense(w) => matmul_par(x, w),
+            PackedLinear::Dense(w) => {
+                crate::obs::counter_add("qgemm.dense_calls", 1);
+                matmul_par(x, w)
+            }
         }
     }
 }
@@ -832,6 +835,24 @@ pub fn qgemm_packed(t: &PackedTiles, x: &Matrix) -> Matrix {
 /// entry point.
 pub fn qgemm_packed_with(t: &PackedTiles, x: &Matrix, core: PackedCore) -> Matrix {
     assert_eq!(x.cols(), t.m, "activation/layer shape mismatch");
+    // Kernel counters are analytic — derived from shapes at entry, so the
+    // microkernel loops below carry zero instrumentation. Each grid cell
+    // unpacks its tile's codes once (`n_row_blocks·m·n` code words per
+    // call; the single-row register path touches each code exactly once)
+    // in `PANEL_ROWS×COL_TILE` panel refills.
+    if crate::obs::enabled() {
+        let b = x.rows();
+        let gemv = b == 1 && core == PackedCore::Int;
+        let n_row_blocks = if gemv { 1 } else { b.div_ceil(ROW_BLOCK).max(1) };
+        crate::obs::counter_add(if gemv { "qgemm.gemv_calls" } else { "qgemm.calls" }, 1);
+        crate::obs::counter_add("qgemm.rows", b as u64);
+        crate::obs::counter_add("qgemm.macs", (b * t.m * t.n) as u64);
+        crate::obs::counter_add("qgemm.unpacked_codes", (n_row_blocks * t.m * t.n) as u64);
+        crate::obs::counter_add(
+            "qgemm.panel_fills",
+            (n_row_blocks * t.tiles.len() * t.m.div_ceil(PANEL_ROWS)) as u64,
+        );
+    }
     if x.rows() == 1 && core == PackedCore::Int {
         return qgemv_int(t, x);
     }

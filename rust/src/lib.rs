@@ -38,6 +38,7 @@ pub mod eval;
 pub mod infer;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod quant;
 pub mod report;

@@ -184,6 +184,7 @@ fn gemm_tn_rows(
 /// kernel over the same operands in the same order, so the result is
 /// **bit-identical** at any thread count.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let _span = crate::obs::span("gemm_tn");
     let (p, m) = a.shape();
     let (pb, n) = b.shape();
     assert_eq!(p, pb, "gemm_tn leading dim");
@@ -281,6 +282,7 @@ fn triangular_split(m: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
 /// per-row costs); the split leaves each element's accumulation order
 /// untouched, so the result is **bit-identical** at any thread count.
 pub fn syrk_upper(a: &Matrix, ridge: f32) -> Matrix {
+    let _span = crate::obs::span("syrk");
     let (p, m) = a.shape();
     let mut g = Matrix::zeros(m, m);
     let a_s = a.as_slice();

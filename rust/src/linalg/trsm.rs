@@ -85,6 +85,7 @@ fn solve_cols_par(
 /// runs contiguously across RHS columns. Large systems run RHS-column-
 /// parallel ([`solve_cols_par`] — bit-identical to serial).
 pub fn solve_lower_t(r: &Matrix, b: &Matrix) -> Matrix {
+    let _span = crate::obs::span("trsm");
     let n = r.rows();
     assert_eq!(r.cols(), n);
     assert_eq!(b.rows(), n);
@@ -123,6 +124,7 @@ fn solve_lower_t_serial(r: &Matrix, b: &Matrix) -> Matrix {
 /// row-contiguous updates. Large systems run RHS-column-parallel
 /// ([`solve_cols_par`] — bit-identical to serial).
 pub fn solve_upper_mat(r: &Matrix, b: &Matrix) -> Matrix {
+    let _span = crate::obs::span("trsm");
     let n = r.rows();
     assert_eq!(r.cols(), n);
     assert_eq!(b.rows(), n);

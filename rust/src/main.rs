@@ -6,11 +6,25 @@
 //!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
 //!                 [--calib 32] [--seq 128] [--out CKPT.ojbq1]
 //!                 [--dense-out PATH] [--dense-exec] [--f32-core]
+//!                 [--trace] [--trace-out trace.json]
 //! ojbkq eval      --model NAME [--method ours] [--from CKPT.ojbq1]
 //!                 [--ppl-tokens 8192] [--zeroshot] [--reasoning]
 //!                 (quantize + evaluate, or evaluate a saved checkpoint)
+//! ojbkq check-trace FILE   (validate a trace.json against its schema)
 //! ojbkq methods   (list available solvers)
 //! ```
+//!
+//! `--trace` (also: `OJBKQ_TRACE=1`) turns on the observability stack
+//! (`ojbkq::obs`): hierarchical wall-clock spans over every pipeline
+//! phase (capture/factor/solve/pack per tap group, eval), per-layer
+//! quantization-quality metrics (runtime/JTA residuals, Klein
+//! improvement rate, clip rate, code occupancy), and packed-kernel
+//! counters (MACs, unpacked code words, panel fills, gemv/gemm path
+//! hits). After the run the CLI prints the span tree + per-layer
+//! residual table and writes the machine-readable manifest to
+//! `--trace-out` (default `trace.json`; schema documented in DESIGN.md
+//! §Observability, checkable offline with `ojbkq check-trace`).
+//! Tracing is pure observation — output is bit-identical on or off.
 //!
 //! Quantized execution is on by default: the pipeline returns a packed
 //! [`ojbkq::infer::QuantizedModel`] whose calibration captures and evals
@@ -35,11 +49,11 @@
 //! whose trained weights live in `artifacts/` after `make artifacts`.
 
 use ojbkq::cli::Args;
-use ojbkq::coordinator::{quantize_model, Workbench};
+use ojbkq::coordinator::{quantize_model, PipelineReport, Workbench};
 use ojbkq::eval;
 use ojbkq::infer::{load_quantized, save_quantized, QuantizedModel};
 use ojbkq::quant::{Backend, Method, QuantConfig};
-use ojbkq::report::{artifact_summary, Table};
+use ojbkq::report::{artifact_summary, RunTrace, Table};
 use ojbkq::runtime::SolverRuntime;
 use ojbkq::util::fmt_secs;
 use std::path::{Path, PathBuf};
@@ -51,18 +65,28 @@ fn main() {
         // every packed matmul this run (capture, eval, checkpoint serving).
         ojbkq::infer::set_packed_core_override(Some(ojbkq::infer::PackedCore::F32));
     }
+    if args.get_flag("trace") {
+        // Process-global observability toggle, same shape as --f32-core:
+        // spans, per-layer quality metrics, and kernel counters record for
+        // the whole run and drain into trace.json at the end.
+        ojbkq::obs::set_trace_override(Some(true));
+    }
     let code = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("methods") => cmd_methods(),
         Some("quantize") => cmd_quantize(&args, false),
         Some("eval") => cmd_quantize(&args, true),
+        Some("check-trace") => cmd_check_trace(&args),
         _ => {
             eprintln!(
-                "usage: ojbkq <info|methods|quantize|eval> [--options]\n\
+                "usage: ojbkq <info|methods|quantize|eval|check-trace> [--options]\n\
                  quantize --model NAME [--out CKPT.ojbq1] writes the native packed\n\
                  OJBQ1 checkpoint (--dense-out PATH keeps the dequantized OJBW1\n\
                  export for cross-checks); eval [--from CKPT.ojbq1] scores a saved\n\
-                 checkpoint directly. see `rust/src/main.rs` docs or README.md"
+                 checkpoint directly. --trace [--trace-out FILE] records spans,\n\
+                 per-layer quality metrics and kernel counters to trace.json;\n\
+                 check-trace FILE validates one against the schema.\n\
+                 see `rust/src/main.rs` docs or README.md"
             );
             2
         }
@@ -162,6 +186,8 @@ fn load_checkpoint(ckpt: &str, name: &str, wb: &Workbench) -> anyhow::Result<Qua
 }
 
 /// Run the quantization pipeline and any requested artifact writes.
+/// Returns the packed model plus its [`PipelineReport`] (the caller
+/// threads the report into the trace manifest when `--trace` is on).
 /// `Err` carries the process exit code.
 fn run_quantize(
     args: &Args,
@@ -170,7 +196,7 @@ fn run_quantize(
     cfg: &QuantConfig,
     dir: &Path,
     wb: &Workbench,
-) -> Result<QuantizedModel, i32> {
+) -> Result<(QuantizedModel, PipelineReport), i32> {
     let rt_holder;
     let rt = if cfg.backend == Backend::Pjrt {
         match SolverRuntime::new(dir) {
@@ -252,7 +278,71 @@ fn run_quantize(
     // One-line recap through the shared report formatter — includes the
     // artifact size recorded above when `--out` wrote a checkpoint.
     println!("[report] {}", ojbkq::bench::exp::timing_summary(&report));
-    Ok(qmodel)
+    Ok((qmodel, report))
+}
+
+/// Assemble and emit the `--trace` manifest after a traced run: span
+/// tree + metrics from the global registry, per-layer residual rows from
+/// the pipeline report (absent for `eval --from`, which re-quantizes
+/// nothing), and the run configuration. Prints the human rendering and
+/// writes the JSON to `--trace-out` (default `trace.json`).
+fn emit_trace(
+    args: &Args,
+    name: &str,
+    method: Method,
+    cfg: &QuantConfig,
+    report: Option<&PipelineReport>,
+) {
+    let config = vec![
+        ("model".to_string(), name.to_string()),
+        ("method".to_string(), method.label().to_string()),
+        ("wbit".to_string(), cfg.wbit.to_string()),
+        ("group".to_string(), cfg.group_size.to_string()),
+        ("k".to_string(), cfg.k.to_string()),
+        ("mu".to_string(), cfg.mu.to_string()),
+        ("lambda".to_string(), cfg.lambda.to_string()),
+        ("seed".to_string(), cfg.seed.to_string()),
+        ("backend".to_string(), format!("{:?}", cfg.backend).to_ascii_lowercase()),
+        ("packed_exec".to_string(), cfg.packed_exec.to_string()),
+    ];
+    let mut trace = RunTrace::capture(config);
+    if let Some(report) = report {
+        trace.layers = report.trace_layers();
+        print!("{}", report.layer_table().to_markdown());
+    }
+    print!("{}", trace.to_markdown());
+    let out = args.get_str("trace-out", "trace.json");
+    match trace.write(Path::new(&out)) {
+        Ok(()) => println!("wrote trace manifest to {out}"),
+        Err(e) => eprintln!("[warn] writing trace {out}: {e}"),
+    }
+}
+
+/// `ojbkq check-trace FILE` — parse and schema-validate a `trace.json`,
+/// rejecting unknown span segments / metric names (the CI traced leg's
+/// gate against silent taxonomy drift).
+fn cmd_check_trace(args: &Args) -> i32 {
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: ojbkq check-trace FILE");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("check-trace: reading {path}: {e}");
+            return 1;
+        }
+    };
+    match ojbkq::report::validate_trace(&text) {
+        Ok(()) => {
+            println!("check-trace: {path} ok (schema version {})", ojbkq::report::TRACE_VERSION);
+            0
+        }
+        Err(e) => {
+            eprintln!("check-trace: {path} INVALID: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
@@ -271,6 +361,7 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
         eprintln!("[warn] no trained artifacts for {name}; using random-init fallback");
     }
     let from = if and_eval { args.get("from") } else { None };
+    let mut report = None;
     let qmodel = if let Some(ckpt) = from {
         // Score a previously written OJBQ1 checkpoint: no re-quantization,
         // the packed codes load straight into the execution engine —
@@ -284,7 +375,10 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
         }
     } else {
         match run_quantize(args, &name, method, &cfg, &dir, &wb) {
-            Ok(qm) => qm,
+            Ok((qm, rep)) => {
+                report = Some(rep);
+                qm
+            }
             Err(code) => return code,
         }
     };
@@ -317,6 +411,9 @@ fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {
             }
         }
         t.emit(None, "eval");
+    }
+    if ojbkq::obs::enabled() {
+        emit_trace(args, &name, method, &cfg, report.as_ref());
     }
     0
 }

@@ -1,0 +1,475 @@
+//! Observability substrate: a hierarchical span tracer and a typed
+//! metrics registry, both **process-global, thread-safe, and near-zero
+//! cost when disabled** — the single timing/counting source behind
+//! `trace.json` (see [`crate::report::RunTrace`] and DESIGN.md
+//! §Observability).
+//!
+//! Tracing is off by default. It is enabled by the `OJBKQ_TRACE`
+//! environment variable (read once, like `OJBKQ_F32_CORE`) or
+//! programmatically via [`set_trace_override`] (the CLI `--trace` flag,
+//! tests). When disabled, every entry point reduces to one relaxed
+//! atomic load — no allocation, no lock, no `Instant::now` — pinned by
+//! `rust/tests/obs_trace.rs` (mirroring the `no_dequant_hot_path.rs`
+//! counter-test pattern via [`event_count`]). Instrumentation never
+//! touches numerics, so pipeline output is bit-identical with tracing
+//! on and off.
+//!
+//! **Spans** aggregate by *path*: each thread keeps a stack of active
+//! span names, and a finished span records `(count, wall secs)` under
+//! the `/`-joined path of its ancestors (e.g.
+//! `pipeline/attn_in/solve`). Worker threads spawned by
+//! [`crate::parallel`] start with an empty stack, so spans opened
+//! inside a parallel fan-out aggregate under their own leaf path — by
+//! design: cross-thread parent attribution would need message plumbing
+//! the hot paths should not pay for.
+//!
+//! **Metrics** are typed monotonic counters ([`counter_add`]),
+//! last-write-wins gauges ([`gauge_set`]) and summary histograms
+//! ([`hist_record`]: count/sum/min/max). Names come from the curated
+//! [`METRIC_NAMES`] taxonomy — `debug_assert`ed at record time and
+//! enforced by the `trace.json` schema checker
+//! ([`crate::report::validate_trace`], CI `check-trace` leg) so the
+//! namespace cannot drift silently.
+//!
+//! Kernel counters are **analytic**: the packed-GEMM entry points
+//! record work derived from shapes (`b·m·n` MACs, codes unpacked per
+//! grid cell, panel fills) rather than incrementing per element, so the
+//! microkernel inner loops carry no instrumentation at all.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ----- enablement -----------------------------------------------------
+
+/// Process-wide trace override: 0 = unset (env decides), 1 = on,
+/// 2 = off. Mirrors `infer::set_packed_core_override` — a race-free
+/// runtime toggle that takes precedence over the `OJBKQ_TRACE`
+/// environment default.
+static TRACE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force tracing on/off for this process (`None` restores the
+/// `OJBKQ_TRACE` environment default). Used by the CLI `--trace` flag
+/// and by tests.
+pub fn set_trace_override(on: Option<bool>) {
+    let v = match on {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    TRACE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Is tracing enabled? One relaxed atomic load on the hot path; the
+/// environment is consulted once per process.
+#[inline]
+pub fn enabled() -> bool {
+    match TRACE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            static ENV: OnceLock<bool> = OnceLock::new();
+            *ENV.get_or_init(|| {
+                matches!(std::env::var("OJBKQ_TRACE").as_deref(), Ok("1") | Ok("true") | Ok("yes"))
+            })
+        }
+    }
+}
+
+// ----- taxonomy -------------------------------------------------------
+
+/// Every span name the stack may open — path segments in `trace.json`
+/// are validated against this list (see DESIGN.md §Observability for
+/// what each covers).
+pub const SPAN_NAMES: &[&str] = &[
+    // coordinator phases
+    "pipeline",
+    "embed",
+    "fp_step",
+    "capture",
+    "factor",
+    "solve",
+    "pack",
+    "advance",
+    // tap-point groups (one per `coordinator::GROUPS` entry)
+    "attn_in",
+    "o_in",
+    "mlp_in",
+    "down_in",
+    // linalg primitives under factor/solve
+    "syrk",
+    "gemm_tn",
+    "trsm",
+    // evaluation
+    "eval",
+];
+
+/// Every registry metric name, with units:
+///
+/// | name | type | unit |
+/// |---|---|---|
+/// | `quant.layers` | counter | layers solved |
+/// | `quant.cols` | counter | decoded weight columns (OJBKQ family) |
+/// | `quant.klein_samples` | counter | Klein paths sampled (K·cols) |
+/// | `quant.klein_improved` | counter | columns where a sampled path beat greedy Babai |
+/// | `quant.clipped_codes` | counter | codes at a box bound (0 or 2^wbit−1) |
+/// | `quant.codes` | counter | total codes emitted |
+/// | `layer.rt_err` | hist | per-layer `‖X̃Ŵ − X̃W‖_F` |
+/// | `layer.jta_err` | hist | per-layer `‖X̃Ŵ − Y*(μ)‖_F` |
+/// | `layer.decode_resid` | hist | per-layer Σ_cols winner `‖R(s⊙(q−q̄))‖²` |
+/// | `layer.clip_rate` | hist | per-layer clipped-code fraction |
+/// | `layer.occupancy` | hist | per-layer distinct codes / 2^wbit |
+/// | `layer.solve_secs` | hist | per-layer solver seconds |
+/// | `qgemm.calls` | counter | blocked packed-GEMM entries |
+/// | `qgemm.gemv_calls` | counter | single-row register-path entries |
+/// | `qgemm.dense_calls` | counter | dense-fallback matmuls |
+/// | `qgemm.rows` | counter | activation rows through packed kernels |
+/// | `qgemm.macs` | counter | `b·m·n` multiply-accumulates (analytic) |
+/// | `qgemm.unpacked_codes` | counter | code words unpacked (analytic, per grid cell) |
+/// | `qgemm.panel_fills` | counter | `PANEL_ROWS×COL_TILE` panel unpacks |
+/// | `parallel.fanouts` | counter | parallel primitive invocations that spawned |
+/// | `parallel.tasks` | counter | tasks spawned across all fan-outs |
+/// | `eval.windows` | counter | perplexity windows scored |
+/// | `eval.tokens` | counter | tokens scored |
+/// | `eval.windows_per_sec` | gauge | eval throughput (last run) |
+/// | `capture.block_steps` | counter | transformer-block advances for calibration |
+pub const METRIC_NAMES: &[&str] = &[
+    "quant.layers",
+    "quant.cols",
+    "quant.klein_samples",
+    "quant.klein_improved",
+    "quant.clipped_codes",
+    "quant.codes",
+    "layer.rt_err",
+    "layer.jta_err",
+    "layer.decode_resid",
+    "layer.clip_rate",
+    "layer.occupancy",
+    "layer.solve_secs",
+    "qgemm.calls",
+    "qgemm.gemv_calls",
+    "qgemm.dense_calls",
+    "qgemm.rows",
+    "qgemm.macs",
+    "qgemm.unpacked_codes",
+    "qgemm.panel_fills",
+    "parallel.fanouts",
+    "parallel.tasks",
+    "eval.windows",
+    "eval.tokens",
+    "eval.windows_per_sec",
+    "capture.block_steps",
+];
+
+/// Keys allowed in the per-layer metric records of `trace.json`
+/// (`RunTrace::layers`) — the per-layer residual table.
+pub const LAYER_METRIC_NAMES: &[&str] = &[
+    "rt_err",
+    "jta_err",
+    "out_norm",
+    "decode_resid",
+    "greedy_resid",
+    "cols",
+    "klein_samples",
+    "klein_improved",
+    "clip_rate",
+    "occupancy",
+    "solve_secs",
+    "capture_secs",
+    "packed_bytes",
+    "fp_bytes",
+];
+
+// ----- global state ---------------------------------------------------
+
+#[derive(Debug, Clone, Copy, Default)]
+struct SpanStat {
+    count: u64,
+    secs: f64,
+}
+
+/// Histogram summary: enough for mean/min/max reporting without storing
+/// samples (per-layer distributions are small; full samples live in the
+/// per-layer table instead).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistSummary {
+    fn record(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum MetricVal {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistSummary),
+}
+
+fn spans() -> &'static Mutex<BTreeMap<String, SpanStat>> {
+    static SPANS: OnceLock<Mutex<BTreeMap<String, SpanStat>>> = OnceLock::new();
+    SPANS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn metrics() -> &'static Mutex<BTreeMap<&'static str, MetricVal>> {
+    static METRICS: OnceLock<Mutex<BTreeMap<&'static str, MetricVal>>> = OnceLock::new();
+    METRICS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Total recorded events (spans closed + metric updates) in this
+/// process — the disabled-mode no-op regression hook: with tracing off
+/// this must not move across an entire pipeline run
+/// (`rust/tests/obs_trace.rs`).
+static EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Total events recorded so far (see [`EVENTS`]).
+pub fn event_count() -> u64 {
+    EVENTS.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Stack of active span names on this thread; a closing span joins
+    /// it into the aggregation path.
+    static SPAN_STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Clear all recorded spans/metrics and the event counter. Test and
+/// CLI-start support (a `--trace` run reports only itself); live span
+/// guards are unaffected and simply record into the fresh registry.
+pub fn reset() {
+    spans().lock().unwrap_or_else(|e| e.into_inner()).clear();
+    metrics().lock().unwrap_or_else(|e| e.into_inner()).clear();
+    EVENTS.store(0, Ordering::Relaxed);
+}
+
+// ----- spans ----------------------------------------------------------
+
+/// RAII guard for one span; created by [`span`] / the `span!` macro.
+/// Not `Send`: the guard must close on the thread that opened it (the
+/// span stack is thread-local).
+pub struct SpanGuard {
+    start: Option<Instant>,
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+/// Open a span named `name` (must be in [`SPAN_NAMES`]); the returned
+/// guard records `(path, count, secs)` on drop. No-op (no allocation,
+/// no clock read) when tracing is disabled.
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { start: None, _not_send: std::marker::PhantomData };
+    }
+    debug_assert!(SPAN_NAMES.contains(&name), "span name {name:?} not in obs::SPAN_NAMES");
+    SPAN_STACK.with(|s| s.borrow_mut().push(name));
+    SpanGuard { start: Some(Instant::now()), _not_send: std::marker::PhantomData }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(t0) = self.start else { return };
+        let secs = t0.elapsed().as_secs_f64();
+        let path = SPAN_STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            let path = st.join("/");
+            st.pop();
+            path
+        });
+        let mut map = spans().lock().unwrap_or_else(|e| e.into_inner());
+        let stat = map.entry(path).or_default();
+        stat.count += 1;
+        stat.secs += secs;
+        EVENTS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Open a span around `name`, evaluating to the body's value:
+/// `span!("solve", { decode() })`.
+#[macro_export]
+macro_rules! span {
+    ($name:expr, $body:expr) => {{
+        let _obs_span_guard = $crate::obs::span($name);
+        $body
+    }};
+}
+
+/// Measure wall-clock seconds of `f` under a span — the **single timing
+/// source**: always measures (callers like `PipelineReport` need the
+/// seconds whether or not tracing is on) and additionally records the
+/// span when enabled. Replaces ad-hoc `Instant::now()` pairs in the
+/// coordinator (`capture_secs` et al. are now derived views of these
+/// measurements).
+pub fn timed<T>(name: &'static str, f: impl FnOnce() -> T) -> (T, f64) {
+    let guard = span(name);
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    drop(guard);
+    (out, secs)
+}
+
+// ----- metrics --------------------------------------------------------
+
+fn with_metric(name: &'static str, default: MetricVal, f: impl FnOnce(&mut MetricVal)) {
+    debug_assert!(METRIC_NAMES.contains(&name), "metric {name:?} not in obs::METRIC_NAMES");
+    let mut map = metrics().lock().unwrap_or_else(|e| e.into_inner());
+    f(map.entry(name).or_insert(default));
+    EVENTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Add `v` to monotonic counter `name`. No-op when tracing is disabled.
+pub fn counter_add(name: &'static str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    with_metric(name, MetricVal::Counter(0), |m| {
+        if let MetricVal::Counter(c) = m {
+            *c += v;
+        }
+    });
+}
+
+/// Set gauge `name` to `v` (last write wins). No-op when disabled.
+pub fn gauge_set(name: &'static str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_metric(name, MetricVal::Gauge(v), |m| {
+        if let MetricVal::Gauge(g) = m {
+            *g = v;
+        }
+    });
+}
+
+/// Record sample `v` into histogram `name`. No-op when disabled.
+pub fn hist_record(name: &'static str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    with_metric(name, MetricVal::Hist(HistSummary::default()), |m| {
+        if let MetricVal::Hist(h) = m {
+            h.record(v);
+        }
+    });
+}
+
+// ----- snapshot -------------------------------------------------------
+
+/// One aggregated span path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRow {
+    /// `/`-joined ancestry, e.g. `pipeline/attn_in/solve`.
+    pub path: String,
+    /// Times this path closed.
+    pub count: u64,
+    /// Total wall-clock seconds across those closes.
+    pub secs: f64,
+}
+
+/// A point-in-time copy of the whole registry — the payload of
+/// [`crate::report::RunTrace`].
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub spans: Vec<SpanRow>,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSummary)>,
+}
+
+impl Snapshot {
+    /// Look up a counter by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Look up a span row by exact path.
+    pub fn span(&self, path: &str) -> Option<&SpanRow> {
+        self.spans.iter().find(|s| s.path == path)
+    }
+}
+
+/// Copy out everything recorded so far (sorted by name/path — the
+/// registries are BTree-backed).
+pub fn snapshot() -> Snapshot {
+    let spans: Vec<SpanRow> = spans()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|(path, st)| SpanRow { path: path.clone(), count: st.count, secs: st.secs })
+        .collect();
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut hists = Vec::new();
+    for (name, val) in metrics().lock().unwrap_or_else(|e| e.into_inner()).iter() {
+        match val {
+            MetricVal::Counter(c) => counters.push((name.to_string(), *c)),
+            MetricVal::Gauge(g) => gauges.push((name.to_string(), *g)),
+            MetricVal::Hist(h) => hists.push((name.to_string(), *h)),
+        }
+    }
+    Snapshot { spans, counters, gauges, hists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxonomy_is_duplicate_free_and_wellformed() {
+        for list in [SPAN_NAMES, METRIC_NAMES, LAYER_METRIC_NAMES] {
+            let mut seen = std::collections::BTreeSet::new();
+            for &n in list {
+                assert!(seen.insert(n), "duplicate taxonomy name {n}");
+                assert!(!n.is_empty() && !n.contains('/') && !n.contains(' '), "bad name {n:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn override_controls_enablement() {
+        // Stateful registry assertions live in tests/obs_trace.rs (own
+        // process); here only the inert on/off switch is exercised.
+        set_trace_override(Some(false));
+        assert!(!enabled());
+        set_trace_override(Some(true));
+        assert!(enabled());
+        set_trace_override(None);
+    }
+
+    #[test]
+    fn hist_summary_tracks_bounds() {
+        let mut h = HistSummary::default();
+        h.record(2.0);
+        h.record(-1.0);
+        h.record(5.0);
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, -1.0);
+        assert_eq!(h.max, 5.0);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(HistSummary::default().mean(), 0.0);
+    }
+}

@@ -115,6 +115,10 @@ where
     if ranges.len() <= 1 {
         return ranges.into_iter().map(&body).collect();
     }
+    // Fan-out accounting (after the serial early-return, so the counters
+    // measure actual thread spawns, not calls).
+    crate::obs::counter_add("parallel.fanouts", 1);
+    crate::obs::counter_add("parallel.tasks", ranges.len() as u64);
     let mut out: Vec<Option<T>> = ranges.iter().map(|_| None).collect();
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(ranges.len());
@@ -160,6 +164,8 @@ where
     if nt <= 1 {
         return (0..n).map(f).collect();
     }
+    crate::obs::counter_add("parallel.fanouts", 1);
+    crate::obs::counter_add("parallel.tasks", nt as u64);
     let next = AtomicUsize::new(0);
     let mut buckets: Vec<Vec<(usize, T)>> = Vec::with_capacity(nt);
     std::thread::scope(|scope| {

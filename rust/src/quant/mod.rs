@@ -260,7 +260,7 @@ pub fn skip_fp_reference(method: Method, cfg: &QuantConfig) -> bool {
 }
 
 /// Per-layer quantization diagnostics, used by Figure-1-style reporting
-/// and the coordinator's metrics stream.
+/// and the coordinator's metrics stream (`trace.json` layer records).
 #[derive(Debug, Clone)]
 pub struct LayerStats {
     /// `||X̃·Ŵ − Y*(μ)||_F` — the JTA reconstruction error (Fig. 1).
@@ -277,6 +277,54 @@ pub struct LayerStats {
     /// (its group's activation refresh, split evenly across the group).
     /// Filled in by the pipeline coordinator; 0 for standalone solves.
     pub capture_secs: f64,
+    /// Winning lattice residual Σ_cols `‖R(s⊙(q−q̄))‖²` from the decode
+    /// (OJBKQ family, native backend; 0 otherwise).
+    pub decode_resid: f64,
+    /// Same sum under greedy Babai only — what K=0 would have scored.
+    pub greedy_resid: f64,
+    /// Weight columns decoded by the Babai/Klein solver (0 for other
+    /// methods).
+    pub cols: u64,
+    /// Klein paths sampled (K·cols; greedy not counted).
+    pub klein_samples: u64,
+    /// Columns where a sampled path beat greedy Babai.
+    pub klein_improved: u64,
+    /// Fraction of emitted codes saturated at a box bound
+    /// (0 or `2^wbit − 1`). 0 for FP passthrough layers (no codes).
+    pub clip_rate: f64,
+    /// Code-histogram occupancy: distinct code values used / `2^wbit`.
+    pub occupancy: f64,
+}
+
+impl LayerStats {
+    /// Fraction of columns where Klein sampling improved on greedy
+    /// Babai (0 when the layer wasn't solved by the OJBKQ family).
+    pub fn klein_improvement_rate(&self) -> f64 {
+        if self.cols == 0 {
+            0.0
+        } else {
+            self.klein_improved as f64 / self.cols as f64
+        }
+    }
+}
+
+/// Code-distribution diagnostics: `(clip_rate, occupancy)` over the
+/// packed code array. Empty codes (FP passthrough) report `(0, 0)`.
+fn code_histogram_stats(codes: &[u8], wbit: u8) -> (f64, f64) {
+    if codes.is_empty() || wbit == 0 {
+        return (0.0, 0.0);
+    }
+    let qmax = ((1u16 << wbit) - 1).min(255) as u8;
+    let mut seen = [false; 256];
+    let mut clipped = 0u64;
+    for &c in codes {
+        seen[c as usize] = true;
+        if c == 0 || c == qmax {
+            clipped += 1;
+        }
+    }
+    let distinct = seen.iter().filter(|&&s| s).count();
+    (clipped as f64 / codes.len() as f64, distinct as f64 / (qmax as f64 + 1.0))
 }
 
 /// Uniform entry point: quantize one linear layer.
@@ -335,21 +383,58 @@ pub fn quantize_layer_shared(
     assert_eq!(x_fp.cols(), w.rows(), "activation/weight shape mismatch");
     assert_eq!(x_rt.cols(), w.rows(), "runtime activation/weight shape mismatch");
     let mut rng = Rng::new(cfg.seed).fork(layer_id);
-    let t0 = std::time::Instant::now();
     let scfg = solver_cfg(method, cfg);
-    let q = match method {
-        Method::Fp => QuantizedLinear::identity(w),
-        Method::Rtn => rtn::quantize(w, &scfg),
-        Method::Gptq => gptq::quantize_with(w, x_rt, &scfg, shared)?,
-        Method::Awq => awq::quantize(w, x_rt, &scfg),
-        Method::Quip => quip::quantize(w, x_rt, &scfg, &mut rng)?,
-        Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
-            ojbkq::quantize_with(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?
-        }
-    };
-    let solve_secs = t0.elapsed().as_secs_f64();
-    let stats = layer_stats(&q, w, x_fp, x_rt, cfg, solve_secs);
+    // One timing source: `obs::timed` both feeds `solve_secs` (always)
+    // and the `solve` span (when tracing is on).
+    let (solved, solve_secs) = crate::obs::timed("solve", || {
+        Ok::<_, anyhow::Error>(match method {
+            Method::Fp => (QuantizedLinear::identity(w), ojbkq::DecodeDiag::default()),
+            Method::Rtn => (rtn::quantize(w, &scfg), ojbkq::DecodeDiag::default()),
+            Method::Gptq => {
+                (gptq::quantize_with(w, x_rt, &scfg, shared)?, ojbkq::DecodeDiag::default())
+            }
+            Method::Awq => (awq::quantize(w, x_rt, &scfg), ojbkq::DecodeDiag::default()),
+            Method::Quip => {
+                (quip::quantize(w, x_rt, &scfg, &mut rng)?, ojbkq::DecodeDiag::default())
+            }
+            Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
+                ojbkq::quantize_with_diag(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?
+            }
+        })
+    });
+    let (q, diag) = solved?;
+    let mut stats = layer_stats(&q, w, x_fp, x_rt, cfg, solve_secs);
+    stats.decode_resid = diag.decode_resid;
+    stats.greedy_resid = diag.greedy_resid;
+    stats.cols = diag.cols;
+    stats.klein_samples = diag.sampled_paths;
+    stats.klein_improved = diag.improved_cols;
+    record_layer_metrics(&q, &stats);
     Ok((q, stats))
+}
+
+/// Drain one layer's stats into the [`crate::obs`] registry (no-op when
+/// tracing is disabled).
+fn record_layer_metrics(q: &QuantizedLinear, stats: &LayerStats) {
+    use crate::obs;
+    if !obs::enabled() {
+        return;
+    }
+    obs::counter_add("quant.layers", 1);
+    obs::counter_add("quant.cols", stats.cols);
+    obs::counter_add("quant.klein_samples", stats.klein_samples);
+    obs::counter_add("quant.klein_improved", stats.klein_improved);
+    obs::counter_add("quant.codes", q.codes.len() as u64);
+    obs::counter_add(
+        "quant.clipped_codes",
+        (stats.clip_rate * q.codes.len() as f64).round() as u64,
+    );
+    obs::hist_record("layer.rt_err", stats.rt_err);
+    obs::hist_record("layer.jta_err", stats.jta_err);
+    obs::hist_record("layer.decode_resid", stats.decode_resid);
+    obs::hist_record("layer.clip_rate", stats.clip_rate);
+    obs::hist_record("layer.occupancy", stats.occupancy);
+    obs::hist_record("layer.solve_secs", stats.solve_secs);
 }
 
 /// Compute diagnostics for a quantized layer.
@@ -367,12 +452,20 @@ pub fn layer_stats(
     let y_rt = matmul(x_rt, w);
     let y_hat = matmul(x_rt, &w_hat);
     let y_star = jta::interp_target(&y_fp, &y_rt, cfg.mu as f32);
+    let (clip_rate, occupancy) = code_histogram_stats(&q.codes, q.wbit);
     LayerStats {
         jta_err: y_hat.sub(&y_star).frob(),
         rt_err: y_hat.sub(&y_rt).frob(),
         out_norm: y_fp.frob(),
         solve_secs,
         capture_secs: 0.0,
+        decode_resid: 0.0,
+        greedy_resid: 0.0,
+        cols: 0,
+        klein_samples: 0,
+        klein_improved: 0,
+        clip_rate,
+        occupancy,
     }
 }
 
@@ -423,6 +516,18 @@ mod tests {
                 ..Default::default()
             }
         ));
+    }
+
+    #[test]
+    fn code_histogram_stats_counts_clips_and_occupancy() {
+        let (clip, occ) = code_histogram_stats(&[0, 7, 3, 3], 3);
+        assert!((clip - 0.5).abs() < 1e-12); // 0 and 7 are the W3 bounds
+        assert!((occ - 3.0 / 8.0).abs() < 1e-12); // {0,3,7} of 8 codes
+        // FP passthrough: no codes, no stats.
+        assert_eq!(code_histogram_stats(&[], 4), (0.0, 0.0));
+        let (clip, occ) = code_histogram_stats(&[5; 10], 4);
+        assert_eq!(clip, 0.0);
+        assert!((occ - 1.0 / 16.0).abs() < 1e-12);
     }
 
     #[test]

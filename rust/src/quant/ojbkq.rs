@@ -16,13 +16,60 @@
 
 use super::factored::{FactorKind, FactoredSystem};
 use super::klein::alpha_for;
-use super::ppi::{decode_tile, PpiInput};
+use super::ppi::{decode_tile, PpiInput, PpiOutput};
 use super::scales::{self, GroupScales};
 use super::{jta, Backend, QuantConfig, QuantizedLinear};
 use crate::parallel::parallel_map;
 use crate::rng::Rng;
 use crate::runtime::SolverRuntime;
 use crate::tensor::Matrix;
+
+/// Aggregated decode diagnostics for one layer — the measured
+/// Babai/Klein sampling behavior the observability stack surfaces
+/// (`layer.decode_resid`, `quant.klein_improved`, Fig. 2's sampling
+/// columns). Zeroed for the PJRT backend, whose artifact returns codes
+/// only.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DecodeDiag {
+    /// Σ over columns of the winning `‖R(s⊙(q−q̄))‖²` — the lattice
+    /// proxy for the layer's objective residual.
+    pub decode_resid: f64,
+    /// Same sum restricted to the greedy Babai path (path 0), i.e. what
+    /// the residual would have been with K=0.
+    pub greedy_resid: f64,
+    /// Columns decoded.
+    pub cols: u64,
+    /// Columns where a Klein-sampled path beat greedy Babai
+    /// (`winner != 0`).
+    pub improved_cols: u64,
+    /// Klein paths sampled (`K · cols`; the reserved greedy path is not
+    /// counted as a sample).
+    pub sampled_paths: u64,
+}
+
+impl DecodeDiag {
+    fn absorb(&mut self, out: &PpiOutput, k: usize) {
+        let width = out.resid.len();
+        self.cols += width as u64;
+        self.sampled_paths += (k * width) as u64;
+        for j in 0..width {
+            self.decode_resid += out.resid[j];
+            self.greedy_resid += out.path_resids.get(0, j) as f64;
+            if out.winner[j] != 0 {
+                self.improved_cols += 1;
+            }
+        }
+    }
+
+    /// Fraction of columns where sampling improved on greedy Babai.
+    pub fn improvement_rate(&self) -> f64 {
+        if self.cols == 0 {
+            0.0
+        } else {
+            self.improved_cols as f64 / self.cols as f64
+        }
+    }
+}
 
 /// Ours(N): deterministic box-constrained Babai under the
 /// runtime-consistent objective (Eq. 1).
@@ -73,6 +120,23 @@ pub fn quantize_with(
     rt: Option<&SolverRuntime>,
     shared: Option<&FactoredSystem>,
 ) -> anyhow::Result<QuantizedLinear> {
+    quantize_with_diag(w, x_fp, x_rt, cfg, rng, rt, shared).map(|(q, _)| q)
+}
+
+/// [`quantize_with`], additionally returning the aggregated
+/// [`DecodeDiag`] from the tile decodes. The diagnostics are pure
+/// observation — codes, scales, and RNG consumption are bit-identical
+/// to [`quantize_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_with_diag(
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+    rt: Option<&SolverRuntime>,
+    shared: Option<&FactoredSystem>,
+) -> anyhow::Result<(QuantizedLinear, DecodeDiag)> {
     let (m, n) = w.shape();
     // 2–3. JTA system + Cholesky (Algorithm 1 line 2) — shared across the
     // tap group when the coordinator built the factor, rebuilt here for
@@ -140,24 +204,34 @@ pub fn quantize_with(
         let uniforms = trng.uniform_vec_f32((cfg.k + 1) * m * width);
         (s_tile, qbar_tile, alpha, uniforms)
     };
+    let mut diag = DecodeDiag::default();
     let tiles: Vec<Matrix> = match cfg.backend {
-        Backend::Native => parallel_map(n_tiles, |t| {
-            let (s_tile, qbar_tile, alpha, uniforms) = decode_inputs(t);
-            decode_tile(&PpiInput {
-                r,
-                s: &s_tile,
-                qbar: &qbar_tile,
-                qmax,
-                k: cfg.k,
-                block: cfg.block,
-                alpha: &alpha,
-                uniforms: &uniforms,
-            })
-            .q
-        }),
+        Backend::Native => {
+            // Keep the full PpiOutput per tile so the per-layer decode
+            // diagnostics (winning/greedy residual, improvement events)
+            // come for free — the decoder computes them anyway.
+            let outs: Vec<PpiOutput> = parallel_map(n_tiles, |t| {
+                let (s_tile, qbar_tile, alpha, uniforms) = decode_inputs(t);
+                decode_tile(&PpiInput {
+                    r,
+                    s: &s_tile,
+                    qbar: &qbar_tile,
+                    qmax,
+                    k: cfg.k,
+                    block: cfg.block,
+                    alpha: &alpha,
+                    uniforms: &uniforms,
+                })
+            });
+            for out in &outs {
+                diag.absorb(out, cfg.k);
+            }
+            outs.into_iter().map(|o| o.q).collect()
+        }
         Backend::Pjrt => {
             // The PJRT runtime owns a single device stream; keep the tile
             // loop serial and let the artifact parallelize internally.
+            // The artifact returns codes only, so `diag` stays zeroed.
             let rt = rt.ok_or_else(|| {
                 anyhow::anyhow!("PJRT backend requested but no SolverRuntime provided")
             })?;
@@ -192,7 +266,7 @@ pub fn quantize_with(
         q.effective = Some(w_hat);
         q.perm = Some(perm.iter().map(|&p| p as u32).collect());
     }
-    Ok(q)
+    Ok((q, diag))
 }
 
 /// The code-space center `Q̄ = Ŵ_real ⊘ S + Z` restricted to columns
@@ -328,6 +402,30 @@ mod tests {
         let mut rng = Rng::new(7);
         let q = quantize(&w, &x_fp, &x_rt, &cfg, &mut rng, None).unwrap();
         assert!(q.codes.iter().all(|&c| c <= 7));
+    }
+
+    #[test]
+    fn diag_matches_decode_semantics() {
+        let (w, x_fp, x_rt) = layer(32, 24, 64, 11);
+        let cfg = QuantConfig { wbit: 3, group_size: 8, k: 6, ntile: 10, ..Default::default() };
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        let (qd, diag) = quantize_with_diag(&w, &x_fp, &x_rt, &cfg, &mut a, None, None).unwrap();
+        let q = quantize_with(&w, &x_fp, &x_rt, &cfg, &mut b, None, None).unwrap();
+        // Pure observation: codes identical with and without diagnostics.
+        assert_eq!(qd.codes, q.codes);
+        assert_eq!(diag.cols, 24);
+        assert_eq!(diag.sampled_paths, 6 * 24);
+        // The winner is the min over paths including greedy, so the
+        // winning residual never exceeds greedy's.
+        assert!(diag.decode_resid <= diag.greedy_resid + 1e-9);
+        assert!((0.0..=1.0).contains(&diag.improvement_rate()));
+        // K=0 has only the greedy path: nothing sampled, nothing improved.
+        let cfg0 = variant_naive(&cfg);
+        let mut c = Rng::new(4);
+        let (_, d0) = quantize_with_diag(&w, &x_fp, &x_rt, &cfg0, &mut c, None, None).unwrap();
+        assert_eq!((d0.sampled_paths, d0.improved_cols), (0, 0));
+        assert!((d0.decode_resid - d0.greedy_resid).abs() < 1e-9);
     }
 
     #[test]

@@ -5,6 +5,9 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+pub mod trace;
+pub use trace::{validate_trace, LayerTraceRow, RunTrace, TRACE_VERSION};
+
 /// A simple column-oriented table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {

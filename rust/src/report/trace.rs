@@ -1,0 +1,636 @@
+//! `RunTrace` — the machine-readable run manifest behind `trace.json`.
+//!
+//! A trace captures one process's [`crate::obs`] registry (span tree +
+//! metrics) together with run configuration, thread count, and the
+//! per-layer residual records from the pipeline. Emitted by
+//! `ojbkq quantize --trace` and the traced benches; consumed by the CI
+//! `check-trace` leg via [`validate_trace`], which parses the JSON with
+//! a self-contained recursive-descent parser (no serde offline) and
+//! rejects any span path segment or metric name outside the curated
+//! [`crate::obs`] taxonomy.
+//!
+//! ## `trace.json` schema (version 1)
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "threads": 8,
+//!   "config": {"model": "tiny-0.2M", "method": "ojbkq", ...},
+//!   "spans": [{"path": "pipeline/attn_in/solve", "count": 8, "secs": 0.12}, ...],
+//!   "counters": {"qgemm.calls": 42, ...},
+//!   "gauges": {"eval.windows_per_sec": 193.5, ...},
+//!   "hists": {"layer.rt_err": {"count": 14, "sum": 1.2, "min": 0.01, "max": 0.4}, ...},
+//!   "layers": [{"id": "b0.q", "metrics": {"rt_err": 0.08, ...}}, ...]
+//! }
+//! ```
+//!
+//! All numbers are finite: non-finite f64s are serialized as `0.0` so
+//! the file stays strict JSON.
+
+use crate::obs::{self, HistSummary, Snapshot};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Current `trace.json` schema version.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Per-layer metric record in a trace (one per quantized linear).
+#[derive(Debug, Clone, Default)]
+pub struct LayerTraceRow {
+    /// Layer identity, e.g. `b0.q` (`model::LinearId` display form).
+    pub id: String,
+    /// `(name, value)` pairs; names must be in
+    /// [`obs::LAYER_METRIC_NAMES`].
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// One run's full observability manifest.
+#[derive(Debug, Clone, Default)]
+pub struct RunTrace {
+    /// Schema version ([`TRACE_VERSION`]).
+    pub version: u64,
+    /// Worker threads the run used (`parallel::num_threads()` at capture).
+    pub threads: usize,
+    /// Free-form `(key, value)` run configuration (model, method, wbit…).
+    pub config: Vec<(String, String)>,
+    /// The span/metric registry snapshot.
+    pub snapshot: Snapshot,
+    /// Per-layer residual records from `PipelineReport`.
+    pub layers: Vec<LayerTraceRow>,
+}
+
+impl RunTrace {
+    /// Snapshot the global [`obs`] registry right now, with the given run
+    /// configuration attached.
+    pub fn capture(config: Vec<(String, String)>) -> RunTrace {
+        RunTrace {
+            version: TRACE_VERSION,
+            threads: crate::parallel::num_threads(),
+            config,
+            snapshot: obs::snapshot(),
+            layers: Vec::new(),
+        }
+    }
+
+    /// Serialize to the `trace.json` schema (see module docs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        let _ = write!(out, "\"version\":{},", self.version);
+        let _ = write!(out, "\"threads\":{},", self.threads);
+        let cfg: Vec<String> = self
+            .config
+            .iter()
+            .map(|(k, v)| format!("{}:{}", super::json_str(k), super::json_str(v)))
+            .collect();
+        let _ = write!(out, "\"config\":{{{}}},", cfg.join(","));
+        let spans: Vec<String> = self
+            .snapshot
+            .spans
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"path\":{},\"count\":{},\"secs\":{}}}",
+                    super::json_str(&s.path),
+                    s.count,
+                    json_f64(s.secs)
+                )
+            })
+            .collect();
+        let _ = write!(out, "\"spans\":[{}],", spans.join(","));
+        let counters: Vec<String> = self
+            .snapshot
+            .counters
+            .iter()
+            .map(|(n, v)| format!("{}:{}", super::json_str(n), v))
+            .collect();
+        let _ = write!(out, "\"counters\":{{{}}},", counters.join(","));
+        let gauges: Vec<String> = self
+            .snapshot
+            .gauges
+            .iter()
+            .map(|(n, v)| format!("{}:{}", super::json_str(n), json_f64(*v)))
+            .collect();
+        let _ = write!(out, "\"gauges\":{{{}}},", gauges.join(","));
+        let hists: Vec<String> = self
+            .snapshot
+            .hists
+            .iter()
+            .map(|(n, h)| {
+                format!(
+                    "{}:{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{}}}",
+                    super::json_str(n),
+                    h.count,
+                    json_f64(h.sum),
+                    json_f64(h.min),
+                    json_f64(h.max)
+                )
+            })
+            .collect();
+        let _ = write!(out, "\"hists\":{{{}}},", hists.join(","));
+        let layers: Vec<String> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let ms: Vec<String> = l
+                    .metrics
+                    .iter()
+                    .map(|(n, v)| format!("{}:{}", super::json_str(n), json_f64(*v)))
+                    .collect();
+                format!(
+                    "{{\"id\":{},\"metrics\":{{{}}}}}",
+                    super::json_str(&l.id),
+                    ms.join(",")
+                )
+            })
+            .collect();
+        let _ = write!(out, "\"layers\":[{}]", layers.join(","));
+        out.push('}');
+        out
+    }
+
+    /// Human-readable span-tree table plus metric summary — what
+    /// `--trace` prints after the run.
+    pub fn to_markdown(&self) -> String {
+        let mut t = super::Table::new(
+            "Span tree (wall-clock, aggregated by path)",
+            &["span", "calls", "total s", "mean ms"],
+        );
+        for s in &self.snapshot.spans {
+            // Indent by depth so the aggregated paths read as a tree.
+            let depth = s.path.matches('/').count();
+            let leaf = s.path.rsplit('/').next().unwrap_or(&s.path);
+            let label = format!("{}{}", "  ".repeat(depth), leaf);
+            t.push_row(&[
+                label,
+                s.count.to_string(),
+                format!("{:.3}", s.secs),
+                format!("{:.3}", 1e3 * s.secs / s.count.max(1) as f64),
+            ]);
+        }
+        let mut out = t.to_markdown();
+        let mut m = super::Table::new("Metrics", &["name", "kind", "value"]);
+        for (n, v) in &self.snapshot.counters {
+            m.push_row(&[n.clone(), "counter".into(), v.to_string()]);
+        }
+        for (n, v) in &self.snapshot.gauges {
+            m.push_row(&[n.clone(), "gauge".into(), format!("{v:.3}")]);
+        }
+        for (n, h) in &self.snapshot.hists {
+            m.push_row(&[
+                n.clone(),
+                "hist".into(),
+                format!("n={} mean={:.4} min={:.4} max={:.4}", h.count, h.mean(), h.min, h.max),
+            ]);
+        }
+        if !m.rows.is_empty() {
+            out.push('\n');
+            out.push_str(&m.to_markdown());
+        }
+        out
+    }
+
+    /// Write `to_json()` to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Finite JSON number rendering (non-finite → 0, strict JSON has no
+/// NaN/Inf tokens).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+// ----- validation ----------------------------------------------------
+
+/// Minimal JSON value for the schema checker.
+#[derive(Debug, Clone, PartialEq)]
+enum JsonV {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonV>),
+    Obj(Vec<(String, JsonV)>),
+}
+
+impl JsonV {
+    fn get<'a>(&'a self, key: &str) -> Option<&'a JsonV> {
+        match self {
+            JsonV::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("json parse error at byte {}: {}", self.pos, msg)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonV, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonV::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonV::Bool(true)),
+            Some(b'f') => self.literal("false", JsonV::Bool(false)),
+            Some(b'n') => self.literal("null", JsonV::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonV) -> Result<JsonV, String> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonV, String> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|_| self.err("utf8"))?;
+        s.parse::<f64>().map(JsonV::Num).map_err(|_| self.err(&format!("bad number {s:?}")))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&c) = self.bytes.get(self.pos) else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.bytes.get(self.pos) else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(self.err("short \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| self.err("utf8 in \\u"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            // Surrogates don't occur in our own output;
+                            // map unpaired ones to the replacement char.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                _ => {
+                    // Re-sync to char boundary for multi-byte UTF-8.
+                    let start = self.pos - 1;
+                    let mut end = self.pos;
+                    while end < self.bytes.len() && self.bytes[end] & 0xc0 == 0x80 {
+                        end += 1;
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| self.err("utf8 in string"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonV, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonV::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonV::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonV, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonV::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonV::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn parse(mut self) -> Result<JsonV, String> {
+        let v = self.value()?;
+        if self.peek().is_some() {
+            return Err(self.err("trailing data"));
+        }
+        Ok(v)
+    }
+}
+
+fn require<'a>(obj: &'a JsonV, key: &str) -> Result<&'a JsonV, String> {
+    obj.get(key).ok_or_else(|| format!("trace missing required key {key:?}"))
+}
+
+fn as_num(v: &JsonV, what: &str) -> Result<f64, String> {
+    match v {
+        JsonV::Num(n) => Ok(*n),
+        _ => Err(format!("{what} must be a number")),
+    }
+}
+
+/// Validate `text` against the `trace.json` schema: structure, types,
+/// and — critically — that every span path segment, metric name, and
+/// per-layer metric key belongs to the curated [`obs`] taxonomy.
+/// Returns a human-readable error on the first violation. This is the
+/// CI `check-trace` entry point keeping the metric namespace curated.
+pub fn validate_trace(text: &str) -> Result<(), String> {
+    let root = Parser::new(text).parse()?;
+    let version = as_num(require(&root, "version")?, "version")?;
+    if version != TRACE_VERSION as f64 {
+        return Err(format!("unsupported trace version {version} (want {TRACE_VERSION})"));
+    }
+    let threads = as_num(require(&root, "threads")?, "threads")?;
+    if threads < 1.0 || threads.fract() != 0.0 {
+        return Err(format!("threads must be a positive integer, got {threads}"));
+    }
+    match require(&root, "config")? {
+        JsonV::Obj(fields) => {
+            for (k, v) in fields {
+                if !matches!(v, JsonV::Str(_)) {
+                    return Err(format!("config[{k:?}] must be a string"));
+                }
+            }
+        }
+        _ => return Err("config must be an object".into()),
+    }
+    match require(&root, "spans")? {
+        JsonV::Arr(items) => {
+            for it in items {
+                let path = match require(it, "path")? {
+                    JsonV::Str(s) => s,
+                    _ => return Err("span path must be a string".into()),
+                };
+                for seg in path.split('/') {
+                    if !obs::SPAN_NAMES.contains(&seg) {
+                        return Err(format!("unknown span name {seg:?} in path {path:?}"));
+                    }
+                }
+                let count = as_num(require(it, "count")?, "span count")?;
+                if count < 1.0 || count.fract() != 0.0 {
+                    return Err(format!("span {path:?} count must be a positive integer"));
+                }
+                let secs = as_num(require(it, "secs")?, "span secs")?;
+                if secs < 0.0 {
+                    return Err(format!("span {path:?} secs must be non-negative"));
+                }
+            }
+        }
+        _ => return Err("spans must be an array".into()),
+    }
+    for (key, kind) in [("counters", "counter"), ("gauges", "gauge")] {
+        match require(&root, key)? {
+            JsonV::Obj(fields) => {
+                for (n, v) in fields {
+                    if !obs::METRIC_NAMES.contains(&n.as_str()) {
+                        return Err(format!("unknown {kind} metric {n:?}"));
+                    }
+                    as_num(v, &format!("{kind} {n:?}"))?;
+                }
+            }
+            _ => return Err(format!("{key} must be an object")),
+        }
+    }
+    match require(&root, "hists")? {
+        JsonV::Obj(fields) => {
+            for (n, v) in fields {
+                if !obs::METRIC_NAMES.contains(&n.as_str()) {
+                    return Err(format!("unknown hist metric {n:?}"));
+                }
+                for f in ["count", "sum", "min", "max"] {
+                    as_num(require(v, f)?, &format!("hist {n:?}.{f}"))?;
+                }
+            }
+        }
+        _ => return Err("hists must be an object".into()),
+    }
+    match require(&root, "layers")? {
+        JsonV::Arr(items) => {
+            for it in items {
+                let id = match require(it, "id")? {
+                    JsonV::Str(s) => s,
+                    _ => return Err("layer id must be a string".into()),
+                };
+                match require(it, "metrics")? {
+                    JsonV::Obj(fields) => {
+                        for (n, v) in fields {
+                            if !obs::LAYER_METRIC_NAMES.contains(&n.as_str()) {
+                                return Err(format!("unknown layer metric {n:?} on layer {id:?}"));
+                            }
+                            as_num(v, &format!("layer {id:?} metric {n:?}"))?;
+                        }
+                    }
+                    _ => return Err(format!("layer {id:?} metrics must be an object")),
+                }
+            }
+        }
+        _ => return Err("layers must be an array".into()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanRow;
+
+    fn sample_trace() -> RunTrace {
+        RunTrace {
+            version: TRACE_VERSION,
+            threads: 4,
+            config: vec![
+                ("model".into(), "tiny-0.2M".into()),
+                ("method".into(), "ojbkq \"q\"".into()),
+            ],
+            snapshot: Snapshot {
+                spans: vec![
+                    SpanRow { path: "pipeline".into(), count: 1, secs: 1.5 },
+                    SpanRow { path: "pipeline/attn_in/solve".into(), count: 8, secs: 0.25 },
+                ],
+                counters: vec![("qgemm.calls".into(), 42)],
+                gauges: vec![("eval.windows_per_sec".into(), 19.5)],
+                hists: vec![(
+                    "layer.rt_err".into(),
+                    HistSummary { count: 2, sum: 0.3, min: 0.1, max: 0.2 },
+                )],
+            },
+            layers: vec![LayerTraceRow {
+                id: "b0.q".into(),
+                metrics: vec![("rt_err".into(), 0.1), ("clip_rate".into(), 0.02)],
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_validates() {
+        let json = sample_trace().to_json();
+        validate_trace(&json).unwrap();
+    }
+
+    #[test]
+    fn empty_capture_validates() {
+        // A run with nothing recorded still emits a schema-valid file.
+        let t = RunTrace::capture(vec![("model".into(), "m".into())]);
+        validate_trace(&t.to_json()).unwrap();
+    }
+
+    #[test]
+    fn unknown_metric_name_rejected() {
+        let mut t = sample_trace();
+        t.snapshot.counters.push(("qgemm.bogus_counter".into(), 1));
+        let err = validate_trace(&t.to_json()).unwrap_err();
+        assert!(err.contains("bogus_counter"), "{err}");
+    }
+
+    #[test]
+    fn unknown_span_segment_rejected() {
+        let mut t = sample_trace();
+        t.snapshot.spans.push(SpanRow { path: "pipeline/warp_drive".into(), count: 1, secs: 0.0 });
+        let err = validate_trace(&t.to_json()).unwrap_err();
+        assert!(err.contains("warp_drive"), "{err}");
+    }
+
+    #[test]
+    fn unknown_layer_metric_rejected() {
+        let mut t = sample_trace();
+        t.layers[0].metrics.push(("vibes".into(), 1.0));
+        let err = validate_trace(&t.to_json()).unwrap_err();
+        assert!(err.contains("vibes"), "{err}");
+    }
+
+    #[test]
+    fn missing_key_and_bad_version_rejected() {
+        assert!(validate_trace("{}").unwrap_err().contains("version"));
+        let mut t = sample_trace();
+        t.version = 99;
+        assert!(validate_trace(&t.to_json()).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        assert!(validate_trace("{\"version\":1,").is_err());
+        assert!(validate_trace("").is_err());
+        assert!(validate_trace("[1,2,]").is_err());
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_nesting() {
+        let v = Parser::new(r#"{"a":[1,-2.5e1,"x\n\"yA"],"b":{"c":null,"d":true}}"#)
+            .parse()
+            .unwrap();
+        assert_eq!(
+            v.get("a"),
+            Some(&JsonV::Arr(vec![
+                JsonV::Num(1.0),
+                JsonV::Num(-25.0),
+                JsonV::Str("x\n\"yA".into())
+            ]))
+        );
+        assert_eq!(v.get("b").and_then(|b| b.get("d")), Some(&JsonV::Bool(true)));
+    }
+
+    #[test]
+    fn non_finite_serialized_as_zero() {
+        let mut t = sample_trace();
+        t.snapshot.gauges[0].1 = f64::NAN;
+        let json = t.to_json();
+        validate_trace(&json).unwrap();
+        assert!(json.contains("\"eval.windows_per_sec\":0"));
+    }
+
+    #[test]
+    fn markdown_renders_tree() {
+        let md = sample_trace().to_markdown();
+        assert!(md.contains("pipeline"));
+        assert!(md.contains("    solve")); // depth-2 indent
+        assert!(md.contains("qgemm.calls"));
+    }
+}

@@ -1,0 +1,225 @@
+//! Observability-stack integration suite (`ojbkq::obs` +
+//! `report::RunTrace`):
+//!
+//! * **span nesting/aggregation** — guards aggregate `(count, secs)` by
+//!   `/`-joined path, and a full pipeline run produces the documented
+//!   span tree with call counts invariant across `OJBKQ_THREADS ∈ {1,4}`;
+//! * **metrics registry concurrency** — counters/hists accumulate
+//!   exactly under contention from many threads;
+//! * **disabled-mode no-op** — with tracing off, an entire pipeline +
+//!   eval + forward records *zero* events (the [`ojbkq::obs::event_count`]
+//!   hook, mirroring `no_dequant_hot_path.rs`'s counter pattern);
+//! * **inertness** — pipeline output is bit-identical with tracing on
+//!   and off;
+//! * **trace manifest** — a captured `RunTrace` serializes to JSON that
+//!   passes [`ojbkq::report::validate_trace`], and tampering is caught.
+//!
+//! The obs registry and the trace override are process-global, so every
+//! test here serializes through a file-wide mutex and resets the
+//! registry on entry/exit (same discipline as `solver_parallel.rs`'s
+//! thread pin).
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::{quantize_model, PipelineReport};
+use ojbkq::data::{Corpus, SyntheticGrammar};
+use ojbkq::eval::perplexity;
+use ojbkq::infer::QuantizedModel;
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::obs;
+use ojbkq::parallel::set_thread_override;
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::{validate_trace, RunTrace};
+use ojbkq::rng::Rng;
+use std::sync::Mutex;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with tracing forced to `on`, the registry cleared, and the
+/// worker thread count pinned to `threads` — restoring the environment
+/// defaults afterwards. Serialized across tests in this binary (the
+/// registry and both overrides are process-global).
+fn with_obs<T>(on: bool, threads: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_trace_override(Some(on));
+    set_thread_override(threads);
+    obs::reset();
+    let out = f();
+    obs::set_trace_override(None);
+    set_thread_override(0);
+    obs::reset();
+    out
+}
+
+fn tiny_setup() -> (Model, Corpus) {
+    let cfg = ModelConfig {
+        name: "obs".into(),
+        vocab_size: 64,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+        max_seq: 48,
+    };
+    let mut rng = Rng::new(0x0B5);
+    let model = Model::random(cfg, &mut rng);
+    let corpus = SyntheticGrammar::new(64, 0.2, 5).corpus(12_000, &mut rng);
+    (model, corpus)
+}
+
+fn run_pipeline(model: &Model, corpus: &Corpus) -> (QuantizedModel, PipelineReport) {
+    let cfg = QuantConfig { ntile: 16, ..QuantConfig::paper_defaults(4, 8) };
+    quantize_model(model, corpus, Method::Ojbkq, &cfg, 3, 32, None).expect("pipeline")
+}
+
+#[test]
+fn spans_aggregate_by_nested_path() {
+    with_obs(true, 1, || {
+        {
+            let _outer = obs::span("pipeline");
+            for _ in 0..3 {
+                let _inner = obs::span("solve");
+            }
+        }
+        let _toplevel = obs::span("eval");
+        drop(_toplevel);
+        let snap = obs::snapshot();
+        let outer = snap.span("pipeline").expect("outer span recorded");
+        assert_eq!(outer.count, 1);
+        assert!(outer.secs >= 0.0);
+        let inner = snap.span("pipeline/solve").expect("nested span aggregates under parent");
+        assert_eq!(inner.count, 3);
+        let eval = snap.span("eval").expect("sibling top-level span");
+        assert_eq!(eval.count, 1);
+        assert!(snap.span("solve").is_none(), "nested span must not leak to top level");
+    });
+}
+
+#[test]
+fn pipeline_span_tree_covers_phases_and_is_thread_invariant() {
+    let (model, corpus) = tiny_setup();
+    let mut per_thread: Vec<Vec<(String, u64)>> = Vec::new();
+    for &threads in &[1usize, 4] {
+        let snap = with_obs(true, threads, || {
+            let _ = run_pipeline(&model, &corpus);
+            obs::snapshot()
+        });
+        let n_layers = model.cfg.n_layers as u64;
+        assert_eq!(snap.span("pipeline").expect("pipeline root span").count, 1);
+        assert!(snap.span("pipeline/embed").is_some(), "embed span under pipeline");
+        // Every tap group opens capture/factor/solve/pack under its own
+        // span; solve closes once per linear in the group.
+        for (group, lins) in [("attn_in", 3u64), ("o_in", 1), ("mlp_in", 2), ("down_in", 1)] {
+            for phase in ["capture", "factor", "solve", "pack"] {
+                let path = format!("pipeline/{group}/{phase}");
+                let row = snap.span(&path).unwrap_or_else(|| panic!("missing span {path}"));
+                assert!(row.count >= 1, "{path} count");
+                if phase == "solve" || phase == "pack" {
+                    assert_eq!(row.count, lins * n_layers, "{path} per-linear count");
+                }
+                if phase == "factor" {
+                    assert_eq!(row.count, n_layers, "{path} once per block");
+                }
+            }
+        }
+        // Span paths never escape the curated taxonomy.
+        for row in &snap.spans {
+            for seg in row.path.split('/') {
+                assert!(obs::SPAN_NAMES.contains(&seg), "unknown span segment {seg}");
+            }
+        }
+        // Per-layer quality metrics covered every quantized linear.
+        assert_eq!(snap.counter("quant.layers"), 7 * n_layers);
+        assert!(snap.counter("quant.cols") > 0);
+        assert!(snap.counter("quant.klein_samples") > 0, "K>0 decode samples Klein paths");
+        assert!(snap.counter("capture.block_steps") > 0);
+        per_thread.push(snap.spans.iter().map(|s| (s.path.clone(), s.count)).collect());
+    }
+    // Span paths and call counts are scheduling-invariant (wall-clock
+    // obviously differs); only the parallel.* metrics may vary.
+    assert_eq!(per_thread[0], per_thread[1], "span tree must not depend on thread count");
+}
+
+#[test]
+fn metrics_registry_is_concurrency_safe() {
+    with_obs(true, 1, || {
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                scope.spawn(move || {
+                    for i in 0..500u64 {
+                        obs::counter_add("qgemm.calls", 1);
+                        obs::hist_record("layer.rt_err", (t * 500 + i) as f64);
+                    }
+                });
+            }
+        });
+        let snap = obs::snapshot();
+        assert_eq!(snap.counter("qgemm.calls"), 8 * 500);
+        let (_, h) = snap
+            .hists
+            .iter()
+            .find(|(n, _)| n == "layer.rt_err")
+            .expect("hist recorded under contention");
+        assert_eq!(h.count, 8 * 500);
+        assert_eq!(h.min, 0.0);
+        assert_eq!(h.max, (8 * 500 - 1) as f64);
+    });
+}
+
+#[test]
+fn disabled_mode_records_nothing_across_full_pipeline() {
+    let (model, corpus) = tiny_setup();
+    with_obs(false, 0, || {
+        let (qm, _report) = run_pipeline(&model, &corpus);
+        let ppl = perplexity(&qm, &corpus, 32, 640);
+        assert!(ppl.is_finite());
+        let _ = qm.forward(&[1u16, 2, 3, 4, 5]);
+        assert_eq!(
+            obs::event_count(),
+            0,
+            "tracing off must record zero span/metric events on the hot path"
+        );
+        assert!(obs::snapshot().spans.is_empty());
+    });
+}
+
+#[test]
+fn tracing_is_inert_pipeline_output_bit_identical() {
+    let (model, corpus) = tiny_setup();
+    let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let (logits_off, ppl_off) = with_obs(false, 2, || {
+        let (qm, _) = run_pipeline(&model, &corpus);
+        (qm.forward(&toks), perplexity(&qm, &corpus, 32, 640))
+    });
+    let (logits_on, ppl_on) = with_obs(true, 2, || {
+        let (qm, _) = run_pipeline(&model, &corpus);
+        (qm.forward(&toks), perplexity(&qm, &corpus, 32, 640))
+    });
+    assert!(logits_off == logits_on, "forward logits must be bit-identical with tracing on/off");
+    assert_eq!(ppl_off, ppl_on, "perplexity must be bit-identical with tracing on/off");
+}
+
+#[test]
+fn captured_trace_roundtrips_schema_validation() {
+    let (model, corpus) = tiny_setup();
+    with_obs(true, 2, || {
+        let (qm, report) = run_pipeline(&model, &corpus);
+        let _ = perplexity(&qm, &corpus, 32, 640);
+        let mut trace = RunTrace::capture(vec![
+            ("model".to_string(), "obs".to_string()),
+            ("method".to_string(), "ours".to_string()),
+        ]);
+        trace.layers = report.trace_layers();
+        assert_eq!(trace.layers.len(), report.layers.len());
+        let json = trace.to_json();
+        validate_trace(&json).expect("captured trace must satisfy its own schema");
+        // The checker rejects taxonomy drift and version skew.
+        let renamed = json.replacen("\"quant.layers\"", "\"quant.bogus\"", 1);
+        assert!(renamed != json, "pipeline trace should carry quant.layers");
+        assert!(validate_trace(&renamed).is_err(), "unknown metric name must be rejected");
+        let skewed = json.replacen("\"version\":1", "\"version\":99", 1);
+        assert!(validate_trace(&skewed).is_err(), "version skew must be rejected");
+        // Human rendering exists and mentions at least the root span.
+        let md = trace.to_markdown();
+        assert!(md.contains("pipeline"));
+    });
+}
