@@ -31,14 +31,16 @@ artifacts-quick:
 	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS) --quick
 	$(MAKE) trajectory
 
-# Perf-trajectory artifacts: quick-scale packed-GEMM + solver benches
-# (BENCH_qgemm.json / BENCH_solver.json, written to rust/) plus a traced
-# tiny-model quantize whose trace.json must pass the schema checker —
-# the files the CI artifact job uploads on every push so perf and quant
-# quality are comparable across commits.
+# Perf-trajectory artifacts: quick-scale packed-GEMM + solver +
+# token-serving benches (BENCH_qgemm.json / BENCH_solver.json /
+# BENCH_serve.json, written to rust/) plus a traced tiny-model quantize
+# whose trace.json must pass the schema checker — the files the CI
+# artifact job uploads on every push so perf and quant quality are
+# comparable across commits.
 trajectory:
 	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_qgemm
 	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench perf_solver
+	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_serve
 	cd rust && cargo run --release -- quantize --model tiny-0.2M \
 		--calib 4 --seq 64 --trace-out trace.json --trace
 	cd rust && cargo run --release -- check-trace trace.json

@@ -1,0 +1,262 @@
+//! Token-serving throughput on the packed integer core: KV-cached
+//! autoregressive decode + continuous batching vs the O(T²) re-forward
+//! generation loop it replaces.
+//!
+//! Three measurements on random-init serving models (the zoo presets cap
+//! `max_seq` at 128; serving needs a ≥256-token prefix, so the bench
+//! builds its own configs):
+//!
+//!  * the serving sweep — [`Scheduler`] tokens/sec at W2/W3/W4, one
+//!    live sequence (scratch-arena [`ServeEngine::decode_step`] path) vs
+//!    a full batch (`decode_step_batch`, one fused qgemm per linear per
+//!    step), with the prefill/decode wall-clock split and resident
+//!    KV-cache bytes per row;
+//!  * KV-cached decode vs re-forward generation —
+//!    [`LanguageModel::greedy_continue`] re-runs the whole prefix per
+//!    token; the scheduler prefills once and appends. Headline scalar
+//!    `kv_decode_speedup` (prefix ≥ 256), pinned ≥ 5× in-bench;
+//!  * serving residency — packed weight bytes + peak KV-cache bytes =
+//!    the one number a serving deployment holds resident.
+//!
+//! Machine-readable results land in `BENCH_serve.json` (cwd: `rust/`).
+//!
+//! ```sh
+//! cargo bench --bench fig_serve             # full
+//! OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_serve
+//! ```
+
+use ojbkq::bench::{exp, Bencher};
+use ojbkq::config::ModelConfig;
+use ojbkq::infer::{PackedLinear, QuantizedModel};
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::quant::{rtn, QuantConfig};
+use ojbkq::report::{fmt_bytes, json_str, Table};
+use ojbkq::rng::Rng;
+use ojbkq::serve::{Request, Scheduler};
+
+fn main() {
+    let mut json = Vec::new();
+    let (t, extra) = serving_sweep();
+    json.push(("serving_sweep".to_string(), t.to_json()));
+    json.extend(extra);
+    let (t, extra) = kv_vs_reforward();
+    json.push(("kv_vs_reforward".to_string(), t.to_json()));
+    json.extend(extra);
+    let (t, extra) = serving_residency();
+    json.push(("residency".to_string(), t.to_json()));
+    json.extend(extra);
+    let fields: Vec<String> =
+        json.into_iter().map(|(k, v)| format!("{}:{}", json_str(&k), v)).collect();
+    let payload = format!("{{{}}}\n", fields.join(","));
+    std::fs::write("BENCH_serve.json", &payload).expect("write BENCH_serve.json");
+    eprintln!("[bench] wrote BENCH_serve.json");
+    exp::emit_bench_trace("fig_serve");
+}
+
+/// Serving model with a ≥256-token context window (the zoo caps at 128).
+fn serve_config() -> ModelConfig {
+    if exp::quick() {
+        ModelConfig {
+            name: "serve-quick".to_string(),
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 256,
+            max_seq: 320,
+        }
+    } else {
+        ModelConfig {
+            name: "serve-full".to_string(),
+            vocab_size: 256,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 512,
+            max_seq: 320,
+        }
+    }
+}
+
+/// Random-init model packed at `wbit` (RTN g64 — the kernel under test
+/// is serving, not the solver).
+fn packed_model(cfg: &ModelConfig, wbit: u8, rng: &mut Rng) -> QuantizedModel {
+    let m = Model::random(cfg.clone(), rng);
+    let qc = QuantConfig { wbit, group_size: 64, ..Default::default() };
+    let mut qm = QuantizedModel::from_model(&m);
+    for id in qm.linear_ids() {
+        let q = rtn::quantize(m.linear(id), &qc);
+        qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+    }
+    qm
+}
+
+/// Random prompts of length `len`.
+fn prompts(n: usize, len: usize, vocab: usize, rng: &mut Rng) -> Vec<Vec<u16>> {
+    (0..n).map(|_| (0..len).map(|_| rng.below(vocab as u64) as u16).collect()).collect()
+}
+
+/// One full scheduler run; returns (total secs, prefill secs, decode
+/// secs, tokens, peak KV bytes).
+fn serve_run(
+    qm: &QuantizedModel,
+    prompts: &[Vec<u16>],
+    max_new: usize,
+    max_concurrent: usize,
+) -> (f64, f64, f64, u64, usize) {
+    let t0 = std::time::Instant::now();
+    let mut sched = Scheduler::new(qm, max_concurrent);
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(Request {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new,
+            temperature: 0.0,
+            seed: 7 + i as u64,
+        });
+    }
+    sched.run();
+    let secs = t0.elapsed().as_secs_f64();
+    let (pf, dec) = (sched.prefill_secs(), sched.decode_secs());
+    (secs, pf, dec, sched.tokens_generated(), sched.peak_kv_bytes())
+}
+
+/// Tokens/sec at W2/W3/W4, single-stream vs continuously batched.
+fn serving_sweep() -> (Table, Vec<(String, String)>) {
+    let cfg = serve_config();
+    let (n_req, prompt_len, max_new) =
+        if exp::quick() { (4usize, 64usize, 16usize) } else { (4, 64, 48) };
+    let iters = if exp::quick() { 2 } else { 5 };
+    let mut rng = Rng::new(0x5E);
+    let ps = prompts(n_req, prompt_len, cfg.vocab_size, &mut rng);
+    let mut table = Table::new(
+        &format!(
+            "fig_serve — {} serving, {n_req} req × prompt {prompt_len} + {max_new} new",
+            cfg.name
+        ),
+        &[
+            "wbit",
+            "mode",
+            "tok/s",
+            "prefill p50 (s)",
+            "decode p50 (s)",
+            "peak KV bytes",
+        ],
+    );
+    let mut extra = Vec::new();
+    for &wbit in &[2u8, 3, 4] {
+        let qm = packed_model(&cfg, wbit, &mut rng);
+        let total_tokens = (n_req * max_new) as f64;
+        let mut stats = Vec::new();
+        for &(mode, conc) in &[("single", 1usize), ("batched", n_req)] {
+            let mut split = (0.0, 0.0, 0usize);
+            let s = Bencher::new(&format!("serve w{wbit} {mode}")).iters(iters).run(|| {
+                let (_, pf, dec, _, kv) = serve_run(&qm, &ps, max_new, conc);
+                split = (pf, dec, kv);
+            });
+            let tps = total_tokens / s.p50.max(1e-12);
+            table.push_row(&[
+                wbit.to_string(),
+                mode.to_string(),
+                format!("{tps:.1}"),
+                format!("{:.5}", split.0),
+                format!("{:.5}", split.1),
+                split.2.to_string(),
+            ]);
+            extra.push((format!("tokens_per_sec_{mode}_w{wbit}"), format!("{tps:.1}")));
+            stats.push(s.p50);
+        }
+        extra.push((
+            format!("batched_speedup_w{wbit}"),
+            format!("{:.3}", stats[0] / stats[1].max(1e-12)),
+        ));
+    }
+    table.emit(Some(&exp::results_dir()), "fig_serve_sweep");
+    (table, extra)
+}
+
+/// KV-cached decode vs the O(T²) re-forward loop, prefix ≥ 256. The
+/// acceptance scalar `kv_decode_speedup` is pinned ≥ 5× here.
+fn kv_vs_reforward() -> (Table, Vec<(String, String)>) {
+    let cfg = serve_config();
+    let prompt_len = 256usize; // acceptance floor — not shrunk in quick mode
+    let max_new = if exp::quick() { 16 } else { 48 };
+    let iters = if exp::quick() { 2 } else { 5 };
+    let mut rng = Rng::new(0x4B);
+    let qm = packed_model(&cfg, 4, &mut rng);
+    let prompt: Vec<u16> =
+        (0..prompt_len).map(|_| rng.below(cfg.vocab_size as u64) as u16).collect();
+    let s_reforward = Bencher::new("generate re-forward")
+        .iters(iters)
+        .run(|| qm.greedy_continue(&prompt, max_new));
+    let mut split = (0.0f64, 0.0f64);
+    let s_kv = Bencher::new("generate KV-cached").iters(iters).run(|| {
+        let (_, pf, dec, _, _) = serve_run(&qm, std::slice::from_ref(&prompt), max_new, 1);
+        split = (pf, dec);
+    });
+    let speedup = s_reforward.p50 / s_kv.p50.max(1e-12);
+    let mut table = Table::new(
+        &format!(
+            "fig_serve — KV cache vs re-forward, {} W4, prefix {prompt_len} + {max_new} new",
+            cfg.name
+        ),
+        &["generation path", "p50 (s)", "tok/s", "speedup"],
+    );
+    table.push_row(&[
+        "re-forward (greedy_continue)".to_string(),
+        format!("{:.5}", s_reforward.p50),
+        format!("{:.1}", max_new as f64 / s_reforward.p50.max(1e-12)),
+        "1.00x".to_string(),
+    ]);
+    table.push_row(&[
+        "KV-cached (prefill + decode)".to_string(),
+        format!("{:.5}", s_kv.p50),
+        format!("{:.1}", max_new as f64 / s_kv.p50.max(1e-12)),
+        format!("{speedup:.2}x"),
+    ]);
+    table.emit(Some(&exp::results_dir()), "fig_serve_kv");
+    assert!(
+        speedup >= 5.0,
+        "KV-cached decode must beat re-forward generation by ≥5x at prefix ≥256: {speedup:.2}x"
+    );
+    let extra = vec![
+        ("kv_decode_speedup".to_string(), format!("{speedup:.3}")),
+        ("kv_prefill_secs".to_string(), format!("{:.5}", split.0)),
+        ("kv_decode_secs".to_string(), format!("{:.5}", split.1)),
+    ];
+    (table, extra)
+}
+
+/// What a serving deployment holds resident: packed weights + KV cache.
+fn serving_residency() -> (Table, Vec<(String, String)>) {
+    let cfg = serve_config();
+    let (n_req, prompt_len, max_new) = (4usize, 64usize, 8usize);
+    let mut rng = Rng::new(0x4E5);
+    let qm = packed_model(&cfg, 4, &mut rng);
+    let ps = prompts(n_req, prompt_len, cfg.vocab_size, &mut rng);
+    let (_, _, _, _, kv_peak) = serve_run(&qm, &ps, max_new, n_req);
+    let weights = qm.packed_weight_bytes();
+    let total = weights + kv_peak;
+    let mut table = Table::new(
+        &format!("fig_serve — {} W4 resident serving memory, {n_req} concurrent", cfg.name),
+        &["component", "bytes", "human"],
+    );
+    table.push_row(&[
+        "packed weights".to_string(),
+        weights.to_string(),
+        fmt_bytes(weights as u64),
+    ]);
+    table.push_row(&[
+        "KV cache (peak)".to_string(),
+        kv_peak.to_string(),
+        fmt_bytes(kv_peak as u64),
+    ]);
+    table.push_row(&["total".to_string(), total.to_string(), fmt_bytes(total as u64)]);
+    table.emit(Some(&exp::results_dir()), "fig_serve_residency");
+    let extra = vec![
+        ("packed_weight_bytes".to_string(), weights.to_string()),
+        ("kv_peak_bytes".to_string(), kv_peak.to_string()),
+        ("resident_bytes".to_string(), total.to_string()),
+    ];
+    (table, extra)
+}

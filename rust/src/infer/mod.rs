@@ -41,8 +41,8 @@ pub mod packed;
 
 pub use io::{load_quantized, save_quantized, CheckpointInfo};
 pub use packed::{
-    packed_core, qgemm_packed, qgemm_packed_with, qgemv_packed, qgemv_packed_with,
-    set_packed_core_override, PackedCore, PackedLinear, COL_TILE,
+    packed_core, qgemm_packed, qgemm_packed_with, qgemv_packed, qgemv_packed_into,
+    qgemv_packed_with, set_packed_core_override, GemvScratch, PackedCore, PackedLinear, COL_TILE,
 };
 
 use crate::config::ModelConfig;

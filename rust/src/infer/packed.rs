@@ -429,6 +429,35 @@ impl PackedLinear {
             }
         }
     }
+
+    /// `y = x · Ŵ` for a single activation row, written into `out` — the
+    /// decode hot path of [`crate::serve`]. Bit-identical to
+    /// `self.matmul(x_as_1row).row(0)` on every leg:
+    ///
+    /// * **Packed, integer core**: [`qgemv_packed_into`] — quantize the
+    ///   row into the caller's [`GemvScratch`] and run the register
+    ///   kernel; **zero allocations** after scratch warm-up.
+    /// * **Packed, f32 reference core**: the shared [`qgemm_packed_with`]
+    ///   grid kernel at `bl = 1` (the parity leg keeps its one set of
+    ///   numerics; it allocates, but it is not the deployment core).
+    /// * **Dense fallback**: [`crate::linalg::row_matmul_into`], the
+    ///   `m = 1` specialization of the blocked GEMM.
+    pub fn gemv_into(&self, x: &[f32], scratch: &mut GemvScratch, out: &mut [f32]) {
+        match self {
+            PackedLinear::Packed(t) => match packed_core() {
+                PackedCore::Int => qgemv_packed_into(t, x, scratch, out),
+                PackedCore::F32 => {
+                    let xm = Matrix::from_vec(1, t.m, x.to_vec());
+                    let y = qgemm_packed_with(t, &xm, PackedCore::F32);
+                    out.copy_from_slice(y.row(0));
+                }
+            },
+            PackedLinear::Dense(w) => {
+                crate::obs::counter_add("qgemm.dense_calls", 1);
+                crate::linalg::row_matmul_into(x, w, out);
+            }
+        }
+    }
 }
 
 // ----- integer core ---------------------------------------------------
@@ -437,6 +466,7 @@ impl PackedLinear {
 /// the quantization prologue and shared (read-only) by every grid cell.
 /// Rows are stored in **decode order** — the act-order permutation is
 /// resolved here, once, so the microkernel walks contiguous memory.
+#[derive(Debug, Default)]
 struct IntActPanel {
     /// `b × m` quantized activations `x̂ = round(x/a)`, row-major,
     /// decode order.
@@ -459,6 +489,73 @@ fn act_amp(t: &PackedTiles) -> f32 {
     ((i32::MAX as u64) / (maxcode * gs)).clamp(1, ACT_AMP_MAX) as f32
 }
 
+/// Quantize one activation row onto the fixed-point grid — the per-row
+/// body of [`quantize_act_rows`], also the prologue of the scratch-arena
+/// decode path ([`qgemv_packed_into`]), so batched and single-token
+/// activation quantization share one code path by construction.
+fn quantize_act_row(
+    t: &PackedTiles,
+    row: &[f32],
+    amp: f32,
+    qrow: &mut [i16],
+    arow: &mut [f32],
+    grow: &mut [i32],
+) {
+    let (m, gsz, n_groups) = (t.m, t.group_size, t.n_groups);
+    let perm = t.perm.as_deref();
+    debug_assert_eq!(row.len(), m);
+    debug_assert_eq!(qrow.len(), m);
+    debug_assert_eq!(arow.len(), n_groups);
+    debug_assert_eq!(grow.len(), n_groups);
+    for g in 0..n_groups {
+        let i0 = g * gsz;
+        let i1 = (i0 + gsz).min(m);
+        let mut amax = 0.0f32;
+        match perm {
+            None => {
+                for &v in &row[i0..i1] {
+                    amax = amax.max(v.abs());
+                }
+            }
+            Some(p) => {
+                for &pi in &p[i0..i1] {
+                    amax = amax.max(row[pi as usize].abs());
+                }
+            }
+        }
+        if amax == 0.0 || !amax.is_finite() {
+            // All-zero (or degenerate) group: a = 0 makes the whole
+            // contribution exactly 0, matching the f32 core.
+            arow[g] = 0.0;
+            grow[g] = 0;
+            for slot in &mut qrow[i0..i1] {
+                *slot = 0;
+            }
+            continue;
+        }
+        let inv = amp / amax;
+        arow[g] = amax / amp;
+        let mut sum = 0i32;
+        match perm {
+            None => {
+                for (slot, &v) in qrow[i0..i1].iter_mut().zip(&row[i0..i1]) {
+                    let q = (v * inv).round() as i32;
+                    sum += q;
+                    *slot = q as i16;
+                }
+            }
+            Some(p) => {
+                for (slot, &pi) in qrow[i0..i1].iter_mut().zip(&p[i0..i1]) {
+                    let q = (row[pi as usize] * inv).round() as i32;
+                    sum += q;
+                    *slot = q as i16;
+                }
+            }
+        }
+        grow[g] = sum;
+    }
+}
+
 /// Quantize activation rows `[r0, r1)` of `x` onto the fixed-point grid,
 /// filling the panel slices for those rows.
 #[allow(clippy::too_many_arguments)]
@@ -472,60 +569,16 @@ fn quantize_act_rows(
     ascale: &mut [f32],
     gisum: &mut [i32],
 ) {
-    let (m, gsz, n_groups) = (t.m, t.group_size, t.n_groups);
-    let perm = t.perm.as_deref();
+    let (m, n_groups) = (t.m, t.n_groups);
     for r in r0..r1 {
-        let row = x.row(r);
-        let qrow = &mut xq[(r - r0) * m..(r - r0 + 1) * m];
-        let arow = &mut ascale[(r - r0) * n_groups..(r - r0 + 1) * n_groups];
-        let grow = &mut gisum[(r - r0) * n_groups..(r - r0 + 1) * n_groups];
-        for g in 0..n_groups {
-            let i0 = g * gsz;
-            let i1 = (i0 + gsz).min(m);
-            let mut amax = 0.0f32;
-            match perm {
-                None => {
-                    for &v in &row[i0..i1] {
-                        amax = amax.max(v.abs());
-                    }
-                }
-                Some(p) => {
-                    for &pi in &p[i0..i1] {
-                        amax = amax.max(row[pi as usize].abs());
-                    }
-                }
-            }
-            if amax == 0.0 || !amax.is_finite() {
-                // All-zero (or degenerate) group: a = 0 makes the whole
-                // contribution exactly 0, matching the f32 core.
-                arow[g] = 0.0;
-                grow[g] = 0;
-                for slot in &mut qrow[i0..i1] {
-                    *slot = 0;
-                }
-                continue;
-            }
-            let inv = amp / amax;
-            arow[g] = amax / amp;
-            let mut sum = 0i32;
-            match perm {
-                None => {
-                    for (slot, &v) in qrow[i0..i1].iter_mut().zip(&row[i0..i1]) {
-                        let q = (v * inv).round() as i32;
-                        sum += q;
-                        *slot = q as i16;
-                    }
-                }
-                Some(p) => {
-                    for (slot, &pi) in qrow[i0..i1].iter_mut().zip(&p[i0..i1]) {
-                        let q = (row[pi as usize] * inv).round() as i32;
-                        sum += q;
-                        *slot = q as i16;
-                    }
-                }
-            }
-            grow[g] = sum;
-        }
+        quantize_act_row(
+            t,
+            x.row(r),
+            amp,
+            &mut xq[(r - r0) * m..(r - r0 + 1) * m],
+            &mut ascale[(r - r0) * n_groups..(r - r0 + 1) * n_groups],
+            &mut gisum[(r - r0) * n_groups..(r - r0 + 1) * n_groups],
+        );
     }
 }
 
@@ -666,14 +719,17 @@ fn tile_matmul_int(
 /// Single-row integer tile kernel: the group accumulator never leaves
 /// registers (no cell accumulator buffer, no panel staging) — unpack
 /// cost dominates at `b = 1`, so each code row is decoded straight into
-/// the MAC. Bit-identical to [`tile_matmul_int`] with `bl = 1`: i32
-/// accumulation is exact and the boundary arithmetic is the same
-/// expression in the same order.
-fn tile_gemv_int(t: &PackedTiles, act: &IntActPanel, ti: usize) -> Vec<f32> {
+/// the MAC. Writes the tile's `w` outputs into the caller's buffer
+/// (zero-filled here), so the decode hot loop allocates nothing.
+/// Bit-identical to [`tile_matmul_int`] with `bl = 1`: i32 accumulation
+/// is exact and the boundary arithmetic is the same expression in the
+/// same order.
+fn tile_gemv_int_into(t: &PackedTiles, act: &IntActPanel, ti: usize, out: &mut [f32]) {
     let c0 = ti * COL_TILE;
     let w = COL_TILE.min(t.n - c0);
+    debug_assert_eq!(out.len(), w);
     let packed = &t.tiles[ti];
-    let mut out = vec![0.0f32; w];
+    out.fill(0.0);
     let mut row_codes = [0u8; COL_TILE];
     for g in 0..t.n_groups {
         let i0 = g * t.group_size;
@@ -697,7 +753,6 @@ fn tile_gemv_int(t: &PackedTiles, act: &IntActPanel, ti: usize) -> Vec<f32> {
             out[j] += a * (srow[j] * acc[j] as f32 - crow[j] * gsv);
         }
     }
-    out
 }
 
 // ----- f32 reference core ---------------------------------------------
@@ -917,23 +972,107 @@ pub fn qgemv_packed_with(t: &PackedTiles, x: &Matrix, core: PackedCore) -> Matri
 }
 
 /// Integer-core single-row path behind [`qgemv_packed`] /
-/// [`qgemm_packed`] dispatch.
+/// [`qgemm_packed`] dispatch: a throwaway scratch arena + the shared
+/// write-into kernel, so the legacy allocating signature is a thin
+/// wrapper over [`qgemv_packed_into`]'s body.
 fn qgemv_int(t: &PackedTiles, x: &Matrix) -> Matrix {
-    let act = build_int_panel(t, x, false);
+    let mut scratch = GemvScratch::new();
+    let mut y = Matrix::zeros(1, t.n);
+    qgemv_int_into(t, x.row(0), &mut scratch, y.row_mut(0));
+    y
+}
+
+/// Reusable scratch arena for the single-row integer kernel: the
+/// fixed-point activation panel buffers ([`IntActPanel`] for one row),
+/// resized per layer (capacity is retained, so growth happens only
+/// until the largest layer has been seen) and reused across every
+/// [`qgemv_packed_into`] call threaded through it, so a KV-cached decode
+/// step performs **zero heap allocations** in the GEMV hot loop after
+/// warm-up. One scratch serves layers of any shape.
+#[derive(Debug, Default)]
+pub struct GemvScratch {
+    panel: IntActPanel,
+}
+
+impl GemvScratch {
+    /// Empty arena; buffers grow on first use.
+    pub fn new() -> GemvScratch {
+        GemvScratch::default()
+    }
+
+    /// Resize the panel buffers for a layer with `m` input features and
+    /// `n_groups` scale groups (contents are overwritten by the caller).
+    fn prepare(&mut self, m: usize, n_groups: usize) {
+        self.panel.xq.resize(m, 0);
+        self.panel.ascale.resize(n_groups, 0.0);
+        self.panel.gisum.resize(n_groups, 0);
+    }
+}
+
+/// Allocation-free single-row packed GEMV on the **integer core**: the
+/// activation row is quantized into the caller's [`GemvScratch`] and the
+/// tile outputs written straight into `out` (`len = n`). Bit-identical
+/// to [`qgemv_packed`] / the corresponding [`qgemm_packed`] row on the
+/// integer core — same prologue, same register kernel, i32 accumulation
+/// exact under any tile split. This is the decode hot path of
+/// [`crate::serve`]; the f32 reference core and dense fallback go
+/// through [`PackedLinear::gemv_into`], which dispatches here only for
+/// packed layers on the integer core.
+pub fn qgemv_packed_into(t: &PackedTiles, x: &[f32], scratch: &mut GemvScratch, out: &mut [f32]) {
+    assert_eq!(x.len(), t.m, "activation/layer shape mismatch");
+    assert_eq!(out.len(), t.n, "output buffer shape mismatch");
+    // Same analytic counters as the gemv leg of [`qgemm_packed_with`]
+    // (b = 1, one unpack pass, register panels), so trace totals do not
+    // depend on which single-row entry point ran.
+    if crate::obs::enabled() {
+        crate::obs::counter_add("qgemm.gemv_calls", 1);
+        crate::obs::counter_add("qgemm.rows", 1);
+        crate::obs::counter_add("qgemm.macs", (t.m * t.n) as u64);
+        crate::obs::counter_add("qgemm.unpacked_codes", (t.m * t.n) as u64);
+        crate::obs::counter_add(
+            "qgemm.panel_fills",
+            (t.tiles.len() * t.m.div_ceil(PANEL_ROWS)) as u64,
+        );
+    }
+    qgemv_int_into(t, x, scratch, out);
+}
+
+/// Body shared by [`qgemv_packed_into`] (counters at entry) and
+/// [`qgemv_int`] (counters already recorded by [`qgemm_packed_with`]).
+fn qgemv_int_into(t: &PackedTiles, x: &[f32], scratch: &mut GemvScratch, out: &mut [f32]) {
+    scratch.prepare(t.m, t.n_groups);
+    quantize_act_row(
+        t,
+        x,
+        act_amp(t),
+        &mut scratch.panel.xq[..t.m],
+        &mut scratch.panel.ascale[..t.n_groups],
+        &mut scratch.panel.gisum[..t.n_groups],
+    );
+    let act = &scratch.panel;
     let n_tiles = t.tiles.len();
     let parallel = n_tiles > 1 && t.m * t.n >= PARALLEL_FLOPS_MIN;
-    let run = |ti: usize| tile_gemv_int(t, &act, ti);
-    let tiles_out: Vec<Vec<f32>> = if parallel {
-        parallel_map_dynamic(n_tiles, run)
+    if parallel {
+        // Huge layers only: per-tile temp buffers are the price of the
+        // fan-out (each tile is independent and i32-exact, so the split
+        // stays bit-identical). Decode-sized layers take the serial
+        // zero-allocation leg below.
+        let tiles_out: Vec<Vec<f32>> = parallel_map_dynamic(n_tiles, |ti| {
+            let w = COL_TILE.min(t.n - ti * COL_TILE);
+            let mut buf = vec![0.0f32; w];
+            tile_gemv_int_into(t, act, ti, &mut buf);
+            buf
+        });
+        for (ti, tv) in tiles_out.iter().enumerate() {
+            out[ti * COL_TILE..ti * COL_TILE + tv.len()].copy_from_slice(tv);
+        }
     } else {
-        (0..n_tiles).map(run).collect()
-    };
-    let mut y = Matrix::zeros(1, t.n);
-    let yrow = y.row_mut(0);
-    for (ti, tv) in tiles_out.iter().enumerate() {
-        yrow[ti * COL_TILE..ti * COL_TILE + tv.len()].copy_from_slice(tv);
+        for ti in 0..n_tiles {
+            let c0 = ti * COL_TILE;
+            let w = COL_TILE.min(t.n - c0);
+            tile_gemv_int_into(t, act, ti, &mut out[c0..c0 + w]);
+        }
     }
-    y
 }
 
 #[cfg(test)]
@@ -1162,6 +1301,44 @@ mod tests {
             assert_eq!(via_gemv, via_gemm, "{core:?}");
             let tall = qgemm_packed_with(t, &x, core);
             assert_eq!(via_gemv.row(0), &tall.row(0)[..], "{core:?} vs batch row");
+        }
+    }
+
+    #[test]
+    fn gemv_scratch_path_matches_allocating_entry() {
+        // qgemv_packed_into (scratch arena, write-into) must be
+        // bit-identical to qgemm_packed_with on the integer core, layer
+        // after layer through ONE reused scratch — including act-order
+        // layers and ragged tiles. The dense fallback's gemv_into must
+        // equal its matmul row.
+        let mut rng = Rng::new(0x5C4A);
+        let mut scratch = GemvScratch::new();
+        for &(m, n, gs, wbit, act_order) in &[
+            (48usize, 40usize, 16usize, 4u8, false),
+            (33, 37, 12, 3, false),
+            (40, 24, 8, 4, true),
+            (20, 5, 0, 2, false),
+        ] {
+            let w = Matrix::randn(m, n, 0.5, &mut rng);
+            let x = Matrix::randn(1, m, 1.0, &mut rng);
+            let cfg = QuantConfig { wbit, group_size: gs, act_order, ..Default::default() };
+            let q = if act_order {
+                let xcal = Matrix::randn(16, m, 1.0, &mut rng);
+                gptq::quantize(&w, &xcal, &cfg).unwrap()
+            } else {
+                rtn::quantize(&w, &cfg)
+            };
+            let p = PackedLinear::from_quantized(&q, true);
+            let t = p.as_packed().unwrap();
+            let mut out = vec![0.0f32; n];
+            qgemv_packed_into(t, x.row(0), &mut scratch, &mut out);
+            let want = qgemm_packed_with(t, &x, PackedCore::Int);
+            assert_eq!(&out[..], want.row(0), "m={m} n={n} gs={gs} wbit={wbit}");
+            // Dense fallback leg of gemv_into.
+            let d = PackedLinear::dense(w.clone());
+            let mut dout = vec![0.0f32; n];
+            d.gemv_into(x.row(0), &mut scratch, &mut dout);
+            assert_eq!(&dout[..], d.matmul(&x).row(0), "dense m={m} n={n}");
         }
     }
 

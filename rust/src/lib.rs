@@ -25,9 +25,10 @@
 //! and returns a packed-execution [`infer::QuantizedModel`]; [`quant`]
 //! exposes every solver (RTN / GPTQ / AWQ / QuIP / Babai / Klein /
 //! OJBKQ); [`infer`] executes the quantized model straight from
-//! bit-packed integer codes; [`eval`] measures perplexity, zero-shot and
-//! reasoning accuracy on any [`model::LanguageModel`]; [`bench`] is the
-//! measurement harness used by `cargo bench`.
+//! bit-packed integer codes; [`serve`] generates tokens from it with a
+//! KV cache and continuous batching; [`eval`] measures perplexity,
+//! zero-shot and reasoning accuracy on any [`model::LanguageModel`];
+//! [`bench`] is the measurement harness used by `cargo bench`.
 
 pub mod bench;
 pub mod cli;
@@ -44,6 +45,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

@@ -340,6 +340,61 @@ mod tests {
     }
 }
 
+/// `y = x · B` for a single row vector `x: 1×k` and `B: k×n`, written
+/// into the caller's `out` buffer — the allocation-free dense matvec of
+/// the KV-cached decode loop ([`crate::serve`]).
+///
+/// **Bit-identical** to `matmul(x_as_1row, b).row(0)`: the loop nest is
+/// [`gemm`] specialized to `m = 1, alpha = 1, beta = 0` — same `NC`/`KC`
+/// blocking, same 4-unrolled K kernel with the same zero-skip, same
+/// accumulation order — so single-token decode matches the batched
+/// teacher-forced path exactly.
+pub fn row_matmul_into(x: &[f32], b: &Matrix, out: &mut [f32]) {
+    let (k, n) = b.shape();
+    assert_eq!(x.len(), k, "row_matmul inner dim");
+    assert_eq!(out.len(), n, "row_matmul output dim");
+    out.fill(0.0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let b_s = b.as_slice();
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kbk = KC.min(k - pc);
+            let c_row = &mut out[jc..jc + nb];
+            let a_row = &x[pc..pc + kbk];
+            let mut p = 0usize;
+            while p + 4 <= kbk {
+                let a0 = a_row[p];
+                let a1 = a_row[p + 1];
+                let a2 = a_row[p + 2];
+                let a3 = a_row[p + 3];
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let base = (pc + p) * n + jc;
+                    let b0 = &b_s[base..base + nb];
+                    let b1 = &b_s[base + n..base + n + nb];
+                    let b2 = &b_s[base + 2 * n..base + 2 * n + nb];
+                    let b3 = &b_s[base + 3 * n..base + 3 * n + nb];
+                    for j in 0..nb {
+                        c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                p += 4;
+            }
+            for (off, &aip) in a_row[p..].iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                let b_row = &b_s[(pc + p + off) * n + jc..(pc + p + off) * n + jc + nb];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aip * bv;
+                }
+            }
+        }
+    }
+}
+
 /// `y = A · x`.
 pub fn gemv(a: &Matrix, x: &[f32]) -> Vec<f32> {
     let (m, k) = a.shape();

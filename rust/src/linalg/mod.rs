@@ -12,7 +12,7 @@ mod orthogonal;
 mod trsm;
 
 pub use cholesky::{cholesky_upper, cholesky_upper_jittered, CholeskyError};
-pub use gemm::{gemm, gemm_tn, gemv, matmul, matmul_par, syrk_upper};
+pub use gemm::{gemm, gemm_tn, gemv, matmul, matmul_par, row_matmul_into, syrk_upper};
 pub use orthogonal::{random_orthogonal, signed_permutation};
 pub use trsm::{solve_lower_t, solve_upper_mat, trsv_lower_t, trsv_upper};
 

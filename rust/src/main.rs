@@ -10,6 +10,14 @@
 //! ojbkq eval      --model NAME [--method ours] [--from CKPT.ojbq1]
 //!                 [--ppl-tokens 8192] [--zeroshot] [--reasoning]
 //!                 (quantize + evaluate, or evaluate a saved checkpoint)
+//! ojbkq generate  --model NAME [--method ours] [--from CKPT.ojbq1]
+//!                 [--new 32] [--requests 1] [--batch R] [--temp 0]
+//!                 [--prompt 3,1,4] [--prompt-len 32] [--gen-seed 7]
+//!                 (KV-cached autoregressive serving: quantize or load a
+//!                 checkpoint, then generate tokens through the
+//!                 continuous-batching scheduler — greedy at --temp 0,
+//!                 softmax sampling otherwise; prompts come from --prompt
+//!                 token ids or --prompt-len eval-corpus slices)
 //! ojbkq check-trace FILE   (validate a trace.json against its schema)
 //! ojbkq methods   (list available solvers)
 //! ```
@@ -53,8 +61,9 @@ use ojbkq::coordinator::{quantize_model, PipelineReport, Workbench};
 use ojbkq::eval;
 use ojbkq::infer::{load_quantized, save_quantized, QuantizedModel};
 use ojbkq::quant::{Backend, Method, QuantConfig};
-use ojbkq::report::{artifact_summary, RunTrace, Table};
+use ojbkq::report::{artifact_summary, fmt_bytes, RunTrace, Table};
 use ojbkq::runtime::SolverRuntime;
+use ojbkq::serve::{Request, Scheduler};
 use ojbkq::util::fmt_secs;
 use std::path::{Path, PathBuf};
 
@@ -76,14 +85,17 @@ fn main() {
         Some("methods") => cmd_methods(),
         Some("quantize") => cmd_quantize(&args, false),
         Some("eval") => cmd_quantize(&args, true),
+        Some("generate") => cmd_generate(&args),
         Some("check-trace") => cmd_check_trace(&args),
         _ => {
             eprintln!(
-                "usage: ojbkq <info|methods|quantize|eval|check-trace> [--options]\n\
+                "usage: ojbkq <info|methods|quantize|eval|generate|check-trace> [--options]\n\
                  quantize --model NAME [--out CKPT.ojbq1] writes the native packed\n\
                  OJBQ1 checkpoint (--dense-out PATH keeps the dequantized OJBW1\n\
                  export for cross-checks); eval [--from CKPT.ojbq1] scores a saved\n\
-                 checkpoint directly. --trace [--trace-out FILE] records spans,\n\
+                 checkpoint directly; generate serves tokens from it with a KV\n\
+                 cache and continuous batching (--new N --requests R --temp T).\n\
+                 --trace [--trace-out FILE] records spans,\n\
                  per-layer quality metrics and kernel counters to trace.json;\n\
                  check-trace FILE validates one against the schema.\n\
                  see `rust/src/main.rs` docs or README.md"
@@ -343,6 +355,127 @@ fn cmd_check_trace(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `ojbkq generate` — KV-cached autoregressive token serving: quantize
+/// the model (or load an OJBQ1 checkpoint via `--from`), submit
+/// `--requests` generation requests to the continuous-batching
+/// [`Scheduler`], and report per-request tokens plus the serving-rate /
+/// resident-memory summary (weights + KV cache as one number).
+fn cmd_generate(args: &Args) -> i32 {
+    let name = args.get_str("model", "small-0.8M");
+    let method = match Method::parse(&args.get_str("method", "ours")) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown method; see `ojbkq methods`");
+            return 2;
+        }
+    };
+    let cfg = quant_config(args);
+    let dir = artifacts_dir(args);
+    let wb = Workbench::load(&dir, &name);
+    if !wb.trained {
+        eprintln!("[warn] no trained artifacts for {name}; using random-init fallback");
+    }
+    let from = args.get("from");
+    let mut report = None;
+    let qmodel = if let Some(ckpt) = from {
+        match load_checkpoint(ckpt, &name, &wb) {
+            Ok(qm) => qm,
+            Err(e) => {
+                eprintln!("loading checkpoint {ckpt}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        match run_quantize(args, &name, method, &cfg, &dir, &wb) {
+            Ok((qm, rep)) => {
+                report = Some(rep);
+                qm
+            }
+            Err(code) => return code,
+        }
+    };
+    let max_seq = qmodel.cfg.max_seq;
+    let n_req = args.get_usize("requests", 1).max(1);
+    let batch = args.get_usize("batch", n_req).max(1);
+    let max_new = args.get_usize("new", 32).max(1);
+    let temperature = args.get_f32("temp", 0.0);
+    let gen_seed = args.get_u64("gen-seed", 7);
+    let prompt_len = args.get_usize("prompt-len", (max_seq / 4).max(1)).clamp(1, max_seq);
+    let explicit: Option<Vec<u16>> =
+        args.get("prompt").map(|_| args.get_list::<u16>("prompt", &[]));
+    if let Some(p) = &explicit {
+        if p.is_empty() || p.len() > max_seq {
+            eprintln!("--prompt needs 1..={max_seq} comma-separated token ids");
+            return 2;
+        }
+        if let Some(&bad) = p.iter().find(|&&t| t as usize >= qmodel.cfg.vocab_size) {
+            eprintln!("--prompt token {bad} outside vocab of {}", qmodel.cfg.vocab_size);
+            return 2;
+        }
+    }
+    let eval_toks = wb.corpus.eval();
+    if explicit.is_none() && eval_toks.len() < prompt_len {
+        eprintln!(
+            "eval corpus has {} tokens < prompt-len {prompt_len}; pass --prompt ids instead",
+            eval_toks.len()
+        );
+        return 2;
+    }
+    let mut sched = Scheduler::new(&qmodel, batch);
+    for r in 0..n_req {
+        let prompt = match &explicit {
+            Some(p) => p.clone(),
+            None => {
+                // Deterministic staggered eval-corpus slices, one per
+                // request, wrapping as needed.
+                let start = (r * prompt_len) % eval_toks.len().saturating_sub(prompt_len).max(1);
+                eval_toks[start..start + prompt_len].to_vec()
+            }
+        };
+        sched.submit(Request {
+            id: r as u64,
+            prompt,
+            max_new,
+            temperature,
+            seed: gen_seed.wrapping_add(r as u64),
+        });
+    }
+    sched.run();
+    for f in sched.finished() {
+        println!(
+            "request {}: prompt {} tokens -> {} generated: {:?}",
+            f.id,
+            f.prompt_len,
+            f.generated.len(),
+            f.generated
+        );
+    }
+    let secs = sched.prefill_secs() + sched.decode_secs();
+    println!(
+        "served {} tokens across {} requests in {} (prefill {} / decode {}): {:.1} tok/s",
+        sched.tokens_generated(),
+        n_req,
+        fmt_secs(secs),
+        fmt_secs(sched.prefill_secs()),
+        fmt_secs(sched.decode_secs()),
+        sched.tokens_generated() as f64 / secs.max(1e-9),
+    );
+    // Resident serving memory is weights + KV cache as ONE number — the
+    // cache is real deployment memory, not an accounting footnote.
+    let weight_bytes = qmodel.packed_weight_bytes() as u64;
+    let kv_peak = sched.peak_kv_bytes() as u64;
+    println!(
+        "resident serving memory: {} packed weights + {} peak KV cache = {}",
+        fmt_bytes(weight_bytes),
+        fmt_bytes(kv_peak),
+        fmt_bytes(weight_bytes + kv_peak),
+    );
+    if ojbkq::obs::enabled() {
+        emit_trace(args, &name, method, &cfg, report.as_ref());
+    }
+    0
 }
 
 fn cmd_quantize(args: &Args, and_eval: bool) -> i32 {

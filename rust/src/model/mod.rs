@@ -432,17 +432,32 @@ pub fn embed_tokens(embedding: &Matrix, cfg: &ModelConfig, tokens: &[u16]) -> Ma
     let d = cfg.d_model;
     let mut x = Matrix::zeros(seq, d);
     for (t, &tok) in tokens.iter().enumerate() {
-        let emb = embedding.row(tok as usize);
-        let row = x.row_mut(t);
-        row.copy_from_slice(emb);
-        for i in 0..d / 2 {
-            let freq = (-(2.0 * i as f64 / d as f64) * 10_000f64.ln()).exp();
-            let angle = t as f64 * freq;
-            row[2 * i] += 0.02 * angle.sin() as f32;
-            row[2 * i + 1] += 0.02 * angle.cos() as f32;
-        }
+        embed_token_into(embedding, cfg, tok, t, x.row_mut(t));
     }
     x
+}
+
+/// Embed one token at absolute position `pos` into `row` — the per-row
+/// body of [`embed_tokens`], exposed for the KV-cached decode path
+/// ([`crate::serve`]), which embeds exactly one new token per step. The
+/// sinusoidal position term depends on `pos`, so decode must pass the
+/// token's absolute position, not 0.
+pub fn embed_token_into(
+    embedding: &Matrix,
+    cfg: &ModelConfig,
+    tok: u16,
+    pos: usize,
+    row: &mut [f32],
+) {
+    let d = cfg.d_model;
+    assert!(pos < cfg.max_seq, "position beyond max_seq");
+    row.copy_from_slice(embedding.row(tok as usize));
+    for i in 0..d / 2 {
+        let freq = (-(2.0 * i as f64 / d as f64) * 10_000f64.ln()).exp();
+        let angle = pos as f64 * freq;
+        row[2 * i] += 0.02 * angle.sin() as f32;
+        row[2 * i + 1] += 0.02 * angle.cos() as f32;
+    }
 }
 
 /// A causal language model the evaluation harnesses can score: the dense
@@ -562,16 +577,23 @@ pub fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
     assert_eq!(gain.len(), cols);
     let mut out = Matrix::zeros(rows, cols);
     for i in 0..rows {
-        let row = x.row(i);
-        let ms: f64 =
-            row.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / cols as f64;
-        let inv = 1.0 / (ms + 1e-5).sqrt();
-        let dst = out.row_mut(i);
-        for j in 0..cols {
-            dst[j] = (row[j] as f64 * inv) as f32 * gain[j];
-        }
+        rmsnorm_row(x.row(i), gain, out.row_mut(i));
     }
     out
+}
+
+/// One row of [`rmsnorm`] — shared with the single-token decode path so
+/// the per-row arithmetic (f64 mean-square, eps = 1e-5) is identical by
+/// construction.
+pub fn rmsnorm_row(row: &[f32], gain: &[f32], dst: &mut [f32]) {
+    let cols = row.len();
+    assert_eq!(gain.len(), cols);
+    assert_eq!(dst.len(), cols);
+    let ms: f64 = row.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / cols as f64;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for j in 0..cols {
+        dst[j] = (row[j] as f64 * inv) as f32 * gain[j];
+    }
 }
 
 /// SiLU activation.
@@ -615,6 +637,51 @@ pub fn causal_attention_batch(
         attention_core(q, k, v, offsets[s], offsets[s + 1], n_heads)
     });
     Matrix::vstack_all(&parts)
+}
+
+/// Incremental single-query causal attention for KV-cached decode: the
+/// query row for the newest position attends over the `len` cached
+/// key/value rows (the new position's own K/V row must already be
+/// appended, i.e. `len = t + 1`). Writes the concatenated head outputs
+/// into `out` (accumulating into zeros). Per head this is exactly the
+/// `t = len-1` iteration of [`attention_core`] — f64 dot products scaled
+/// by `1/sqrt(hd)`, scores rounded to f32, [`crate::util::log_softmax`],
+/// then f32 accumulation in position order — so a decode step is
+/// bit-identical to the corresponding teacher-forced row.
+pub fn attention_step(
+    q_row: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    len: usize,
+    n_heads: usize,
+    out: &mut [f32],
+) {
+    let d = q_row.len();
+    assert_eq!(d % n_heads, 0);
+    assert_eq!(out.len(), d);
+    assert!(len >= 1 && len <= k.rows() && len <= v.rows());
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    out.fill(0.0);
+    let mut scores = Vec::with_capacity(len);
+    for h in 0..n_heads {
+        let c0 = h * hd;
+        let qt = &q_row[c0..c0 + hd];
+        scores.clear();
+        for u in 0..len {
+            let ku = &k.row(u)[c0..c0 + hd];
+            let dot: f64 = qt.iter().zip(ku).map(|(&a, &b)| a as f64 * b as f64).sum();
+            scores.push((dot * scale) as f32);
+        }
+        let ls = crate::util::log_softmax(&scores);
+        for (u, &l) in ls.iter().enumerate() {
+            let w = (l as f64).exp() as f32;
+            let vu = &v.row(u)[c0..c0 + hd];
+            for (x, &vv) in out[c0..c0 + hd].iter_mut().zip(vu) {
+                *x += w * vv;
+            }
+        }
+    }
 }
 
 /// The softmax core on rows `[r0, r1)` of (possibly stacked) `q,k,v`,

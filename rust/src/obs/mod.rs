@@ -104,6 +104,10 @@ pub const SPAN_NAMES: &[&str] = &[
     "trsm",
     // evaluation
     "eval",
+    // token serving (scheduler tick → prefill / decode_step leaves)
+    "serve",
+    "prefill",
+    "decode_step",
 ];
 
 /// Every registry metric name, with units:
@@ -135,6 +139,11 @@ pub const SPAN_NAMES: &[&str] = &[
 /// | `eval.tokens` | counter | tokens scored |
 /// | `eval.windows_per_sec` | gauge | eval throughput (last run) |
 /// | `capture.block_steps` | counter | transformer-block advances for calibration |
+/// | `serve.tokens_generated` | counter | tokens sampled by the serving engine |
+/// | `serve.requests_admitted` | counter | requests admitted (prefilled) by the scheduler |
+/// | `serve.requests_retired` | counter | requests retired at their token budget |
+/// | `serve.kv_bytes` | gauge | resident KV-cache bytes across live sequences |
+/// | `serve.tokens_per_sec` | gauge | serving throughput (last run) |
 pub const METRIC_NAMES: &[&str] = &[
     "quant.layers",
     "quant.cols",
@@ -161,6 +170,11 @@ pub const METRIC_NAMES: &[&str] = &[
     "eval.tokens",
     "eval.windows_per_sec",
     "capture.block_steps",
+    "serve.tokens_generated",
+    "serve.requests_admitted",
+    "serve.requests_retired",
+    "serve.kv_bytes",
+    "serve.tokens_per_sec",
 ];
 
 /// Keys allowed in the per-layer metric records of `trace.json`

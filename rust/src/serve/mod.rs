@@ -1,0 +1,712 @@
+//! Token-serving engine: KV-cached autoregressive decode + continuous
+//! batching on the packed integer core.
+//!
+//! Teacher-forced eval ([`crate::eval`]) and [`LanguageModel::
+//! greedy_continue`] re-forward the whole prefix for every generated
+//! token — O(T²) work per sequence. This module is the deployment
+//! serving loop OJBKQ's memory savings are aimed at (the memory-bound
+//! `m = 1` decode regime): forward the prompt **once**, cache every
+//! block's K/V rows, then advance one token per step through
+//! allocation-free single-row kernels. Three layers:
+//!
+//! * [`KvCache`] — per-(sequence, block) key/value rows at fixed
+//!   capacity, appended one row per decode step. Capacity is
+//!   `prompt_len + max_new` (clamped to `max_seq`), so resident cache
+//!   bytes are known at admission ([`KvCache::bytes`]).
+//! * [`ServeEngine`] — [`ServeEngine::prefill`] runs the model's own
+//!   batch stages over the prompt while capturing K/V;
+//!   [`ServeEngine::decode_step`] advances one token through
+//!   [`crate::model::embed_token_into`] → per-block
+//!   [`crate::model::rmsnorm_row`] / [`PackedLinear::gemv_into`] /
+//!   [`crate::model::attention_step`] → [`crate::linalg::
+//!   row_matmul_into`] LM head, every buffer living in a caller-held
+//!   [`DecodeScratch`] so the hot loop performs **zero heap
+//!   allocations** after warm-up. [`ServeEngine::decode_step_batch`]
+//!   stacks the live sequences' rows and drives each linear through one
+//!   [`crate::infer::qgemm_packed`] call, with the ragged per-sequence
+//!   attention fanned out via [`parallel_map_dynamic`].
+//! * [`Scheduler`] — continuous batching: requests are admitted
+//!   (prefilled) whenever a slot is free, decoded in lockstep, and
+//!   retired the moment they hit their token budget — sequences join
+//!   and leave the batch between steps, no padding, no drain barrier.
+//!
+//! **Bit-identity.** Decode logits equal the teacher-forced
+//! [`LanguageModel::forward_batch`] logits at every position, on both
+//! packed cores and the dense-exec leg (pinned by
+//! `tests/serve_decode.rs`). The chain: every per-row helper is the
+//! extracted body of its batch twin (`embed_token_into`, `rmsnorm_row`,
+//! `attention_step`, `row_matmul_into`, `gemv_into` — see each one's
+//! docs), every stage of the transformer is row-independent given the
+//! cached K/V, and cached K/V rows are themselves outputs of the same
+//! projections the batch path runs. Batched decode equals single-stream
+//! decode for the same reason, so the scheduler's batching decisions
+//! never change any sequence's tokens.
+
+use crate::config::ModelConfig;
+use crate::infer::{GemvScratch, PackedLinear, QuantizedModel};
+use crate::linalg::{matmul_par, row_matmul_into};
+use crate::model::{
+    attention_step, causal_attention, embed_token_into, rmsnorm, rmsnorm_row, silu, LinearKind,
+};
+use crate::parallel::parallel_map_dynamic;
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Cached key/value rows for one (sequence, block) pair: two
+/// `capacity × d_model` panels filled top-down, one row per position.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    k: Matrix,
+    v: Matrix,
+    len: usize,
+}
+
+impl KvCache {
+    /// Fixed-capacity cache (capacity = the sequence's final length,
+    /// known at admission).
+    pub fn new(capacity: usize, d_model: usize) -> KvCache {
+        KvCache { k: Matrix::zeros(capacity, d_model), v: Matrix::zeros(capacity, d_model), len: 0 }
+    }
+
+    /// Append the K/V projection rows of the next position.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        assert!(self.len < self.k.rows(), "KV cache capacity exceeded");
+        self.k.row_mut(self.len).copy_from_slice(k_row);
+        self.v.row_mut(self.len).copy_from_slice(v_row);
+        self.len += 1;
+    }
+
+    /// Cached positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before the first append.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Row capacity (the admission-time sequence budget).
+    pub fn capacity(&self) -> usize {
+        self.k.rows()
+    }
+
+    /// Key panel (rows `0..len()` are valid).
+    pub fn keys(&self) -> &Matrix {
+        &self.k
+    }
+
+    /// Value panel (rows `0..len()` are valid).
+    pub fn values(&self) -> &Matrix {
+        &self.v
+    }
+
+    /// Resident bytes of this cache (full capacity — the allocation is
+    /// made at admission, not grown per step).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Total resident bytes of one sequence's per-block caches.
+pub fn kv_bytes(caches: &[KvCache]) -> usize {
+    caches.iter().map(|c| c.bytes()).sum()
+}
+
+/// Caller-held buffers for the single-token decode hot loop: hidden
+/// rows, projection rows, the packed-GEMV scratch arena, and the logits
+/// row. Sized once from the model config; [`ServeEngine::decode_step`]
+/// allocates nothing.
+#[derive(Debug)]
+pub struct DecodeScratch {
+    /// Resident hidden row (`d_model`).
+    x: Vec<f32>,
+    /// Normed row feeding the linears (`d_model`).
+    h: Vec<f32>,
+    /// Q projection row (`d_model`).
+    q: Vec<f32>,
+    /// K projection row (`d_model`).
+    k: Vec<f32>,
+    /// V projection row (`d_model`).
+    v: Vec<f32>,
+    /// Attention context row (`d_model`).
+    ctx: Vec<f32>,
+    /// O/Down projection output row (`d_model`).
+    o: Vec<f32>,
+    /// Post-attention residual row (`d_model`).
+    x_mid: Vec<f32>,
+    /// Gate projection row (`d_ff`).
+    g: Vec<f32>,
+    /// Up projection row (`d_ff`).
+    u: Vec<f32>,
+    /// SwiGLU activation row (`d_ff`).
+    act: Vec<f32>,
+    /// LM-head logits row (`vocab_size`).
+    logits: Vec<f32>,
+    /// Packed single-row GEMV arena ([`GemvScratch`]).
+    gemv: GemvScratch,
+}
+
+impl DecodeScratch {
+    /// Buffers sized for `cfg`.
+    pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        DecodeScratch {
+            x: vec![0.0; cfg.d_model],
+            h: vec![0.0; cfg.d_model],
+            q: vec![0.0; cfg.d_model],
+            k: vec![0.0; cfg.d_model],
+            v: vec![0.0; cfg.d_model],
+            ctx: vec![0.0; cfg.d_model],
+            o: vec![0.0; cfg.d_model],
+            x_mid: vec![0.0; cfg.d_model],
+            g: vec![0.0; cfg.d_ff],
+            u: vec![0.0; cfg.d_ff],
+            act: vec![0.0; cfg.d_ff],
+            logits: vec![0.0; cfg.vocab_size],
+            gemv: GemvScratch::new(),
+        }
+    }
+}
+
+/// The KV-cached serving engine over a [`QuantizedModel`].
+pub struct ServeEngine<'m> {
+    model: &'m QuantizedModel,
+    /// `d × vocab` transposed tied head, materialized once — the same
+    /// matrix [`QuantizedModel::lm_head`] transposes per call.
+    head_t: Matrix,
+}
+
+impl<'m> ServeEngine<'m> {
+    /// Wrap a packed model for serving.
+    pub fn new(model: &'m QuantizedModel) -> ServeEngine<'m> {
+        ServeEngine { model, head_t: model.embedding.transpose() }
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &QuantizedModel {
+        self.model
+    }
+
+    /// Fresh per-block caches for a sequence with final length
+    /// `capacity`.
+    pub fn new_caches(&self, capacity: usize) -> Vec<KvCache> {
+        (0..self.model.blocks.len())
+            .map(|_| KvCache::new(capacity, self.model.cfg.d_model))
+            .collect()
+    }
+
+    fn lin(&self, block_idx: usize, kind: LinearKind) -> &PackedLinear {
+        &self.model.blocks[block_idx].linears()[kind.index()]
+    }
+
+    /// Forward the whole prompt once, filling `caches` with every
+    /// block's K/V rows, and return the logits at **all** prompt
+    /// positions (the last row seeds sampling; the rest are the parity
+    /// surface). Runs the model's own stage calls — bit-identical to
+    /// [`crate::model::LanguageModel::forward`] — capturing the K/V
+    /// GEMM outputs the attention core already computes.
+    pub fn prefill(&self, tokens: &[u16], caches: &mut [KvCache]) -> Matrix {
+        let _sp = crate::obs::span("prefill");
+        assert_eq!(caches.len(), self.model.blocks.len(), "one cache per block");
+        let m = self.model;
+        let mut x = m.embed_sequence(tokens);
+        for (bi, cache) in caches.iter_mut().enumerate() {
+            assert_eq!(cache.len, 0, "prefill needs empty caches");
+            let h = m.attn_in(&x, bi);
+            let q = self.lin(bi, LinearKind::Q).matmul(&h);
+            let k = self.lin(bi, LinearKind::K).matmul(&h);
+            let v = self.lin(bi, LinearKind::V).matmul(&h);
+            for r in 0..k.rows() {
+                cache.append(k.row(r), v.row(r));
+            }
+            let ctx = causal_attention(&q, &k, &v, m.cfg.n_heads);
+            let x_mid = m.post_attn(&x, &ctx, bi);
+            let h2 = m.mlp_in(&x_mid, bi);
+            let act = m.mlp_act(&h2, bi);
+            x = m.post_mlp(&x_mid, &act, bi);
+        }
+        m.lm_head(&x)
+    }
+
+    /// Advance one sequence one token: embed `tok` at absolute position
+    /// `pos` (which must equal the cache length), append its K/V rows,
+    /// attend over the cache, and return the logits row for the next
+    /// position. Every buffer lives in `scratch`; every linear runs
+    /// through [`PackedLinear::gemv_into`] — the loop is allocation-free
+    /// after scratch warm-up. Bit-identical to the corresponding
+    /// teacher-forced [`crate::model::LanguageModel::forward_batch`]
+    /// logits row.
+    pub fn decode_step<'a>(
+        &self,
+        tok: u16,
+        pos: usize,
+        caches: &mut [KvCache],
+        scratch: &'a mut DecodeScratch,
+    ) -> &'a [f32] {
+        let _sp = crate::obs::span("decode_step");
+        let cfg = &self.model.cfg;
+        let d = cfg.d_model;
+        let s = scratch;
+        embed_token_into(&self.model.embedding, cfg, tok, pos, &mut s.x);
+        for (bi, cache) in caches.iter_mut().enumerate() {
+            debug_assert_eq!(cache.len, pos, "cache length must equal the decode position");
+            let block = &self.model.blocks[bi];
+            rmsnorm_row(&s.x, &block.attn_norm, &mut s.h);
+            self.lin(bi, LinearKind::Q).gemv_into(&s.h, &mut s.gemv, &mut s.q);
+            self.lin(bi, LinearKind::K).gemv_into(&s.h, &mut s.gemv, &mut s.k);
+            self.lin(bi, LinearKind::V).gemv_into(&s.h, &mut s.gemv, &mut s.v);
+            cache.append(&s.k, &s.v);
+            attention_step(&s.q, &cache.k, &cache.v, cache.len, cfg.n_heads, &mut s.ctx);
+            self.lin(bi, LinearKind::O).gemv_into(&s.ctx, &mut s.gemv, &mut s.o);
+            for j in 0..d {
+                s.x_mid[j] = s.x[j] + s.o[j];
+            }
+            rmsnorm_row(&s.x_mid, &block.mlp_norm, &mut s.h);
+            self.lin(bi, LinearKind::Gate).gemv_into(&s.h, &mut s.gemv, &mut s.g);
+            self.lin(bi, LinearKind::Up).gemv_into(&s.h, &mut s.gemv, &mut s.u);
+            for j in 0..cfg.d_ff {
+                s.act[j] = silu(s.g[j]) * s.u[j];
+            }
+            self.lin(bi, LinearKind::Down).gemv_into(&s.act, &mut s.gemv, &mut s.o);
+            for j in 0..d {
+                s.x[j] = s.x_mid[j] + s.o[j];
+            }
+        }
+        rmsnorm_row(&s.x, &self.model.final_norm, &mut s.h);
+        row_matmul_into(&s.h, &self.head_t, &mut s.logits);
+        &s.logits
+    }
+
+    /// Advance several sequences one token each in lockstep: their rows
+    /// are stacked so every linear runs as **one** multi-row
+    /// [`crate::infer::qgemm_packed`] call (the continuous-batching
+    /// payoff — codes unpack once per step, not once per sequence), and
+    /// the ragged per-sequence attention fans out via
+    /// [`parallel_map_dynamic`]. Returns one logits row per input.
+    /// Bit-identical to running [`ServeEngine::decode_step`] per
+    /// sequence: every stage is row-independent, and the packed grid is
+    /// bit-exact under batching.
+    pub fn decode_step_batch(
+        &self,
+        inputs: &[(u16, usize)],
+        caches: &mut [&mut [KvCache]],
+    ) -> Matrix {
+        let _sp = crate::obs::span("decode_step");
+        let b = inputs.len();
+        assert_eq!(caches.len(), b, "one cache set per sequence");
+        let cfg = &self.model.cfg;
+        let d = cfg.d_model;
+        let mut x = Matrix::zeros(b, d);
+        for (r, &(tok, pos)) in inputs.iter().enumerate() {
+            embed_token_into(&self.model.embedding, cfg, tok, pos, x.row_mut(r));
+        }
+        for bi in 0..self.model.blocks.len() {
+            let block = &self.model.blocks[bi];
+            let h = rmsnorm(&x, &block.attn_norm);
+            let q = self.lin(bi, LinearKind::Q).matmul(&h);
+            let k = self.lin(bi, LinearKind::K).matmul(&h);
+            let v = self.lin(bi, LinearKind::V).matmul(&h);
+            for (r, c) in caches.iter_mut().enumerate() {
+                c[bi].append(k.row(r), v.row(r));
+            }
+            let cs: Vec<&KvCache> = caches.iter().map(|c| &c[bi]).collect();
+            let ctx_rows = parallel_map_dynamic(b, |r| {
+                let cache = cs[r];
+                let mut out = vec![0.0f32; d];
+                attention_step(q.row(r), &cache.k, &cache.v, cache.len, cfg.n_heads, &mut out);
+                out
+            });
+            let mut ctx = Matrix::zeros(b, d);
+            for (r, row) in ctx_rows.iter().enumerate() {
+                ctx.row_mut(r).copy_from_slice(row);
+            }
+            let x_mid = x.add(&self.lin(bi, LinearKind::O).matmul(&ctx));
+            let h2 = rmsnorm(&x_mid, &block.mlp_norm);
+            let g = self.lin(bi, LinearKind::Gate).matmul(&h2);
+            let u = self.lin(bi, LinearKind::Up).matmul(&h2);
+            let act = Matrix::from_fn(b, cfg.d_ff, |i, j| silu(g.get(i, j)) * u.get(i, j));
+            x = x_mid.add(&self.lin(bi, LinearKind::Down).matmul(&act));
+        }
+        let xf = rmsnorm(&x, &self.model.final_norm);
+        matmul_par(&xf, &self.head_t)
+    }
+}
+
+/// Sample a token from a logits row: greedy argmax at `temperature ≤ 0`,
+/// otherwise softmax at the given temperature through
+/// [`Rng::categorical`].
+pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> u16 {
+    if temperature <= 0.0 {
+        return crate::util::argmax(logits) as u16;
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
+    let ls = crate::util::log_softmax(&scaled);
+    let probs: Vec<f64> = ls.iter().map(|&l| (l as f64).exp()).collect();
+    rng.categorical(&probs) as u16
+}
+
+/// A generation request submitted to the [`Scheduler`].
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-chosen id, echoed on the [`FinishedRequest`].
+    pub id: u64,
+    /// Prompt tokens (non-empty, at most `max_seq`).
+    pub prompt: Vec<u16>,
+    /// Token budget; clamped so `prompt + generated ≤ max_seq`.
+    pub max_new: usize,
+    /// `≤ 0` = greedy; otherwise softmax temperature.
+    pub temperature: f32,
+    /// Per-request sampling stream ([`Rng::new`]) — batching order
+    /// never changes a request's random draws.
+    pub seed: u64,
+}
+
+/// A completed request, in retirement order.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    /// The submitted id.
+    pub id: u64,
+    /// Prompt length (positions served from the prefill).
+    pub prompt_len: usize,
+    /// Generated tokens, in order (length ≤ the requested `max_new`).
+    pub generated: Vec<u16>,
+    /// Resident KV-cache bytes this sequence held while live.
+    pub kv_bytes: usize,
+}
+
+/// One live sequence between decode steps.
+struct ActiveSeq {
+    id: u64,
+    prompt_len: usize,
+    /// Prompt + generated so far; the last entry is the next token to
+    /// embed, at position `tokens.len() − 1 == cache.len()`.
+    tokens: Vec<u16>,
+    generated: Vec<u16>,
+    max_new: usize,
+    temperature: f32,
+    rng: Rng,
+    caches: Vec<KvCache>,
+}
+
+/// Continuous-batching scheduler: admits pending requests into free
+/// slots (prefill + first sample), advances every live sequence one
+/// token per [`Scheduler::step`] — through the batched engine path when
+/// ≥ 2 are live, the scratch-arena single-stream path otherwise — and
+/// retires sequences the moment they hit their budget. A retired
+/// request never re-enters a batch, so it contributes no further
+/// tokens.
+pub struct Scheduler<'m> {
+    engine: ServeEngine<'m>,
+    max_concurrent: usize,
+    pending: VecDeque<Request>,
+    active: Vec<ActiveSeq>,
+    finished: Vec<FinishedRequest>,
+    scratch: DecodeScratch,
+    /// Wall-clock split, for the serving-rate report.
+    prefill_secs: f64,
+    decode_secs: f64,
+    tokens_generated: u64,
+    peak_kv_bytes: usize,
+}
+
+impl<'m> Scheduler<'m> {
+    /// A scheduler serving `model` with at most `max_concurrent` live
+    /// sequences (≥ 1).
+    pub fn new(model: &'m QuantizedModel, max_concurrent: usize) -> Scheduler<'m> {
+        assert!(max_concurrent >= 1, "need at least one slot");
+        let scratch = DecodeScratch::new(&model.cfg);
+        Scheduler {
+            engine: ServeEngine::new(model),
+            max_concurrent,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            scratch,
+            prefill_secs: 0.0,
+            decode_secs: 0.0,
+            tokens_generated: 0,
+            peak_kv_bytes: 0,
+        }
+    }
+
+    /// The wrapped engine (parity tests drive it directly).
+    pub fn engine(&self) -> &ServeEngine<'m> {
+        &self.engine
+    }
+
+    /// Queue a request (admitted FIFO as slots free up).
+    pub fn submit(&mut self, req: Request) {
+        let max_seq = self.engine.model.cfg.max_seq;
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        assert!(req.prompt.len() <= max_seq, "prompt longer than max_seq");
+        self.pending.push_back(req);
+    }
+
+    /// Live sequences.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Queued, not-yet-admitted requests.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Completed requests, in retirement order.
+    pub fn finished(&self) -> &[FinishedRequest] {
+        &self.finished
+    }
+
+    /// Resident KV-cache bytes across the live sequences right now.
+    pub fn kv_bytes(&self) -> usize {
+        self.active.iter().map(|s| kv_bytes(&s.caches)).sum()
+    }
+
+    /// Largest concurrent KV residency seen so far.
+    pub fn peak_kv_bytes(&self) -> usize {
+        self.peak_kv_bytes
+    }
+
+    /// Total tokens sampled so far (prefill-seeded first tokens
+    /// included).
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated
+    }
+
+    /// Wall-clock seconds spent in prefill so far.
+    pub fn prefill_secs(&self) -> f64 {
+        self.prefill_secs
+    }
+
+    /// Wall-clock seconds spent in decode steps so far.
+    pub fn decode_secs(&self) -> f64 {
+        self.decode_secs
+    }
+
+    fn sample_and_account(seq: &mut ActiveSeq, logits: &[f32], total: &mut u64) {
+        let tok = sample_token(logits, seq.temperature, &mut seq.rng);
+        seq.generated.push(tok);
+        seq.tokens.push(tok);
+        *total += 1;
+        crate::obs::counter_add("serve.tokens_generated", 1);
+    }
+
+    /// Admit pending requests into free slots: allocate caches, prefill
+    /// the prompt, sample the first token.
+    fn admit(&mut self) {
+        let max_seq = self.engine.model.cfg.max_seq;
+        while self.active.len() < self.max_concurrent {
+            let Some(req) = self.pending.pop_front() else { break };
+            crate::obs::counter_add("serve.requests_admitted", 1);
+            let prompt_len = req.prompt.len();
+            let max_new = req.max_new.min(max_seq - prompt_len);
+            if max_new == 0 {
+                // Nothing to generate (budget 0 or prompt at max_seq):
+                // retire without touching the engine.
+                crate::obs::counter_add("serve.requests_retired", 1);
+                self.finished.push(FinishedRequest {
+                    id: req.id,
+                    prompt_len,
+                    generated: Vec::new(),
+                    kv_bytes: 0,
+                });
+                continue;
+            }
+            let mut caches = self.engine.new_caches(prompt_len + max_new);
+            let t0 = Instant::now();
+            let logits = self.engine.prefill(&req.prompt, &mut caches);
+            self.prefill_secs += t0.elapsed().as_secs_f64();
+            let mut seq = ActiveSeq {
+                id: req.id,
+                prompt_len,
+                tokens: req.prompt,
+                generated: Vec::new(),
+                max_new,
+                temperature: req.temperature,
+                rng: Rng::new(req.seed),
+                caches,
+            };
+            let last = logits.rows() - 1;
+            Self::sample_and_account(&mut seq, logits.row(last), &mut self.tokens_generated);
+            self.active.push(seq);
+        }
+        let kv = self.kv_bytes();
+        self.peak_kv_bytes = self.peak_kv_bytes.max(kv);
+        if crate::obs::enabled() {
+            crate::obs::gauge_set("serve.kv_bytes", kv as f64);
+        }
+    }
+
+    /// Retire sequences that hit their budget. The retired sequence's
+    /// caches drop here; it never re-enters a batch.
+    fn retire(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated.len() >= self.active[i].max_new {
+                let seq = self.active.remove(i);
+                crate::obs::counter_add("serve.requests_retired", 1);
+                self.finished.push(FinishedRequest {
+                    id: seq.id,
+                    prompt_len: seq.prompt_len,
+                    generated: seq.generated,
+                    kv_bytes: kv_bytes(&seq.caches),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One scheduler tick: admit into free slots, retire filled budgets,
+    /// then advance every live sequence one token (one batched engine
+    /// call when ≥ 2 are live). Returns `false` once no pending or live
+    /// work remains.
+    pub fn step(&mut self) -> bool {
+        let _sp = crate::obs::span("serve");
+        self.retire();
+        self.admit();
+        self.retire();
+        if self.active.is_empty() {
+            return false;
+        }
+        let t0 = Instant::now();
+        if self.active.len() >= 2 {
+            let inputs: Vec<(u16, usize)> = self
+                .active
+                .iter()
+                .map(|s| (*s.tokens.last().unwrap(), s.tokens.len() - 1))
+                .collect();
+            let mut cs: Vec<&mut [KvCache]> =
+                self.active.iter_mut().map(|s| s.caches.as_mut_slice()).collect();
+            let logits = self.engine.decode_step_batch(&inputs, &mut cs);
+            for (r, seq) in self.active.iter_mut().enumerate() {
+                Self::sample_and_account(seq, logits.row(r), &mut self.tokens_generated);
+            }
+        } else {
+            let seq = &mut self.active[0];
+            let tok = *seq.tokens.last().unwrap();
+            let pos = seq.tokens.len() - 1;
+            let logits = self.engine.decode_step(tok, pos, &mut seq.caches, &mut self.scratch);
+            let t = sample_token(logits, seq.temperature, &mut seq.rng);
+            seq.generated.push(t);
+            seq.tokens.push(t);
+            self.tokens_generated += 1;
+            crate::obs::counter_add("serve.tokens_generated", 1);
+        }
+        self.decode_secs += t0.elapsed().as_secs_f64();
+        true
+    }
+
+    /// Drive the scheduler until every submitted request has retired,
+    /// then record the serving rate. Returns the finished requests in
+    /// retirement order.
+    pub fn run(&mut self) -> &[FinishedRequest] {
+        while self.step() {}
+        self.retire();
+        if crate::obs::enabled() {
+            let secs = self.prefill_secs + self.decode_secs;
+            if secs > 0.0 {
+                crate::obs::gauge_set("serve.tokens_per_sec", self.tokens_generated as f64 / secs);
+            }
+        }
+        &self.finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LanguageModel, Model};
+    use crate::quant::{rtn, QuantConfig};
+
+    fn tiny_packed() -> QuantizedModel {
+        let cfg = ModelConfig {
+            name: "serve-test".into(),
+            vocab_size: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 24,
+        };
+        let mut rng = Rng::new(0x5E21);
+        let m = Model::random(cfg, &mut rng);
+        let mut qm = QuantizedModel::from_model(&m);
+        let qc = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        for id in qm.linear_ids() {
+            let q = rtn::quantize(m.linear(id), &qc);
+            qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+        }
+        qm
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_teacher_forced_forward() {
+        let qm = tiny_packed();
+        let engine = ServeEngine::new(&qm);
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+        let n_new = 6;
+        // Serve path: prefill + greedy decode.
+        let mut caches = engine.new_caches(prompt.len() + n_new);
+        let mut scratch = DecodeScratch::new(&qm.cfg);
+        let prefill_logits = engine.prefill(&prompt, &mut caches);
+        let mut tokens = prompt.clone();
+        let mut served_logits: Vec<Vec<f32>> = Vec::new();
+        let mut next = crate::util::argmax(prefill_logits.row(prefill_logits.rows() - 1)) as u16;
+        for _ in 0..n_new {
+            tokens.push(next);
+            let row =
+                engine.decode_step(next, tokens.len() - 1, &mut caches, &mut scratch).to_vec();
+            next = crate::util::argmax(&row) as u16;
+            served_logits.push(row);
+        }
+        // Teacher-forced reference over the final token stream.
+        let full = qm.forward(&tokens);
+        for (i, row) in served_logits.iter().enumerate() {
+            let pos = prompt.len() + i;
+            assert_eq!(&row[..], full.row(pos), "decode position {pos}");
+        }
+        for pos in 0..prompt.len() {
+            assert_eq!(prefill_logits.row(pos), full.row(pos), "prefill position {pos}");
+        }
+    }
+
+    #[test]
+    fn scheduler_single_matches_greedy_continue() {
+        let qm = tiny_packed();
+        let prompt: Vec<u16> = vec![7, 2, 9];
+        let n = 5;
+        let want = qm.greedy_continue(&prompt, n);
+        let mut sched = Scheduler::new(&qm, 1);
+        sched.submit(Request { id: 1, prompt, max_new: n, temperature: 0.0, seed: 0 });
+        let fins = sched.run();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].generated, want);
+        assert!(fins[0].kv_bytes > 0);
+        assert_eq!(sched.tokens_generated(), n as u64);
+    }
+
+    #[test]
+    fn temperature_sampling_is_stream_deterministic() {
+        let qm = tiny_packed();
+        let run = |max_concurrent| {
+            let mut sched = Scheduler::new(&qm, max_concurrent);
+            for id in 0..3u64 {
+                sched.submit(Request {
+                    id,
+                    prompt: vec![1 + id as u16, 2, 3],
+                    max_new: 4,
+                    temperature: 0.8,
+                    seed: 100 + id,
+                });
+            }
+            let mut fins = sched.run().to_vec();
+            fins.sort_by_key(|f| f.id);
+            fins.iter().map(|f| f.generated.clone()).collect::<Vec<_>>()
+        };
+        // Same seeds → same tokens, regardless of batching width.
+        assert_eq!(run(1), run(3));
+    }
+}

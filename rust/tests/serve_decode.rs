@@ -1,0 +1,270 @@
+//! Serving-engine parity and scheduler invariants (PR 8).
+//!
+//! The contract under test: KV-cached decode is **bit-identical** to the
+//! teacher-forced forward pass at every position — on every deployment
+//! width, on both packed kernel cores, on the dense-exec splice, and at
+//! any thread count — and the continuous-batching scheduler never
+//! changes a sequence's tokens (batched ≡ single-stream) nor lets a
+//! retired request generate past its budget.
+
+use ojbkq::config::ModelConfig;
+use ojbkq::infer::{set_packed_core_override, PackedCore, PackedLinear, QuantizedModel};
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::quant::{rtn, QuantConfig};
+use ojbkq::rng::Rng;
+use ojbkq::serve::{DecodeScratch, Request, Scheduler, ServeEngine};
+use ojbkq::tensor::Matrix;
+use ojbkq::util::argmax;
+use std::sync::Mutex;
+
+/// Serializes tests that flip the process-global core/thread overrides.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Tiny RTN-packed serving model (`packed = false` → dense f32 splice).
+fn serve_model(wbit: u8, packed: bool) -> QuantizedModel {
+    let cfg = ModelConfig {
+        name: format!("serve-w{wbit}"),
+        vocab_size: 48,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 3,
+        d_ff: 32,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(0x5E12 + wbit as u64);
+    let m = Model::random(cfg, &mut rng);
+    let mut qm = QuantizedModel::from_model(&m);
+    let qc = QuantConfig { wbit, group_size: 8, ..Default::default() };
+    for id in qm.linear_ids() {
+        let q = rtn::quantize(m.linear(id), &qc);
+        qm.set_layer(id, PackedLinear::from_quantized(&q, packed));
+    }
+    qm
+}
+
+/// Greedy serve loop driven straight on the engine: prefill + `n_new`
+/// decode steps. Returns (per-step logits rows, prefill logits, final
+/// token stream).
+fn greedy_serve(
+    qm: &QuantizedModel,
+    prompt: &[u16],
+    n_new: usize,
+) -> (Vec<Vec<f32>>, Matrix, Vec<u16>) {
+    let engine = ServeEngine::new(qm);
+    let mut caches = engine.new_caches(prompt.len() + n_new);
+    let mut scratch = DecodeScratch::new(&qm.cfg);
+    let prefill = engine.prefill(prompt, &mut caches);
+    let mut tokens = prompt.to_vec();
+    let mut next = argmax(prefill.row(prefill.rows() - 1)) as u16;
+    let mut rows = Vec::new();
+    for _ in 0..n_new {
+        tokens.push(next);
+        let row = engine.decode_step(next, tokens.len() - 1, &mut caches, &mut scratch).to_vec();
+        next = argmax(&row) as u16;
+        rows.push(row);
+    }
+    (rows, prefill, tokens)
+}
+
+/// Bit-exact check of the whole serve surface against the teacher-forced
+/// forward pass over the final token stream.
+fn assert_serve_matches_forward(qm: &QuantizedModel, prompt: &[u16], n_new: usize, what: &str) {
+    let (rows, prefill, tokens) = greedy_serve(qm, prompt, n_new);
+    let full = qm.forward(&tokens);
+    for pos in 0..prompt.len() {
+        assert_eq!(prefill.row(pos), full.row(pos), "{what}: prefill position {pos}");
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let pos = prompt.len() + i;
+        assert_eq!(&row[..], full.row(pos), "{what}: decode position {pos}");
+    }
+}
+
+/// Decode ≡ teacher-forced forward at every deployment width, across
+/// ragged prompt lengths (including a single-token prompt).
+#[test]
+fn decode_matches_forward_across_widths_and_prompt_lengths() {
+    for &wbit in &[2u8, 3, 4] {
+        let qm = serve_model(wbit, true);
+        for prompt in [vec![5u16], vec![7, 2, 9, 1, 4], vec![3; 9]] {
+            let what = format!("w{wbit} prompt_len={}", prompt.len());
+            assert_serve_matches_forward(&qm, &prompt, 5, &what);
+        }
+    }
+}
+
+/// The same parity holds under both packed kernel cores (the integer
+/// default and the f32 parity reference), flipped via the same
+/// process-global override the CLI's `--f32-core` uses.
+#[test]
+fn decode_matches_forward_on_both_packed_cores() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let qm = serve_model(4, true);
+    for core in [PackedCore::Int, PackedCore::F32] {
+        set_packed_core_override(Some(core));
+        assert_serve_matches_forward(&qm, &[11, 3, 8, 30], 5, &format!("{core:?}"));
+    }
+    set_packed_core_override(None);
+}
+
+/// The dense-exec splice (`PackedLinear::Dense`) routes decode through
+/// `row_matmul_into` — still bit-identical to its batch `matmul`.
+#[test]
+fn decode_matches_forward_on_dense_exec_leg() {
+    let qm = serve_model(4, false);
+    assert_serve_matches_forward(&qm, &[1, 44, 17, 6, 22, 9], 5, "dense splice");
+}
+
+/// Decode logits are bit-stable across thread pins — the packed grid
+/// accumulates exactly in i32 and the batched attention fan-out is
+/// per-sequence, so threading never moves a bit.
+#[test]
+fn decode_is_bit_stable_across_thread_counts() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let qm = serve_model(3, true);
+    let prompt: Vec<u16> = vec![9, 27, 5, 13];
+    ojbkq::parallel::set_thread_override(1);
+    let (base_rows, base_prefill, base_tokens) = greedy_serve(&qm, &prompt, 6);
+    for threads in [2usize, 4] {
+        ojbkq::parallel::set_thread_override(threads);
+        let (rows, prefill, tokens) = greedy_serve(&qm, &prompt, 6);
+        assert_eq!(tokens, base_tokens, "{threads} threads: token stream moved");
+        assert_eq!(rows, base_rows, "{threads} threads: decode logits moved");
+        for pos in 0..prompt.len() {
+            assert_eq!(prefill.row(pos), base_prefill.row(pos), "{threads} threads: prefill");
+        }
+    }
+    ojbkq::parallel::set_thread_override(0);
+}
+
+/// Engine-level batched decode ≡ per-sequence single-stream decode,
+/// bit-exact, on ragged positions (each sequence at a different cache
+/// length).
+#[test]
+fn batched_decode_step_matches_single_stream() {
+    let qm = serve_model(4, true);
+    let engine = ServeEngine::new(&qm);
+    let prompts: [&[u16]; 3] = [&[4, 9], &[1, 2, 3, 4, 5], &[40, 7, 33]];
+    let n_new = 4;
+    // Single-stream leg.
+    let mut scratch = DecodeScratch::new(&qm.cfg);
+    let mut single_rows: Vec<Vec<Vec<f32>>> = Vec::new();
+    for p in prompts {
+        let mut caches = engine.new_caches(p.len() + n_new);
+        let prefill = engine.prefill(p, &mut caches);
+        let mut tokens = p.to_vec();
+        let mut next = argmax(prefill.row(prefill.rows() - 1)) as u16;
+        let mut rows = Vec::new();
+        for _ in 0..n_new {
+            tokens.push(next);
+            let row =
+                engine.decode_step(next, tokens.len() - 1, &mut caches, &mut scratch).to_vec();
+            next = argmax(&row) as u16;
+            rows.push(row);
+        }
+        single_rows.push(rows);
+    }
+    // Batched leg: same prompts prefilled, then advanced in lockstep.
+    let mut all_caches: Vec<Vec<_>> = Vec::new();
+    let mut tokens: Vec<Vec<u16>> = Vec::new();
+    for p in prompts {
+        let mut caches = engine.new_caches(p.len() + n_new);
+        let prefill = engine.prefill(p, &mut caches);
+        let mut t = p.to_vec();
+        t.push(argmax(prefill.row(prefill.rows() - 1)) as u16);
+        all_caches.push(caches);
+        tokens.push(t);
+    }
+    for step in 0..n_new {
+        let inputs: Vec<(u16, usize)> =
+            tokens.iter().map(|t| (*t.last().unwrap(), t.len() - 1)).collect();
+        let mut cs: Vec<&mut [_]> = all_caches.iter_mut().map(|c| c.as_mut_slice()).collect();
+        let logits = engine.decode_step_batch(&inputs, &mut cs);
+        for (r, t) in tokens.iter_mut().enumerate() {
+            assert_eq!(
+                logits.row(r),
+                &single_rows[r][step][..],
+                "seq {r} step {step}: batched logits diverge from single-stream"
+            );
+            t.push(argmax(logits.row(r)) as u16);
+        }
+    }
+}
+
+/// Scheduler end-to-end: batched continuous serving produces exactly the
+/// tokens single-stream serving does, request by request.
+#[test]
+fn scheduler_batched_matches_single_stream() {
+    let qm = serve_model(4, true);
+    let run = |max_concurrent: usize| {
+        let mut sched = Scheduler::new(&qm, max_concurrent);
+        for (i, prompt) in
+            [vec![4u16, 9], vec![1, 2, 3, 4, 5], vec![40, 7, 33], vec![12]].into_iter().enumerate()
+        {
+            sched.submit(Request {
+                id: i as u64,
+                prompt,
+                max_new: 3 + i,
+                temperature: 0.0,
+                seed: 0,
+            });
+        }
+        let mut fins = sched.run().to_vec();
+        fins.sort_by_key(|f| f.id);
+        fins.iter().map(|f| f.generated.clone()).collect::<Vec<_>>()
+    };
+    let single = run(1);
+    for conc in [2usize, 3, 4] {
+        assert_eq!(run(conc), single, "max_concurrent={conc} changed generated tokens");
+    }
+}
+
+/// Retirement invariant: every request generates **exactly** its
+/// (clamped) budget and not one token more — a retired sequence never
+/// re-enters a batch. Budgets differ so retirements interleave with
+/// live decoding, and one prompt sits at `max_seq` (clamped budget 0).
+#[test]
+fn retired_requests_generate_exactly_their_budget() {
+    let qm = serve_model(4, true);
+    let max_seq = qm.cfg.max_seq;
+    let mut sched = Scheduler::new(&qm, 3);
+    let budgets = [2usize, 6, 9, 4];
+    for (i, &b) in budgets.iter().enumerate() {
+        sched.submit(Request {
+            id: i as u64,
+            prompt: vec![(3 + i) as u16; 2 + i],
+            max_new: b,
+            temperature: 0.0,
+            seed: 0,
+        });
+    }
+    // Prompt already at max_seq: admitted, clamped to 0 new tokens,
+    // retired without ever touching the engine.
+    sched.submit(Request {
+        id: 99,
+        prompt: vec![5; max_seq],
+        max_new: 8,
+        temperature: 0.0,
+        seed: 0,
+    });
+    let fins = sched.run().to_vec();
+    assert_eq!(fins.len(), budgets.len() + 1);
+    let total: usize = budgets.iter().sum();
+    assert_eq!(sched.tokens_generated(), total as u64);
+    assert_eq!(sched.active_len(), 0);
+    assert_eq!(sched.pending_len(), 0);
+    for f in &fins {
+        if f.id == 99 {
+            assert!(f.generated.is_empty(), "clamped request must generate nothing");
+            assert_eq!(f.kv_bytes, 0);
+        } else {
+            assert_eq!(
+                f.generated.len(),
+                budgets[f.id as usize],
+                "request {} overshot or undershot its budget",
+                f.id
+            );
+            assert!(f.kv_bytes > 0);
+        }
+    }
+}
