@@ -84,6 +84,11 @@ fn main() {
         // substitution.
         ("QEP corner (μ=0,λ=0)", Method::Qep, base3.clone()),
         ("Ours(R) (μ=1,λ=0)", Method::KleinRandomK, base3.clone()),
+        // Iterative solver families on the same shared-factor engine
+        // (DESIGN.md §Solver families): how far post-decode refinement
+        // moves perplexity relative to the one-shot lattice decode.
+        ("QuantEase (CD refine)", Method::QuantEase, base3.clone()),
+        ("ADMM-Q", Method::AdmmQ, base3.clone()),
     ];
     let mut t_pipe = Table::new(
         &format!("Ablation — pipeline variants on {} (3-bit g128)", mc.name),

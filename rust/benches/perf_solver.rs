@@ -11,6 +11,7 @@
 
 use ojbkq::bench::exp;
 use ojbkq::bench::{gflops, Bencher};
+use ojbkq::coordinator::quantize_model;
 use ojbkq::linalg::{cholesky_upper_jittered, matmul, syrk_upper};
 use ojbkq::quant::klein::alpha_for;
 use ojbkq::quant::ppi::{decode_tile, PpiInput};
@@ -225,6 +226,49 @@ fn main() {
     ]);
     t_shared.emit(Some(&exp::results_dir()), "perf_shared_factor");
     json.push(("shared_factor".to_string(), t_shared.to_json()));
+
+    // --- 7. Solver-family sweep: every Table-1 method end-to-end through
+    // `quantize_model` on the smallest zoo entry — per-family solve time,
+    // mean runtime error, and the summed proxy decode residual
+    // (`f(q) − f(w_real)` for the lattice/iterative families; see
+    // DESIGN.md §Solver families). These rows are the BENCH_solver.json
+    // trajectory for the widened bench: QuantEase and ADMM-Q land here
+    // next to GPTQ/OJBKQ so refinement cost and quality track across PRs.
+    let fam_mc = &exp::bench_models()[0];
+    let fam_wb = exp::load_workbench(fam_mc);
+    let (fam_calib, fam_seq) = exp::calib_size();
+    let mut t_family = Table::new(
+        &format!("Perf — solver families on {} (4-bit g128)", fam_mc.name),
+        &["family", "solve s", "mean rt err", "proxy resid"],
+    );
+    let fam_cfg = QuantConfig::paper_defaults(4, 128);
+    for method in exp::table_methods() {
+        match quantize_model(&fam_wb.model, &fam_wb.corpus, method, &fam_cfg, fam_calib, fam_seq, None)
+        {
+            Ok((_, report)) => {
+                let nl = report.layers.len().max(1) as f64;
+                let rt_err: f64 = report.layers.iter().map(|l| l.stats.rt_err).sum::<f64>() / nl;
+                let resid: f64 = report.layers.iter().map(|l| l.stats.decode_resid).sum();
+                t_family.push_row(&[
+                    method.label().to_string(),
+                    format!("{:.3}", report.solver_secs()),
+                    format!("{rt_err:.5}"),
+                    format!("{resid:.4}"),
+                ]);
+                eprintln!(
+                    "[bench] family {}: solve {:.3}s rt_err {rt_err:.5} resid {resid:.4}",
+                    method.label(),
+                    report.solver_secs()
+                );
+            }
+            Err(e) => {
+                eprintln!("[bench] family {} failed: {e}", method.label());
+                t_family.push_row(&[method.label().to_string(), "err".into(), "err".into(), "err".into()]);
+            }
+        }
+    }
+    t_family.emit(Some(&exp::results_dir()), "perf_solver_family");
+    json.push(("solver_family".to_string(), t_family.to_json()));
 
     let fields: Vec<String> =
         json.into_iter().map(|(key, v)| format!("{}:{}", json_str(&key), v)).collect();

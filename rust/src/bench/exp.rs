@@ -53,7 +53,8 @@ pub fn load_workbench(cfg: &ModelConfig) -> Workbench {
     wb
 }
 
-/// Methods in the paper's Table-1 row order.
+/// Methods in the paper's Table-1 row order — the full PTQ test bench,
+/// including the iterative solver families on the shared-factor engine.
 pub fn table_methods() -> Vec<Method> {
     vec![
         Method::Rtn,
@@ -63,6 +64,8 @@ pub fn table_methods() -> Vec<Method> {
         Method::BabaiNaive,
         Method::KleinRandomK,
         Method::Ojbkq,
+        Method::QuantEase,
+        Method::AdmmQ,
     ]
 }
 

@@ -22,6 +22,15 @@
 //! ojbkq methods   (list available solvers)
 //! ```
 //!
+//! `--method` names a solver family (see `ojbkq methods`): the OJBKQ
+//! variants (`ours`, `babai`/`ours-n`, `klein`/`ours-r`, `qep`), the
+//! baselines (`rtn`, `gptq`, `awq`, `quip`), and the iterative families
+//! on the shared-factor engine — `quantease` (cyclic coordinate descent
+//! with exact rank-1 updates from the shared Gram, Babai/Klein warm
+//! start) and `admmq`/`admm-q` (ADMM splitting between the continuous
+//! Hessian-weighted LS subproblem and the box-constrained integer
+//! projection, with penalty adaptation). See DESIGN.md §Solver families.
+//!
 //! `--trace` (also: `OJBKQ_TRACE=1`) turns on the observability stack
 //! (`ojbkq::obs`): hierarchical wall-clock spans over every pipeline
 //! phase (capture/factor/solve/pack per tap group, eval), per-layer
@@ -149,6 +158,8 @@ fn description(m: Method) -> &'static str {
         Method::KleinRandomK => "Ours(R): Random-K Babai/Klein",
         Method::Ojbkq => "Ours: Random-K Babai/Klein + JTA objective",
         Method::Qep => "QEP corner of JTA (mu=0, lambda=0)",
+        Method::QuantEase => "cyclic coordinate descent, Babai/Klein warm start",
+        Method::AdmmQ => "ADMM splitting w/ box projection + penalty adaptation",
     }
 }
 

@@ -126,6 +126,9 @@ pub const SPAN_NAMES: &[&str] = &[
 /// | `layer.clip_rate` | hist | per-layer clipped-code fraction |
 /// | `layer.occupancy` | hist | per-layer distinct codes / 2^wbit |
 /// | `layer.solve_secs` | hist | per-layer solver seconds |
+/// | `quant.sweeps` | counter | iterative-solver sweeps/iterations (QuantEase/ADMM-Q) |
+/// | `layer.sweeps` | hist | per-layer sweeps/iterations to convergence |
+/// | `layer.obj_delta` | hist | per-layer objective decrease over the warm start |
 /// | `qgemm.calls` | counter | blocked packed-GEMM entries |
 /// | `qgemm.gemv_calls` | counter | single-row register-path entries |
 /// | `qgemm.dense_calls` | counter | dense-fallback matmuls |
@@ -157,6 +160,9 @@ pub const METRIC_NAMES: &[&str] = &[
     "layer.clip_rate",
     "layer.occupancy",
     "layer.solve_secs",
+    "quant.sweeps",
+    "layer.sweeps",
+    "layer.obj_delta",
     "qgemm.calls",
     "qgemm.gemv_calls",
     "qgemm.dense_calls",

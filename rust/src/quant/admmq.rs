@@ -1,0 +1,310 @@
+//! ADMM-Q: Hessian-based ADMM splitting for layer quantization
+//! (Lucas et al., PAPERS.md) on the shared-factor engine — the second
+//! iterative family mounted on [`FactoredSystem`], minimizing the same
+//! shifted JTA quadratic as [`super::quantease`]:
+//!
+//! `f(Ŵ) = Σ_cols ŵᵀGŵ − 2ŵᵀb`,  `G = X̃ᵀX̃ + λ²I`,  `B = X̃ᵀY* + λ²W`
+//!
+//! The splitting introduces a continuous copy `W_c` constrained to the
+//! quantization grid through the scaled dual `U`:
+//!
+//! 1. **LS subproblem** — `W_c ← (G + ρI)⁻¹ (B + ρ(Ŵ_q − U))`, solved
+//!    by a Cholesky factor of `G_p + ρI` that is refactored ONLY when
+//!    the penalty ρ changes (the shared `G_p` itself is built once per
+//!    tap group — this is why ADMM-Q needs the Gram resident, not just
+//!    `R`; a lean factor is rejected by `check_for`).
+//! 2. **Projection** — `q ← clamp(round((W_c + U)/s + z))`,
+//!    `Ŵ_q = s⊙(q − z)`: the exact Euclidean projection of `W_c + U`
+//!    onto the box-constrained grid.
+//! 3. **Dual ascent** — `U ← U + W_c − Ŵ_q`, with residual-balancing
+//!    penalty adaptation (ρ doubles when the primal residual dominates
+//!    the dual by 10×, halves in the mirror case — Boyd §3.4.1),
+//!    bounded to ±6 doublings around ρ₀ = 0.1·mean diag(G).
+//!
+//! Nonconvex ADMM iterates are NOT monotone in `f`, so the solver
+//! tracks an **incumbent**: the best integer assignment seen so far by
+//! exact f64 objective, seeded with the per-column best of the
+//! Babai/Klein warm start and RTN. The reported `obj_trace` is the
+//! incumbent trajectory — non-increasing by construction — and the
+//! returned codes are the incumbent, so the final objective can never
+//! be worse than either initializer. Everything on the iteration path
+//! (triangular solves, projections, f64 scoring) is bit-identical at
+//! any `OJBKQ_THREADS`.
+
+use super::factored::{FactorKind, FactoredSystem};
+use super::quantease::{col_grid, col_obj_f64, IterStats};
+use super::{jta, ojbkq, scales, QuantConfig, QuantizedLinear};
+use crate::linalg::cholesky_upper_jittered;
+use crate::rng::Rng;
+use crate::runtime::SolverRuntime;
+use crate::tensor::Matrix;
+
+/// ADMM iteration cap — with the warm start the incumbent typically
+/// stops moving after 5–10 iterations.
+pub const MAX_ITERS: usize = 16;
+
+/// `chol(G_p + ρI)` — the only per-ρ work in the loop.
+fn chol_rho(gram: &Matrix, rho: f32) -> anyhow::Result<Matrix> {
+    let m = gram.rows();
+    let mut g = gram.clone();
+    for i in 0..m {
+        g.add_at(i, i, rho);
+    }
+    let (r, _jit) = cholesky_upper_jittered(&g, 1e-8)
+        .map_err(|e| anyhow::anyhow!("admm-q chol(G+ρI): {e}"))?;
+    Ok(r)
+}
+
+/// Total objective of an integer assignment (row-major m×n codes) on
+/// the permuted system, in f64.
+fn codes_obj(gram: &Matrix, rhs_p: &Matrix, sc: &scales::GroupScales, codes: &[u8]) -> f64 {
+    let m = gram.rows();
+    let n = rhs_p.cols();
+    let mut total = 0.0f64;
+    for j in 0..n {
+        let (s, z) = col_grid(sc, j, m);
+        let b: Vec<f64> = (0..m).map(|i| rhs_p.get(i, j) as f64).collect();
+        let w_hat: Vec<f64> =
+            (0..m).map(|i| s[i] * (codes[i * n + j] as f64 - z[i])).collect();
+        total += col_obj_f64(gram, &b, &w_hat);
+    }
+    total
+}
+
+/// Quantize one layer with ADMM-Q. Signature and sharing contract match
+/// [`ojbkq::quantize_with`]; additionally returns the [`IterStats`]
+/// convergence record (incumbent trajectory). The shared factor (if
+/// any) must have been built Gram-resident.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_with(
+    w: &Matrix,
+    x_fp: &Matrix,
+    x_rt: &Matrix,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+    rt: Option<&SolverRuntime>,
+    shared: Option<&FactoredSystem>,
+) -> anyhow::Result<(QuantizedLinear, IterStats)> {
+    let (m, n) = w.shape();
+    let owned_sys;
+    let sys: &FactoredSystem = match shared {
+        Some(s) => {
+            s.check_for(FactorKind::Ojbkq, m, cfg, true)?;
+            s
+        }
+        None => {
+            owned_sys = FactoredSystem::for_ojbkq_with_gram(x_rt, cfg)?;
+            &owned_sys
+        }
+    };
+    let gram = sys.gram()?;
+    let (warm_q, _) = ojbkq::quantize_with_diag(w, x_fp, x_rt, cfg, rng, rt, Some(sys))?;
+    let rhs = jta::build_rhs(w, x_fp, x_rt, sys.lambda_sq, cfg);
+    let permuted = sys.permuted;
+    let perm = &sys.perm;
+    let rhs_p_store;
+    let rhs_p: &Matrix = if permuted {
+        rhs_p_store = rhs.permute_rows(perm);
+        &rhs_p_store
+    } else {
+        &rhs
+    };
+    let w_p_store;
+    let w_p: &Matrix = if permuted {
+        w_p_store = w.permute_rows(perm);
+        &w_p_store
+    } else {
+        w
+    };
+    let sc = scales::compute(w_p, cfg);
+    let w_real = jta::solve_real(&sys.r, rhs_p);
+    let obj_real: f64 = -(0..m)
+        .map(|i| {
+            let wr = w_real.row(i);
+            let br = rhs_p.row(i);
+            wr.iter().zip(br).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>()
+        })
+        .sum::<f64>();
+    // Grid expanded to full m×n once (group scales are per-group rows).
+    let s_full = Matrix::from_fn(m, n, |i, j| sc.scale(i, j));
+    let z_full = Matrix::from_fn(m, n, |i, j| sc.zero(i, j));
+    let qmax = cfg.box_max() as f32;
+    // Init: per-column best of the Babai/Klein warm start and RTN.
+    let mut init = vec![0u8; m * n];
+    let mut stats = IterStats { obj_real, ..Default::default() };
+    for j in 0..n {
+        let (s, z) = col_grid(&sc, j, m);
+        let b: Vec<f64> = (0..m).map(|i| rhs_p.get(i, j) as f64).collect();
+        let warm: Vec<f64> =
+            (0..m).map(|i| s[i] * (warm_q.codes[i * n + j] as f64 - z[i])).collect();
+        let rtn_codes: Vec<u8> = (0..m)
+            .map(|i| {
+                super::rtn::round_code(
+                    w_p.get(i, j) / s_full.get(i, j) + z_full.get(i, j),
+                    qmax,
+                ) as u8
+            })
+            .collect();
+        let rtn_hat: Vec<f64> =
+            (0..m).map(|i| s[i] * (rtn_codes[i] as f64 - z[i])).collect();
+        let ow = col_obj_f64(gram, &b, &warm);
+        let or = col_obj_f64(gram, &b, &rtn_hat);
+        stats.warm_obj += ow;
+        stats.rtn_obj += or;
+        if or < ow {
+            stats.init_obj += or;
+            for i in 0..m {
+                init[i * n + j] = rtn_codes[i];
+            }
+        } else {
+            stats.init_obj += ow;
+            for i in 0..m {
+                init[i * n + j] = warm_q.codes[i * n + j];
+            }
+        }
+    }
+    // Incumbent = init; ADMM can only improve on it.
+    let mut best = init.clone();
+    let mut best_obj = stats.init_obj;
+    stats.obj_trace.push(best_obj);
+    // ADMM state: W_c starts at the unconstrained optimum, U at zero.
+    let dequant = |codes: &[u8]| -> Matrix {
+        Matrix::from_fn(m, n, |i, j| {
+            s_full.get(i, j) * (codes[i * n + j] as f32 - z_full.get(i, j))
+        })
+    };
+    let rho0 = ((0.1 * (sys.diag_mean + sys.lambda_sq)) as f32).max(1e-6);
+    let mut rho = rho0;
+    let mut chol = chol_rho(gram, rho)?;
+    let mut wq = dequant(&init);
+    let mut u = Matrix::zeros(m, n);
+    let mut codes = init.clone();
+    for iter in 0..MAX_ITERS {
+        // 1. Continuous LS subproblem under the current penalty.
+        let mut rhs_a = wq.sub(&u).scale(rho);
+        rhs_a.axpy(1.0, rhs_p);
+        let w_c = jta::solve_real(&chol, &rhs_a);
+        // 2. Box-constrained grid projection of W_c + U.
+        let prev_wq = wq.clone();
+        let prev_codes = codes.clone();
+        for i in 0..m {
+            for j in 0..n {
+                let t = w_c.get(i, j) + u.get(i, j);
+                let q = super::rtn::round_code(
+                    t / s_full.get(i, j) + z_full.get(i, j),
+                    qmax,
+                );
+                codes[i * n + j] = q as u8;
+                wq.set(i, j, s_full.get(i, j) * (q - z_full.get(i, j)));
+            }
+        }
+        // 3. Dual ascent.
+        u.axpy(1.0, &w_c);
+        u.axpy(-1.0, &wq);
+        stats.iters = (iter + 1) as u64;
+        // Incumbent update by exact objective.
+        let obj = codes_obj(gram, rhs_p, &sc, &codes);
+        if obj < best_obj {
+            best_obj = obj;
+            best.copy_from_slice(&codes);
+        }
+        stats.obj_trace.push(best_obj);
+        if codes == prev_codes && iter > 0 {
+            break; // projection fixed point — further iterates repeat
+        }
+        // Residual-balancing penalty adaptation (bounded around ρ₀).
+        let primal = w_c.sub(&wq).frob();
+        let dual = rho as f64 * wq.sub(&prev_wq).frob();
+        let mut new_rho = rho;
+        if primal > 10.0 * dual && rho < rho0 * 64.0 {
+            new_rho = rho * 2.0;
+        } else if dual > 10.0 * primal && rho > rho0 / 64.0 {
+            new_rho = rho * 0.5;
+        }
+        if new_rho != rho {
+            rho = new_rho;
+            chol = chol_rho(gram, rho)?;
+        }
+    }
+    stats.changed = best.iter().zip(&init).filter(|(a, b)| a != b).count() as u64;
+    let mut q = QuantizedLinear::new(best, sc, cfg.wbit, m, n);
+    if permuted {
+        let inv = crate::tensor::invert_perm(perm);
+        let w_hat = q.dequantize().permute_rows(&inv);
+        q.effective = Some(w_hat);
+        q.perm = Some(perm.iter().map(|&p| p as u32).collect());
+    }
+    Ok((q, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    fn layer(m: usize, n: usize, p: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(m, n, 0.5, &mut rng);
+        let x_fp = Matrix::randn(p, m, 1.0, &mut rng);
+        let noise = Matrix::randn(p, m, 0.05, &mut rng);
+        let x_rt = x_fp.add(&noise);
+        (w, x_fp, x_rt)
+    }
+
+    #[test]
+    fn incumbent_trace_is_monotone_and_dominates_inits() {
+        for seed in [1u64, 2, 3] {
+            let (w, x_fp, x_rt) = layer(24, 16, 48, seed);
+            let cfg =
+                QuantConfig { wbit: 3, group_size: 8, ntile: 8, ..Default::default() };
+            let mut rng = Rng::new(seed);
+            let (_, it) =
+                quantize_with(&w, &x_fp, &x_rt, &cfg, &mut rng, None, None).unwrap();
+            assert_eq!(it.obj_trace[0], it.init_obj);
+            for win in it.obj_trace.windows(2) {
+                assert!(win[1] <= win[0], "incumbent increased: {win:?}");
+            }
+            assert!(it.final_obj() <= it.warm_obj + 1e-9);
+            assert!(it.final_obj() <= it.rtn_obj + 1e-9);
+            assert!(it.iters >= 1 && it.iters <= MAX_ITERS as u64);
+            assert!(it.resid() >= -1e-6);
+            assert!(it.resid() <= it.init_resid() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn beats_rtn_on_runtime_error() {
+        let (w, x_fp, x_rt) = layer(48, 32, 96, 4);
+        let cfg = QuantConfig { wbit: 3, group_size: 0, ntile: 16, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let (q, it) = quantize_with(&w, &x_fp, &x_rt, &cfg, &mut rng, None, None).unwrap();
+        let q_rtn = super::super::rtn::quantize(&w, &cfg);
+        let err = |wh: &Matrix| matmul(&x_rt, wh).sub(&matmul(&x_rt, &w)).frob();
+        assert!(it.final_obj() <= it.rtn_obj);
+        assert!(err(&q.dequantize()) < err(&q_rtn.dequantize()));
+    }
+
+    #[test]
+    fn deterministic_and_boxed() {
+        let (w, x_fp, x_rt) = layer(20, 12, 40, 6);
+        let cfg = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        let (qa, _) = quantize_with(&w, &x_fp, &x_rt, &cfg, &mut a, None, None).unwrap();
+        let (qb, _) = quantize_with(&w, &x_fp, &x_rt, &cfg, &mut b, None, None).unwrap();
+        assert_eq!(qa.codes, qb.codes);
+        assert!(qa.codes.iter().all(|&c| c <= 15));
+    }
+
+    #[test]
+    fn lean_factor_is_rejected() {
+        let (w, x_fp, x_rt) = layer(16, 8, 32, 9);
+        let cfg = QuantConfig::default();
+        let lean = FactoredSystem::for_ojbkq(&x_rt, &cfg).unwrap();
+        let mut rng = Rng::new(9);
+        let err = quantize_with(&w, &x_fp, &x_rt, &cfg, &mut rng, None, Some(&lean))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Gram"), "unexpected error: {err}");
+    }
+}

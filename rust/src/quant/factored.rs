@@ -52,12 +52,20 @@ pub struct FactoredSystem {
     /// Whether `perm` is a real permutation (i.e. `cfg.act_order`); when
     /// false the solvers skip every gather/scatter.
     pub permuted: bool,
-    /// The upper-triangular factor the family's solver consumes — the
-    /// ONLY matrix a group keeps resident. OJBKQ: Cholesky factor of
-    /// the permuted ridged Gram. GPTQ: the Cholesky factor `U` of
-    /// `H⁻¹ = UᵀU`, whose rows carry the sweep's error-compensation
-    /// coefficients (the intermediate `chol(H)` is dropped after use).
+    /// The upper-triangular factor the family's solver consumes. OJBKQ:
+    /// Cholesky factor of the permuted ridged Gram. GPTQ: the Cholesky
+    /// factor `U` of `H⁻¹ = UᵀU`, whose rows carry the sweep's
+    /// error-compensation coefficients (the intermediate `chol(H)` is
+    /// dropped after use).
     pub r: Matrix,
+    /// The permuted ridged Gram `G_p` itself — retained ONLY when the
+    /// factor was built for an iterative solver that consumes it
+    /// (QuantEase coordinate descent reads Gram rows; ADMM-Q refactors
+    /// `G_p + ρI` on penalty changes). `None` for the single-pass
+    /// decode/sweep solvers, which keep only `r` resident. Guarded by
+    /// [`FactoredSystem::check_for`]: a factor without the Gram handed
+    /// to a Gram-requiring solver is a hard error, never wrong codes.
+    pub gram: Option<Matrix>,
     /// The ridge actually added to the diagonal: `λ²_abs` (OJBKQ) or the
     /// 1% mean-diagonal dampening (GPTQ). OJBKQ's RHS needs it.
     pub lambda_sq: f64,
@@ -70,6 +78,25 @@ impl FactoredSystem {
     /// the *solver* config (variant mapping already applied — use
     /// [`FactoredSystem::for_method`] from generic callers).
     pub fn for_ojbkq(x_rt: &Matrix, cfg: &QuantConfig) -> anyhow::Result<FactoredSystem> {
+        Self::build_ojbkq(x_rt, cfg, false)
+    }
+
+    /// Same factor as [`FactoredSystem::for_ojbkq`], but the permuted
+    /// ridged Gram `G_p` stays resident for the iterative solvers
+    /// (QuantEase / ADMM-Q) that consume it directly. `r` is bit-identical
+    /// to the Gram-free build.
+    pub fn for_ojbkq_with_gram(
+        x_rt: &Matrix,
+        cfg: &QuantConfig,
+    ) -> anyhow::Result<FactoredSystem> {
+        Self::build_ojbkq(x_rt, cfg, true)
+    }
+
+    fn build_ojbkq(
+        x_rt: &Matrix,
+        cfg: &QuantConfig,
+        keep_gram: bool,
+    ) -> anyhow::Result<FactoredSystem> {
         let m = x_rt.cols();
         let (gram, lambda_sq, diag_mean) = jta::build_gram(x_rt, cfg);
         // Decode ordering: Babai decides row m−1 first (uncompensated), so
@@ -95,6 +122,7 @@ impl FactoredSystem {
             perm,
             permuted: cfg.act_order,
             r,
+            gram: if keep_gram { Some(gram_p) } else { None },
             lambda_sq,
             diag_mean,
         })
@@ -141,6 +169,7 @@ impl FactoredSystem {
             perm,
             permuted: cfg.act_order,
             r: uinv,
+            gram: None,
             lambda_sq: damp as f64,
             diag_mean,
         })
@@ -161,6 +190,11 @@ impl FactoredSystem {
             Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
                 Some(Self::for_ojbkq(x_rt, &scfg)?)
             }
+            // Iterative families share the OJBKQ factor (same objective,
+            // same ordering, same ridge) but additionally keep the Gram.
+            Method::QuantEase | Method::AdmmQ => {
+                Some(Self::for_ojbkq_with_gram(x_rt, &scfg)?)
+            }
             Method::Fp | Method::Rtn | Method::Awq | Method::Quip => None,
         })
     }
@@ -175,6 +209,22 @@ impl FactoredSystem {
     /// is decoding with (a mismatched factor would silently quantize
     /// under the factor's permutation and λ, not the cfg's).
     pub fn check(&self, kind: FactorKind, m: usize, cfg: &QuantConfig) -> anyhow::Result<()> {
+        self.check_for(kind, m, cfg, false)
+    }
+
+    /// [`FactoredSystem::check`] plus per-solver *requirements*: solver
+    /// families within the same `FactorKind` need different pieces of the
+    /// factorization resident. The single-pass decoders only read `r`;
+    /// QuantEase / ADMM-Q need the full Gram (`needs_gram`). A factor
+    /// built for the wrong requirements is rejected here instead of
+    /// silently producing wrong codes downstream.
+    pub fn check_for(
+        &self,
+        kind: FactorKind,
+        m: usize,
+        cfg: &QuantConfig,
+        needs_gram: bool,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.kind == kind,
             "FactoredSystem family mismatch: built for {:?}, used by {:?}",
@@ -202,7 +252,26 @@ impl FactoredSystem {
                 self.lambda_sq
             );
         }
+        if needs_gram {
+            anyhow::ensure!(
+                self.gram.is_some(),
+                "FactoredSystem requirements mismatch: solver needs the full \
+                 Gram resident, but this factor only retained R (built for a \
+                 single-pass decode family — use for_ojbkq_with_gram / \
+                 for_method with the iterative solver)"
+            );
+        }
         Ok(())
+    }
+
+    /// The resident permuted ridged Gram, or the requirements-mismatch
+    /// error. Iterative solvers call this after [`Self::check_for`].
+    pub fn gram(&self) -> anyhow::Result<&Matrix> {
+        self.gram.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "FactoredSystem has no resident Gram (built for a single-pass family)"
+            )
+        })
     }
 }
 
@@ -291,6 +360,40 @@ mod tests {
     }
 
     #[test]
+    fn gram_retention_matches_and_requirements_guard_fires() {
+        let mut rng = Rng::new(21);
+        let x = Matrix::randn(48, 16, 1.0, &mut rng);
+        for act_order in [false, true] {
+            let cfg = QuantConfig { act_order, ..Default::default() };
+            let lean = FactoredSystem::for_ojbkq(&x, &cfg).unwrap();
+            let full = FactoredSystem::for_ojbkq_with_gram(&x, &cfg).unwrap();
+            // Same factor either way — the Gram is extra, never different.
+            assert_eq!(lean.r.as_slice(), full.r.as_slice());
+            assert_eq!(lean.perm, full.perm);
+            assert!(lean.gram.is_none());
+            let gram_p = full.gram().unwrap();
+            assert_eq!(gram_p.rows(), 16);
+            // The retained Gram is exactly what was factored: R^T R ≈ G_p.
+            let rt_r = crate::linalg::matmul(&full.r.transpose(), &full.r);
+            for i in 0..16 {
+                for j in 0..16 {
+                    assert!(
+                        (rt_r.get(i, j) - gram_p.get(i, j)).abs()
+                            <= 1e-3 * (1.0 + gram_p.get(i, j).abs()),
+                        "R^T R vs G_p at ({i},{j})"
+                    );
+                }
+            }
+            // Requirements guard: a Gram-less factor is rejected for a
+            // Gram-requiring solver, accepted otherwise.
+            assert!(lean.check_for(FactorKind::Ojbkq, 16, &cfg, false).is_ok());
+            assert!(lean.check_for(FactorKind::Ojbkq, 16, &cfg, true).is_err());
+            assert!(full.check_for(FactorKind::Ojbkq, 16, &cfg, true).is_ok());
+            assert!(lean.gram().is_err());
+        }
+    }
+
+    #[test]
     fn for_method_covers_the_factorizing_solvers() {
         let mut rng = Rng::new(11);
         let x = Matrix::randn(32, 12, 1.0, &mut rng);
@@ -300,6 +403,8 @@ mod tests {
             (Method::BabaiNaive, Some(FactorKind::Ojbkq)),
             (Method::KleinRandomK, Some(FactorKind::Ojbkq)),
             (Method::Qep, Some(FactorKind::Ojbkq)),
+            (Method::QuantEase, Some(FactorKind::Ojbkq)),
+            (Method::AdmmQ, Some(FactorKind::Ojbkq)),
             (Method::Gptq, Some(FactorKind::Gptq)),
             (Method::Rtn, None),
             (Method::Awq, None),
@@ -307,6 +412,11 @@ mod tests {
             (Method::Fp, None),
         ] {
             let got = FactoredSystem::for_method(method, &x, &cfg).unwrap();
+            // Iterative families must come back with the Gram resident.
+            let needs_gram = matches!(method, Method::QuantEase | Method::AdmmQ);
+            if let Some(s) = &got {
+                assert_eq!(s.gram.is_some(), needs_gram, "{method:?} gram retention");
+            }
             assert_eq!(got.map(|s| s.kind), expect, "{method:?}");
         }
     }

@@ -19,6 +19,7 @@
 //! K-best decoder of Appendix A — the performance-critical hot path,
 //! mirrored by the Pallas kernel at `python/compile/kernels/`).
 
+pub mod admmq;
 pub mod awq;
 pub mod babai;
 pub mod factored;
@@ -26,6 +27,7 @@ pub mod gptq;
 pub mod jta;
 pub mod klein;
 pub mod ojbkq;
+pub mod quantease;
 pub mod ppi;
 pub mod qgemm;
 pub mod qtensor;
@@ -36,6 +38,7 @@ pub mod sphere;
 
 pub use factored::{FactorKind, FactoredSystem};
 pub use qtensor::QuantizedLinear;
+pub use quantease::IterStats;
 pub use scales::GroupScales;
 
 use crate::rng::Rng;
@@ -68,6 +71,16 @@ pub enum Method {
     /// (ROADMAP capture optimization — see [`skip_fp_reference`]), which
     /// realizes the self-referential target `X̃W` instead.
     Qep,
+    /// QuantEase-style cyclic coordinate descent (Behdin et al.): exact
+    /// rank-1 objective updates from the shared Gram, Babai/Klein
+    /// solution as warm start, convergence-tracked sweeps
+    /// ([`quantease`]).
+    QuantEase,
+    /// ADMM-Q (Lucas et al.): ADMM splitting between the continuous
+    /// Hessian-weighted least-squares subproblem and the
+    /// box-constrained integer projection, with residual-balancing
+    /// penalty adaptation ([`admmq`]).
+    AdmmQ,
 }
 
 impl Method {
@@ -81,6 +94,8 @@ impl Method {
             Method::BabaiNaive,
             Method::KleinRandomK,
             Method::Ojbkq,
+            Method::QuantEase,
+            Method::AdmmQ,
         ]
     }
 
@@ -96,6 +111,8 @@ impl Method {
             Method::KleinRandomK => "Ours(R)",
             Method::Ojbkq => "Ours",
             Method::Qep => "QEP",
+            Method::QuantEase => "QuantEase",
+            Method::AdmmQ => "ADMM-Q",
         }
     }
 
@@ -111,6 +128,8 @@ impl Method {
             "klein" | "ours-r" | "ours(r)" => Method::KleinRandomK,
             "ojbkq" | "ours" => Method::Ojbkq,
             "qep" => Method::Qep,
+            "quantease" | "qe" => Method::QuantEase,
+            "admm-q" | "admmq" | "admm" => Method::AdmmQ,
             _ => return None,
         })
     }
@@ -388,29 +407,69 @@ pub fn quantize_layer_shared(
     // and the `solve` span (when tracing is on).
     let (solved, solve_secs) = crate::obs::timed("solve", || {
         Ok::<_, anyhow::Error>(match method {
-            Method::Fp => (QuantizedLinear::identity(w), ojbkq::DecodeDiag::default()),
-            Method::Rtn => (rtn::quantize(w, &scfg), ojbkq::DecodeDiag::default()),
-            Method::Gptq => {
-                (gptq::quantize_with(w, x_rt, &scfg, shared)?, ojbkq::DecodeDiag::default())
+            Method::Fp => {
+                (QuantizedLinear::identity(w), ojbkq::DecodeDiag::default(), None)
             }
-            Method::Awq => (awq::quantize(w, x_rt, &scfg), ojbkq::DecodeDiag::default()),
+            Method::Rtn => (rtn::quantize(w, &scfg), ojbkq::DecodeDiag::default(), None),
+            Method::Gptq => (
+                gptq::quantize_with(w, x_rt, &scfg, shared)?,
+                ojbkq::DecodeDiag::default(),
+                None,
+            ),
+            Method::Awq => (awq::quantize(w, x_rt, &scfg), ojbkq::DecodeDiag::default(), None),
             Method::Quip => {
-                (quip::quantize(w, x_rt, &scfg, &mut rng)?, ojbkq::DecodeDiag::default())
+                (quip::quantize(w, x_rt, &scfg, &mut rng)?, ojbkq::DecodeDiag::default(), None)
             }
             Method::BabaiNaive | Method::KleinRandomK | Method::Ojbkq | Method::Qep => {
-                ojbkq::quantize_with_diag(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?
+                let (q, d) =
+                    ojbkq::quantize_with_diag(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?;
+                (q, d, None)
+            }
+            Method::QuantEase => {
+                let (q, it) =
+                    quantease::quantize_with(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?;
+                (q, ojbkq::DecodeDiag::default(), Some(it))
+            }
+            Method::AdmmQ => {
+                let (q, it) =
+                    admmq::quantize_with(w, x_fp, x_rt, &scfg, &mut rng, rt, shared)?;
+                (q, ojbkq::DecodeDiag::default(), Some(it))
             }
         })
     });
-    let (q, diag) = solved?;
+    let (q, diag, iter) = solved?;
     let mut stats = layer_stats(&q, w, x_fp, x_rt, cfg, solve_secs);
     stats.decode_resid = diag.decode_resid;
     stats.greedy_resid = diag.greedy_resid;
     stats.cols = diag.cols;
     stats.klein_samples = diag.sampled_paths;
     stats.klein_improved = diag.improved_cols;
+    if let Some(it) = &iter {
+        // The iterative families report through the same residual
+        // columns: `f(q) − f(w_real)` IS the lattice residual
+        // `‖R(s⊙(q−q̄))‖²` the decode family sums, and the init residual
+        // plays greedy's "what the warm start alone scored" role.
+        stats.decode_resid = it.resid();
+        stats.greedy_resid = it.init_resid();
+        stats.cols = w.cols() as u64;
+        record_iter_metrics(it);
+    }
     record_layer_metrics(&q, &stats);
     Ok((q, stats))
+}
+
+/// Drain one iterative solve's convergence record into the
+/// [`crate::obs`] registry (no-op when tracing is disabled): sweep
+/// counts and the total objective decrease the sweeps bought over the
+/// warm start.
+fn record_iter_metrics(it: &IterStats) {
+    use crate::obs;
+    if !obs::enabled() {
+        return;
+    }
+    obs::counter_add("quant.sweeps", it.iters);
+    obs::hist_record("layer.sweeps", it.iters as f64);
+    obs::hist_record("layer.obj_delta", it.init_obj - it.final_obj());
 }
 
 /// Drain one layer's stats into the [`crate::obs`] registry (no-op when

@@ -334,17 +334,55 @@ impl<'m> ServeEngine<'m> {
     }
 }
 
+/// Reusable buffers for temperature sampling — owned by the caller
+/// ([`Scheduler`] keeps one next to its [`DecodeScratch`]) so the decode
+/// hot path samples without any per-token heap allocation after the
+/// first warm-up call.
+#[derive(Debug, Default)]
+pub struct SampleScratch {
+    /// Temperature-scaled log-softmax row (`vocab_size`).
+    ls: Vec<f32>,
+    /// Unnormalized probabilities for [`Rng::categorical`].
+    probs: Vec<f64>,
+}
+
+impl SampleScratch {
+    /// Scratch pre-sized for a `vocab_size`-wide logits row.
+    pub fn new(vocab_size: usize) -> SampleScratch {
+        SampleScratch {
+            ls: Vec::with_capacity(vocab_size),
+            probs: Vec::with_capacity(vocab_size),
+        }
+    }
+}
+
 /// Sample a token from a logits row: greedy argmax at `temperature ≤ 0`,
 /// otherwise softmax at the given temperature through
-/// [`Rng::categorical`].
+/// [`Rng::categorical`]. Allocating convenience wrapper around
+/// [`sample_token_scratch`] — bit-identical draws.
 pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> u16 {
+    let mut scratch = SampleScratch::new(logits.len());
+    sample_token_scratch(logits, temperature, rng, &mut scratch)
+}
+
+/// [`sample_token`] from caller-owned scratch: the temperature scale is
+/// folded into [`crate::util::log_softmax_scaled_into`] and both the
+/// log-softmax row and the probability vector live in `scratch`, so the
+/// per-token decode path performs zero heap allocations once the
+/// buffers have grown to `vocab_size`.
+pub fn sample_token_scratch(
+    logits: &[f32],
+    temperature: f32,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) -> u16 {
     if temperature <= 0.0 {
         return crate::util::argmax(logits) as u16;
     }
-    let scaled: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
-    let ls = crate::util::log_softmax(&scaled);
-    let probs: Vec<f64> = ls.iter().map(|&l| (l as f64).exp()).collect();
-    rng.categorical(&probs) as u16
+    crate::util::log_softmax_scaled_into(logits, temperature, &mut scratch.ls);
+    scratch.probs.clear();
+    scratch.probs.extend(scratch.ls.iter().map(|&l| (l as f64).exp()));
+    rng.categorical(&scratch.probs) as u16
 }
 
 /// A generation request submitted to the [`Scheduler`].
@@ -404,6 +442,7 @@ pub struct Scheduler<'m> {
     active: Vec<ActiveSeq>,
     finished: Vec<FinishedRequest>,
     scratch: DecodeScratch,
+    sample: SampleScratch,
     /// Wall-clock split, for the serving-rate report.
     prefill_secs: f64,
     decode_secs: f64,
@@ -417,6 +456,7 @@ impl<'m> Scheduler<'m> {
     pub fn new(model: &'m QuantizedModel, max_concurrent: usize) -> Scheduler<'m> {
         assert!(max_concurrent >= 1, "need at least one slot");
         let scratch = DecodeScratch::new(&model.cfg);
+        let sample = SampleScratch::new(model.cfg.vocab_size);
         Scheduler {
             engine: ServeEngine::new(model),
             max_concurrent,
@@ -424,6 +464,7 @@ impl<'m> Scheduler<'m> {
             active: Vec::new(),
             finished: Vec::new(),
             scratch,
+            sample,
             prefill_secs: 0.0,
             decode_secs: 0.0,
             tokens_generated: 0,
@@ -485,8 +526,13 @@ impl<'m> Scheduler<'m> {
         self.decode_secs
     }
 
-    fn sample_and_account(seq: &mut ActiveSeq, logits: &[f32], total: &mut u64) {
-        let tok = sample_token(logits, seq.temperature, &mut seq.rng);
+    fn sample_and_account(
+        seq: &mut ActiveSeq,
+        logits: &[f32],
+        total: &mut u64,
+        scratch: &mut SampleScratch,
+    ) {
+        let tok = sample_token_scratch(logits, seq.temperature, &mut seq.rng, scratch);
         seq.generated.push(tok);
         seq.tokens.push(tok);
         *total += 1;
@@ -529,7 +575,12 @@ impl<'m> Scheduler<'m> {
                 caches,
             };
             let last = logits.rows() - 1;
-            Self::sample_and_account(&mut seq, logits.row(last), &mut self.tokens_generated);
+            Self::sample_and_account(
+                &mut seq,
+                logits.row(last),
+                &mut self.tokens_generated,
+                &mut self.sample,
+            );
             self.active.push(seq);
         }
         let kv = self.kv_bytes();
@@ -582,14 +633,19 @@ impl<'m> Scheduler<'m> {
                 self.active.iter_mut().map(|s| s.caches.as_mut_slice()).collect();
             let logits = self.engine.decode_step_batch(&inputs, &mut cs);
             for (r, seq) in self.active.iter_mut().enumerate() {
-                Self::sample_and_account(seq, logits.row(r), &mut self.tokens_generated);
+                Self::sample_and_account(
+                    seq,
+                    logits.row(r),
+                    &mut self.tokens_generated,
+                    &mut self.sample,
+                );
             }
         } else {
             let seq = &mut self.active[0];
             let tok = *seq.tokens.last().unwrap();
             let pos = seq.tokens.len() - 1;
             let logits = self.engine.decode_step(tok, pos, &mut seq.caches, &mut self.scratch);
-            let t = sample_token(logits, seq.temperature, &mut seq.rng);
+            let t = sample_token_scratch(logits, seq.temperature, &mut seq.rng, &mut self.sample);
             seq.generated.push(t);
             seq.tokens.push(t);
             self.tokens_generated += 1;
@@ -708,5 +764,34 @@ mod tests {
         };
         // Same seeds → same tokens, regardless of batching width.
         assert_eq!(run(1), run(3));
+    }
+
+    #[test]
+    fn scratch_sampling_matches_allocating_path_and_reuses_buffers() {
+        let mut rng = Rng::new(77);
+        let mut scratch = SampleScratch::new(0); // deliberately cold
+        let mut buf_ptrs = None;
+        for temperature in [0.0f32, 0.3, 0.8, 1.0, 2.5] {
+            for trial in 0..20u64 {
+                let logits: Vec<f32> = (0..32)
+                    .map(|i| ((i as f32 * 0.37 + trial as f32).sin()) * 4.0)
+                    .collect();
+                // Identical RNG streams for the two paths.
+                let mut ra = Rng::new(1000 + trial).fork(temperature.to_bits() as u64);
+                let mut rb = Rng::new(1000 + trial).fork(temperature.to_bits() as u64);
+                let a = sample_token(&logits, temperature, &mut ra);
+                let b = sample_token_scratch(&logits, temperature, &mut rb, &mut scratch);
+                assert_eq!(a, b, "temp={temperature} trial={trial}");
+                // Allocation-free proxy: once warm, the scratch buffers
+                // keep their allocations (stable pointers, no regrowth).
+                if temperature > 0.0 {
+                    let ptrs = (scratch.ls.as_ptr(), scratch.probs.as_ptr());
+                    match buf_ptrs {
+                        None => buf_ptrs = Some(ptrs),
+                        Some(p) => assert_eq!(p, ptrs, "scratch reallocated"),
+                    }
+                }
+            }
+        }
     }
 }

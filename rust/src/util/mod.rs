@@ -53,9 +53,25 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> anyhow::Result<Vec<f32>> {
 
 /// Natural-log-domain softmax over a small slice — shared by eval scoring.
 pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
-    let max = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let lse: f64 = xs.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln();
-    xs.iter().map(|&x| ((x - max) as f64 - lse) as f32).collect()
+    let mut out = Vec::with_capacity(xs.len());
+    log_softmax_scaled_into(xs, 1.0, &mut out);
+    out
+}
+
+/// `log_softmax(xs / temperature)` into a caller-owned buffer — the
+/// temperature scale folded in so the decode hot path neither allocates
+/// nor materializes a scaled copy. Bit-identical to scaling first and
+/// calling [`log_softmax`] (each element is divided in f32 exactly once,
+/// then the identical f64 log-sum-exp runs over the scaled values;
+/// `temperature = 1.0` divides by 1.0, which is IEEE-exact).
+pub fn log_softmax_scaled_into(xs: &[f32], temperature: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| x / temperature));
+    let max = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = out.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln();
+    for x in out.iter_mut() {
+        *x = ((*x - max) as f64 - lse) as f32;
+    }
 }
 
 /// Argmax of a slice (first maximal index); panics on empty input.
@@ -123,6 +139,24 @@ mod tests {
         let total: f64 = ls.iter().map(|&x| (x as f64).exp()).sum();
         assert!((total - 1.0).abs() < 1e-5);
         assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn scaled_into_matches_scale_then_log_softmax_bitwise() {
+        let xs: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.73).sin() * 5.0).collect();
+        let mut out = Vec::new();
+        for temperature in [0.25f32, 0.8, 1.0, 3.0] {
+            let scaled: Vec<f32> = xs.iter().map(|&x| x / temperature).collect();
+            let reference = log_softmax(&scaled);
+            log_softmax_scaled_into(&xs, temperature, &mut out);
+            assert_eq!(out, reference, "temperature {temperature}");
+        }
+        // The allocating entry point is the scaled variant at T=1.
+        assert_eq!(log_softmax(&xs), {
+            let mut o = Vec::new();
+            log_softmax_scaled_into(&xs, 1.0, &mut o);
+            o
+        });
     }
 
     #[test]

@@ -93,7 +93,14 @@ fn decode_bit_identical_across_thread_counts_and_ntiles() {
 fn shared_factor_matches_per_layer_ojbkq() {
     let (w, x_fp, x_rt) = layer(32, 28, 64, 0xD2);
     for act_order in [false, true] {
-        for method in [Method::Ojbkq, Method::BabaiNaive, Method::KleinRandomK, Method::Qep] {
+        for method in [
+            Method::Ojbkq,
+            Method::BabaiNaive,
+            Method::KleinRandomK,
+            Method::Qep,
+            Method::QuantEase,
+            Method::AdmmQ,
+        ] {
             let cfg = QuantConfig {
                 wbit: 4,
                 group_size: 8,
@@ -166,6 +173,19 @@ fn mismatched_shared_factor_is_rejected() {
     let (_, _, x_other) = layer(20, 16, 48, 0xD5);
     let wrong_dim = FactoredSystem::for_method(Method::Gptq, &x_other, &cfg).unwrap().unwrap();
     assert!(gptq::quantize_with(&w, &x_rt, &cfg, Some(&wrong_dim)).is_err());
+    // Requirements mismatch within one family: a lean OJBKQ factor (R
+    // only) handed to the iterative solvers, which need the full Gram
+    // resident. Silently accepting it would make QuantEase/ADMM-Q refine
+    // against the wrong quadratic — it must be a hard error instead.
+    let lean = FactoredSystem::for_method(Method::Ojbkq, &x_rt, &cfg).unwrap().unwrap();
+    for method in [Method::QuantEase, Method::AdmmQ] {
+        let err = quantize_layer_shared(method, &w, &x_fp, &x_rt, &cfg, 11, None, Some(&lean))
+            .expect_err("lean factor must be rejected by the gram-requiring families");
+        assert!(
+            format!("{err:#}").contains("Gram"),
+            "{method:?}: rejection should name the missing Gram requirement, got: {err:#}"
+        );
+    }
 }
 
 #[test]
