@@ -32,15 +32,16 @@ artifacts-quick:
 	$(MAKE) trajectory
 
 # Perf-trajectory artifacts: quick-scale packed-GEMM + solver +
-# token-serving benches (BENCH_qgemm.json / BENCH_solver.json /
-# BENCH_serve.json, written to rust/) plus a traced tiny-model quantize
-# whose trace.json must pass the schema checker — the files the CI
-# artifact job uploads on every push so perf and quant quality are
-# comparable across commits.
+# token-serving + robustness benches (BENCH_qgemm.json /
+# BENCH_solver.json / BENCH_serve.json / BENCH_robust.json, written to
+# rust/) plus a traced tiny-model quantize whose trace.json must pass
+# the schema checker — the files the CI artifact job uploads on every
+# push so perf and quant quality are comparable across commits.
 trajectory:
 	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_qgemm
 	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench perf_solver
 	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_serve
+	cd rust && OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_robust
 	cd rust && cargo run --release -- quantize --model tiny-0.2M \
 		--calib 4 --seq 64 --trace-out trace.json --trace
 	cd rust && cargo run --release -- check-trace trace.json

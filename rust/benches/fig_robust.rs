@@ -1,0 +1,220 @@
+//! Robustness-stack overhead: what the fault-injection harness and
+//! crash-safe checkpointing cost when nothing goes wrong.
+//!
+//! Three measurements on random-init pipeline models:
+//!
+//!  * **disarmed fault sites** — ns per [`ojbkq::robust::fault_point`]
+//!    call with no spec armed (the zero-cost discipline: one relaxed
+//!    atomic load), plus full-pipeline wall-clock disarmed vs
+//!    armed-but-never-firing, with a bit-identity assertion on the
+//!    resulting forward logits;
+//!  * **checkpoint overhead** — `quantize_model_checkpointed` (per-block
+//!    OJBS1 segments + OJBM1 manifest, atomic writes) vs the plain
+//!    pipeline, byte-identical output asserted;
+//!  * **resume cost** — interrupt a checkpointed run with an injected
+//!    torn segment write, resume it, and compare the kill+resume total
+//!    against one uninterrupted checkpointed run — again byte-identical.
+//!
+//! Machine-readable results land in `BENCH_robust.json` (cwd: `rust/`).
+//!
+//! ```sh
+//! cargo bench --bench fig_robust             # full
+//! OJBKQ_BENCH_QUICK=1 cargo bench --bench fig_robust
+//! ```
+
+use ojbkq::bench::{exp, Bencher};
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::{quantize_model, quantize_model_checkpointed};
+use ojbkq::data::{Corpus, SyntheticGrammar};
+use ojbkq::infer::{save_quantized, QuantizedModel};
+use ojbkq::model::{LanguageModel, Model};
+use ojbkq::quant::{Method, QuantConfig};
+use ojbkq::report::{json_str, Table};
+use ojbkq::rng::Rng;
+use ojbkq::robust;
+use std::hint::black_box;
+use std::path::Path;
+
+fn main() {
+    let mut json = Vec::new();
+    let (t, extra) = disarmed_overhead();
+    json.push(("disarmed_overhead".to_string(), t.to_json()));
+    json.extend(extra);
+    let (t, extra) = checkpoint_and_resume();
+    json.push(("checkpoint_resume".to_string(), t.to_json()));
+    json.extend(extra);
+    let fields: Vec<String> =
+        json.into_iter().map(|(k, v)| format!("{}:{}", json_str(&k), v)).collect();
+    let payload = format!("{{{}}}\n", fields.join(","));
+    std::fs::write("BENCH_robust.json", &payload).expect("write BENCH_robust.json");
+    eprintln!("[bench] wrote BENCH_robust.json");
+    exp::emit_bench_trace("fig_robust");
+}
+
+fn setup() -> (Model, Corpus) {
+    let d = if exp::quick() { 48 } else { 96 };
+    let cfg = ModelConfig {
+        name: format!("robust-d{d}"),
+        vocab_size: 64,
+        d_model: d,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: d * 2,
+        max_seq: 64,
+    };
+    let mut rng = Rng::new(0x0B0);
+    (Model::random(cfg, &mut rng), SyntheticGrammar::new(64, 0.2, 7).corpus(20_000, &mut rng))
+}
+
+fn qcfg() -> QuantConfig {
+    QuantConfig { ntile: 16, ..QuantConfig::paper_defaults(4, 8) }
+}
+
+fn sizes() -> (usize, usize) {
+    if exp::quick() {
+        (2, 32) // (n_calib, seq_len)
+    } else {
+        (3, 48)
+    }
+}
+
+fn ojbq1_bytes(qm: &QuantizedModel, path: &Path) -> Vec<u8> {
+    save_quantized(qm, path).expect("writing OJBQ1");
+    std::fs::read(path).expect("reading OJBQ1 back")
+}
+
+/// Disarmed fault-site cost: per-call ns and whole-pipeline ratio, with
+/// the bit-identity gate on armed-but-never-firing.
+fn disarmed_overhead() -> (Table, Vec<(String, String)>) {
+    robust::reset_faults();
+    let iters = if exp::quick() { 3 } else { 7 };
+    const CALLS: usize = 1_000_000;
+    let s_call = Bencher::new("fault_point disarmed").iters(iters).run(|| {
+        for _ in 0..CALLS {
+            black_box(robust::fault_point(black_box("serve.step")));
+        }
+    });
+    assert_eq!(robust::fault_event_count(), 0, "disarmed fault sites must record nothing");
+    let ns_per_call = s_call.p50 * 1e9 / CALLS as f64;
+
+    let (model, corpus) = setup();
+    let cfg = qcfg();
+    let (n_calib, seq) = sizes();
+    let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let mut logits = Vec::new();
+    let mut p50 = Vec::new();
+    for armed in [false, true] {
+        robust::reset_faults();
+        if armed {
+            // Armed but never firing: the spec is live, the nth
+            // threshold is unreachable.
+            robust::set_faults(Some("coordinator.solve:err:1000000000")).unwrap();
+        }
+        let mut qm = None;
+        let name = if armed { "pipeline armed-unfired" } else { "pipeline disarmed" };
+        let s = Bencher::new(name).iters(iters).run(|| {
+            let run = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, n_calib, seq, None);
+            qm = Some(run.expect("pipeline").0);
+        });
+        assert_eq!(robust::fault_event_count(), 0, "unfired spec must record nothing");
+        robust::reset_faults();
+        logits.push(qm.expect("pipeline ran").forward(&toks));
+        p50.push(s.p50);
+    }
+    assert!(logits[0] == logits[1], "armed-but-unfired harness must not move bits");
+    let ratio = p50[1] / p50[0].max(1e-12);
+
+    let mut table = Table::new(
+        "fig_robust — disarmed fault-harness overhead",
+        &["measurement", "p50 (s)", "derived"],
+    );
+    table.push_row(&[
+        format!("fault_point × {CALLS} (disarmed)"),
+        format!("{:.5}", s_call.p50),
+        format!("{ns_per_call:.2} ns/call"),
+    ]);
+    table.push_row(&["pipeline disarmed".to_string(), format!("{:.5}", p50[0]), "1.00x".into()]);
+    table.push_row(&[
+        "pipeline armed-unfired".to_string(),
+        format!("{:.5}", p50[1]),
+        format!("{ratio:.3}x"),
+    ]);
+    table.emit(Some(&exp::results_dir()), "fig_robust_disarmed");
+    let extra = vec![
+        ("fault_point_disarmed_ns".to_string(), format!("{ns_per_call:.3}")),
+        ("armed_unfired_ratio".to_string(), format!("{ratio:.3}")),
+    ];
+    (table, extra)
+}
+
+/// Checkpointing and resume against the plain pipeline, byte-identity
+/// asserted at every comparison point.
+fn checkpoint_and_resume() -> (Table, Vec<(String, String)>) {
+    robust::reset_faults();
+    let (model, corpus) = setup();
+    let cfg = qcfg();
+    let (n_calib, seq) = sizes();
+    let iters = if exp::quick() { 2 } else { 5 };
+    let tmp = std::env::temp_dir().join("ojbkq_bench_robust");
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).expect("temp dir");
+
+    let mut qm = None;
+    let s_plain = Bencher::new("quantize plain").iters(iters).run(|| {
+        let run = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, n_calib, seq, None);
+        qm = Some(run.expect("plain").0);
+    });
+    let gold = ojbq1_bytes(&qm.take().expect("plain ran"), &tmp.join("plain.ojbq1"));
+
+    let parts = tmp.join("fresh.parts");
+    let s_ck = Bencher::new("quantize checkpointed").iters(iters).run(|| {
+        let run = quantize_model_checkpointed(
+            &model, &corpus, Method::Ojbkq, &cfg, n_calib, seq, None, &parts, false,
+        );
+        qm = Some(run.expect("checkpointed").0);
+    });
+    let ck = ojbq1_bytes(&qm.take().expect("checkpointed ran"), &tmp.join("ck.ojbq1"));
+    assert_eq!(ck, gold, "checkpointing moved bytes");
+    let ckpt_overhead = s_ck.p50 / s_plain.p50.max(1e-12);
+
+    // Interrupt after the first block's segment lands (torn write on the
+    // second), then resume the durable prefix.
+    let parts_kill = tmp.join("kill.parts");
+    let s_resume = Bencher::new("interrupt + resume").iters(iters).run(|| {
+        robust::set_faults(Some("io.segment_write:partial_write:2")).unwrap();
+        let killed = quantize_model_checkpointed(
+            &model, &corpus, Method::Ojbkq, &cfg, n_calib, seq, None, &parts_kill, false,
+        );
+        robust::reset_faults();
+        assert!(killed.is_err(), "injected torn write must abort the run");
+        let run = quantize_model_checkpointed(
+            &model, &corpus, Method::Ojbkq, &cfg, n_calib, seq, None, &parts_kill, true,
+        );
+        qm = Some(run.expect("resume").0);
+    });
+    let resumed = ojbq1_bytes(&qm.take().expect("resume ran"), &tmp.join("resumed.ojbq1"));
+    assert_eq!(resumed, gold, "resume diverged from the uninterrupted run");
+    let resume_ratio = s_resume.p50 / s_ck.p50.max(1e-12);
+
+    let mut table = Table::new(
+        "fig_robust — crash-safe checkpointing and resume",
+        &["measurement", "p50 (s)", "ratio"],
+    );
+    table.push_row(&["plain pipeline".to_string(), format!("{:.5}", s_plain.p50), "1.00x".into()]);
+    table.push_row(&[
+        "checkpointed (fresh)".to_string(),
+        format!("{:.5}", s_ck.p50),
+        format!("{ckpt_overhead:.3}x"),
+    ]);
+    table.push_row(&[
+        "interrupted + resumed".to_string(),
+        format!("{:.5}", s_resume.p50),
+        format!("{resume_ratio:.3}x vs checkpointed"),
+    ]);
+    table.emit(Some(&exp::results_dir()), "fig_robust_resume");
+    let extra = vec![
+        ("checkpoint_overhead_ratio".to_string(), format!("{ckpt_overhead:.3}")),
+        ("resume_total_ratio".to_string(), format!("{resume_ratio:.3}")),
+    ];
+    (table, extra)
+}

@@ -107,13 +107,15 @@ fn serve_run(
     let t0 = std::time::Instant::now();
     let mut sched = Scheduler::new(qm, max_concurrent);
     for (i, p) in prompts.iter().enumerate() {
-        sched.submit(Request {
-            id: i as u64,
-            prompt: p.clone(),
-            max_new,
-            temperature: 0.0,
-            seed: 7 + i as u64,
-        });
+        sched
+            .submit(Request {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new,
+                temperature: 0.0,
+                seed: 7 + i as u64,
+            })
+            .expect("admitted");
     }
     sched.run();
     let secs = t0.elapsed().as_secs_f64();

@@ -77,9 +77,11 @@ use crate::quant::{
     quantize_layer_shared, skip_fp_reference, FactoredSystem, LayerStats, Method, QuantConfig,
 };
 use crate::rng::Rng;
+use crate::robust::{self, FaultKind, RobustError, RunManifest};
 use crate::runtime::SolverRuntime;
 use crate::tensor::{Matrix, RowBatch};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Per-layer record in the pipeline report.
@@ -215,6 +217,7 @@ impl PipelineReport {
                         ("capture_secs".into(), s.capture_secs),
                         ("packed_bytes".into(), l.packed_bytes as f64),
                         ("fp_bytes".into(), l.fp_bytes as f64),
+                        ("fallback".into(), if s.fallback { 1.0 } else { 0.0 }),
                     ],
                 }
             })
@@ -252,6 +255,26 @@ const GROUPS: [(&[LinearKind], TapPoint); 4] = [
     (&[LinearKind::Gate, LinearKind::Up], TapPoint::MlpIn),
     (&[LinearKind::Down], TapPoint::DownIn),
 ];
+
+/// Human-readable locator for a tap group (used by [`RobustError`]
+/// context): tap point + member layers.
+fn group_desc(kinds: &[LinearKind]) -> String {
+    let tap = GROUPS
+        .iter()
+        .find(|(k, _)| *k == kinds)
+        .map(|(_, p)| format!("{p:?}"))
+        .unwrap_or_else(|| "?".into());
+    let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+    format!("tap {tap}, layers {}", names.join("/"))
+}
+
+/// First non-finite entry of `m` as `(row, col)`, if any.
+fn non_finite_pos(m: &Matrix) -> Option<(usize, usize)> {
+    m.as_slice()
+        .iter()
+        .position(|v| !v.is_finite())
+        .map(|i| (i / m.cols(), i % m.cols()))
+}
 
 /// The pipeline: borrows the reference model, owns the progressively
 /// quantized packed-execution model, the calibration set, and the paired
@@ -332,7 +355,21 @@ impl<'a> Pipeline<'a> {
 
     /// Execute the pipeline; returns the packed quantized model and the
     /// report.
-    pub fn run(mut self) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
+    pub fn run(self) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
+        self.run_with(None)
+    }
+
+    /// [`Pipeline::run`] with optional crash-safe checkpointing: after
+    /// each completed block the [`Checkpointer`] persists that block's
+    /// packed layers + the run manifest, and blocks already recorded as
+    /// completed are *replayed* (durable layers spliced in, caches
+    /// advanced through the same batch-fused stages) instead of
+    /// re-solved — so a resumed run is bit-identical to an
+    /// uninterrupted one (pinned by `tests/fault_recovery.rs`).
+    pub fn run_with(
+        mut self,
+        mut ckpt: Option<&mut Checkpointer>,
+    ) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
         let _pipeline_span = crate::obs::span("pipeline");
         let t0 = Instant::now();
         let mut report =
@@ -353,24 +390,53 @@ impl<'a> Pipeline<'a> {
                 let model = self.fp_model;
                 let calib = &self.calib;
                 let skip_fp = self.skip_fp;
-                let ((rt_batch, fp_batch), secs) = crate::obs::timed("embed", || {
+                let ((bad, rt_batch, fp_batch), secs) = crate::obs::timed("embed", || {
                     let parts = parallel_map(calib.len(), |i| model.embed_sequence(&calib[i]));
+                    // Ingest guard: locate any non-finite activation now,
+                    // while the per-sequence (row = position) structure
+                    // still exists, instead of letting NaN spread through
+                    // every downstream Gram.
+                    let bad = parts
+                        .iter()
+                        .enumerate()
+                        .find_map(|(i, m)| non_finite_pos(m).map(|(r, c)| (i, r, c)));
                     let rt = RowBatch::stack(&parts);
                     let fp = if skip_fp { None } else { Some(rt.clone()) };
-                    (rt, fp)
+                    (bad, rt, fp)
                 });
+                report.capture_secs += secs;
+                if let Some((seq, pos, dim)) = bad {
+                    return Err(RobustError::new(
+                        "coordinator.capture",
+                        "non-finite calibration activation at ingest",
+                    )
+                    .with_context(format!(
+                        "calib sequence {seq}, position {pos}, dim {dim} (token {})",
+                        self.calib[seq][pos]
+                    ))
+                    .into());
+                }
                 self.rt_batch = Some(rt_batch);
                 self.fp_batch = fp_batch;
-                report.capture_secs += secs;
             }
             CaptureMode::Reforward => {
+                assert!(ckpt.is_none(), "checkpointed runs require streaming capture");
                 self.dense_runtime = Some(self.fp_model.clone());
             }
         }
         for block in 0..n_blocks {
+            if let Some(ck) = ckpt.as_deref_mut() {
+                if block < ck.completed() {
+                    self.replay_block_streaming(block, ck, &mut report)?;
+                    continue;
+                }
+            }
             match self.capture_mode {
                 CaptureMode::Streaming => self.run_block_streaming(block, n_blocks, &mut report)?,
                 CaptureMode::Reforward => self.run_block_reforward(block, n_blocks, &mut report)?,
+            }
+            if let Some(ck) = ckpt.as_deref_mut() {
+                ck.record_block(&self.runtime, block)?;
             }
         }
         report.total_secs = t0.elapsed().as_secs_f64();
@@ -474,8 +540,51 @@ impl<'a> Pipeline<'a> {
         // Advance the runtime cache through the MLP residual with the
         // spliced Down — completing this cache's single step for the
         // block. Blocks `< block` are never touched again.
+        if let Some(k) = robust::fault_point("coordinator.advance") {
+            return Err(RobustError::new(
+                "coordinator.advance",
+                format!("injected {} fault", k.label()),
+            )
+            .with_block(block)
+            .into());
+        }
         let (new_data, secs) =
             crate::obs::timed("advance", || self.runtime.post_mlp_batch(&x_mid, &act, block));
+        self.rt_batch.as_mut().expect("rt cache").set_data(new_data);
+        report.capture_block_steps += self.calib.len() as u64;
+        crate::obs::counter_add("capture.block_steps", self.calib.len() as u64);
+        report.capture_secs += secs;
+        Ok(())
+    }
+
+    /// Re-drive one already-completed block during a resume: splice the
+    /// durable packed layers from its segment, then advance both caches
+    /// through exactly the same batch-fused stage calls as the original
+    /// run — the cache trajectory (and therefore every later block's
+    /// capture) is bit-identical to the uninterrupted run. Nothing is
+    /// solved, so replayed blocks add no [`LayerRecord`]s.
+    fn replay_block_streaming(
+        &mut self,
+        block: usize,
+        ckpt: &Checkpointer,
+        report: &mut PipelineReport,
+    ) -> anyhow::Result<()> {
+        let linears = ckpt.load_block(&self.fp_model.cfg, block)?;
+        for (&kind, lin) in LinearKind::all().iter().zip(linears) {
+            self.runtime.set_layer(LinearId { block, kind }, lin);
+        }
+        if !self.skip_fp {
+            let _ = self.step_fp(block, report);
+        }
+        let (new_data, secs) = crate::obs::timed("capture", || {
+            let rt = self.rt_batch.as_ref().expect("rt cache");
+            let attn_in = self.runtime.attn_in_batch(rt.data(), block);
+            let ctx = self.runtime.attn_ctx_batch(&attn_in, rt.offsets(), block);
+            let x_mid = self.runtime.post_attn_batch(rt.data(), &ctx, block);
+            let mlp_in = self.runtime.mlp_in_batch(&x_mid, block);
+            let act = self.runtime.mlp_act_batch(&mlp_in, block);
+            self.runtime.post_mlp_batch(&x_mid, &act, block)
+        });
         self.rt_batch.as_mut().expect("rt cache").set_data(new_data);
         report.capture_block_steps += self.calib.len() as u64;
         crate::obs::counter_add("capture.block_steps", self.calib.len() as u64);
@@ -548,6 +657,28 @@ impl<'a> Pipeline<'a> {
         capture_secs: f64,
     ) -> anyhow::Result<()> {
         let per_layer_capture = capture_secs / kinds.len() as f64;
+        // Capture→factor boundary guard: an injected capture fault or
+        // genuinely non-finite activations become a structured per-group
+        // error here, before the Gram build can spread the poison into
+        // every layer of the group.
+        if let Some(k) = robust::fault_point("coordinator.capture") {
+            return Err(RobustError::new(
+                "coordinator.capture",
+                format!("injected {} fault", k.label()),
+            )
+            .with_block(block)
+            .with_context(group_desc(kinds))
+            .into());
+        }
+        if !x_rt.all_finite() || !x_fp.all_finite() {
+            return Err(RobustError::new(
+                "coordinator.capture",
+                "non-finite activations at capture→factor boundary",
+            )
+            .with_block(block)
+            .with_context(group_desc(kinds))
+            .into());
+        }
         // Per-layer μ schedule (paper Limitations / future work): resolve
         // the depth-interpolated μ once per group (it varies only with
         // block depth) so every solver sees a plain fixed-μ config.
@@ -557,18 +688,57 @@ impl<'a> Pipeline<'a> {
             layer_cfg.mu = (start + (end - start) * frac).clamp(0.0, 1.0);
         }
         let method = self.method;
-        let (shared, factor_secs) =
-            crate::obs::timed("factor", || FactoredSystem::for_method(method, x_rt, &layer_cfg));
-        let shared = shared?;
+        let (shared, factor_secs) = crate::obs::timed("factor", || {
+            if let Some(k) = robust::fault_point("coordinator.factor") {
+                return Err(RobustError::new(
+                    "coordinator.factor",
+                    format!("injected {} fault", k.label()),
+                )
+                .with_block(block)
+                .with_context(group_desc(kinds))
+                .into());
+            }
+            FactoredSystem::for_method(method, x_rt, &layer_cfg)
+        });
+        // Degradation ladder, final rung: `cholesky_upper_jittered`
+        // already escalates diagonal jitter deterministically inside the
+        // factor build; if the factor still fails (ill-conditioned Gram,
+        // or an injected factor fault), the group degrades per-layer to
+        // RTN — which needs no factor — instead of aborting the run. The
+        // event is recorded on every affected layer
+        // ([`LayerStats::fallback`] → the `layer.fallback` trace metric).
+        let (eff_method, shared, fallback) = match shared {
+            Ok(s) => (method, s, false),
+            Err(_) => (Method::Rtn, None, true),
+        };
         // The shared factor build is solver work; attribute it evenly so
         // `PipelineReport::solver_secs` still accounts for all of it.
         let per_layer_factor = factor_secs / kinds.len() as f64;
         for &kind in kinds {
             let id = LinearId { block, kind };
-            let w = self.fp_model.linear(id).clone();
+            let mut w = self.fp_model.linear(id).clone();
+            match robust::fault_point("coordinator.solve") {
+                None => {}
+                Some(FaultKind::Nan) => {
+                    // Poison the working weight copy: the NaN flows
+                    // through the real solver and must be caught by the
+                    // solve→pack guard, exercising the genuine detection
+                    // path end to end.
+                    w.row_mut(0)[0] = f32::NAN;
+                }
+                Some(k) => {
+                    return Err(RobustError::new(
+                        "coordinator.solve",
+                        format!("injected {} fault", k.label()),
+                    )
+                    .with_block(block)
+                    .with_context(format!("layer {id}, {}", group_desc(kinds)))
+                    .into());
+                }
+            }
             let layer_uid = (block * 8 + kind.index()) as u64;
             let (q, mut stats) = quantize_layer_shared(
-                self.method,
+                eff_method,
                 &w,
                 x_fp,
                 x_rt,
@@ -576,9 +746,14 @@ impl<'a> Pipeline<'a> {
                 layer_uid,
                 self.rt,
                 shared.as_ref(),
-            )?;
+            )
+            .map_err(|e| e.context(format!("block {block}, layer {id}, {}", group_desc(kinds))))?;
             stats.capture_secs = per_layer_capture;
             stats.solve_secs += per_layer_factor;
+            stats.fallback = fallback;
+            if fallback && crate::obs::enabled() {
+                crate::obs::hist_record("layer.fallback", 1.0);
+            }
             if let Some(cb) = self.on_layer.as_mut() {
                 cb(id, &stats);
             }
@@ -614,6 +789,118 @@ pub fn quantize_model(
     let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
     let calib = corpus.calibration(n_calib, seq_len.min(model.cfg.max_seq), &mut rng);
     Pipeline::new(model, calib, method, cfg.clone(), rt).run()
+}
+
+/// Fingerprint of everything besides the calibration tokens that
+/// determines a checkpointed run's output: model shape, method, and the
+/// full quantization config (all seeds included). Debug formatting is
+/// the canonical serialization — any field change changes the hash, so
+/// a stale parts directory can never be resumed under a different
+/// configuration.
+pub fn run_config_hash(
+    mcfg: &ModelConfig,
+    method: Method,
+    cfg: &QuantConfig,
+    n_calib: usize,
+) -> u64 {
+    let desc = format!("{mcfg:?}|{method:?}|{cfg:?}|n_calib={n_calib}");
+    robust::fnv1a64(desc.as_bytes())
+}
+
+/// Crash-safe progress record of one quantization run: a parts
+/// directory holding one packed segment per completed block plus the
+/// `OJBM1` run manifest. Every write goes through
+/// [`robust::atomic_write`] (temp file + rename) and the manifest's
+/// completed count only advances *after* the block's segment is
+/// durable, so a crash at any instant leaves a valid resumable prefix
+/// — never a torn file.
+pub struct Checkpointer {
+    dir: PathBuf,
+    manifest: RunManifest,
+}
+
+impl Checkpointer {
+    /// Start a fresh checkpointed run in `dir` (manifest `completed=0`;
+    /// stale segments from a previous run are simply overwritten).
+    pub fn create(
+        dir: &Path,
+        config_hash: u64,
+        calib_digest: u64,
+        n_blocks: usize,
+    ) -> anyhow::Result<Checkpointer> {
+        let manifest = RunManifest { config_hash, calib_digest, n_blocks, completed: 0 };
+        manifest.save(dir)?;
+        Ok(Checkpointer { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Resume from `dir`, refusing a manifest whose identity (config
+    /// hash, calibration digest, block count) doesn't match this run.
+    pub fn resume(
+        dir: &Path,
+        config_hash: u64,
+        calib_digest: u64,
+        n_blocks: usize,
+    ) -> anyhow::Result<Checkpointer> {
+        let manifest = RunManifest::load(dir)?;
+        manifest.verify(config_hash, calib_digest, n_blocks)?;
+        Ok(Checkpointer { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Durable completed-block prefix: blocks `0..completed()` have
+    /// committed segments on disk.
+    pub fn completed(&self) -> usize {
+        self.manifest.completed
+    }
+
+    fn segment_path(&self, block: usize) -> PathBuf {
+        self.dir.join(format!("block_{block}.seg"))
+    }
+
+    /// Persist `block`'s seven packed layers, *then* advance the
+    /// manifest — in that order, so `completed` never points past a
+    /// durable segment.
+    fn record_block(&mut self, qm: &QuantizedModel, block: usize) -> anyhow::Result<()> {
+        crate::infer::save_block_segment(qm, block, &self.segment_path(block))?;
+        self.manifest.completed = block + 1;
+        self.manifest.save(&self.dir)
+    }
+
+    fn load_block(&self, cfg: &ModelConfig, block: usize) -> anyhow::Result<Vec<PackedLinear>> {
+        crate::infer::load_block_segment(&self.segment_path(block), cfg, block)
+    }
+}
+
+/// [`quantize_model`] with crash-safe checkpointing (`quantize --out` /
+/// `--resume`): per-block packed segments and the run manifest land in
+/// `parts_dir` as each block completes, and `resume = true` replays the
+/// durable prefix of an interrupted run instead of recomputing it. The
+/// resumed output is bit-identical to an uninterrupted run — the calib
+/// sample and every solver RNG are keyed (not sequential), so skipping
+/// completed blocks perturbs nothing downstream (pinned by
+/// `tests/fault_recovery.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_model_checkpointed(
+    model: &Model,
+    corpus: &Corpus,
+    method: Method,
+    cfg: &QuantConfig,
+    n_calib: usize,
+    seq_len: usize,
+    rt: Option<&SolverRuntime>,
+    parts_dir: &Path,
+    resume: bool,
+) -> anyhow::Result<(QuantizedModel, PipelineReport)> {
+    let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
+    let calib = corpus.calibration(n_calib, seq_len.min(model.cfg.max_seq), &mut rng);
+    let config_hash = run_config_hash(&model.cfg, method, cfg, calib.len());
+    let calib_digest = robust::digest_tokens(&calib);
+    let n_blocks = model.blocks.len();
+    let mut ck = if resume {
+        Checkpointer::resume(parts_dir, config_hash, calib_digest, n_blocks)?
+    } else {
+        Checkpointer::create(parts_dir, config_hash, calib_digest, n_blocks)?
+    };
+    Pipeline::new(model, calib, method, cfg.clone(), rt).run_with(Some(&mut ck))
 }
 
 /// Standard experiment setup: model + paired corpora (in-domain "C4" and

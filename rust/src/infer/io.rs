@@ -68,6 +68,8 @@ use std::path::Path;
 
 const MAGIC: &str = "OJBQ1";
 const VERSION: u32 = 1;
+/// Magic line of a per-block partial segment (`save_block_segment`).
+const SEG_MAGIC: &str = "OJBS1";
 
 /// Size accounting returned by [`save_quantized`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -171,6 +173,48 @@ fn write_packed(w: &mut impl Write, name: &str, t: &PackedTiles) -> anyhow::Resu
         w.write_all(t.tile_payload(ti))?;
     }
     Ok(())
+}
+
+/// Save one block's seven linears as a crash-safe partial segment — the
+/// unit of `quantize --out` checkpointing. Records use exactly the
+/// OJBQ1 dense/packed layout under an `OJBS1` magic + block-index
+/// header:
+///
+/// ```text
+/// OJBS1\n
+/// <block>\n
+/// b{block}.{wq wk wv wo wgate wup wdown}   dense | packed
+/// end\n
+/// ```
+///
+/// The segment is serialized to memory and committed through
+/// [`crate::robust::atomic_write`] (temp file + rename, the
+/// `io.segment_write` fault site), so a crash mid-write never leaves a
+/// torn segment — at worst an orphan `.tmp` that resume ignores.
+pub fn save_block_segment(
+    qm: &QuantizedModel,
+    block: usize,
+    path: &Path,
+) -> anyhow::Result<()> {
+    let b = qm
+        .blocks
+        .get(block)
+        .ok_or_else(|| anyhow::anyhow!("segment block {block} out of range"))?;
+    let mut buf: Vec<u8> = Vec::new();
+    writeln!(buf, "{SEG_MAGIC}")?;
+    writeln!(buf, "{block}")?;
+    for (&kind, lin) in LinearKind::all().iter().zip(b.linears()) {
+        let name = format!("b{block}.{}", kind.name());
+        debug_assert_eq!(lin.shape(), linear_dims(&qm.cfg, kind), "layer {name}");
+        match lin {
+            PackedLinear::Dense(mat) => {
+                write_dense(&mut buf, &name, mat.rows(), mat.cols(), mat.as_slice())?;
+            }
+            PackedLinear::Packed(t) => write_packed(&mut buf, &name, t)?,
+        }
+    }
+    writeln!(buf, "end")?;
+    crate::robust::atomic_write("io.segment_write", path, &buf)
 }
 
 // ----- reader ---------------------------------------------------------
@@ -367,6 +411,43 @@ fn read_packed_payload<R: BufRead>(
     Ok(PackedLinear::packed(tiles))
 }
 
+/// Load the seven packed linears of one block from a segment written by
+/// [`save_block_segment`], with the same hardened reader discipline as
+/// [`load_quantized`]: shapes pinned by `cfg`, allocations capped by
+/// the actual file length, and `end` + no-trailing-bytes checks so
+/// truncation or concatenation fails loudly.
+pub fn load_block_segment(
+    path: &Path,
+    cfg: &crate::config::ModelConfig,
+    block: usize,
+) -> anyhow::Result<Vec<PackedLinear>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening segment {path:?}: {e}"))?;
+    let file_len = f.metadata()?.len();
+    let mut r = Reader { r: std::io::BufReader::new(f), remaining: file_len };
+    let magic = r.line()?;
+    anyhow::ensure!(magic == SEG_MAGIC, "bad magic {magic:?} in {path:?} (expected {SEG_MAGIC})");
+    let bline = r.line()?;
+    let got: usize = bline
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad segment block line {bline:?}: {e}"))?;
+    anyhow::ensure!(got == block, "segment {path:?} holds block {got}, expected block {block}");
+    let mut linears = Vec::with_capacity(LinearKind::all().len());
+    for &kind in LinearKind::all() {
+        let (m, n) = linear_dims(cfg, kind);
+        linears.push(read_linear(&mut r, &format!("b{block}.{}", kind.name()), m, n)?);
+    }
+    let endline = r.line()?;
+    anyhow::ensure!(endline == "end", "segment missing end marker (truncated?)");
+    anyhow::ensure!(
+        r.remaining == 0,
+        "{} trailing bytes after segment end marker (corrupt segment)",
+        r.remaining
+    );
+    Ok(linears)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,5 +501,44 @@ mod tests {
     #[test]
     fn load_missing_file_is_err() {
         assert!(load_quantized(Path::new("/nonexistent/q.ojbq1"), "x").is_err());
+    }
+
+    #[test]
+    fn block_segment_roundtrip_bit_exact() {
+        // Crosses the io.segment_write fault site — serialize with the
+        // tests that arm it.
+        let _g = crate::robust::TEST_FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::robust::reset_faults();
+        let cfg = ModelConfig {
+            name: "seg".into(),
+            vocab_size: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 12,
+            max_seq: 8,
+        };
+        let mut rng = Rng::new(0xB1);
+        let model = Model::random(cfg, &mut rng);
+        let mut qm = QuantizedModel::from_model(&model);
+        let qcfg = QuantConfig { wbit: 3, group_size: 4, ..Default::default() };
+        for &kind in LinearKind::all() {
+            let id = crate::model::LinearId { block: 1, kind };
+            let q = rtn::quantize(model.linear(id), &qcfg);
+            qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+        }
+        let path = tmp("block1.seg");
+        save_block_segment(&qm, 1, &path).unwrap();
+        let back = load_block_segment(&path, &qm.cfg, 1).unwrap();
+        assert_eq!(back.len(), LinearKind::all().len());
+        for ((kind, orig), loaded) in
+            LinearKind::all().iter().zip(qm.blocks[1].linears()).zip(back.iter())
+        {
+            assert_eq!(loaded.is_packed(), orig.is_packed(), "{kind:?}");
+            assert_eq!(loaded.to_dense(), orig.to_dense(), "{kind:?}");
+        }
+        // A segment only loads as the block it was written for.
+        assert!(load_block_segment(&path, &qm.cfg, 0).is_err());
+        assert!(save_block_segment(&qm, 9, &path).is_err());
     }
 }

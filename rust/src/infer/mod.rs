@@ -39,7 +39,9 @@
 pub mod io;
 pub mod packed;
 
-pub use io::{load_quantized, save_quantized, CheckpointInfo};
+pub use io::{
+    load_block_segment, load_quantized, save_block_segment, save_quantized, CheckpointInfo,
+};
 pub use packed::{
     packed_core, qgemm_packed, qgemm_packed_with, qgemv_packed, qgemv_packed_into,
     qgemv_packed_with, set_packed_core_override, GemvScratch, PackedCore, PackedLinear, COL_TILE,

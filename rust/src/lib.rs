@@ -26,7 +26,9 @@
 //! exposes every solver (RTN / GPTQ / AWQ / QuIP / Babai / Klein /
 //! OJBKQ); [`infer`] executes the quantized model straight from
 //! bit-packed integer codes; [`serve`] generates tokens from it with a
-//! KV cache and continuous batching; [`eval`] measures perplexity,
+//! KV cache and continuous batching; [`robust`] is the failure model
+//! (fault injection, graceful degradation, crash-safe resumable runs);
+//! [`eval`] measures perplexity,
 //! zero-shot and reasoning accuracy on any [`model::LanguageModel`];
 //! [`bench`] is the measurement harness used by `cargo bench`.
 
@@ -44,6 +46,7 @@ pub mod parallel;
 pub mod quant;
 pub mod report;
 pub mod rng;
+pub mod robust;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -5,8 +5,9 @@
 //! ojbkq quantize  --model NAME [--method ours] [--wbit 4] [--group 128]
 //!                 [--k 5] [--mu μ] [--lambda λ] [--backend native|pjrt]
 //!                 [--calib 32] [--seq 128] [--out CKPT.ojbq1]
-//!                 [--dense-out PATH] [--dense-exec] [--f32-core]
-//!                 [--trace] [--trace-out trace.json]
+//!                 [--resume DIR] [--dense-out PATH] [--dense-exec]
+//!                 [--f32-core] [--trace] [--trace-out trace.json]
+//!                 [--inject-fault SITE:KIND[:NTH]]
 //! ojbkq eval      --model NAME [--method ours] [--from CKPT.ojbq1]
 //!                 [--ppl-tokens 8192] [--zeroshot] [--reasoning]
 //!                 (quantize + evaluate, or evaluate a saved checkpoint)
@@ -62,11 +63,26 @@
 //! wrote it. `--dense-out` keeps the legacy dequantized OJBW1 export for
 //! cross-checks.
 //!
+//! `quantize --out` is also **crash-safe**: the run writes a per-block
+//! OJBS1 segment plus an OJBM1 run manifest to `CKPT.ojbq1.parts/` as
+//! each transformer block completes (atomic temp-file + rename), then
+//! assembles the final OJBQ1 checkpoint. After a crash,
+//! `--resume CKPT.ojbq1.parts` verifies the manifest against the run
+//! configuration and calibration digest, replays the completed blocks
+//! from their segments, and continues — the resumed output is
+//! bit-identical to an uninterrupted run (see DESIGN.md §Failure model).
+//!
+//! `--inject-fault SITE:KIND[:NTH]` (also: `OJBKQ_FAULTS`, comma list)
+//! arms the fault-injection harness (`ojbkq::robust`) for robustness
+//! drills: KIND ∈ err|panic|nan|partial_write|stall fires the NTH time
+//! execution crosses SITE. Disarmed, every fault site costs one relaxed
+//! atomic load — output is bit-identical with the harness compiled in.
+//!
 //! Model NAME refers to the zoo presets (see `config::ModelConfig::zoo`)
 //! whose trained weights live in `artifacts/` after `make artifacts`.
 
 use ojbkq::cli::Args;
-use ojbkq::coordinator::{quantize_model, PipelineReport, Workbench};
+use ojbkq::coordinator::{quantize_model, quantize_model_checkpointed, PipelineReport, Workbench};
 use ojbkq::eval;
 use ojbkq::infer::{load_quantized, save_quantized, QuantizedModel};
 use ojbkq::quant::{Backend, Method, QuantConfig};
@@ -89,6 +105,14 @@ fn main() {
         // the whole run and drain into trace.json at the end.
         ojbkq::obs::set_trace_override(Some(true));
     }
+    if let Some(spec) = args.get("inject-fault") {
+        // Process-global fault-injection arming, same shape as --trace
+        // (env form: OJBKQ_FAULTS=site:kind[:nth],...).
+        if let Err(e) = ojbkq::robust::set_faults(Some(spec)) {
+            eprintln!("--inject-fault: {e}");
+            std::process::exit(2);
+        }
+    }
     let code = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("methods") => cmd_methods(),
@@ -104,6 +128,9 @@ fn main() {
                  export for cross-checks); eval [--from CKPT.ojbq1] scores a saved\n\
                  checkpoint directly; generate serves tokens from it with a KV\n\
                  cache and continuous batching (--new N --requests R --temp T).\n\
+                 quantize --resume DIR continues an interrupted --out run from\n\
+                 its .parts/ directory; --inject-fault SITE:KIND[:NTH] arms the\n\
+                 fault-injection harness (see DESIGN.md section Failure model).\n\
                  --trace [--trace-out FILE] records spans,\n\
                  per-layer quality metrics and kernel counters to trace.json;\n\
                  check-trace FILE validates one against the schema.\n\
@@ -246,14 +273,43 @@ fn run_quantize(
         cfg.mu,
         cfg.lambda
     );
-    let (qmodel, mut report) =
-        match quantize_model(&wb.model, &wb.corpus, method, cfg, n_calib, seq, rt) {
-            Ok(x) => x,
-            Err(e) => {
-                eprintln!("quantization failed: {e}");
-                return Err(1);
-            }
-        };
+    // Crash-safe checkpointing: any run that writes an OJBQ1 checkpoint
+    // also records per-block segments + a manifest in `<out>.parts/`;
+    // `--resume DIR` picks an interrupted parts directory back up.
+    let resume_dir = args.get("resume").map(PathBuf::from);
+    let parts_dir: Option<PathBuf> = match (&resume_dir, args.get("out")) {
+        (Some(d), _) => Some(d.clone()),
+        (None, Some(out)) => Some(PathBuf::from(format!("{out}.parts"))),
+        (None, None) => None,
+    };
+    if let Some(pd) = &parts_dir {
+        println!(
+            "crash-safe run: per-block segments + manifest in {} ({})",
+            pd.display(),
+            if resume_dir.is_some() { "resuming" } else { "fresh" }
+        );
+    }
+    let run = match &parts_dir {
+        Some(pd) => quantize_model_checkpointed(
+            &wb.model,
+            &wb.corpus,
+            method,
+            cfg,
+            n_calib,
+            seq,
+            rt,
+            pd,
+            resume_dir.is_some(),
+        ),
+        None => quantize_model(&wb.model, &wb.corpus, method, cfg, n_calib, seq, rt),
+    };
+    let (qmodel, mut report) = match run {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("quantization failed: {e}");
+            return Err(1);
+        }
+    };
     println!(
         "done in {} (capture {} / solver {}, {} block-steps); compression {:.2}x over fp32",
         fmt_secs(report.total_secs),
@@ -445,21 +501,24 @@ fn cmd_generate(args: &Args) -> i32 {
                 eval_toks[start..start + prompt_len].to_vec()
             }
         };
-        sched.submit(Request {
+        if let Err(reason) = sched.submit(Request {
             id: r as u64,
             prompt,
             max_new,
             temperature,
             seed: gen_seed.wrapping_add(r as u64),
-        });
+        }) {
+            eprintln!("request {r} rejected: {reason}");
+        }
     }
     sched.run();
     for f in sched.finished() {
         println!(
-            "request {}: prompt {} tokens -> {} generated: {:?}",
+            "request {}: prompt {} tokens -> {} generated ({}): {:?}",
             f.id,
             f.prompt_len,
             f.generated.len(),
+            f.status,
             f.generated
         );
     }

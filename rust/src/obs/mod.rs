@@ -147,6 +147,9 @@ pub const SPAN_NAMES: &[&str] = &[
 /// | `serve.requests_retired` | counter | requests retired at their token budget |
 /// | `serve.kv_bytes` | gauge | resident KV-cache bytes across live sequences |
 /// | `serve.tokens_per_sec` | gauge | serving throughput (last run) |
+/// | `serve.requests_rejected` | counter | submissions refused at admission (empty/too-long/queue-full) |
+/// | `serve.requests_expired` | counter | requests retired by deadline expiry |
+/// | `layer.fallback` | hist | per-layer RTN-fallback events (1.0 per degraded layer) |
 pub const METRIC_NAMES: &[&str] = &[
     "quant.layers",
     "quant.cols",
@@ -181,6 +184,9 @@ pub const METRIC_NAMES: &[&str] = &[
     "serve.requests_retired",
     "serve.kv_bytes",
     "serve.tokens_per_sec",
+    "serve.requests_rejected",
+    "serve.requests_expired",
+    "layer.fallback",
 ];
 
 /// Keys allowed in the per-layer metric records of `trace.json`
@@ -200,6 +206,7 @@ pub const LAYER_METRIC_NAMES: &[&str] = &[
     "capture_secs",
     "packed_bytes",
     "fp_bytes",
+    "fallback",
 ];
 
 // ----- global state ---------------------------------------------------

@@ -313,6 +313,11 @@ pub struct LayerStats {
     pub clip_rate: f64,
     /// Code-histogram occupancy: distinct code values used / `2^wbit`.
     pub occupancy: f64,
+    /// True when this layer was produced by the degradation ladder's
+    /// RTN fallback (shared-factor Cholesky failed after jitter
+    /// escalation) rather than the requested method. Recorded in
+    /// `trace.json` as the `layer.fallback` metric.
+    pub fallback: bool,
 }
 
 impl LayerStats {
@@ -454,6 +459,18 @@ pub fn quantize_layer_shared(
         stats.cols = w.cols() as u64;
         record_iter_metrics(it);
     }
+    // Solve→pack boundary guard: a non-finite solve output (NaN-poisoned
+    // weights or activations that slipped past the upstream guards)
+    // becomes a structured per-layer error here instead of packing
+    // garbage codes into the checkpoint.
+    if !stats.rt_err.is_finite() || !stats.jta_err.is_finite() {
+        return Err(crate::robust::RobustError::new(
+            "coordinator.solve",
+            "non-finite solve output (rt_err/jta_err)",
+        )
+        .with_context(format!("layer uid {layer_id}, method {}", method.label()))
+        .into());
+    }
     record_layer_metrics(&q, &stats);
     Ok((q, stats))
 }
@@ -525,6 +542,7 @@ pub fn layer_stats(
         klein_improved: 0,
         clip_rate,
         occupancy,
+        fallback: false,
     }
 }
 

@@ -1,0 +1,654 @@
+//! Failure model: fault injection, structured errors, crash-safe IO.
+//!
+//! This module is the substrate for the pipeline's robustness story
+//! (DESIGN.md §Failure model). It provides four things:
+//!
+//! 1. **Fault-injection harness.** Named fault sites are threaded
+//!    through the coordinator, checkpoint IO, and the serve scheduler
+//!    as calls to [`fault_point`]. A site is inert until armed via
+//!    `OJBKQ_FAULTS=site:kind:nth` (or `--inject-fault`, or
+//!    [`set_faults`] in tests); when armed, the `nth` crossing of the
+//!    named site fires the configured [`FaultKind`]. Disarmed cost is
+//!    one relaxed atomic load per crossing — the same zero-cost
+//!    discipline as `obs/` — pinned by `obs_trace.rs` and
+//!    `BENCH_robust.json`.
+//!
+//! 2. **Structured errors.** [`RobustError`] carries the site name
+//!    plus block/tap/layer context so a per-layer failure (injected or
+//!    genuine NaN poisoning) surfaces as a diagnosable `Err` instead
+//!    of a panic or a silently corrupt layer.
+//!
+//! 3. **Run manifest.** [`RunManifest`] records the identity of a
+//!    checkpointed quantization run (config hash, calibration digest,
+//!    completed-block prefix) in a tiny text format (`OJBM1`), so
+//!    `quantize --resume` can refuse mismatched resumes and replay
+//!    exactly the completed prefix.
+//!
+//! 4. **Atomic writes.** [`atomic_write`] is the single choke point
+//!    for checkpoint-file IO: full payload to `<path>.tmp`, then
+//!    `rename` — a crash at any instant leaves either the old file or
+//!    the new file, never a torn one. The `partial_write` fault kind
+//!    simulates the torn-temp-file crash, which resume must ignore.
+//!
+//! ## Fault kinds
+//!
+//! | kind            | effect at the site                                      |
+//! |-----------------|---------------------------------------------------------|
+//! | `err`           | site returns a structured [`RobustError`]               |
+//! | `panic`         | `fault_point` panics (simulated crash)                  |
+//! | `nan`           | site poisons its value with NaN (guards must catch it)  |
+//! | `partial_write` | IO site writes half the payload to `.tmp`, no rename    |
+//! | `stall`         | `fault_point` sleeps ~25ms, then proceeds normally      |
+//!
+//! Sites that cannot express a kind (e.g. `nan` at a write site)
+//! degrade it to `err` — every armed fault is always observable.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Context};
+
+/// Every registered fault site. [`fault_point`] debug-asserts its
+/// argument is in this list and [`set_faults`] rejects specs naming
+/// anything else, so the taxonomy cannot drift silently (mirroring
+/// `obs::METRIC_NAMES`).
+pub const FAULT_SITES: &[&str] = &[
+    // Coordinator: per-block capture -> factor -> solve -> advance.
+    "coordinator.capture",
+    "coordinator.factor",
+    "coordinator.solve",
+    "coordinator.advance",
+    // Checkpoint IO (segments + manifest go through `atomic_write`).
+    "io.segment_write",
+    "io.manifest_write",
+    // Serve scheduler: per-step admission/decode + logits production.
+    "serve.step",
+    "serve.logits",
+];
+
+/// What an armed fault does when it fires. See the module-level table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Err,
+    Panic,
+    Nan,
+    PartialWrite,
+    Stall,
+}
+
+impl FaultKind {
+    /// All kinds, in spec-string order — used by the fault-sweep test.
+    pub fn all() -> &'static [FaultKind] {
+        &[
+            FaultKind::Err,
+            FaultKind::Panic,
+            FaultKind::Nan,
+            FaultKind::PartialWrite,
+            FaultKind::Stall,
+        ]
+    }
+
+    /// The spec-string name (`err`, `panic`, `nan`, `partial_write`,
+    /// `stall`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Err => "err",
+            FaultKind::Panic => "panic",
+            FaultKind::Nan => "nan",
+            FaultKind::PartialWrite => "partial_write",
+            FaultKind::Stall => "stall",
+        }
+    }
+
+    fn parse(s: &str) -> anyhow::Result<FaultKind> {
+        FaultKind::all()
+            .iter()
+            .copied()
+            .find(|k| k.label() == s)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown fault kind `{s}` (known: err, panic, nan, partial_write, stall)"
+                )
+            })
+    }
+}
+
+/// One armed fault: fire `kind` on the `nth` crossing of `site`
+/// (1-based), then stay spent.
+#[derive(Debug, Clone)]
+struct FaultSpec {
+    site: &'static str,
+    kind: FaultKind,
+    nth: u64,
+    hits: u64,
+    fired: bool,
+}
+
+/// 0 = unresolved (consult `OJBKQ_FAULTS` on first crossing),
+/// 1 = armed, 2 = disarmed. Steady-state disarmed cost is the single
+/// relaxed load of this flag.
+static FAULT_STATE: AtomicU8 = AtomicU8::new(0);
+/// Total faults fired since the last [`reset_faults`].
+static FAULT_EVENTS: AtomicU64 = AtomicU64::new(0);
+static ENV_RESOLVE: OnceLock<()> = OnceLock::new();
+
+/// Serializes lib unit tests that arm the process-global fault
+/// registry or cross sites another test may arm (lib tests run
+/// multi-threaded in one process; integration-test binaries run
+/// sequentially and keep their own file-level locks).
+#[cfg(test)]
+pub(crate) static TEST_FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn specs() -> &'static Mutex<Vec<FaultSpec>> {
+    static SPECS: OnceLock<Mutex<Vec<FaultSpec>>> = OnceLock::new();
+    SPECS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn parse_specs(s: &str) -> anyhow::Result<Vec<FaultSpec>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let mut it = part.split(':');
+        let site = it.next().unwrap_or("");
+        let Some(&canon) = FAULT_SITES.iter().find(|&&k| k == site) else {
+            bail!(
+                "unknown fault site `{site}` (known: {})",
+                FAULT_SITES.join(", ")
+            );
+        };
+        let kind = FaultKind::parse(
+            it.next()
+                .ok_or_else(|| anyhow!("fault spec `{part}` is missing a kind"))?,
+        )?;
+        let nth = match it.next() {
+            None => 1,
+            Some(n) => n
+                .parse::<u64>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| anyhow!("fault spec `{part}`: nth must be an integer >= 1"))?,
+        };
+        if it.next().is_some() {
+            bail!("fault spec `{part}` has trailing fields (want site:kind[:nth])");
+        }
+        out.push(FaultSpec {
+            site: canon,
+            kind,
+            nth,
+            hits: 0,
+            fired: false,
+        });
+    }
+    Ok(out)
+}
+
+/// Arm (or disarm, with `None`) the fault registry. The spec is a
+/// comma-separated list of `site:kind[:nth]` entries; `nth` defaults
+/// to 1 and counts crossings of that site (1-based). Each entry fires
+/// exactly once. An invalid spec leaves the registry disarmed.
+pub fn set_faults(spec: Option<&str>) -> anyhow::Result<()> {
+    let mut guard = specs().lock().unwrap_or_else(|e| e.into_inner());
+    match spec {
+        Some(s) => {
+            let parsed = parse_specs(s);
+            match parsed {
+                Ok(list) => {
+                    let armed = !list.is_empty();
+                    *guard = list;
+                    FAULT_STATE.store(if armed { 1 } else { 2 }, Ordering::Relaxed);
+                    Ok(())
+                }
+                Err(e) => {
+                    guard.clear();
+                    FAULT_STATE.store(2, Ordering::Relaxed);
+                    Err(e)
+                }
+            }
+        }
+        None => {
+            guard.clear();
+            FAULT_STATE.store(2, Ordering::Relaxed);
+            Ok(())
+        }
+    }
+}
+
+/// Disarm every fault and zero the fired-event counter. Tests call
+/// this on entry and exit so a poisoned registry never leaks across
+/// test cases.
+pub fn reset_faults() {
+    let _ = set_faults(None);
+    FAULT_EVENTS.store(0, Ordering::Relaxed);
+}
+
+/// Number of faults fired since the last [`reset_faults`]. The
+/// disarmed-overhead gate asserts this stays 0 across a full pipeline
+/// run with the registry off.
+pub fn fault_event_count() -> u64 {
+    FAULT_EVENTS.load(Ordering::Relaxed)
+}
+
+fn resolve_env() {
+    ENV_RESOLVE.get_or_init(|| {
+        // Only consult the environment if nothing armed the registry
+        // programmatically first.
+        if FAULT_STATE.load(Ordering::Relaxed) == 0 {
+            match std::env::var("OJBKQ_FAULTS") {
+                Ok(s) => {
+                    if let Err(e) = set_faults(Some(&s)) {
+                        eprintln!("warning: ignoring OJBKQ_FAULTS: {e}");
+                    }
+                }
+                Err(_) => {
+                    FAULT_STATE.store(2, Ordering::Relaxed);
+                }
+            }
+        }
+    });
+}
+
+/// Cross a named fault site. Disarmed this is one relaxed atomic
+/// load. Armed, the matching spec's `nth` crossing fires:
+/// `panic` panics here, `stall` sleeps here and returns `None`, and
+/// every other kind is returned for the call site to act on (callers
+/// treat kinds they cannot express as `err`).
+pub fn fault_point(site: &'static str) -> Option<FaultKind> {
+    debug_assert!(
+        FAULT_SITES.contains(&site),
+        "unregistered fault site: {site}"
+    );
+    match FAULT_STATE.load(Ordering::Relaxed) {
+        2 => return None,
+        0 => resolve_env(),
+        _ => {}
+    }
+    if FAULT_STATE.load(Ordering::Relaxed) != 1 {
+        return None;
+    }
+    let kind = {
+        let mut guard = specs().lock().unwrap_or_else(|e| e.into_inner());
+        let mut fired = None;
+        for s in guard.iter_mut() {
+            if s.site == site && !s.fired {
+                s.hits += 1;
+                if s.hits >= s.nth {
+                    s.fired = true;
+                    fired = Some(s.kind);
+                    break;
+                }
+            }
+        }
+        fired
+    }?;
+    FAULT_EVENTS.fetch_add(1, Ordering::Relaxed);
+    match kind {
+        FaultKind::Panic => panic!("injected panic at fault site {site}"),
+        FaultKind::Stall => {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            None
+        }
+        k => Some(k),
+    }
+}
+
+/// A structured robustness failure: which site tripped, where in the
+/// run (block / tap / layer), and why. Everything the degradation
+/// ladder cannot absorb surfaces as one of these instead of a panic.
+#[derive(Debug, Clone)]
+pub struct RobustError {
+    /// The fault site or guard boundary that detected the failure.
+    pub site: &'static str,
+    /// Transformer block index, when the failure is block-scoped.
+    pub block: Option<usize>,
+    /// Free-form locator: tap point, layer id, sequence/position, path.
+    pub context: String,
+    /// What went wrong.
+    pub msg: String,
+}
+
+impl RobustError {
+    pub fn new(site: &'static str, msg: impl Into<String>) -> Self {
+        RobustError {
+            site,
+            block: None,
+            context: String::new(),
+            msg: msg.into(),
+        }
+    }
+
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = Some(block);
+        self
+    }
+
+    pub fn with_context(mut self, context: impl Into<String>) -> Self {
+        self.context = context.into();
+        self
+    }
+}
+
+impl fmt::Display for RobustError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.site, self.msg)?;
+        if let Some(b) = self.block {
+            write!(f, " (block {b})")?;
+        }
+        if !self.context.is_empty() {
+            write!(f, " — {}", self.context)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for RobustError {}
+
+/// FNV-1a 64-bit over a byte stream — the checkpoint manifest's
+/// fingerprint primitive (stable, dependency-free, not cryptographic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_extend(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Fold more bytes into a running FNV-1a state.
+pub fn fnv1a64_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest a calibration set (token sequences). Each sequence is
+/// length-prefixed so `[1,2],[3]` and `[1],[2,3]` hash differently.
+pub fn digest_tokens(seqs: &[Vec<u16>]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for s in seqs {
+        h = fnv1a64_extend(h, &(s.len() as u64).to_le_bytes());
+        for &t in s {
+            h = fnv1a64_extend(h, &t.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Magic line of the run manifest (`manifest.ojbm`).
+pub const MANIFEST_MAGIC: &str = "OJBM1";
+
+/// Identity + progress record of a checkpointed quantization run.
+/// `completed` is a *prefix* count: blocks `0..completed` have
+/// durable segments in the same directory. Serialized as five text
+/// lines (see DESIGN.md §Failure model):
+///
+/// ```text
+/// OJBM1
+/// config_hash <16-hex>
+/// calib_digest <16-hex>
+/// n_blocks <N>
+/// completed <K>
+/// end
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunManifest {
+    /// Fingerprint of everything that determines the run's output
+    /// besides the calibration tokens (model shape, method, quant
+    /// config).
+    pub config_hash: u64,
+    /// [`digest_tokens`] of the sampled calibration set.
+    pub calib_digest: u64,
+    /// Total transformer blocks in the run.
+    pub n_blocks: usize,
+    /// Durable completed-block prefix (`0..completed` resumable).
+    pub completed: usize,
+}
+
+impl RunManifest {
+    /// Manifest location inside a checkpoint parts directory.
+    pub fn path(dir: &Path) -> PathBuf {
+        dir.join("manifest.ojbm")
+    }
+
+    /// Atomically persist to `dir` (via the `io.manifest_write` site).
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        let text = format!(
+            "{MANIFEST_MAGIC}\nconfig_hash {:016x}\ncalib_digest {:016x}\nn_blocks {}\ncompleted {}\nend\n",
+            self.config_hash, self.calib_digest, self.n_blocks, self.completed
+        );
+        atomic_write("io.manifest_write", &Self::path(dir), text.as_bytes())
+    }
+
+    /// Load and validate the manifest in `dir`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = Self::path(dir);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading run manifest {}", path.display()))?;
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or("");
+        if magic != MANIFEST_MAGIC {
+            bail!("bad manifest magic `{magic}` (want {MANIFEST_MAGIC})");
+        }
+        let config_hash = u64::from_str_radix(field(lines.next(), "config_hash")?, 16)
+            .context("manifest: config_hash is not hex")?;
+        let calib_digest = u64::from_str_radix(field(lines.next(), "calib_digest")?, 16)
+            .context("manifest: calib_digest is not hex")?;
+        let n_blocks: usize = field(lines.next(), "n_blocks")?
+            .parse()
+            .context("manifest: n_blocks is not an integer")?;
+        let completed: usize = field(lines.next(), "completed")?
+            .parse()
+            .context("manifest: completed is not an integer")?;
+        if lines.next() != Some("end") {
+            bail!("manifest truncated: missing `end`");
+        }
+        if completed > n_blocks {
+            bail!("manifest corrupt: completed {completed} > n_blocks {n_blocks}");
+        }
+        Ok(RunManifest {
+            config_hash,
+            calib_digest,
+            n_blocks,
+            completed,
+        })
+    }
+
+    /// Check that a resume matches the run that wrote this manifest.
+    pub fn verify(&self, config_hash: u64, calib_digest: u64, n_blocks: usize) -> anyhow::Result<()> {
+        if self.config_hash != config_hash {
+            bail!(
+                "resume mismatch: manifest config_hash {:016x} != current {:016x} \
+                 (model/method/quant config changed)",
+                self.config_hash,
+                config_hash
+            );
+        }
+        if self.calib_digest != calib_digest {
+            bail!(
+                "resume mismatch: manifest calib_digest {:016x} != current {:016x} \
+                 (calibration set changed)",
+                self.calib_digest,
+                calib_digest
+            );
+        }
+        if self.n_blocks != n_blocks {
+            bail!(
+                "resume mismatch: manifest n_blocks {} != current {}",
+                self.n_blocks,
+                n_blocks
+            );
+        }
+        Ok(())
+    }
+}
+
+fn field<'a>(line: Option<&'a str>, key: &str) -> anyhow::Result<&'a str> {
+    let l = line.ok_or_else(|| anyhow!("manifest truncated: missing `{key}`"))?;
+    l.strip_prefix(key)
+        .and_then(|rest| rest.strip_prefix(' '))
+        .map(str::trim)
+        .ok_or_else(|| anyhow!("manifest: expected `{key} ...`, got `{l}`"))
+}
+
+/// Crash-safe file write: full payload to `<path>.tmp`, then rename
+/// over `path`. A crash (or injected fault) at any point leaves the
+/// destination either absent, old, or new — never torn; at worst an
+/// orphan `.tmp` remains, which readers ignore and the next write
+/// overwrites. `site` is the IO fault site consulted before touching
+/// the filesystem (`err`/`nan` → fail without writing, `partial_write`
+/// → half the payload lands in `.tmp` and the rename never happens).
+pub fn atomic_write(site: &'static str, path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    match fault_point(site) {
+        None => {}
+        Some(FaultKind::PartialWrite) => {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent).ok();
+            }
+            let tmp = tmp_path(path);
+            std::fs::write(&tmp, &bytes[..bytes.len() / 2])
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            return Err(RobustError::new(site, "injected torn write (crash before rename)")
+                .with_context(path.display().to_string())
+                .into());
+        }
+        Some(_) => {
+            return Err(RobustError::new(site, "injected write fault")
+                .with_context(path.display().to_string())
+                .into());
+        }
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let tmp = tmp_path(path);
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The fault registry is process-global and lib tests run
+    // multi-threaded; every test here that arms it (or asserts on the
+    // disarmed state) serializes through the crate-wide test lock and
+    // only arms the io.* sites.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spec_parsing_accepts_valid_and_rejects_invalid() {
+        let ok = parse_specs("coordinator.solve:err, io.segment_write:partial_write:3").unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[0].site, "coordinator.solve");
+        assert_eq!(ok[0].kind, FaultKind::Err);
+        assert_eq!(ok[0].nth, 1);
+        assert_eq!(ok[1].site, "io.segment_write");
+        assert_eq!(ok[1].kind, FaultKind::PartialWrite);
+        assert_eq!(ok[1].nth, 3);
+
+        assert!(parse_specs("bogus.site:err").is_err());
+        assert!(parse_specs("coordinator.solve:sparkle").is_err());
+        assert!(parse_specs("coordinator.solve").is_err());
+        assert!(parse_specs("coordinator.solve:err:0").is_err());
+        assert!(parse_specs("coordinator.solve:err:1:extra").is_err());
+    }
+
+    #[test]
+    fn fault_fires_on_nth_crossing_then_stays_spent() {
+        let _g = lock();
+        reset_faults();
+        set_faults(Some("io.manifest_write:err:3")).unwrap();
+        assert_eq!(fault_point("io.manifest_write"), None);
+        assert_eq!(fault_point("io.manifest_write"), None);
+        assert_eq!(fault_point("io.manifest_write"), Some(FaultKind::Err));
+        // Spent: never fires again.
+        assert_eq!(fault_point("io.manifest_write"), None);
+        assert_eq!(fault_event_count(), 1);
+        reset_faults();
+        assert_eq!(fault_point("io.manifest_write"), None);
+        assert_eq!(fault_event_count(), 0);
+    }
+
+    #[test]
+    fn fnv_digest_is_stable_and_order_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        // Known FNV-1a vector: "a" -> 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        let a = digest_tokens(&[vec![1, 2], vec![3]]);
+        let b = digest_tokens(&[vec![1], vec![2, 3]]);
+        assert_ne!(a, b, "length prefix must separate sequence boundaries");
+        assert_eq!(a, digest_tokens(&[vec![1, 2], vec![3]]));
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_verify() {
+        let _g = lock();
+        reset_faults();
+        let dir = std::env::temp_dir().join("ojbkq_robust_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = RunManifest {
+            config_hash: 0xdead_beef_0123_4567,
+            calib_digest: 0x0bad_cafe_89ab_cdef,
+            n_blocks: 4,
+            completed: 2,
+        };
+        m.save(&dir).unwrap();
+        let back = RunManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        back.verify(m.config_hash, m.calib_digest, 4).unwrap();
+        assert!(back.verify(1, m.calib_digest, 4).is_err());
+        assert!(back.verify(m.config_hash, 1, 4).is_err());
+        assert!(back.verify(m.config_hash, m.calib_digest, 5).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_write_survives_injected_torn_write() {
+        let _g = lock();
+        reset_faults();
+        let dir = std::env::temp_dir().join("ojbkq_robust_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("payload.bin");
+        atomic_write("io.segment_write", &path, b"first-version").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first-version");
+
+        // Injected torn write: destination untouched, orphan .tmp holds
+        // only half the new payload.
+        set_faults(Some("io.segment_write:partial_write")).unwrap();
+        let err = atomic_write("io.segment_write", &path, b"second-version!!").unwrap_err();
+        assert!(err.to_string().contains("io.segment_write"), "{err}");
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            b"first-version",
+            "torn write must not disturb the committed file"
+        );
+        let tmp = tmp_path(&path);
+        assert_eq!(std::fs::read(&tmp).unwrap().len(), b"second-version!!".len() / 2);
+        reset_faults();
+
+        // The next clean write overwrites the orphan and commits.
+        atomic_write("io.segment_write", &path, b"second-version!!").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second-version!!");
+        assert!(!tmp.exists(), "clean write renames the temp file away");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn robust_error_formats_site_block_and_context() {
+        let e = RobustError::new("coordinator.solve", "non-finite solve output")
+            .with_block(3)
+            .with_context("layer b3.attn_q (tap AttnIn)");
+        let s = e.to_string();
+        assert!(s.contains("coordinator.solve"), "{s}");
+        assert!(s.contains("block 3"), "{s}");
+        assert!(s.contains("b3.attn_q"), "{s}");
+    }
+}

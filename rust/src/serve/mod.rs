@@ -52,7 +52,8 @@ use crate::parallel::parallel_map_dynamic;
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::fmt;
+use std::time::{Duration, Instant};
 
 /// Cached key/value rows for one (sequence, block) pair: two
 /// `capacity × d_model` panels filled top-down, one row per position.
@@ -401,6 +402,69 @@ pub struct Request {
     pub seed: u64,
 }
 
+/// Why [`Scheduler::submit`] refused a request. Admission control turns
+/// malformed or over-capacity submissions into a structured rejection
+/// instead of a panic deep in the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The prompt has no tokens — nothing to prefill.
+    EmptyPrompt,
+    /// The prompt alone exceeds the model's context window.
+    PromptTooLong {
+        /// Submitted prompt length.
+        len: usize,
+        /// The model's context window.
+        max_seq: usize,
+    },
+    /// The pending queue is at [`Scheduler::set_max_queue`] capacity.
+    QueueFull {
+        /// Queue depth at rejection time.
+        depth: usize,
+        /// The configured capacity.
+        max_queue: usize,
+    },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+            RejectReason::PromptTooLong { len, max_seq } => {
+                write!(f, "prompt length {len} exceeds max_seq {max_seq}")
+            }
+            RejectReason::QueueFull { depth, max_queue } => {
+                write!(f, "queue depth {depth} at capacity {max_queue}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RejectReason {}
+
+/// How a request left the scheduler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishStatus {
+    /// Generated its full (clamped) token budget.
+    Complete,
+    /// Retired by the per-request deadline ([`Scheduler::set_deadline`])
+    /// before its budget filled; `generated` holds the partial output.
+    DeadlineExceeded,
+    /// Retired by a serve-side failure (poisoned logits, torn token
+    /// stream, injected fault); the message names the cause. The batch
+    /// keeps running — one poisoned request never takes down its peers.
+    Error(String),
+}
+
+impl fmt::Display for FinishStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FinishStatus::Complete => write!(f, "complete"),
+            FinishStatus::DeadlineExceeded => write!(f, "deadline exceeded"),
+            FinishStatus::Error(msg) => write!(f, "error: {msg}"),
+        }
+    }
+}
+
 /// A completed request, in retirement order.
 #[derive(Debug, Clone)]
 pub struct FinishedRequest {
@@ -412,6 +476,9 @@ pub struct FinishedRequest {
     pub generated: Vec<u16>,
     /// Resident KV-cache bytes this sequence held while live.
     pub kv_bytes: usize,
+    /// How the request left the scheduler ([`FinishStatus::Complete`]
+    /// unless a deadline or serve-side failure retired it early).
+    pub status: FinishStatus,
 }
 
 /// One live sequence between decode steps.
@@ -426,6 +493,8 @@ struct ActiveSeq {
     temperature: f32,
     rng: Rng,
     caches: Vec<KvCache>,
+    /// Submission time, for the per-request deadline.
+    submitted: Instant,
 }
 
 /// Continuous-batching scheduler: admits pending requests into free
@@ -438,7 +507,11 @@ struct ActiveSeq {
 pub struct Scheduler<'m> {
     engine: ServeEngine<'m>,
     max_concurrent: usize,
-    pending: VecDeque<Request>,
+    /// Pending-queue capacity; submissions beyond it are rejected.
+    max_queue: usize,
+    /// Per-request wall-clock deadline, measured from submission.
+    deadline: Option<Duration>,
+    pending: VecDeque<(Request, Instant)>,
     active: Vec<ActiveSeq>,
     finished: Vec<FinishedRequest>,
     scratch: DecodeScratch,
@@ -460,6 +533,8 @@ impl<'m> Scheduler<'m> {
         Scheduler {
             engine: ServeEngine::new(model),
             max_concurrent,
+            max_queue: usize::MAX,
+            deadline: None,
             pending: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
@@ -477,12 +552,42 @@ impl<'m> Scheduler<'m> {
         &self.engine
     }
 
-    /// Queue a request (admitted FIFO as slots free up).
-    pub fn submit(&mut self, req: Request) {
+    /// Cap the pending queue at `max_queue` submissions (≥ 1); further
+    /// [`Scheduler::submit`] calls are rejected with
+    /// [`RejectReason::QueueFull`] until admissions drain the queue.
+    pub fn set_max_queue(&mut self, max_queue: usize) {
+        assert!(max_queue >= 1, "need at least one queue slot");
+        self.max_queue = max_queue;
+    }
+
+    /// Retire requests still live `deadline` after submission with
+    /// [`FinishStatus::DeadlineExceeded`] (partial output kept).
+    pub fn set_deadline(&mut self, deadline: Duration) {
+        self.deadline = Some(deadline);
+    }
+
+    /// Queue a request (admitted FIFO as slots free up). Admission
+    /// control rejects malformed or over-capacity submissions instead of
+    /// panicking: empty prompts, prompts beyond `max_seq`, and
+    /// submissions past the [`Scheduler::set_max_queue`] depth all come
+    /// back as a structured [`RejectReason`].
+    pub fn submit(&mut self, req: Request) -> Result<(), RejectReason> {
         let max_seq = self.engine.model.cfg.max_seq;
-        assert!(!req.prompt.is_empty(), "empty prompt");
-        assert!(req.prompt.len() <= max_seq, "prompt longer than max_seq");
-        self.pending.push_back(req);
+        let reject = if req.prompt.is_empty() {
+            Some(RejectReason::EmptyPrompt)
+        } else if req.prompt.len() > max_seq {
+            Some(RejectReason::PromptTooLong { len: req.prompt.len(), max_seq })
+        } else if self.pending.len() >= self.max_queue {
+            Some(RejectReason::QueueFull { depth: self.pending.len(), max_queue: self.max_queue })
+        } else {
+            None
+        };
+        if let Some(reason) = reject {
+            crate::obs::counter_add("serve.requests_rejected", 1);
+            return Err(reason);
+        }
+        self.pending.push_back((req, Instant::now()));
+        Ok(())
     }
 
     /// Live sequences.
@@ -539,12 +644,24 @@ impl<'m> Scheduler<'m> {
         crate::obs::counter_add("serve.tokens_generated", 1);
     }
 
+    /// Move a sequence to the finished list with `status`.
+    fn finish_with(&mut self, seq: ActiveSeq, status: FinishStatus) {
+        crate::obs::counter_add("serve.requests_retired", 1);
+        self.finished.push(FinishedRequest {
+            id: seq.id,
+            prompt_len: seq.prompt_len,
+            generated: seq.generated,
+            kv_bytes: kv_bytes(&seq.caches),
+            status,
+        });
+    }
+
     /// Admit pending requests into free slots: allocate caches, prefill
     /// the prompt, sample the first token.
     fn admit(&mut self) {
         let max_seq = self.engine.model.cfg.max_seq;
         while self.active.len() < self.max_concurrent {
-            let Some(req) = self.pending.pop_front() else { break };
+            let Some((req, submitted)) = self.pending.pop_front() else { break };
             crate::obs::counter_add("serve.requests_admitted", 1);
             let prompt_len = req.prompt.len();
             let max_new = req.max_new.min(max_seq - prompt_len);
@@ -557,6 +674,7 @@ impl<'m> Scheduler<'m> {
                     prompt_len,
                     generated: Vec::new(),
                     kv_bytes: 0,
+                    status: FinishStatus::Complete,
                 });
                 continue;
             }
@@ -573,6 +691,7 @@ impl<'m> Scheduler<'m> {
                 temperature: req.temperature,
                 rng: Rng::new(req.seed),
                 caches,
+                submitted,
             };
             let last = logits.rows() - 1;
             Self::sample_and_account(
@@ -597,13 +716,25 @@ impl<'m> Scheduler<'m> {
         while i < self.active.len() {
             if self.active[i].generated.len() >= self.active[i].max_new {
                 let seq = self.active.remove(i);
-                crate::obs::counter_add("serve.requests_retired", 1);
-                self.finished.push(FinishedRequest {
-                    id: seq.id,
-                    prompt_len: seq.prompt_len,
-                    generated: seq.generated,
-                    kv_bytes: kv_bytes(&seq.caches),
-                });
+                self.finish_with(seq, FinishStatus::Complete);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Retire live sequences whose wall-clock deadline has passed. The
+    /// `>=` comparison makes a `Duration::ZERO` deadline expire every
+    /// admitted request deterministically at its first step.
+    fn expire(&mut self) {
+        let Some(dl) = self.deadline else { return };
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.active.len() {
+            if now.duration_since(self.active[i].submitted) >= dl {
+                let seq = self.active.remove(i);
+                crate::obs::counter_add("serve.requests_expired", 1);
+                self.finish_with(seq, FinishStatus::DeadlineExceeded);
             } else {
                 i += 1;
             }
@@ -619,20 +750,57 @@ impl<'m> Scheduler<'m> {
         self.retire();
         self.admit();
         self.retire();
+        self.expire();
+        if let Some(kind) = crate::robust::fault_point("serve.step") {
+            // Injected serve failure: retire one live sequence with an
+            // error status instead of taking down the whole batch.
+            if !self.active.is_empty() {
+                let seq = self.active.remove(0);
+                self.finish_with(seq, FinishStatus::Error(format!("injected fault ({kind:?})")));
+            }
+        }
         if self.active.is_empty() {
-            return false;
+            // Expiry/faults can empty the batch while requests still
+            // queue behind a full slot table — keep ticking for those.
+            return !self.pending.is_empty();
         }
         let t0 = Instant::now();
         if self.active.len() >= 2 {
+            // Defensive: a sequence with a torn token stream cannot be
+            // embedded — retire it with an error instead of panicking,
+            // and re-enter with a cleaned batch next step.
+            let bad: Vec<usize> = (0..self.active.len())
+                .filter(|&i| self.active[i].tokens.last().is_none())
+                .collect();
+            if !bad.is_empty() {
+                for i in bad.into_iter().rev() {
+                    let seq = self.active.remove(i);
+                    self.finish_with(seq, FinishStatus::Error("empty token stream".into()));
+                }
+                return true;
+            }
             let inputs: Vec<(u16, usize)> = self
                 .active
                 .iter()
-                .map(|s| (*s.tokens.last().unwrap(), s.tokens.len() - 1))
+                .map(|s| (*s.tokens.last().expect("batch cleaned above"), s.tokens.len() - 1))
                 .collect();
             let mut cs: Vec<&mut [KvCache]> =
                 self.active.iter_mut().map(|s| s.caches.as_mut_slice()).collect();
-            let logits = self.engine.decode_step_batch(&inputs, &mut cs);
+            let mut logits = self.engine.decode_step_batch(&inputs, &mut cs);
+            if crate::robust::fault_point("serve.logits").is_some() {
+                // Poison one row so the genuine detection path below
+                // exercises end to end.
+                logits.row_mut(0)[0] = f32::NAN;
+            }
+            // Poisoned rows (non-finite logits) retire their sequence
+            // with an error; healthy rows sample as usual.
+            let poisoned: Vec<usize> = (0..self.active.len())
+                .filter(|&r| logits.row(r).iter().any(|v| !v.is_finite()))
+                .collect();
             for (r, seq) in self.active.iter_mut().enumerate() {
+                if poisoned.contains(&r) {
+                    continue;
+                }
                 Self::sample_and_account(
                     seq,
                     logits.row(r),
@@ -640,16 +808,34 @@ impl<'m> Scheduler<'m> {
                     &mut self.sample,
                 );
             }
+            for r in poisoned.into_iter().rev() {
+                let seq = self.active.remove(r);
+                self.finish_with(seq, FinishStatus::Error("non-finite logits row".into()));
+            }
         } else {
+            let Some(tok) = self.active[0].tokens.last().copied() else {
+                let seq = self.active.remove(0);
+                self.finish_with(seq, FinishStatus::Error("empty token stream".into()));
+                return true;
+            };
             let seq = &mut self.active[0];
-            let tok = *seq.tokens.last().unwrap();
             let pos = seq.tokens.len() - 1;
             let logits = self.engine.decode_step(tok, pos, &mut seq.caches, &mut self.scratch);
-            let t = sample_token_scratch(logits, seq.temperature, &mut seq.rng, &mut self.sample);
-            seq.generated.push(t);
-            seq.tokens.push(t);
-            self.tokens_generated += 1;
-            crate::obs::counter_add("serve.tokens_generated", 1);
+            // `decode_step` hands back a borrow of the scratch arena, so
+            // a fired fault counts as poison directly rather than
+            // mutating the row in place.
+            let injected = crate::robust::fault_point("serve.logits").is_some();
+            if injected || logits.iter().any(|v| !v.is_finite()) {
+                let seq = self.active.remove(0);
+                self.finish_with(seq, FinishStatus::Error("non-finite logits row".into()));
+            } else {
+                let t =
+                    sample_token_scratch(logits, seq.temperature, &mut seq.rng, &mut self.sample);
+                seq.generated.push(t);
+                seq.tokens.push(t);
+                self.tokens_generated += 1;
+                crate::obs::counter_add("serve.tokens_generated", 1);
+            }
         }
         self.decode_secs += t0.elapsed().as_secs_f64();
         true
@@ -736,11 +922,12 @@ mod tests {
         let n = 5;
         let want = qm.greedy_continue(&prompt, n);
         let mut sched = Scheduler::new(&qm, 1);
-        sched.submit(Request { id: 1, prompt, max_new: n, temperature: 0.0, seed: 0 });
+        sched.submit(Request { id: 1, prompt, max_new: n, temperature: 0.0, seed: 0 }).unwrap();
         let fins = sched.run();
         assert_eq!(fins.len(), 1);
         assert_eq!(fins[0].generated, want);
         assert!(fins[0].kv_bytes > 0);
+        assert_eq!(fins[0].status, FinishStatus::Complete);
         assert_eq!(sched.tokens_generated(), n as u64);
     }
 
@@ -750,13 +937,15 @@ mod tests {
         let run = |max_concurrent| {
             let mut sched = Scheduler::new(&qm, max_concurrent);
             for id in 0..3u64 {
-                sched.submit(Request {
-                    id,
-                    prompt: vec![1 + id as u16, 2, 3],
-                    max_new: 4,
-                    temperature: 0.8,
-                    seed: 100 + id,
-                });
+                sched
+                    .submit(Request {
+                        id,
+                        prompt: vec![1 + id as u16, 2, 3],
+                        max_new: 4,
+                        temperature: 0.8,
+                        seed: 100 + id,
+                    })
+                    .unwrap();
             }
             let mut fins = sched.run().to_vec();
             fins.sort_by_key(|f| f.id);
@@ -764,6 +953,56 @@ mod tests {
         };
         // Same seeds → same tokens, regardless of batching width.
         assert_eq!(run(1), run(3));
+    }
+
+    #[test]
+    fn admission_rejects_bad_prompts_cleanly() {
+        let qm = tiny_packed();
+        let mut sched = Scheduler::new(&qm, 1);
+        let req =
+            |prompt: Vec<u16>| Request { id: 0, prompt, max_new: 2, temperature: 0.0, seed: 1 };
+        assert_eq!(sched.submit(req(vec![])), Err(RejectReason::EmptyPrompt));
+        let max_seq = qm.cfg.max_seq;
+        assert_eq!(
+            sched.submit(req(vec![1u16; max_seq + 1])),
+            Err(RejectReason::PromptTooLong { len: max_seq + 1, max_seq })
+        );
+        assert_eq!(sched.pending_len(), 0);
+        assert!(sched.run().is_empty());
+    }
+
+    #[test]
+    fn queue_backpressure_rejects_when_full() {
+        let qm = tiny_packed();
+        let mut sched = Scheduler::new(&qm, 1);
+        sched.set_max_queue(2);
+        let req = |id| Request { id, prompt: vec![1, 2], max_new: 2, temperature: 0.0, seed: id };
+        sched.submit(req(0)).unwrap();
+        sched.submit(req(1)).unwrap();
+        assert_eq!(sched.submit(req(2)), Err(RejectReason::QueueFull { depth: 2, max_queue: 2 }));
+        let fins = sched.run();
+        assert_eq!(fins.len(), 2);
+        assert!(fins.iter().all(|f| f.status == FinishStatus::Complete));
+    }
+
+    #[test]
+    fn zero_deadline_expires_requests_without_panic() {
+        let qm = tiny_packed();
+        let mut sched = Scheduler::new(&qm, 2);
+        sched.set_deadline(Duration::ZERO);
+        for id in 0..2u64 {
+            sched
+                .submit(Request { id, prompt: vec![3, 4], max_new: 5, temperature: 0.0, seed: id })
+                .unwrap();
+        }
+        let fins = sched.run().to_vec();
+        assert_eq!(fins.len(), 2);
+        for f in &fins {
+            assert_eq!(f.status, FinishStatus::DeadlineExceeded);
+            // Admission samples one token from the prefill before the
+            // zero deadline expires the request at its first step.
+            assert!(f.generated.len() <= 1, "expired request kept generating");
+        }
     }
 
     #[test]

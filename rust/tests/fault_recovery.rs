@@ -1,0 +1,314 @@
+//! Fault-injection sweep and crash-safe resume invariants (PR 10).
+//!
+//! The contract under test, site by site: every registered fault site ×
+//! fault kind either **recovers** (the degradation ladder absorbs it and
+//! records the event) or surfaces as a **structured error naming the
+//! site** — never a panic, never a torn checkpoint file. And a
+//! `--resume` after an interruption at *any* block boundary produces an
+//! OJBQ1 checkpoint byte-identical to an uninterrupted run: the calib
+//! sample and every solver RNG are keyed, not sequential, so replaying
+//! the durable prefix perturbs nothing downstream.
+//!
+//! Fault arming is process-global, so every test here serializes on one
+//! lock and disarms on entry and exit.
+
+use ojbkq::config::ModelConfig;
+use ojbkq::coordinator::{quantize_model, quantize_model_checkpointed, Pipeline};
+use ojbkq::data::{Corpus, SyntheticGrammar};
+use ojbkq::infer::{save_quantized, PackedLinear, QuantizedModel};
+use ojbkq::model::Model;
+use ojbkq::quant::{rtn, Method, QuantConfig};
+use ojbkq::rng::Rng;
+use ojbkq::robust::{self, RunManifest};
+use ojbkq::serve::{FinishStatus, Request, Scheduler};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: fault specs are process-global.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panic under an armed fault (deliberate in the interrupt sweep)
+    // poisons the mutex; the guard itself is still valid.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> (Model, Corpus) {
+    let cfg = ModelConfig {
+        name: "fault-test".into(),
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 32,
+    };
+    let mut rng = Rng::new(0xFA17);
+    (Model::random(cfg, &mut rng), SyntheticGrammar::new(32, 0.2, 3).corpus(6_000, &mut rng))
+}
+
+fn qcfg() -> QuantConfig {
+    QuantConfig { wbit: 4, group_size: 8, k: 2, ntile: 16, packed_exec: true, ..Default::default() }
+}
+
+/// Serialize a packed model to OJBQ1 at `path` and return the bytes —
+/// the byte-identity currency of every resume assertion below.
+fn ojbq1_bytes(qm: &QuantizedModel, path: &Path) -> Vec<u8> {
+    save_quantized(qm, path).expect("writing OJBQ1");
+    std::fs::read(path).expect("reading OJBQ1 back")
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("creating temp dir");
+    d
+}
+
+/// The tentpole acceptance gate: checkpointing is inert (a fresh
+/// checkpointed run is byte-identical to the plain pipeline), and after
+/// an injected crash at **every** block boundary — both a torn segment
+/// write and a mid-capture panic — `--resume` completes the run to the
+/// same bytes.
+#[test]
+fn checkpointed_run_is_inert_and_resumable_at_every_block() {
+    let _g = lock();
+    robust::reset_faults();
+    let (model, corpus) = setup();
+    let cfg = qcfg();
+    let tmp = fresh_dir("ojbkq_fault_recovery_resume");
+
+    // Golden: the plain, non-checkpointed pipeline.
+    let (gold_qm, _) = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 3, 16, None).unwrap();
+    let gold = ojbq1_bytes(&gold_qm, &tmp.join("gold.ojbq1"));
+
+    // Checkpointing is inert: fresh checkpointed run, byte-identical,
+    // manifest complete.
+    let parts = tmp.join("fresh.parts");
+    let (ck_qm, _) = quantize_model_checkpointed(
+        &model, &corpus, Method::Ojbkq, &cfg, 3, 16, None, &parts, false,
+    )
+    .unwrap();
+    assert_eq!(ojbq1_bytes(&ck_qm, &tmp.join("fresh.ojbq1")), gold, "checkpointing moved bytes");
+    let man = RunManifest::load(&parts).unwrap();
+    assert_eq!(man.completed, man.n_blocks, "fresh run must record every block");
+    let n_blocks = man.n_blocks;
+    assert!(n_blocks >= 2, "sweep needs at least two blocks");
+
+    // Interrupt at every block, two ways: a torn segment write (clean
+    // Err) and an injected panic at the cache-advance boundary.
+    for block in 0..n_blocks {
+        for (spec, label) in [
+            (format!("io.segment_write:partial_write:{}", block + 1), "torn write"),
+            (format!("coordinator.advance:panic:{}", block + 1), "panic"),
+        ] {
+            let parts = tmp.join(format!("kill_b{block}_{}.parts", label.replace(' ', "_")));
+            robust::set_faults(Some(&spec)).unwrap();
+            let killed = catch_unwind(AssertUnwindSafe(|| {
+                quantize_model_checkpointed(
+                    &model, &corpus, Method::Ojbkq, &cfg, 3, 16, None, &parts, false,
+                )
+            }));
+            let events = robust::fault_event_count();
+            robust::reset_faults();
+            assert!(events >= 1, "block {block} {label}: fault never fired");
+            match killed {
+                Ok(run) => assert!(run.is_err(), "block {block} {label}: run must not complete"),
+                Err(_) => assert_eq!(label, "panic", "block {block}: unexpected panic"),
+            }
+            // The crash left a valid resumable prefix: manifest intact,
+            // exactly `block` durable segments, no torn destination file.
+            let man = RunManifest::load(&parts).unwrap();
+            assert_eq!(man.completed, block, "block {block} {label}: wrong durable prefix");
+            assert!(
+                !parts.join(format!("block_{block}.seg")).exists(),
+                "block {block} {label}: interrupted segment must not be committed"
+            );
+            // Resume completes to byte-identical output.
+            let (r_qm, _) = quantize_model_checkpointed(
+                &model, &corpus, Method::Ojbkq, &cfg, 3, 16, None, &parts, true,
+            )
+            .unwrap_or_else(|e| panic!("block {block} {label}: resume failed: {e:#}"));
+            let out = tmp.join(format!("resumed_b{block}_{}.ojbq1", label.replace(' ', "_")));
+            assert_eq!(ojbq1_bytes(&r_qm, &out), gold, "block {block} {label}: resume diverged");
+            let man = RunManifest::load(&parts).unwrap();
+            assert_eq!(man.completed, n_blocks, "block {block} {label}: resume left gaps");
+        }
+    }
+}
+
+/// A stale parts directory can never be silently resumed under a
+/// different configuration: the manifest identity check refuses it.
+#[test]
+fn resume_rejects_mismatched_config() {
+    let _g = lock();
+    robust::reset_faults();
+    let (model, corpus) = setup();
+    let cfg = qcfg();
+    let tmp = fresh_dir("ojbkq_fault_recovery_mismatch");
+    let parts = tmp.join("run.parts");
+    quantize_model_checkpointed(&model, &corpus, Method::Ojbkq, &cfg, 3, 16, None, &parts, false)
+        .unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.wbit = 3;
+    let err = quantize_model_checkpointed(
+        &model, &corpus, Method::Ojbkq, &cfg2, 3, 16, None, &parts, true,
+    )
+    .expect_err("resume under a changed config must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("resume mismatch"), "unexpected refusal message: {msg}");
+}
+
+/// Site × kind sweep over the pipeline: every injected fault either
+/// recovers through the degradation ladder (factor → per-layer RTN
+/// fallback, recorded on the layer stats) or returns a structured error
+/// naming its site. No panics, no torn files.
+#[test]
+fn fault_sweep_no_panics_no_torn_files() {
+    let _g = lock();
+    robust::reset_faults();
+    let (model, corpus) = setup();
+    let cfg = qcfg();
+    let run = |spec: &str| {
+        robust::set_faults(Some(spec)).unwrap();
+        let r = quantize_model(&model, &corpus, Method::Ojbkq, &cfg, 2, 16, None);
+        let events = robust::fault_event_count();
+        robust::reset_faults();
+        (r, events)
+    };
+
+    // Capture/solve/advance boundaries: structured errors naming the
+    // site (the solve `nan` kind poisons a weight and must be caught by
+    // the genuine solve→pack finiteness guard).
+    for spec in [
+        "coordinator.capture:err:1",
+        "coordinator.capture:nan:1",
+        "coordinator.solve:err:1",
+        "coordinator.solve:nan:1",
+        "coordinator.advance:err:1",
+        "coordinator.advance:nan:1",
+    ] {
+        let site = spec.split(':').next().unwrap();
+        let (r, events) = run(spec);
+        assert!(events >= 1, "{spec}: fault never fired");
+        let msg = format!("{:#}", r.expect_err(spec));
+        assert!(msg.contains(site), "{spec}: error does not name the site: {msg}");
+    }
+
+    // Factor failures are absorbed: the group degrades per-layer to RTN
+    // and the event is recorded on every affected layer's stats.
+    for spec in ["coordinator.factor:err:1", "coordinator.factor:nan:1"] {
+        let (r, events) = run(spec);
+        assert!(events >= 1, "{spec}: fault never fired");
+        let (_qm, report) = r.unwrap_or_else(|e| panic!("{spec}: must degrade, not abort: {e:#}"));
+        assert!(report.layers.iter().any(|s| s.fallback), "{spec}: no fallback recorded");
+    }
+
+    // Stall is a pure delay — the run completes untouched.
+    let (r, events) = run("coordinator.advance:stall:1");
+    assert!(events >= 1 && r.is_ok(), "stall must not change the outcome");
+
+    // IO sites, via a checkpointed run: clean error, manifest still
+    // loadable, the destination file never torn.
+    let tmp = fresh_dir("ojbkq_fault_sweep_io");
+    for (i, spec) in ["io.segment_write:err:1", "io.manifest_write:err:1"].into_iter().enumerate() {
+        robust::set_faults(Some(spec)).unwrap();
+        let parts = tmp.join(format!("sweep_{i}.parts"));
+        let r = quantize_model_checkpointed(
+            &model, &corpus, Method::Ojbkq, &cfg, 2, 16, None, &parts, false,
+        );
+        let events = robust::fault_event_count();
+        robust::reset_faults();
+        assert!(events >= 1, "{spec}: fault never fired");
+        let site = spec.split(':').next().unwrap();
+        let msg = format!("{:#}", r.expect_err(spec));
+        assert!(msg.contains(site), "{spec}: error does not name the site: {msg}");
+        if RunManifest::path(&parts).exists() {
+            RunManifest::load(&parts).unwrap_or_else(|e| panic!("{spec}: torn manifest: {e:#}"));
+        }
+    }
+}
+
+/// NaN-seeded calibration activations are detected at ingest — before
+/// the Gram build can spread the poison — with sequence/position/dim
+/// context in the error.
+#[test]
+fn calib_nan_is_reported_with_context() {
+    let _g = lock();
+    robust::reset_faults();
+    let (mut model, _corpus) = setup();
+    // Token 5 appears in the explicit calibration set below; poisoning
+    // its embedding row poisons the ingest activations for exactly that
+    // sequence/position.
+    model.embedding.row_mut(5)[0] = f32::NAN;
+    let calib = vec![vec![1u16, 2, 3], vec![4, 5, 6]];
+    let err = Pipeline::new(&model, calib, Method::Ojbkq, qcfg(), None)
+        .run()
+        .expect_err("NaN calibration activations must fail loudly at ingest");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("sequence") && msg.contains("position"),
+        "ingest error lacks sequence/position context: {msg}"
+    );
+}
+
+fn serve_model() -> QuantizedModel {
+    let cfg = ModelConfig {
+        name: "fault-serve".into(),
+        vocab_size: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 24,
+    };
+    let mut rng = Rng::new(0x5EFA);
+    let m = Model::random(cfg, &mut rng);
+    let mut qm = QuantizedModel::from_model(&m);
+    let qc = QuantConfig { wbit: 4, group_size: 8, ..Default::default() };
+    for id in qm.linear_ids() {
+        let q = rtn::quantize(m.linear(id), &qc);
+        qm.set_layer(id, PackedLinear::from_quantized(&q, true));
+    }
+    qm
+}
+
+/// Serve-side fault sites: an injected step fault and a poisoned logits
+/// row each retire exactly one request with an error status while its
+/// batch peer completes its full budget — one poisoned request never
+/// takes down the batch.
+#[test]
+fn serve_faults_retire_poisoned_requests_without_killing_the_batch() {
+    let _g = lock();
+    robust::reset_faults();
+    let qm = serve_model();
+    for spec in ["serve.step:err:1", "serve.logits:nan:1"] {
+        robust::set_faults(Some(spec)).unwrap();
+        let mut sched = Scheduler::new(&qm, 2);
+        for id in 0..2u64 {
+            sched
+                .submit(Request {
+                    id,
+                    prompt: vec![2 + id as u16, 5, 9],
+                    max_new: 4,
+                    temperature: 0.0,
+                    seed: id,
+                })
+                .unwrap();
+        }
+        let fins = sched.run().to_vec();
+        let events = robust::fault_event_count();
+        robust::reset_faults();
+        assert!(events >= 1, "{spec}: fault never fired");
+        assert_eq!(fins.len(), 2, "{spec}: every request must retire");
+        let errored: Vec<_> =
+            fins.iter().filter(|f| matches!(f.status, FinishStatus::Error(_))).collect();
+        assert_eq!(errored.len(), 1, "{spec}: exactly one request absorbs the fault: {fins:?}");
+        assert!(
+            fins.iter()
+                .any(|f| f.status == FinishStatus::Complete && f.generated.len() == 4),
+            "{spec}: the surviving request must complete its budget: {fins:?}"
+        );
+    }
+}

@@ -199,6 +199,30 @@ fn tracing_is_inert_pipeline_output_bit_identical() {
 }
 
 #[test]
+fn fault_harness_is_inert_when_disarmed() {
+    // The fault harness (`ojbkq::robust`) mirrors obs's zero-cost
+    // discipline: disarmed, a full pipeline crosses every fault site
+    // without recording a single event; armed-but-never-firing leaves
+    // the output bit-identical too.
+    let (model, corpus) = tiny_setup();
+    let toks: Vec<u16> = vec![3, 1, 4, 1, 5, 9];
+    let logits_disarmed = with_obs(false, 1, || {
+        ojbkq::robust::reset_faults();
+        let (qm, _) = run_pipeline(&model, &corpus);
+        assert_eq!(ojbkq::robust::fault_event_count(), 0, "disarmed run recorded fault events");
+        qm.forward(&toks)
+    });
+    let logits_armed = with_obs(false, 1, || {
+        ojbkq::robust::set_faults(Some("coordinator.solve:err:1000000")).unwrap();
+        let (qm, _) = run_pipeline(&model, &corpus);
+        assert_eq!(ojbkq::robust::fault_event_count(), 0, "unfired fault recorded events");
+        ojbkq::robust::reset_faults();
+        qm.forward(&toks)
+    });
+    assert!(logits_disarmed == logits_armed, "armed-but-unfired fault harness moved bits");
+}
+
+#[test]
 fn captured_trace_roundtrips_schema_validation() {
     let (model, corpus) = tiny_setup();
     with_obs(true, 2, || {

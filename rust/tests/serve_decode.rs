@@ -201,13 +201,9 @@ fn scheduler_batched_matches_single_stream() {
         for (i, prompt) in
             [vec![4u16, 9], vec![1, 2, 3, 4, 5], vec![40, 7, 33], vec![12]].into_iter().enumerate()
         {
-            sched.submit(Request {
-                id: i as u64,
-                prompt,
-                max_new: 3 + i,
-                temperature: 0.0,
-                seed: 0,
-            });
+            sched
+                .submit(Request { id: i as u64, prompt, max_new: 3 + i, temperature: 0.0, seed: 0 })
+                .expect("admitted");
         }
         let mut fins = sched.run().to_vec();
         fins.sort_by_key(|f| f.id);
@@ -230,23 +226,21 @@ fn retired_requests_generate_exactly_their_budget() {
     let mut sched = Scheduler::new(&qm, 3);
     let budgets = [2usize, 6, 9, 4];
     for (i, &b) in budgets.iter().enumerate() {
-        sched.submit(Request {
-            id: i as u64,
-            prompt: vec![(3 + i) as u16; 2 + i],
-            max_new: b,
-            temperature: 0.0,
-            seed: 0,
-        });
+        sched
+            .submit(Request {
+                id: i as u64,
+                prompt: vec![(3 + i) as u16; 2 + i],
+                max_new: b,
+                temperature: 0.0,
+                seed: 0,
+            })
+            .expect("admitted");
     }
     // Prompt already at max_seq: admitted, clamped to 0 new tokens,
     // retired without ever touching the engine.
-    sched.submit(Request {
-        id: 99,
-        prompt: vec![5; max_seq],
-        max_new: 8,
-        temperature: 0.0,
-        seed: 0,
-    });
+    sched
+        .submit(Request { id: 99, prompt: vec![5; max_seq], max_new: 8, temperature: 0.0, seed: 0 })
+        .expect("admitted");
     let fins = sched.run().to_vec();
     assert_eq!(fins.len(), budgets.len() + 1);
     let total: usize = budgets.iter().sum();
